@@ -1,0 +1,70 @@
+//! Quickstart: the paper's worked example (eq. 2) and a first LCC
+//! decomposition.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks through: CSD cost of a small constant matrix, an LCC
+//! decomposition of the same matrix, numeric verification on the
+//! shift-add VM, and the CSD-vs-LCC comparison on a realistic tall
+//! matrix.
+
+use lccnn::graph::{schedule, verify_against};
+use lccnn::lcc::{decompose, LccConfig};
+use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
+use lccnn::report::{ratio, Table};
+use lccnn::tensor::Matrix;
+use lccnn::util::Rng;
+
+fn main() {
+    // --- the paper's eq. (2) matrix -------------------------------------
+    let w = Matrix::from_rows(&[&[2.0, 0.375], &[3.75, 1.0]]);
+    let fmt = FixedPointFormat::new(3, 8);
+    let csd = matrix_csd_adders(&w, fmt);
+    println!("eq. (2) matrix W = [[2, 0.375], [3.75, 1]]");
+    println!("CSD baseline: {csd} additions (the paper counts 4: 2 adds + 2 subs)");
+
+    // LCC finds the shared subexpression m(x1,x2) the paper points out:
+    let d = decompose(&w, &LccConfig::fs());
+    println!(
+        "LCC (FS): {} additions, SQNR {:.1} dB",
+        d.additions(),
+        d.sqnr_db(&w)
+    );
+    let y = d.apply(&[1.0, 1.0]);
+    println!("W [1, 1] via shift-add VM = [{:.4}, {:.4}] (exact: [2.375, 4.75])", y[0], y[1]);
+
+    // --- a realistic tall matrix ----------------------------------------
+    let mut rng = Rng::new(0);
+    let tall = Matrix::randn(256, 16, 0.5, &mut rng);
+    let base = matrix_csd_adders(&tall, FixedPointFormat::default_weights());
+
+    let mut table = Table::new(
+        "random 256x16 weight matrix",
+        &["method", "additions", "ratio", "sqnr dB", "depth", "max width"],
+    );
+    table.add_row(vec![
+        "CSD (baseline)".into(),
+        base.to_string(),
+        "1.0".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    for (name, cfg) in [("LCC FP", LccConfig::fp()), ("LCC FS", LccConfig::fs())] {
+        let d = decompose(&tall, &cfg);
+        let rep = verify_against(d.graph(), &tall, 8, &mut rng);
+        assert!(rep.sqnr_db > 25.0, "verification failed: {rep:?}");
+        let s = schedule(d.graph());
+        table.add_row(vec![
+            name.into(),
+            d.additions().to_string(),
+            ratio(base, d.additions()),
+            format!("{:.1}", rep.sqnr_db),
+            s.depth.to_string(),
+            s.max_width.to_string(),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("note: FP graphs are shallow/wide (parallel-friendly), FS graphs");
+    println!("deep/narrow but cheaper — the paper's Sec. III-A tradeoff.");
+}

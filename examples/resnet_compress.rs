@@ -1,0 +1,87 @@
+//! Table-I style compression of the residual CNN (scaled; see DESIGN.md
+//! Substitutions).
+//!
+//!     cargo run --release --example resnet_compress -- --steps 120
+//!
+//! Trains the residual CNN through the AOT artifacts with FK-grouped
+//! group-lasso, then decomposes every 3×3 conv layer with both LCC
+//! algorithms under both kernel representations and prints the adder
+//! accounting per layer — the per-layer view behind Table I (the bench
+//! `table1_resnet` prints the aggregated table).
+
+use anyhow::Result;
+use lccnn::config::ResnetPipelineConfig;
+use lccnn::data::synth_tiny;
+use lccnn::lcc::{decompose, LccConfig};
+use lccnn::nn::resnet::init_params;
+use lccnn::pipeline::resnet::{conv_layer_additions, conv_specs, ConvRepr};
+use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
+use lccnn::report::{ratio, Table};
+use lccnn::runtime::Runtime;
+use lccnn::tensor::Tensor4;
+use lccnn::train::{ConvGrouping, LrSchedule, ResnetTrainer};
+
+fn main() -> Result<()> {
+    lccnn::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = ResnetPipelineConfig { train_steps: 120, ..Default::default() };
+    let mut i = 0;
+    while i + 1 < args.len() {
+        match args[i].as_str() {
+            "--steps" => cfg.train_steps = args[i + 1].parse()?,
+            "--lambda" => cfg.lambda = args[i + 1].parse()?,
+            other => anyhow::bail!("unknown flag {other}"),
+        }
+        i += 2;
+    }
+
+    let rt = Runtime::open_default()?;
+    let train_data = synth_tiny::generate(cfg.train_examples, cfg.seed);
+    let test_data = synth_tiny::generate(cfg.test_examples, cfg.seed + 1);
+
+    println!("training residual CNN ({} steps, lambda={}, FK grouping)...", cfg.train_steps, cfg.lambda);
+    let mut tr = ResnetTrainer::new(&rt, &init_params(cfg.seed), ConvGrouping::Fk)?;
+    tr.lambda = cfg.lambda;
+    let sched = LrSchedule { base: cfg.lr, every: 100, factor: 0.9 };
+    let curve = tr.train(&train_data, cfg.train_steps, sched, 20, cfg.seed + 1)?;
+    for (s, l) in &curve {
+        println!("  step {s:>4}  loss {l:.4}");
+    }
+    let (_, acc) = tr.evaluate(&test_data)?;
+    println!("regularized accuracy: {:.1} %\n", acc * 100.0);
+
+    let store = tr.params_store();
+    let fmt = FixedPointFormat::default_weights();
+    let mut t = Table::new(
+        "per-layer adder accounting (CSD baseline vs LCC, FK and PK)",
+        &["layer", "csd-FK", "FP-FK", "FS-FK", "csd-PK", "FS-PK", "FS-FK ratio"],
+    );
+    for (name, side, stride) in conv_specs() {
+        let arr = store.get(&name).unwrap();
+        let k = Tensor4::from_vec(arr.shape[0], arr.shape[1], arr.shape[2], arr.shape[3], arr.data.clone());
+        let mut csd_cost = |m: &lccnn::tensor::Matrix| matrix_csd_adders(m, fmt);
+        let csd_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut csd_cost);
+        let csd_pk = conv_layer_additions(&k, side, stride, ConvRepr::Pk, &mut csd_cost);
+        let mut fp_cost = |m: &lccnn::tensor::Matrix| {
+            if m.nnz() == 0 { 0 } else { decompose(m, &LccConfig::fp()).additions() }
+        };
+        let mut fs_cost = |m: &lccnn::tensor::Matrix| {
+            if m.nnz() == 0 { 0 } else { decompose(m, &LccConfig::fs()).additions() }
+        };
+        let fp_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut fp_cost);
+        let fs_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut fs_cost);
+        let fs_pk = conv_layer_additions(&k, side, stride, ConvRepr::Pk, &mut fs_cost);
+        t.add_row(vec![
+            name.clone(),
+            csd_fk.to_string(),
+            fp_fk.to_string(),
+            fs_fk.to_string(),
+            csd_pk.to_string(),
+            fs_pk.to_string(),
+            ratio(csd_fk, fs_fk),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("run `cargo bench --bench table1_resnet` for the full Table-I reproduction");
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""Build-time compile path: JAX/Pallas models lowered AOT to HLO text."""

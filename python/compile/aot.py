@@ -1,0 +1,204 @@
+"""AOT-lower every entrypoint to HLO *text* + write the artifact manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the rust `xla` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only NAME]
+
+Scalars cross the boundary as shape-[1] arrays (the rust literal bridge
+works in rank>=1 buffers); wrappers index [0] internally. All entrypoints
+are positional and flat; ``manifest.tsv`` records, per artifact, the
+ordered input names/dtypes/shapes and output names/dtypes/shapes, and the
+rust runtime is entirely manifest-driven.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, resnet
+from .shapes import (MLP_EVAL_BATCH, MLP_HIDDEN, MLP_IN, MLP_OUT,
+                     MLP_SERVE_BATCH, MLP_TRAIN_BATCH, RESNET_CHANNELS,
+                     RESNET_CLASSES, RESNET_EVAL_BATCH, RESNET_IMG,
+                     RESNET_TRAIN_BATCH)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Entrypoint wrappers: flat positional args, scalars as [1]-arrays,
+# every output rank >= 1.
+# --------------------------------------------------------------------------
+
+def _mlp_param_specs():
+    shapes = model.param_shapes()
+    return [("W1", spec(shapes["W1"])), ("b1", spec(shapes["b1"])),
+            ("W2", spec(shapes["W2"])), ("b2", spec(shapes["b2"]))]
+
+
+def mlp_train_step_entry(w1, b1, w2, b2, m1, mb1, m2, mb2,
+                         x, labels, lr, lam, colmask, cluster_labels,
+                         share_flag):
+    outs = model.mlp_train_step(
+        w1, b1, w2, b2, m1, mb1, m2, mb2, x, labels,
+        lr[0], lam[0], colmask, cluster_labels, share_flag[0])
+    *state, loss = outs
+    return tuple(state) + (loss.reshape(1),)
+
+
+def mlp_eval_entry(w1, b1, w2, b2, x, labels):
+    loss_sum, correct = model.mlp_eval_step(w1, b1, w2, b2, x, labels)
+    return loss_sum.reshape(1), correct.reshape(1)
+
+
+def mlp_fwd_entry(w1, b1, w2, b2, x):
+    return (model.mlp_forward(w1, b1, w2, b2, x),)
+
+
+def prox_entry(w, thresh):
+    return (model.prox_step(w, thresh[0]),)
+
+
+def shared_matvec_entry(x, onehot, centroids):
+    return (model.shared_matvec_graph(x, onehot, centroids),)
+
+
+def resnet_train_entry(mode):
+    def entry(*args):
+        *rest, lr, lam = args
+        outs = resnet.train_step(mode, *rest, lr[0], lam[0])
+        *state, loss = outs
+        return tuple(state) + (loss.reshape(1),)
+    return entry
+
+
+def resnet_eval_entry(*args):
+    loss_sum, correct = resnet.eval_step(*args)
+    return loss_sum.reshape(1), correct.reshape(1)
+
+
+def build_registry():
+    """name -> (fn, [(arg_name, ShapeDtypeStruct)], [out_name, ...])."""
+    mlp_params = _mlp_param_specs()
+    mlp_momenta = [("m" + n, s) for n, s in mlp_params]
+    reg = {}
+
+    reg["mlp_train_step"] = (
+        mlp_train_step_entry,
+        mlp_params + mlp_momenta + [
+            ("x", spec((MLP_TRAIN_BATCH, MLP_IN))),
+            ("labels", spec((MLP_TRAIN_BATCH,), I32)),
+            ("lr", spec((1,))), ("lam", spec((1,))),
+            ("colmask", spec((MLP_IN,))),
+            ("cluster_labels", spec((MLP_IN,), I32)),
+            ("share_flag", spec((1,)))],
+        [n for n, _ in mlp_params + mlp_momenta] + ["loss"])
+
+    reg["mlp_eval"] = (
+        mlp_eval_entry,
+        mlp_params + [("x", spec((MLP_EVAL_BATCH, MLP_IN))),
+                      ("labels", spec((MLP_EVAL_BATCH,), I32))],
+        ["loss_sum", "correct"])
+
+    reg["mlp_fwd"] = (
+        mlp_fwd_entry,
+        mlp_params + [("x", spec((MLP_SERVE_BATCH, MLP_IN)))],
+        ["logits"])
+
+    reg["prox_step"] = (
+        prox_entry,
+        [("w", spec((MLP_IN, MLP_HIDDEN))), ("thresh", spec((1,)))],
+        ["w_out"])
+
+    reg["shared_matvec"] = (
+        shared_matvec_entry,
+        [("x", spec((MLP_TRAIN_BATCH, MLP_IN))),
+         ("onehot", spec((MLP_IN, 64))),
+         ("centroids", spec((MLP_HIDDEN, 64)))],
+        ["y"])
+
+    rn_params = [(n, spec(s)) for n, s in resnet.PARAM_SPECS]
+    rn_momenta = [("m_" + n, s) for n, s in rn_params]
+    for mode in ("fk", "pk"):
+        reg[f"resnet_train_step_{mode}"] = (
+            resnet_train_entry(mode),
+            rn_params + rn_momenta + [
+                ("x", spec((RESNET_TRAIN_BATCH, RESNET_IMG, RESNET_IMG,
+                            RESNET_CHANNELS))),
+                ("labels", spec((RESNET_TRAIN_BATCH,), I32)),
+                ("lr", spec((1,))), ("lam", spec((1,)))],
+            [n for n, _ in rn_params + rn_momenta] + ["loss"])
+
+    reg["resnet_eval"] = (
+        resnet_eval_entry,
+        rn_params + [
+            ("x", spec((RESNET_EVAL_BATCH, RESNET_IMG, RESNET_IMG,
+                        RESNET_CHANNELS))),
+            ("labels", spec((RESNET_EVAL_BATCH,), I32))],
+        ["loss_sum", "correct"])
+
+    return reg
+
+
+def _dt(d):
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+def lower_all(out_dir, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    reg = build_registry()
+    manifest_lines = []
+    for name, (fn, in_specs, out_names) in sorted(reg.items()):
+        if only and name != only:
+            continue
+        specs = [s for _, s in in_specs]
+        print(f"[aot] lowering {name} ({len(specs)} inputs)...", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        manifest_lines.append(f"artifact\t{name}\t{fname}")
+        for (arg_name, s) in in_specs:
+            dims = ",".join(str(d) for d in s.shape)
+            manifest_lines.append(f"in\t{arg_name}\t{_dt(s.dtype)}\t{dims}")
+        for out_name, s in zip(out_names, out_shapes):
+            dims = ",".join(str(d) for d in s.shape)
+            manifest_lines.append(f"out\t{out_name}\t{_dt(s.dtype)}\t{dims}")
+        print(f"[aot]   wrote {fname} ({len(text)} chars)", flush=True)
+    if not only:
+        with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"[aot] wrote manifest.tsv ({len(manifest_lines)} lines)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    lower_all(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (interpret=True) + their pure-jnp oracles."""
+
+from . import lcc_apply, prox, ref, shared_matvec  # noqa: F401

@@ -1,0 +1,77 @@
+"""Pallas kernel: apply one LCC matrix factor (paper eq. 4).
+
+An LCC factor F has entries that are zeros or signed powers of two. The
+build-time representation is the pair (signs in {-1,0,1}, integer
+exponents), the hardware representation is the adder graph executed by
+``rust/src/graph``. This kernel materializes ``F = signs * 2**exps`` tile
+by tile in VMEM and feeds the MXU with a plain matmul — on TPU the
+shift-add trick does not beat the systolic array, so the insight is kept
+at the *representation* level (exact powers of two, bit-exact with the
+rust VM) while the compute maps to what the hardware is good at
+(bf16/f32 MXU matmul). See DESIGN.md §Hardware-Adaptation.
+
+Grid: (N/BN, B/BB, M/BM) with an accumulator revisited across the M
+(contraction) axis; each step holds three small tiles in VMEM
+(BN*BM + BM*BB + BN*BB floats ≈ 192 KiB at 128³ tiles).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 64
+BB = 64
+BM = 128
+
+
+def _lcc_kernel(s_ref, e_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    f = s_ref[...] * jnp.exp2(e_ref[...])
+    o_ref[...] += jnp.dot(f, x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lcc_factor_apply(signs, exps, x):
+    """Compute ``(signs * 2**exps) @ x`` with a tiled Pallas kernel.
+
+    signs [N, M] float32 in {-1, 0, 1}; exps [N, M] float32 (integer
+    valued); x [M, B] float32. Shapes are padded to tile multiples; the
+    zero padding contributes nothing to the contraction.
+    """
+    n, m = signs.shape
+    m2, b = x.shape
+    assert m == m2, f"factor/input mismatch: {m} vs {m2}"
+    pn, pm, pb = (-n) % BN, (-m) % BM, (-b) % BB
+    s_pad = jnp.pad(signs, ((0, pn), (0, pm)))
+    e_pad = jnp.pad(exps, ((0, pn), (0, pm)))
+    x_pad = jnp.pad(x, ((0, pm), (0, pb)))
+    grid = ((n + pn) // BN, (b + pb) // BB, (m + pm) // BM)
+    out = pl.pallas_call(
+        _lcc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BN, BM), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BN, BM), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BM, BB), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BN, BB), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n + pn, b + pb), x.dtype),
+        interpret=True,
+    )(s_pad, e_pad, x_pad)
+    return out[:n, :b]
+
+
+def lcc_chain_apply(factors, x):
+    """Apply a whole LCC decomposition ``F_P ... F_1 F_0 @ x``.
+
+    ``factors`` is a list of (signs, exps) pairs ordered F_0 first.
+    """
+    y = x
+    for signs, exps in factors:
+        y = lcc_factor_apply(signs, exps, y)
+    return y

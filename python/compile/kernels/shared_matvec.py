@@ -1,0 +1,50 @@
+"""Pallas kernel: weight-shared matvec (paper eq. 10).
+
+After weight sharing, ``W x`` collapses to
+``y = G (H^T x)`` where H [K, C] is the column-cluster indicator and
+G [N, C] holds the unique centroid columns. The inner product with H is a
+segment-sum — scalar additions only, which is where the sharing gain
+comes from on the FPGA side (rust ``share`` module counts exactly K - C
+additions for it).
+
+Grid tiles over the batch; each step keeps the full (K, C) indicator and
+(N, C) centroid tiles resident (C after clustering is small — tens of
+columns — so both fit comfortably in VMEM) and runs two MXU matmuls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BB = 32
+
+
+def _shared_kernel(x_ref, h_ref, g_ref, o_ref):
+    sums = jnp.dot(x_ref[...], h_ref[...], preferred_element_type=o_ref.dtype)
+    o_ref[...] = jnp.dot(sums, g_ref[...].T, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def shared_matvec(x, onehot, centroids):
+    """Compute ``(x @ onehot) @ centroids.T`` ([B,K],[K,C],[N,C] -> [B,N])."""
+    b, k = x.shape
+    k2, c = onehot.shape
+    n, c2 = centroids.shape
+    assert k == k2 and c == c2
+    pb = (-b) % BB
+    x_pad = jnp.pad(x, ((0, pb), (0, 0)))
+    out = pl.pallas_call(
+        _shared_kernel,
+        grid=((b + pb) // BB,),
+        in_specs=[
+            pl.BlockSpec((BB, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, c), lambda i: (0, 0)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BB, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + pb, n), x.dtype),
+        interpret=True,
+    )(x_pad, onehot, centroids)
+    return out[:b]

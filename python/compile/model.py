@@ -1,0 +1,122 @@
+"""Layer-2 JAX model: the paper's MLP (784 -> 300 -> 10) with the
+group-lasso proximal training step (paper Sec. III-B, eq. 5-8) and the
+weight-sharing retraining step (Sec. III-C, eq. 9).
+
+Everything here is build-time python: ``aot.py`` lowers these entrypoints
+once to HLO text and the rust coordinator drives the artifacts via PJRT.
+The proximal operator is the Pallas kernel from ``kernels/prox.py`` so the
+L1 kernel lowers into the same HLO module.
+
+Parameter flattening order (rust runtime relies on it, and it is recorded
+in artifacts/manifest.tsv): W1 [H, K], b1 [H], W2 [O, H], b2 [O].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import prox
+from .shapes import MLP_HIDDEN, MLP_IN, MLP_OUT, MOMENTUM
+
+PARAM_NAMES = ("W1", "b1", "W2", "b2")
+
+
+def param_shapes():
+    return {
+        "W1": (MLP_HIDDEN, MLP_IN),
+        "b1": (MLP_HIDDEN,),
+        "W2": (MLP_OUT, MLP_HIDDEN),
+        "b2": (MLP_OUT,),
+    }
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    """Logits for a batch ``x`` [B, 784]. ReLU hidden layer (paper eq. 1)."""
+    h = jax.nn.relu(x @ w1.T + b1)
+    return h @ w2.T + b2
+
+
+def _xent(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def mlp_loss(w1, b1, w2, b2, x, labels):
+    return _xent(mlp_forward(w1, b1, w2, b2, x), labels)
+
+
+def _cluster_mean_grads(g, labels, active):
+    """Average the columns of gradient ``g`` within each cluster (eq. 9).
+
+    labels [K] int32 maps every column to its cluster id in [0, K); inactive
+    (pruned) columns must point at themselves so they do not pollute a
+    cluster. ``active`` [K] float32 masks pruned columns.
+    """
+    k = g.shape[1]
+    onehot = jax.nn.one_hot(labels, k, dtype=g.dtype)          # [K, K]
+    counts = jnp.maximum(onehot.sum(axis=0), 1.0)              # [K]
+    sums = g @ onehot                                          # [H, K] per-cluster
+    means = sums / counts
+    return jnp.take(means, labels, axis=1) * active[None, :]
+
+
+def mlp_train_step(w1, b1, w2, b2, m1, mb1, m2, mb2,
+                   x, labels, lr, lam, colmask, cluster_labels, share_flag):
+    """One SGD-momentum step with the proximal group-lasso update fused in.
+
+    * ``lam``: group-lasso weight lambda_{1,1} for layer 1; the proximal
+      threshold is ``lr * lam`` (paper eq. 7-8). lam == 0 disables pruning.
+    * ``colmask`` [784]: 1 for active input columns, 0 for pruned ones —
+      fixed-shape stand-in for physically removing columns at train time.
+    * ``cluster_labels`` [784] + ``share_flag``: when share_flag > 0 the
+      layer-1 gradient columns are averaged within clusters (eq. 9), which
+      is the weight-sharing retraining procedure. With identity labels and
+      share_flag == 0 this is a plain regularized step, so one artifact
+      serves stages 1 (regularized training) and 3 (sharing retraining).
+
+    Returns (w1', b1', w2', b2', m1', mb1', m2', mb2', loss).
+    """
+    loss, grads = jax.value_and_grad(mlp_loss, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, x, labels)
+    g1, gb1, g2, gb2 = grads
+
+    g1 = g1 * colmask[None, :]
+    g1_shared = _cluster_mean_grads(g1, cluster_labels, colmask)
+    g1 = jnp.where(share_flag > 0.0, g1_shared, g1)
+
+    m1n = MOMENTUM * m1 + g1
+    mb1n = MOMENTUM * mb1 + gb1
+    m2n = MOMENTUM * m2 + g2
+    mb2n = MOMENTUM * mb2 + gb2
+
+    w1n = w1 - lr * m1n
+    b1n = b1 - lr * mb1n
+    w2n = w2 - lr * m2n
+    b2n = b2 - lr * mb2n
+
+    # Proximal step on layer 1. The paper prunes *input neurons*, i.e.
+    # columns of W1, so groups are the rows of W1^T (Sec. III-B).
+    w1n = prox.prox_group_lasso_rows(w1n.T, lr * lam).T
+    w1n = w1n * colmask[None, :]
+
+    return w1n, b1n, w2n, b2n, m1n, mb1n, m2n, mb2n, loss
+
+
+def mlp_eval_step(w1, b1, w2, b2, x, labels):
+    """Returns (summed loss, correct count) over one eval batch."""
+    logits = mlp_forward(w1, b1, w2, b2, x)
+    logp = jax.nn.log_softmax(logits)
+    loss_sum = -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+    return loss_sum, correct
+
+
+def prox_step(w, thresh):
+    """Standalone prox artifact (Pallas kernel on the hot path)."""
+    return prox.prox_group_lasso_rows(w, thresh)
+
+
+def shared_matvec_graph(x, onehot, centroids):
+    """Standalone eq. (10) artifact used by the rust serving layer tests."""
+    from .kernels import shared_matvec as sm
+    return sm.shared_matvec(x, onehot, centroids)

@@ -1,0 +1,150 @@
+"""Layer-2 JAX model: trainable residual CNN for the Table-I experiment.
+
+Depth-reduced, norm-free stand-in for ResNet-34 (see DESIGN.md
+Substitutions): stem conv + 3 stages x 2 pre-activation basic blocks
+(16/32/64 channels) + global average pool + linear head. Norm-free
+training uses SkipInit-style residual scalars (alpha init 0) instead of
+batch norm so the AOT artifact needs no running statistics — the rust
+coordinator owns all state between steps.
+
+The group-lasso proximal step supports both conv groupings from the paper
+(Sec. III-D):
+  * FK — one group per (k, n) kernel: norm over the kh*kw taps.
+  * PK — one group per kernel *column* (fixed kw, k, n): norm over kh.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import prox
+from .shapes import (MOMENTUM, RESNET_CHANNELS, RESNET_CLASSES, RESNET_IMG,
+                     RESNET_STAGES)
+
+
+def param_specs():
+    """Ordered (name, shape) list — the artifact calling convention.
+
+    Conv kernels are HWIO. Order is the flattening order used by
+    ``train_step`` / ``eval_step`` and recorded in the manifest.
+    """
+    specs = [("stem_w", (3, 3, RESNET_CHANNELS, RESNET_STAGES[0])),
+             ("stem_b", (RESNET_STAGES[0],))]
+    c_in = RESNET_STAGES[0]
+    for si, c in enumerate(RESNET_STAGES):
+        for bi in range(2):
+            p = f"s{si}b{bi}"
+            specs.append((f"{p}_c1w", (3, 3, c_in if bi == 0 else c, c)))
+            specs.append((f"{p}_c1b", (c,)))
+            specs.append((f"{p}_c2w", (3, 3, c, c)))
+            specs.append((f"{p}_c2b", (c,)))
+            if bi == 0 and (si > 0 or c_in != c):
+                specs.append((f"{p}_projw", (1, 1, c_in, c)))
+            specs.append((f"{p}_alpha", (1,)))
+        c_in = c
+    specs.append(("fc_w", (RESNET_CLASSES, RESNET_STAGES[-1])))
+    specs.append(("fc_b", (RESNET_CLASSES,)))
+    return specs
+
+
+PARAM_SPECS = param_specs()
+PARAM_NAMES = [n for n, _ in PARAM_SPECS]
+CONV_KERNEL_NAMES = [n for n, s in PARAM_SPECS
+                     if n.endswith(("c1w", "c2w")) and len(s) == 4]
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b[None, None, None, :]
+
+
+def forward(params, x):
+    """Logits for x [B, 32, 32, 3] float32."""
+    p = params
+    h = _conv(x, p["stem_w"], p["stem_b"])
+    c_in = RESNET_STAGES[0]
+    for si, c in enumerate(RESNET_STAGES):
+        for bi in range(2):
+            pre = f"s{si}b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            r = jax.nn.relu(h)
+            f = _conv(r, p[f"{pre}_c1w"], p[f"{pre}_c1b"], stride=stride)
+            f = jax.nn.relu(f)
+            f = _conv(f, p[f"{pre}_c2w"], p[f"{pre}_c2b"])
+            if f"{pre}_projw" in p:
+                sc = jax.lax.conv_general_dilated(
+                    r, p[f"{pre}_projw"], window_strides=(stride, stride),
+                    padding="SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            else:
+                sc = h
+            h = sc + p[f"{pre}_alpha"] * f
+        c_in = c
+    h = jax.nn.relu(h)
+    feat = jnp.mean(h, axis=(1, 2))                      # global average pool
+    return feat @ p["fc_w"].T + p["fc_b"]
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def loss_fn(params, x, labels):
+    return _xent(forward(params, x), labels)
+
+
+def prox_conv(w, thresh, mode):
+    """Group-lasso prox on an HWIO conv kernel (paper Sec. III-D).
+
+    mode "fk": groups = whole kernels, i.e. reshape to (kh*kw, in*out) and
+    threshold columns (rows after transpose). mode "pk": groups = kernel
+    columns, reshape to (kh, kw*in*out).
+    """
+    kh, kw, ci, co = w.shape
+    if mode == "fk":
+        flat = w.reshape(kh * kw, ci * co).T          # rows = groups
+    elif mode == "pk":
+        flat = w.reshape(kh, kw * ci * co).T
+    else:
+        raise ValueError(mode)
+    flat = prox.prox_group_lasso_rows(flat, thresh)
+    return flat.T.reshape(kh, kw, ci, co)
+
+
+def train_step(mode, *args):
+    """One momentum-SGD + prox step. ``mode`` in {"fk", "pk"} is static.
+
+    args = [P params..., P momenta..., x, labels, lr, lam] with P =
+    len(PARAM_SPECS). Returns params' + momenta' + (loss,).
+    """
+    n = len(PARAM_SPECS)
+    params = dict(zip(PARAM_NAMES, args[:n]))
+    momenta = list(args[n:2 * n])
+    x, labels, lr, lam = args[2 * n:]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, labels)
+
+    out_params, out_momenta = [], []
+    for i, name in enumerate(PARAM_NAMES):
+        g = grads[name]
+        m = MOMENTUM * momenta[i] + g
+        p = params[name] - lr * m
+        if name in CONV_KERNEL_NAMES:
+            p = prox_conv(p, lr * lam, mode)
+        out_params.append(p)
+        out_momenta.append(m)
+    return tuple(out_params) + tuple(out_momenta) + (loss,)
+
+
+def eval_step(*args):
+    """args = [P params..., x, labels] -> (loss_sum, correct_count)."""
+    n = len(PARAM_SPECS)
+    params = dict(zip(PARAM_NAMES, args[:n]))
+    x, labels = args[n:]
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    loss_sum = -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.int32))
+    return loss_sum, correct

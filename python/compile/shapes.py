@@ -1,0 +1,26 @@
+"""Single source of truth for every AOT-lowered shape.
+
+The rust runtime parses ``artifacts/manifest.tsv`` (written by aot.py) and
+never hard-codes shapes, but keeping the constants here in one place makes
+the python side consistent across model.py / resnet.py / aot.py / tests.
+"""
+
+# ---- MLP on (synthetic) MNIST ------------------------------------------------
+MLP_IN = 784          # 28*28 input features
+MLP_HIDDEN = 300      # hidden width (paper Sec. IV-A)
+MLP_OUT = 10          # 10 digit classes
+MLP_TRAIN_BATCH = 128
+MLP_EVAL_BATCH = 256
+MLP_SERVE_BATCH = 32
+MOMENTUM = 0.9        # SGD momentum (paper Sec. IV-A)
+
+# ---- tiny ResNet on synthetic tiny-images ------------------------------------
+# Depth-reduced stand-in for ResNet-34 (see DESIGN.md Substitutions): the
+# full ResNet-34 graph lives in rust/src/nn/resnet.rs for exact adder
+# accounting; this trainable variant exercises identical conv code paths.
+RESNET_IMG = 32            # 32x32 inputs
+RESNET_CHANNELS = 3
+RESNET_CLASSES = 40
+RESNET_STAGES = (16, 32, 64)   # channels per stage, 2 basic blocks each
+RESNET_TRAIN_BATCH = 32
+RESNET_EVAL_BATCH = 64

@@ -1,0 +1,65 @@
+"""Pallas LCC factor-apply kernel vs pure-jnp oracle (paper eq. 4)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lcc_apply, ref
+
+
+def _factor(n, m, seed, density=0.3):
+    """Random signed-power-of-two factor as (signs, exps)."""
+    rng = np.random.default_rng(seed)
+    signs = rng.choice([-1.0, 0.0, 1.0], size=(n, m),
+                       p=[density / 2, 1 - density, density / 2])
+    exps = rng.integers(-6, 4, size=(n, m)).astype(np.float32)
+    return jnp.asarray(signs.astype(np.float32)), jnp.asarray(exps)
+
+
+def _x(m, b, seed):
+    rng = np.random.default_rng(seed + 1)
+    return jnp.asarray(rng.normal(size=(m, b)).astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 150), m=st.integers(1, 150), b=st.integers(1, 70),
+       seed=st.integers(0, 2**31 - 1))
+def test_matches_reference(n, m, b, seed):
+    signs, exps = _factor(n, m, seed)
+    x = _x(m, b, seed)
+    got = lcc_apply.lcc_factor_apply(signs, exps, x)
+    want = ref.lcc_factor_apply(signs, exps, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_power_of_two_exactness():
+    """Signed-po2 entries applied to po2 inputs are bit-exact."""
+    signs = jnp.asarray([[1.0, -1.0], [0.0, 1.0]])
+    exps = jnp.asarray([[1.0, -3.0], [0.0, -1.0]])
+    x = jnp.asarray([[4.0], [8.0]])
+    got = np.asarray(lcc_apply.lcc_factor_apply(signs, exps, x))
+    assert got[0, 0] == 2.0 * 4.0 - 0.125 * 8.0
+    assert got[1, 0] == 0.5 * 8.0
+
+
+def test_chain_matches_matrix_product():
+    f0 = _factor(32, 24, 3)
+    f1 = _factor(40, 32, 4)
+    x = _x(24, 8, 5)
+    got = lcc_apply.lcc_chain_apply([f0, f1], x)
+    d0 = np.asarray(f0[0]) * np.exp2(np.asarray(f0[1]))
+    d1 = np.asarray(f1[0]) * np.exp2(np.asarray(f1[1]))
+    want = d1 @ (d0 @ np.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_tile_boundaries():
+    """Shapes exactly at and just past the tile sizes."""
+    for n, m, b in [(64, 128, 64), (65, 129, 65), (63, 127, 1)]:
+        signs, exps = _factor(n, m, n * m)
+        x = _x(m, b, b)
+        got = lcc_apply.lcc_factor_apply(signs, exps, x)
+        want = ref.lcc_factor_apply(signs, exps, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,111 @@
+"""L2 MLP model: shapes, training dynamics, prox + sharing semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.shapes import MLP_HIDDEN, MLP_IN, MLP_OUT
+
+
+def _init(seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    shapes = model.param_shapes()
+    p = [jnp.asarray(rng.normal(size=shapes[n]).astype(np.float32) * scale)
+         for n in model.PARAM_NAMES]
+    m = [jnp.zeros(shapes[n], dtype=jnp.float32) for n in model.PARAM_NAMES]
+    return p, m
+
+
+def _batch(b=32, seed=1):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, MLP_IN)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, MLP_OUT, size=b).astype(np.int32))
+    return x, y
+
+
+def _ident_clusters():
+    return jnp.arange(MLP_IN, dtype=jnp.int32)
+
+
+def test_forward_shape():
+    (w1, b1, w2, b2), _ = _init()
+    x, _ = _batch(17)
+    assert model.mlp_forward(w1, b1, w2, b2, x).shape == (17, MLP_OUT)
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    p, m = _init()
+    x, y = _batch(64)
+    mask = jnp.ones(MLP_IN)
+    losses = []
+    for _ in range(30):
+        out = model.mlp_train_step(*p, *m, x, y, 0.1, 0.0, mask,
+                                   _ident_clusters(), 0.0)
+        p, m = list(out[:4]), list(out[4:8])
+        losses.append(float(out[8]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_prox_prunes_columns_with_large_lambda():
+    p, m = _init()
+    x, y = _batch(64)
+    mask = jnp.ones(MLP_IN)
+    for _ in range(10):
+        out = model.mlp_train_step(*p, *m, x, y, 0.05, 50.0, mask,
+                                   _ident_clusters(), 0.0)
+        p, m = list(out[:4]), list(out[4:8])
+    col_norms = np.linalg.norm(np.asarray(p[0]), axis=0)
+    assert (col_norms == 0.0).mean() > 0.5  # most columns pruned
+
+
+def test_colmask_keeps_columns_zero():
+    p, m = _init()
+    x, y = _batch(32)
+    mask = np.ones(MLP_IN, dtype=np.float32)
+    mask[:100] = 0.0
+    p[0] = p[0] * jnp.asarray(mask)[None, :]
+    out = model.mlp_train_step(*p, *m, x, y, 0.1, 0.0, jnp.asarray(mask),
+                               _ident_clusters(), 0.0)
+    w1 = np.asarray(out[0])
+    assert np.all(w1[:, :100] == 0.0)
+
+
+def test_shared_training_ties_cluster_columns():
+    """With share_flag on, columns in one cluster get identical updates."""
+    p, m = _init()
+    x, y = _batch(32)
+    labels = np.arange(MLP_IN, dtype=np.int32)
+    labels[5] = labels[3]   # tie columns 3 and 5
+    # start them equal so tied gradients keep them equal
+    w1 = np.asarray(p[0]).copy()
+    w1[:, 5] = w1[:, 3]
+    p[0] = jnp.asarray(w1)
+    out = model.mlp_train_step(*p, *m, x, y, 0.1, 0.0, jnp.ones(MLP_IN),
+                               jnp.asarray(labels), 1.0)
+    w1n = np.asarray(out[0])
+    np.testing.assert_allclose(w1n[:, 3], w1n[:, 5], rtol=1e-5, atol=1e-6)
+
+
+def test_eval_step_counts():
+    (w1, b1, w2, b2), _ = _init()
+    x, y = _batch(64, seed=3)
+    loss_sum, correct = model.mlp_eval_step(w1, b1, w2, b2, x, y)
+    logits = model.mlp_forward(w1, b1, w2, b2, x)
+    acc = int(np.sum(np.argmax(np.asarray(logits), axis=1) == np.asarray(y)))
+    assert int(correct) == acc
+    assert float(loss_sum) > 0.0
+
+
+def test_gradient_of_tied_columns_is_mean():
+    """eq. (9): tied-column update equals the cluster-mean gradient."""
+    g = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, 6)).astype(np.float32))
+    labels = jnp.asarray(np.array([0, 0, 2, 3, 0, 5], dtype=np.int32))
+    active = jnp.ones(6)
+    out = np.asarray(model._cluster_mean_grads(g, labels, active))
+    gnp = np.asarray(g)
+    mean0 = gnp[:, [0, 1, 4]].mean(axis=1)
+    for j in (0, 1, 4):
+        np.testing.assert_allclose(out[:, j], mean0, rtol=1e-5)
+    np.testing.assert_allclose(out[:, 2], gnp[:, 2], rtol=1e-5)

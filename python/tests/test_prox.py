@@ -1,0 +1,66 @@
+"""Pallas prox kernel vs pure-jnp oracle (paper eq. 8)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prox, ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 97),
+    cols=st.integers(1, 64),
+    thresh=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference(rows, cols, thresh, seed):
+    a = _rand((rows, cols), seed)
+    got = prox.prox_group_lasso_rows(a, thresh)
+    want = ref.prox_group_lasso_rows(a, thresh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_zero_threshold_is_identity():
+    a = _rand((33, 17), 0)
+    got = prox.prox_group_lasso_rows(a, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a), rtol=1e-6)
+
+
+def test_large_threshold_zeros_everything():
+    a = _rand((8, 8), 1)
+    got = prox.prox_group_lasso_rows(a, 1e6)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_zero_rows_stay_zero():
+    a = np.zeros((5, 9), dtype=np.float32)
+    a[2] = 3.0
+    got = np.asarray(prox.prox_group_lasso_rows(jnp.asarray(a), 0.5))
+    assert np.all(got[0] == 0) and np.all(got[4] == 0)
+    assert np.all(got[2] > 0)  # norm 9, scale 1 - 0.5/9 > 0
+
+
+@pytest.mark.parametrize("rows", [1, 31, 32, 33, 64, 300, 784])
+def test_row_padding_boundary(rows):
+    """Rows around the ROW_BLOCK boundary all round-trip correctly."""
+    a = _rand((rows, 7), rows)
+    got = prox.prox_group_lasso_rows(a, 0.3)
+    want = ref.prox_group_lasso_rows(a, 0.3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_shrinkage_monotone_in_threshold():
+    a = _rand((16, 16), 7)
+    n1 = np.linalg.norm(np.asarray(prox.prox_group_lasso_rows(a, 0.1)))
+    n2 = np.linalg.norm(np.asarray(prox.prox_group_lasso_rows(a, 0.5)))
+    n3 = np.linalg.norm(np.asarray(prox.prox_group_lasso_rows(a, 2.0)))
+    assert n1 >= n2 >= n3

@@ -1,0 +1,97 @@
+"""L2 residual CNN: shapes, prox groupings (FK vs PK), training sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import resnet
+from compile.shapes import (RESNET_CHANNELS, RESNET_CLASSES, RESNET_IMG)
+
+
+def _init(seed=0):
+    rng = np.random.default_rng(seed)
+    params, momenta = [], []
+    for name, shape in resnet.PARAM_SPECS:
+        if name.endswith("_alpha"):
+            arr = np.zeros(shape, dtype=np.float32)
+        elif name.endswith(("w",)) and len(shape) >= 2:
+            fan_in = int(np.prod(shape[:-1]))
+            arr = rng.normal(size=shape).astype(np.float32) * np.sqrt(
+                2.0 / fan_in)
+        else:
+            arr = np.zeros(shape, dtype=np.float32)
+        params.append(jnp.asarray(arr))
+        momenta.append(jnp.zeros(shape, dtype=jnp.float32))
+    return params, momenta
+
+
+def _batch(b=8, seed=1):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(
+        size=(b, RESNET_IMG, RESNET_IMG, RESNET_CHANNELS)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, RESNET_CLASSES, size=b).astype(np.int32))
+    return x, y
+
+
+def test_param_specs_wellformed():
+    names = [n for n, _ in resnet.PARAM_SPECS]
+    assert len(names) == len(set(names))
+    assert "fc_w" in names and "stem_w" in names
+    assert len(resnet.CONV_KERNEL_NAMES) == 12  # 3 stages * 2 blocks * 2 convs
+
+
+def test_forward_shape():
+    params, _ = _init()
+    x, _ = _batch(5)
+    p = dict(zip(resnet.PARAM_NAMES, params))
+    assert resnet.forward(p, x).shape == (5, RESNET_CLASSES)
+
+
+@pytest.mark.parametrize("mode", ["fk", "pk"])
+def test_train_step_runs_and_loss_decreases(mode):
+    params, momenta = _init()
+    x, y = _batch(16)
+    losses = []
+    for _ in range(8):
+        out = resnet.train_step(mode, *params, *momenta, x, y, 0.05, 0.0)
+        n = len(resnet.PARAM_SPECS)
+        params, momenta = list(out[:n]), list(out[n:2 * n])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_prox_fk_zeroes_whole_kernels():
+    w = jnp.asarray(np.random.default_rng(0).normal(
+        size=(3, 3, 4, 8)).astype(np.float32))
+    out = np.asarray(resnet.prox_conv(w, 1e6, "fk"))
+    assert np.all(out == 0.0)
+    out2 = np.asarray(resnet.prox_conv(w, 0.0, "fk"))
+    np.testing.assert_allclose(out2, np.asarray(w), rtol=1e-6)
+
+
+def test_prox_fk_group_structure():
+    """FK groups are whole (in,out) kernels: a kernel is zeroed atomically."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(3, 3, 2, 3)).astype(np.float32)
+    w[:, :, 0, 0] *= 0.01        # one tiny-norm kernel
+    out = np.asarray(resnet.prox_conv(jnp.asarray(w), 0.5, "fk"))
+    assert np.all(out[:, :, 0, 0] == 0.0)
+    assert np.any(out[:, :, 1, 2] != 0.0)
+
+
+def test_prox_pk_group_structure():
+    """PK groups are kernel columns (norm over kh only)."""
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(3, 3, 2, 2)).astype(np.float32)
+    w[:, 1, 0, 0] *= 1e-3        # one tiny column
+    out = np.asarray(resnet.prox_conv(jnp.asarray(w), 0.1, "pk"))
+    assert np.all(out[:, 1, 0, 0] == 0.0)
+    assert np.any(out[:, 0, 0, 0] != 0.0)
+
+
+def test_eval_step_counts():
+    params, _ = _init()
+    x, y = _batch(12, seed=5)
+    loss_sum, correct = resnet.eval_step(*params, x, y)
+    assert 0 <= int(correct) <= 12
+    assert float(loss_sum) > 0.0

@@ -1,0 +1,47 @@
+"""Pallas weight-shared matvec kernel vs oracle (paper eq. 10)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, shared_matvec
+
+
+def _setup(b, k, c, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    labels = rng.integers(0, c, size=k)
+    onehot = np.zeros((k, c), dtype=np.float32)
+    onehot[np.arange(k), labels] = 1.0
+    g = rng.normal(size=(n, c)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(onehot), jnp.asarray(g)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 80), k=st.integers(1, 96), c=st.integers(1, 32),
+       n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_matches_reference(b, k, c, n, seed):
+    x, h, g = _setup(b, k, c, n, seed)
+    got = shared_matvec.shared_matvec(x, h, g)
+    want = ref.shared_matvec(x, h, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_equals_expanded_dense_product():
+    """Sharing then multiplying == multiplying the expanded matrix (eq. 10)."""
+    x, h, g = _setup(16, 40, 8, 12, 0)
+    w_expanded = np.asarray(g) @ np.asarray(h).T         # [N, K]
+    want = np.asarray(x) @ w_expanded.T
+    got = np.asarray(shared_matvec.shared_matvec(x, h, g))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_single_cluster_sums_all_columns():
+    b, k, n = 4, 10, 3
+    x = jnp.asarray(np.arange(b * k, dtype=np.float32).reshape(b, k))
+    h = jnp.ones((k, 1), dtype=jnp.float32)
+    g = jnp.asarray(np.ones((n, 1), dtype=np.float32) * 2.0)
+    got = np.asarray(shared_matvec.shared_matvec(x, h, g))
+    want = 2.0 * np.asarray(x).sum(axis=1, keepdims=True) * np.ones((1, n))
+    np.testing.assert_allclose(got, want, rtol=1e-5)

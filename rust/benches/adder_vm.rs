@@ -1,0 +1,59 @@
+//! ABL-VM bench: shift-add VM throughput + ASAP schedule stats (the FPGA
+//! parallelism proxy) on MLP-shaped decompositions.
+//!
+//!     cargo bench --bench adder_vm
+
+use lccnn::graph::{schedule, CompiledGraph};
+use lccnn::lcc::{decompose, LccConfig};
+use lccnn::report::Table;
+use lccnn::tensor::Matrix;
+use lccnn::util::{stats, timer, Rng};
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut t = Table::new(
+        "shift-add VM execution (per matvec) + schedule",
+        &["matrix", "algo", "adds", "depth", "max width", "interp us", "compiled us",
+          "speedup", "dense us"],
+    );
+    for &(n, k) in &[(300usize, 30usize), (300, 60), (64, 9), (192, 3)] {
+        let w = Matrix::randn(n, k, 0.5, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(k, 1.0);
+        let dense_samples = timer::bench(10, 200, || {
+            std::hint::black_box(w.matvec(std::hint::black_box(&x)));
+        });
+        let dense_us = stats::mean(&dense_samples) * 1e6;
+        for (name, cfg) in [("fp", LccConfig::fp()), ("fs", LccConfig::fs())] {
+            let d = decompose(&w, &cfg);
+            let g = d.graph();
+            let s = schedule(g);
+            let samples = timer::bench(10, 200, || {
+                std::hint::black_box(g.execute(std::hint::black_box(&x)));
+            });
+            let us = stats::mean(&samples) * 1e6;
+            let c = CompiledGraph::new(g);
+            let mut scratch = Vec::new();
+            let mut out = Vec::new();
+            let csamples = timer::bench(10, 200, || {
+                c.execute_into(std::hint::black_box(&x), &mut scratch, &mut out);
+                std::hint::black_box(&out);
+            });
+            let cus = stats::mean(&csamples) * 1e6;
+            t.add_row(vec![
+                format!("{n}x{k}"),
+                name.into(),
+                g.additions().to_string(),
+                s.depth.to_string(),
+                s.max_width.to_string(),
+                format!("{us:.1}"),
+                format!("{cus:.1}"),
+                format!("{:.1}x", us / cus.max(1e-9)),
+                format!("{dense_us:.1}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("depth = FPGA pipeline latency in adder stages; max width = peak");
+    println!("simultaneous adders. The VM is the numeric/count oracle, not a");
+    println!("performance claim — the addition count is the hardware cost model.");
+}

@@ -1,0 +1,90 @@
+//! FIG2 bench: regenerates the paper's Fig. 2 — compression-accuracy
+//! tradeoff of the MLP's first layer across regularization strengths,
+//! three series (regularized training only / + weight sharing / + LCC).
+//!
+//!     cargo bench --bench fig2_mlp
+//!
+//! Environment knobs: LCCNN_BENCH_STEPS (default 300),
+//! LCCNN_BENCH_LAMBDAS (comma list, default "0.05,0.1,0.15,0.25,0.4").
+//! Paper reference: dots < crosses < triangles in compression at roughly
+//! constant accuracy; LCC multiplies the pruned+shared ratio by ~2.4-3.1x.
+
+use lccnn::config::MlpPipelineConfig;
+use lccnn::pipeline::run_mlp_pipeline;
+use lccnn::report::{percent, Table};
+use lccnn::runtime::Runtime;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_lambdas() -> Vec<f32> {
+    std::env::var("LCCNN_BENCH_LAMBDAS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|p| p.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![0.05, 0.1, 0.15, 0.25, 0.4])
+}
+
+fn main() {
+    lccnn::util::logger::init();
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP fig2_mlp: artifacts unavailable: {e:#}");
+            return;
+        }
+    };
+    let steps = env_usize("LCCNN_BENCH_STEPS", 300);
+    let lambdas = env_lambdas();
+
+    let mut table = Table::new(
+        "Fig. 2 — MLP layer-1 compression-accuracy tradeoff (synthetic digits)",
+        &["lambda", "series", "ratio", "top-1 acc", "cols", "clusters"],
+    );
+    let mut lcc_gain_min = f64::INFINITY;
+    let mut lcc_gain_max: f64 = 0.0;
+
+    for &lambda in &lambdas {
+        let cfg = MlpPipelineConfig {
+            train_steps: steps,
+            share_retrain_steps: steps / 4,
+            lambda,
+            ..Default::default()
+        };
+        match run_mlp_pipeline(&rt, &cfg) {
+            Ok(out) => {
+                if lambda == lambdas[0] {
+                    table.add_row(vec![
+                        "-".into(),
+                        "baseline (unregularized)".into(),
+                        "1.0".into(),
+                        percent(out.baseline_accuracy),
+                        "784".into(),
+                        "-".into(),
+                    ]);
+                }
+                for s in &out.stages {
+                    table.add_row(vec![
+                        format!("{lambda}"),
+                        s.stage.clone(),
+                        format!("{:.1}", s.ratio),
+                        percent(s.accuracy),
+                        s.active_columns.to_string(),
+                        if s.clusters > 0 { s.clusters.to_string() } else { "-".into() },
+                    ]);
+                }
+                // the paper's combining-gain claim: LCC on top of
+                // pruning+sharing multiplies the ratio further
+                let gain = out.stages[2].ratio / out.stages[1].ratio.max(1e-9);
+                lcc_gain_min = lcc_gain_min.min(gain);
+                lcc_gain_max = lcc_gain_max.max(gain);
+            }
+            Err(e) => eprintln!("lambda {lambda}: pipeline failed: {e:#}"),
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "LCC multiplier on top of pruning+sharing: {lcc_gain_min:.2}x .. {lcc_gain_max:.2}x \
+         (paper Fig. 2: 2.4x .. 3.1x on MNIST)"
+    );
+}

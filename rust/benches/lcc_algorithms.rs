@@ -1,0 +1,94 @@
+//! ABL-LCC bench: FP vs FS vs CSD across matrix sizes and aspect ratios
+//! (the Sec. III-A properties the paper states: LCC likes tall matrices;
+//! FS wins on small/ill-behaved ones; FP parallelizes).
+//!
+//!     cargo bench --bench lcc_algorithms
+
+use lccnn::graph::schedule;
+use lccnn::lcc::{decompose, LccConfig};
+use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
+use lccnn::report::Table;
+use lccnn::tensor::Matrix;
+use lccnn::util::{timer, Rng};
+
+fn main() {
+    let fmt = FixedPointFormat::default_weights();
+    let mut rng = Rng::new(0);
+
+    let mut t = Table::new(
+        "LCC ablation: adders/entry and graph shape vs matrix size",
+        &["N", "K", "csd/entry", "fp/entry", "fs/entry", "fp ratio", "fs ratio",
+          "fp depth", "fs depth", "fp ms", "fs ms"],
+    );
+    for &n in &[32usize, 64, 128, 256, 512] {
+        for &k in &[8usize, 16, 32] {
+            let w = Matrix::randn(n, k, 0.5, &mut rng);
+            let entries = (n * k) as f64;
+            let csd = matrix_csd_adders(&w, fmt);
+            let (dfp, fp_secs) = timer::time(|| decompose(&w, &LccConfig::fp()));
+            let (dfs, fs_secs) = timer::time(|| decompose(&w, &LccConfig::fs()));
+            let sfp = schedule(dfp.graph());
+            let sfs = schedule(dfs.graph());
+            t.add_row(vec![
+                n.to_string(),
+                k.to_string(),
+                format!("{:.2}", csd as f64 / entries),
+                format!("{:.2}", dfp.additions() as f64 / entries),
+                format!("{:.2}", dfs.additions() as f64 / entries),
+                format!("{:.1}", csd as f64 / dfp.additions().max(1) as f64),
+                format!("{:.1}", csd as f64 / dfs.additions().max(1) as f64),
+                sfp.depth.to_string(),
+                sfs.depth.to_string(),
+                format!("{:.0}", fp_secs * 1e3),
+                format!("{:.0}", fs_secs * 1e3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // slice-width ablation (DESIGN.md design-choice bench): auto width
+    // (= log2 N) vs fixed widths
+    let w = Matrix::randn(256, 32, 0.5, &mut rng);
+    let csd = matrix_csd_adders(&w, fmt);
+    let mut t2 = Table::new(
+        "slice-width ablation (256x32, FS)",
+        &["slice width", "additions", "ratio"],
+    );
+    for width in [2usize, 4, 8, 16, 32] {
+        let mut cfg = LccConfig::fs();
+        cfg.slice_width = Some(width);
+        let d = decompose(&w, &cfg);
+        t2.add_row(vec![
+            width.to_string(),
+            d.additions().to_string(),
+            format!("{:.2}", csd as f64 / d.additions() as f64),
+        ]);
+    }
+    let auto = decompose(&w, &LccConfig::fs());
+    t2.add_row(vec![
+        "auto (log2 N = 8)".into(),
+        auto.additions().to_string(),
+        format!("{:.2}", csd as f64 / auto.additions() as f64),
+    ]);
+    println!("{}", t2.render());
+
+    // ill-behaved matrices: rank-deficient rows (paper footnote 1)
+    let mut low = Matrix::randn(64, 16, 0.5, &mut rng);
+    for r in 0..64 {
+        // rows live in a 4-dim subspace
+        let base = r % 4;
+        let row: Vec<f32> = (0..16).map(|c| low.at(base, c) * (1.0 + r as f32 * 0.01)).collect();
+        low.row_mut(r).copy_from_slice(&row);
+    }
+    let csd_low = matrix_csd_adders(&low, fmt);
+    let fp_low = decompose(&low, &LccConfig::fp()).additions();
+    let fs_low = decompose(&low, &LccConfig::fs()).additions();
+    println!(
+        "ill-behaved (rank-4) 64x16: csd {} | fp {} ({:.1}x) | fs {} ({:.1}x) — FS exploits the subspace",
+        csd_low,
+        fp_low,
+        csd_low as f64 / fp_low.max(1) as f64,
+        fs_low,
+        csd_low as f64 / fs_low.max(1) as f64,
+    );
+}

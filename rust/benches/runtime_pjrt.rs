@@ -1,0 +1,131 @@
+//! RT bench: PJRT artifact execution overhead on the L3 hot path —
+//! compile time (once), per-call latency of fwd/eval/train-step, and
+//! host<->literal conversion cost.
+//!
+//!     cargo bench --bench runtime_pjrt
+
+use lccnn::nn::mlp::MlpParams;
+use lccnn::report::Table;
+use lccnn::runtime::{HostTensor, Runtime};
+use lccnn::util::{stats, timer, Rng};
+
+fn main() {
+    lccnn::util::logger::init();
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP runtime_pjrt: {e:#}");
+            return;
+        }
+    };
+    let params = MlpParams::init(0);
+    let mut rng = Rng::new(1);
+
+    let mut t = Table::new(
+        "PJRT runtime (CPU) — per-call latency",
+        &["artifact", "compile ms", "call us (p50)", "call us (p99)"],
+    );
+
+    let host_params = || {
+        vec![
+            HostTensor::F32(vec![300, 784], params.w1.data().to_vec()),
+            HostTensor::F32(vec![300], params.b1.clone()),
+            HostTensor::F32(vec![10, 300], params.w2.data().to_vec()),
+            HostTensor::F32(vec![10], params.b2.clone()),
+        ]
+    };
+
+    // mlp_fwd
+    let (exe, compile_secs) = timer::time(|| rt.get("mlp_fwd").unwrap());
+    let x = rng.normal_vec(32 * 784, 1.0);
+    let mut inputs = host_params();
+    inputs.push(HostTensor::F32(vec![32, 784], x));
+    let samples = timer::bench(5, 100, || {
+        std::hint::black_box(exe.run(std::hint::black_box(&inputs)).unwrap());
+    });
+    let us: Vec<f64> = samples.iter().map(|s| s * 1e6).collect();
+    t.add_row(vec![
+        "mlp_fwd (batch 32)".into(),
+        format!("{:.0}", compile_secs * 1e3),
+        format!("{:.0}", stats::percentile(&us, 50.0)),
+        format!("{:.0}", stats::percentile(&us, 99.0)),
+    ]);
+
+    // mlp_eval
+    let (exe, compile_secs) = timer::time(|| rt.get("mlp_eval").unwrap());
+    let x = rng.normal_vec(256 * 784, 1.0);
+    let y: Vec<i32> = (0..256).map(|_| rng.below(10) as i32).collect();
+    let mut inputs = host_params();
+    inputs.push(HostTensor::F32(vec![256, 784], x));
+    inputs.push(HostTensor::I32(vec![256], y));
+    let samples = timer::bench(3, 50, || {
+        std::hint::black_box(exe.run(std::hint::black_box(&inputs)).unwrap());
+    });
+    let us: Vec<f64> = samples.iter().map(|s| s * 1e6).collect();
+    t.add_row(vec![
+        "mlp_eval (batch 256)".into(),
+        format!("{:.0}", compile_secs * 1e3),
+        format!("{:.0}", stats::percentile(&us, 50.0)),
+        format!("{:.0}", stats::percentile(&us, 99.0)),
+    ]);
+
+    // mlp_train_step
+    let (exe, compile_secs) = timer::time(|| rt.get("mlp_train_step").unwrap());
+    let zeros = |d: Vec<usize>| {
+        let n: usize = d.iter().product();
+        HostTensor::F32(d, vec![0.0; n])
+    };
+    let x = rng.normal_vec(128 * 784, 1.0);
+    let y: Vec<i32> = (0..128).map(|_| rng.below(10) as i32).collect();
+    let mut inputs = host_params();
+    inputs.extend([
+        zeros(vec![300, 784]),
+        zeros(vec![300]),
+        zeros(vec![10, 300]),
+        zeros(vec![10]),
+    ]);
+    inputs.push(HostTensor::F32(vec![128, 784], x));
+    inputs.push(HostTensor::I32(vec![128], y));
+    inputs.push(HostTensor::scalar_f32(0.05));
+    inputs.push(HostTensor::scalar_f32(0.0));
+    inputs.push(HostTensor::F32(vec![784], vec![1.0; 784]));
+    inputs.push(HostTensor::I32(vec![784], (0..784).collect()));
+    inputs.push(HostTensor::scalar_f32(0.0));
+    let samples = timer::bench(3, 50, || {
+        std::hint::black_box(exe.run(std::hint::black_box(&inputs)).unwrap());
+    });
+    let us: Vec<f64> = samples.iter().map(|s| s * 1e6).collect();
+    t.add_row(vec![
+        "mlp_train_step (batch 128)".into(),
+        format!("{:.0}", compile_secs * 1e3),
+        format!("{:.0}", stats::percentile(&us, 50.0)),
+        format!("{:.0}", stats::percentile(&us, 99.0)),
+    ]);
+    println!("{}", t.render());
+
+    // host tensor -> literal conversion overhead (what the literal-
+    // resident trainer state avoids — §Perf)
+    let w1 = HostTensor::F32(vec![300, 784], params.w1.data().to_vec());
+    let samples = timer::bench(10, 200, || {
+        std::hint::black_box(w1.to_literal().unwrap());
+    });
+    println!(
+        "literal conversion (300x784 f32): {:.0} us/op (the HostTensor path pays ~8 per step)",
+        stats::mean(&samples) * 1e6
+    );
+
+    // end-to-end trainer step (literal-resident state) for comparison
+    // with the raw HostTensor-path train-step row above
+    let data = lccnn::data::synth_mnist::generate(512, 3);
+    let mut tr = lccnn::train::MlpTrainer::new(&rt, &params).unwrap();
+    let mut iter = lccnn::data::BatchIter::new(&data, tr.batch_size(), 4);
+    let step_samples = timer::bench(3, 50, || {
+        let (x, y, _) = iter.next_batch();
+        std::hint::black_box(tr.step(&x, &y, 0.05).unwrap());
+    });
+    let us: Vec<f64> = step_samples.iter().map(|s| s * 1e6).collect();
+    println!(
+        "MlpTrainer.step (literal-resident state): p50 {:.0} us (vs HostTensor path above)",
+        stats::percentile(&us, 50.0)
+    );
+}

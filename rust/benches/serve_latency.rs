@@ -1,0 +1,90 @@
+//! SRV bench: serving latency/throughput, compressed shift-add VM vs
+//! dense PJRT backend, across offered concurrency.
+//!
+//!     cargo bench --bench serve_latency
+
+use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
+use lccnn::config::ServeConfig;
+use lccnn::lcc::LccConfig;
+use lccnn::nn::compressed::{CompressedMlp, Layer1};
+use lccnn::nn::mlp::MlpParams;
+use lccnn::pipeline::mlp::synthetic_reg_weights;
+use lccnn::prune::compact_columns;
+use lccnn::report::Table;
+use lccnn::runtime::{HostTensor, PjrtService};
+use lccnn::serve::{BatchEvaluator, CompressedMlpBackend, PjrtMlpBackend, Server};
+use lccnn::share::SharedLayer;
+use lccnn::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn compressed_model(params: &MlpParams) -> CompressedMlp {
+    let w1 = synthetic_reg_weights(0, 120);
+    let compact = compact_columns(&w1, 1e-6);
+    let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+    let shared = SharedLayer::from_clustering(&compact.weights, &clustering);
+    CompressedMlp {
+        kept: compact.kept,
+        layer1: Layer1::SharedLcc(shared.with_lcc(&LccConfig::fs())),
+        b1: params.b1.clone(),
+        w2: params.w2.clone(),
+        b2: params.b2.clone(),
+    }
+}
+
+fn run(backend: Arc<dyn BatchEvaluator>, name: &str, burst: usize, n: usize, t: &mut Table) {
+    let server = Server::start(backend, ServeConfig { batch_timeout_us: 150, ..Default::default() });
+    let mut rng = Rng::new(42);
+    let start = Instant::now();
+    let mut done = 0usize;
+    while done < n {
+        let b = burst.min(n - done);
+        let rxs: Vec<_> = (0..b).map(|_| server.submit(rng.normal_vec(784, 1.0))).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        done += b;
+    }
+    let thpt = n as f64 / start.elapsed().as_secs_f64();
+    let s = server.shutdown();
+    t.add_row(vec![
+        name.into(),
+        burst.to_string(),
+        format!("{thpt:.0}"),
+        format!("{:.0}", s.p50_latency_us),
+        format!("{:.0}", s.p99_latency_us),
+        format!("{:.1}", s.mean_batch_size),
+    ]);
+}
+
+fn main() {
+    lccnn::util::logger::init();
+    let params = MlpParams::init(0);
+    let n = 3000;
+    let mut t = Table::new(
+        "serving: compressed VM vs dense PJRT under bursty load",
+        &["backend", "burst", "req/s", "p50 us", "p99 us", "mean batch"],
+    );
+    for burst in [1usize, 8, 32] {
+        let model = Arc::new(compressed_model(&params));
+        run(Arc::new(CompressedMlpBackend { model }), "compressed-vm", burst, n, &mut t);
+    }
+    match PjrtService::start_default() {
+        Ok(service) => {
+            let service = Arc::new(service);
+            for burst in [1usize, 8, 32] {
+                let host_params = vec![
+                    HostTensor::F32(vec![300, 784], params.w1.data().to_vec()),
+                    HostTensor::F32(vec![300], params.b1.clone()),
+                    HostTensor::F32(vec![10, 300], params.w2.data().to_vec()),
+                    HostTensor::F32(vec![10], params.b2.clone()),
+                ];
+                let backend: Arc<dyn BatchEvaluator> =
+                    Arc::new(PjrtMlpBackend::new(Arc::clone(&service), host_params, 32));
+                run(backend, "dense-pjrt", burst, n, &mut t);
+            }
+        }
+        Err(e) => eprintln!("dense-pjrt rows skipped: {e:#}"),
+    }
+    println!("{}", t.render());
+}

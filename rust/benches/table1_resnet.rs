@@ -1,0 +1,66 @@
+//! TAB1 bench: regenerates the paper's Table I — compression/accuracy of
+//! the residual CNN for {reg training, reg+LCC-FP, reg+LCC-FS} × {FK, PK}.
+//!
+//!     cargo bench --bench table1_resnet
+//!
+//! Environment knobs: LCCNN_BENCH_STEPS (default 200),
+//! LCCNN_BENCH_EXAMPLES (default 2048). Paper reference (TinyImageNet
+//! ResNet-34, baseline 59.0%): FS >> FP in ratio; FP adds only marginal
+//! gain over reg-training; PK retains slightly more accuracy. The
+//! absolute ratios here are on the scaled substrate (DESIGN.md).
+
+use lccnn::config::ResnetPipelineConfig;
+use lccnn::pipeline::run_resnet_pipeline;
+use lccnn::report::{percent, Table};
+use lccnn::runtime::Runtime;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    lccnn::util::logger::init();
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP table1_resnet: artifacts unavailable: {e:#}");
+            return;
+        }
+    };
+    let cfg = ResnetPipelineConfig {
+        train_steps: env_usize("LCCNN_BENCH_STEPS", 200),
+        train_examples: env_usize("LCCNN_BENCH_EXAMPLES", 2048),
+        ..Default::default()
+    };
+    match run_resnet_pipeline(&rt, &cfg) {
+        Ok(out) => {
+            let mut t = Table::new(
+                &format!(
+                    "Table I — residual CNN, baseline acc {} ({} additions)",
+                    percent(out.baseline_accuracy),
+                    out.baseline_additions
+                ),
+                &["method", "FK ratio", "FK acc", "PK ratio", "PK acc"],
+            );
+            for (name, fk, pk) in &out.rows {
+                t.add_row(vec![
+                    name.clone(),
+                    format!("{:.1}", fk.ratio),
+                    percent(fk.accuracy),
+                    format!("{:.1}", pk.ratio),
+                    percent(pk.accuracy),
+                ]);
+            }
+            println!("{}", t.render());
+            let fp = &out.rows[1];
+            let fs = &out.rows[2];
+            println!(
+                "shape checks: FS-vs-FP ratio advantage (FK) = {:.2}x (paper: 46.5/25.2 = 1.8x); \
+                 FS achieves >= 2x overall: {}",
+                fs.1.ratio / fp.1.ratio.max(1e-9),
+                fs.1.ratio >= 2.0 && fs.2.ratio >= 2.0
+            );
+        }
+        Err(e) => eprintln!("table1 pipeline failed: {e:#}"),
+    }
+}

@@ -1,0 +1,306 @@
+//! Affinity propagation [Frey & Dueck, Science 2007].
+//!
+//! Message-passing clustering on a similarity matrix: responsibilities
+//! `r(i,k)` (how well-suited k is as exemplar for i) and availabilities
+//! `a(i,k)` (how appropriate it is for i to choose k) are iterated with
+//! damping until the exemplar set is stable. The preference (self
+//! similarity) controls cluster granularity; the scikit-learn default —
+//! median of the similarities — is the default here too, matching the
+//! paper's setup.
+
+use super::{column_similarities, Clustering};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AffinityParams {
+    /// damping factor in [0.5, 1)
+    pub damping: f32,
+    /// maximum message-passing iterations
+    pub max_iters: usize,
+    /// stop after the exemplar set is unchanged for this many iterations
+    pub convergence_iters: usize,
+    /// self-similarity; None = `preference_scale` × median of
+    /// off-diagonal similarities
+    pub preference: Option<f32>,
+    /// scale on the median when `preference` is None. Similarities are
+    /// negative distances, so a scale < 1 moves the preference toward 0
+    /// and yields *finer* clusterings — merging only genuinely
+    /// correlated columns, which is what weight sharing needs when the
+    /// matrix is not heavily pruned.
+    pub preference_scale: f32,
+}
+
+impl Default for AffinityParams {
+    fn default() -> Self {
+        AffinityParams {
+            damping: 0.7,
+            max_iters: 300,
+            convergence_iters: 20,
+            preference: None,
+            preference_scale: 0.3,
+        }
+    }
+}
+
+fn median(mut v: Vec<f32>) -> f32 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Run affinity propagation on a (symmetric) similarity matrix.
+pub fn affinity_propagation(s_in: &Matrix, p: &AffinityParams) -> Clustering {
+    let n = s_in.rows();
+    assert_eq!(n, s_in.cols(), "similarity must be square");
+    if n == 0 {
+        return Clustering { labels: vec![], exemplars: vec![] };
+    }
+    if n == 1 {
+        return Clustering { labels: vec![0], exemplars: vec![0] };
+    }
+
+    let mut s = s_in.clone();
+    let pref = p.preference.unwrap_or_else(|| {
+        let mut off = Vec::with_capacity(n * (n - 1));
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    off.push(s.at(i, j));
+                }
+            }
+        }
+        p.preference_scale * median(off)
+    });
+    for i in 0..n {
+        *s.at_mut(i, i) = pref;
+    }
+    // deterministic asymmetric jitter breaks exemplar ties (sklearn uses
+    // random noise; deterministic here for reproducibility). Duplicated
+    // columns make the similarity matrix exactly symmetric under swapping
+    // them, which famously makes AP oscillate or crown both — the jitter
+    // must be relative to the *global* similarity scale to matter.
+    let s_scale = (0..n)
+        .flat_map(|i| (0..n).map(move |j| (i, j)))
+        .map(|(i, j)| s.at(i, j).abs())
+        .fold(0.0f32, f32::max)
+        .max(1e-6);
+    for i in 0..n {
+        for j in 0..n {
+            let h = ((i.wrapping_mul(2654435761) ^ j.wrapping_mul(40503)) % 1009) as f32
+                / 1009.0
+                - 0.5;
+            *s.at_mut(i, j) += 1e-5 * s_scale * h;
+        }
+    }
+
+    let mut r = Matrix::zeros(n, n);
+    let mut a = Matrix::zeros(n, n);
+    let mut stable = 0usize;
+    let mut last_exemplars: Vec<usize> = Vec::new();
+
+    for _ in 0..p.max_iters {
+        // responsibilities: r(i,k) <- s(i,k) - max_{k' != k} (a(i,k') + s(i,k'))
+        for i in 0..n {
+            // top-2 of a(i,:) + s(i,:)
+            let (mut m1, mut m1_idx, mut m2) = (f32::NEG_INFINITY, 0usize, f32::NEG_INFINITY);
+            for k in 0..n {
+                let v = a.at(i, k) + s.at(i, k);
+                if v > m1 {
+                    m2 = m1;
+                    m1 = v;
+                    m1_idx = k;
+                } else if v > m2 {
+                    m2 = v;
+                }
+            }
+            for k in 0..n {
+                let other = if k == m1_idx { m2 } else { m1 };
+                let new = s.at(i, k) - other;
+                *r.at_mut(i, k) = p.damping * r.at(i, k) + (1.0 - p.damping) * new;
+            }
+        }
+        // availabilities:
+        // a(i,k) <- min(0, r(k,k) + sum_{i' not in {i,k}} max(0, r(i',k)))
+        // a(k,k) <- sum_{i' != k} max(0, r(i',k))
+        for k in 0..n {
+            let mut pos_sum = 0.0f32;
+            for i in 0..n {
+                if i != k {
+                    pos_sum += r.at(i, k).max(0.0);
+                }
+            }
+            for i in 0..n {
+                let new = if i == k {
+                    pos_sum
+                } else {
+                    (r.at(k, k) + pos_sum - r.at(i, k).max(0.0)).min(0.0)
+                };
+                *a.at_mut(i, k) = p.damping * a.at(i, k) + (1.0 - p.damping) * new;
+            }
+        }
+        // exemplars: k with r(k,k) + a(k,k) > 0
+        let exemplars: Vec<usize> =
+            (0..n).filter(|&k| r.at(k, k) + a.at(k, k) > 0.0).collect();
+        if exemplars == last_exemplars && !exemplars.is_empty() {
+            stable += 1;
+            if stable >= p.convergence_iters {
+                break;
+            }
+        } else {
+            stable = 0;
+            last_exemplars = exemplars;
+        }
+    }
+
+    let mut exemplars = last_exemplars;
+    if exemplars.is_empty() {
+        // degenerate fallback: every point its own exemplar is useless;
+        // pick the point with max aggregate similarity as one cluster
+        let best = (0..n)
+            .max_by(|&i, &j| {
+                let si: f32 = (0..n).map(|k| s.at(k, i)).sum();
+                let sj: f32 = (0..n).map(|k| s.at(k, j)).sum();
+                si.partial_cmp(&sj).unwrap()
+            })
+            .unwrap();
+        exemplars = vec![best];
+    }
+    // merge exemplars that are (near-)duplicates of each other — exact
+    // column duplicates can crown several identical exemplars, which
+    // costs sharing gain without any fidelity benefit. Two exemplars are
+    // merged when their similarity is within jitter of the maximum (0).
+    let merge_tol = -1e-4 * {
+        let mut m = 0.0f32;
+        for i in 0..n {
+            for j in 0..n {
+                m = m.max(s_in.at(i, j).abs());
+            }
+        }
+        m.max(1e-6)
+    };
+    let mut kept: Vec<usize> = Vec::new();
+    for &e in &exemplars {
+        if !kept.iter().any(|&k| s_in.at(e, k) >= merge_tol) {
+            kept.push(e);
+        }
+    }
+    let exemplars = kept;
+    // assign every point to the most similar exemplar (exemplars to
+    // themselves)
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        if let Some(pos) = exemplars.iter().position(|&e| e == i) {
+            labels[i] = pos;
+            continue;
+        }
+        let mut best = 0usize;
+        let mut best_s = f32::NEG_INFINITY;
+        for (ci, &e) in exemplars.iter().enumerate() {
+            if s.at(i, e) > best_s {
+                best_s = s.at(i, e);
+                best = ci;
+            }
+        }
+        labels[i] = best;
+    }
+    Clustering { labels, exemplars }
+}
+
+/// Cluster the columns of a weight matrix (the paper's usage).
+pub fn cluster_columns(w: &Matrix, p: &AffinityParams) -> Clustering {
+    affinity_propagation(&column_similarities(w), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Build a matrix whose columns form `k` well-separated groups.
+    fn grouped_columns(k: usize, per_group: usize, dim: usize, seed: u64) -> (Matrix, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(dim, 4.0)).collect();
+        let n = k * per_group;
+        let mut w = Matrix::zeros(dim, n);
+        let mut truth = vec![0usize; n];
+        for g in 0..k {
+            for j in 0..per_group {
+                let col = g * per_group + j;
+                truth[col] = g;
+                for r in 0..dim {
+                    *w.at_mut(r, col) = centers[g][r] + 0.05 * rng.normal_f32();
+                }
+            }
+        }
+        (w, truth)
+    }
+
+    fn clusters_match_truth(c: &Clustering, truth: &[usize]) -> bool {
+        // same partition: labels must be a bijective relabeling of truth
+        let mut map = std::collections::HashMap::new();
+        for (l, t) in c.labels.iter().zip(truth) {
+            let e = map.entry(*l).or_insert(*t);
+            if e != t {
+                return false;
+            }
+        }
+        let distinct: std::collections::HashSet<_> = truth.iter().collect();
+        c.num_clusters() == distinct.len()
+    }
+
+    #[test]
+    fn recovers_separated_groups() {
+        let (w, truth) = grouped_columns(4, 8, 10, 0);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        assert!(clusters_match_truth(&c, &truth),
+                "got {} clusters, labels {:?}", c.num_clusters(), c.labels);
+    }
+
+    #[test]
+    fn exemplars_label_themselves() {
+        let (w, _) = grouped_columns(3, 5, 8, 1);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        for (ci, &e) in c.exemplars.iter().enumerate() {
+            assert_eq!(c.labels[e], ci);
+        }
+    }
+
+    #[test]
+    fn single_point() {
+        let s = Matrix::zeros(1, 1);
+        let c = affinity_propagation(&s, &AffinityParams::default());
+        assert_eq!(c.labels, vec![0]);
+        assert_eq!(c.exemplars, vec![0]);
+    }
+
+    #[test]
+    fn low_preference_fewer_clusters() {
+        let (w, _) = grouped_columns(4, 6, 8, 2);
+        let s = column_similarities(&w);
+        let many = affinity_propagation(
+            &s,
+            &AffinityParams { preference: Some(-0.01), ..Default::default() },
+        );
+        let few = affinity_propagation(
+            &s,
+            &AffinityParams { preference: Some(-1000.0), ..Default::default() },
+        );
+        assert!(few.num_clusters() <= many.num_clusters(),
+                "few {} many {}", few.num_clusters(), many.num_clusters());
+    }
+
+    #[test]
+    fn all_labels_valid() {
+        let (w, _) = grouped_columns(2, 10, 6, 3);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        assert!(c.labels.iter().all(|&l| l < c.num_clusters()));
+        assert_eq!(c.labels.len(), w.cols());
+    }
+}

@@ -1,0 +1,137 @@
+//! Column clustering for weight sharing (paper Sec. III-C).
+//!
+//! The paper clusters highly correlated weight-matrix columns with
+//! affinity propagation [Frey & Dueck 2007] — chosen because it does not
+//! need the number of clusters up front. [`affinity`] is a from-scratch
+//! implementation (the paper used scikit-learn; see DESIGN.md
+//! Substitutions); [`kmeans`] is the comparison baseline used in the
+//! ablation bench.
+
+pub mod affinity;
+pub mod kmeans;
+
+use crate::tensor::Matrix;
+
+/// A clustering of matrix columns.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// cluster id for every column (0..num_clusters)
+    pub labels: Vec<usize>,
+    /// column index of each cluster's exemplar/centroid seed
+    pub exemplars: Vec<usize>,
+}
+
+impl Clustering {
+    pub fn num_clusters(&self) -> usize {
+        self.exemplars.len()
+    }
+
+    /// Column indices belonging to each cluster (the paper's I_i sets).
+    pub fn index_sets(&self) -> Vec<Vec<usize>> {
+        let mut sets = vec![Vec::new(); self.num_clusters()];
+        for (col, &l) in self.labels.iter().enumerate() {
+            sets[l].push(col);
+        }
+        sets
+    }
+
+    /// Centroid matrix G: column i = mean of the member columns of
+    /// cluster i (paper: centroids replace their cluster's columns).
+    pub fn centroids(&self, w: &Matrix) -> Matrix {
+        let sets = self.index_sets();
+        let mut g = Matrix::zeros(w.rows(), sets.len());
+        for (ci, set) in sets.iter().enumerate() {
+            assert!(!set.is_empty(), "empty cluster {ci}");
+            for &col in set {
+                for r in 0..w.rows() {
+                    *g.at_mut(r, ci) += w.at(r, col);
+                }
+            }
+            let inv = 1.0 / set.len() as f32;
+            for r in 0..w.rows() {
+                *g.at_mut(r, ci) *= inv;
+            }
+        }
+        g
+    }
+
+    /// Expanded matrix with every column replaced by its centroid.
+    pub fn expand(&self, w: &Matrix) -> Matrix {
+        let g = self.centroids(w);
+        let mut out = Matrix::zeros(w.rows(), w.cols());
+        for (col, &l) in self.labels.iter().enumerate() {
+            for r in 0..w.rows() {
+                *out.at_mut(r, col) = g.at(r, l);
+            }
+        }
+        out
+    }
+}
+
+/// Negative squared euclidean distance between all column pairs — the
+/// similarity both clustering algorithms consume.
+pub fn column_similarities(w: &Matrix) -> Matrix {
+    let n = w.cols();
+    let cols: Vec<Vec<f32>> = (0..n).map(|c| w.col(c)).collect();
+    let mut s = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d: f32 = cols[i]
+                .iter()
+                .zip(&cols[j])
+                .map(|(&a, &b)| (a - b) * (a - b))
+                .sum();
+            *s.at_mut(i, j) = -d;
+            *s.at_mut(j, i) = -d;
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_clustering() -> (Matrix, Clustering) {
+        // 3 columns; columns 0 and 2 identical
+        let w = Matrix::from_rows(&[&[1.0, 5.0, 1.0], &[2.0, 6.0, 2.0]]);
+        let c = Clustering { labels: vec![0, 1, 0], exemplars: vec![0, 1] };
+        (w, c)
+    }
+
+    #[test]
+    fn centroids_average_members() {
+        let (w, c) = toy_clustering();
+        let g = c.centroids(&w);
+        assert_eq!(g.col(0), vec![1.0, 2.0]);
+        assert_eq!(g.col(1), vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn expand_replaces_columns() {
+        let (w, c) = toy_clustering();
+        assert_eq!(c.expand(&w), w); // identical members: expansion exact
+    }
+
+    #[test]
+    fn index_sets_partition_columns() {
+        let (_, c) = toy_clustering();
+        let sets = c.index_sets();
+        assert_eq!(sets, vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn similarities_symmetric_nonpositive() {
+        let (w, _) = toy_clustering();
+        let s = column_similarities(&w);
+        for i in 0..3 {
+            assert_eq!(s.at(i, i), 0.0);
+            for j in 0..3 {
+                assert!(s.at(i, j) <= 0.0);
+                assert_eq!(s.at(i, j), s.at(j, i));
+            }
+        }
+        assert_eq!(s.at(0, 2), 0.0); // identical columns
+        assert!(s.at(0, 1) < 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration system: a first-party mini-TOML parser (sections,
+//! scalars, arrays of scalars, comments) plus the typed experiment
+//! configs the CLI and pipeline consume.
+
+mod toml;
+mod types;
+
+pub use toml::{parse_toml, TomlValue};
+pub use types::{LccAlgoConfig, MlpPipelineConfig, ResnetPipelineConfig, ServeConfig};

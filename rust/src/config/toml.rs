@@ -1,0 +1,179 @@
+//! Mini-TOML: `[section]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous scalar arrays, `#` comments. Enough for the
+//! experiment configs; not a general TOML implementation.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        if let TomlValue::Str(s) = self {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        if let TomlValue::Bool(b) = self {
+            Some(*b)
+        } else {
+            None
+        }
+    }
+
+    pub fn as_float_array(&self) -> Option<Vec<f64>> {
+        if let TomlValue::Array(items) = self {
+            items.iter().map(|v| v.as_float()).collect()
+        } else {
+            None
+        }
+    }
+}
+
+fn parse_scalar(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s:?}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let items: Vec<TomlValue> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(parse_scalar)
+            .collect::<Result<_>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    parse_scalar(s)
+}
+
+/// Parse into section -> key -> value (top-level keys land in "").
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>> {
+    let mut out: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // only strip comments outside strings (strings here never
+            // contain '#': good enough for experiment configs)
+            Some(idx) if !raw[..idx].contains('"') || raw[..idx].matches('"').count() % 2 == 0 => {
+                &raw[..idx]
+            }
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: bad section header {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let v = parse_value(value)
+            .with_context(|| format!("line {}: {value:?}", lineno + 1))?;
+        out.entry(section.clone()).or_default().insert(key.trim().to_string(), v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# experiment config
+name = "fig2"
+[train]
+steps = 500
+lr = 0.05
+lambdas = [0.001, 0.002, 0.005]
+verbose = true
+"#;
+        let t = parse_toml(text).unwrap();
+        assert_eq!(t[""]["name"].as_str(), Some("fig2"));
+        assert_eq!(t["train"]["steps"].as_int(), Some(500));
+        assert_eq!(t["train"]["lr"].as_float(), Some(0.05));
+        assert_eq!(t["train"]["lambdas"].as_float_array().unwrap().len(), 3);
+        assert_eq!(t["train"]["verbose"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let t = parse_toml("x = 3").unwrap();
+        assert_eq!(t[""]["x"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let t = parse_toml("x = 1 # trailing\n# full line\ny = 2").unwrap();
+        assert_eq!(t[""]["x"].as_int(), Some(1));
+        assert_eq!(t[""]["y"].as_int(), Some(2));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_toml("x =").is_err());
+        assert!(parse_toml("just words").is_err());
+        assert!(parse_toml("[unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let t = parse_toml("xs = []").unwrap();
+        assert_eq!(t[""]["xs"], TomlValue::Array(vec![]));
+    }
+}

@@ -1,0 +1,161 @@
+//! Addition accounting for reformulated conv layers.
+//!
+//! Identical structure is charged to the CSD baseline and the compressed
+//! versions (matvec adders are injected per channel), so compression
+//! ratios compare like with like. Recombination is *structure-aware*:
+//! channels whose matrix row is entirely zero (pruned kernels) contribute
+//! no partial product, so they cost no recombination adds either — this
+//! is exactly what pruning buys on the FPGA. PK assumes stride-1
+//! line-buffer reuse: one column product per output position (amortized),
+//! the evaluation scheme implemented (and tested) in
+//! [`super::conv_forward_pk`].
+
+use crate::tensor::{Conv2dParams, Matrix};
+
+/// Number of output positions (oh * ow) of a conv layer.
+pub fn conv_positions(h: usize, w: usize, kh: usize, kw: usize, params: Conv2dParams) -> usize {
+    let (oh, ow, _, _) = super::conv_geometry(h, w, kh, kw, params);
+    oh * ow
+}
+
+/// Per-layer addition accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvCost {
+    /// adds in the per-channel matvecs, per output position
+    pub matvec_per_position: usize,
+    /// partial-output + cross-channel recombination, per output position
+    pub recombine_per_position: usize,
+    /// number of output positions
+    pub positions: usize,
+}
+
+fn row_nonzero(m: &Matrix, r: usize) -> bool {
+    m.row(r).iter().any(|&v| v != 0.0)
+}
+
+impl ConvCost {
+    /// FK: matrices[k] is `co x (kh*kw)`; output n sums one partial per
+    /// channel whose row n is nonzero -> `active(n) - 1` adds each.
+    pub fn fk(
+        positions: usize,
+        matrices: &[Matrix],
+        co: usize,
+        cost_fn: &mut dyn FnMut(&Matrix) -> usize,
+    ) -> Self {
+        let matvec: usize = matrices.iter().map(|m| cost_fn(m)).sum();
+        let mut recombine = 0usize;
+        for n in 0..co {
+            let active = matrices.iter().filter(|m| row_nonzero(m, n)).count();
+            recombine += active.saturating_sub(1);
+        }
+        ConvCost { matvec_per_position: matvec, recombine_per_position: recombine, positions }
+    }
+
+    /// PK: matrices[k] is `(co*kw) x kh`; output n sums one partial per
+    /// nonzero (channel, kernel-column) row -> `active(n) - 1` adds.
+    pub fn pk(
+        positions: usize,
+        matrices: &[Matrix],
+        co: usize,
+        kw: usize,
+        cost_fn: &mut dyn FnMut(&Matrix) -> usize,
+    ) -> Self {
+        let matvec: usize = matrices.iter().map(|m| cost_fn(m)).sum();
+        let mut recombine = 0usize;
+        for n in 0..co {
+            let mut active = 0usize;
+            for m in matrices {
+                for c in 0..kw {
+                    if row_nonzero(m, n * kw + c) {
+                        active += 1;
+                    }
+                }
+            }
+            recombine += active.saturating_sub(1);
+        }
+        ConvCost { matvec_per_position: matvec, recombine_per_position: recombine, positions }
+    }
+
+    pub fn total(&self) -> usize {
+        self.positions * (self.matvec_per_position + self.recombine_per_position)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Padding;
+    use crate::util::Rng;
+
+    fn dense(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::randn(rows, cols, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn positions_same_stride1() {
+        let p = Conv2dParams { stride: 1, padding: Padding::Same };
+        assert_eq!(conv_positions(8, 8, 3, 3, p), 64);
+    }
+
+    #[test]
+    fn positions_valid_stride2() {
+        let p = Conv2dParams { stride: 2, padding: Padding::Valid };
+        assert_eq!(conv_positions(7, 7, 3, 3, p), 9);
+    }
+
+    #[test]
+    fn fk_cost_dense() {
+        let mats = vec![dense(4, 9, 0), dense(4, 9, 1), dense(4, 9, 2)];
+        let mut unit = |_: &Matrix| 7usize;
+        let c = ConvCost::fk(10, &mats, 4, &mut unit);
+        assert_eq!(c.matvec_per_position, 21);
+        assert_eq!(c.recombine_per_position, (3 - 1) * 4);
+        assert_eq!(c.total(), 10 * 29);
+    }
+
+    #[test]
+    fn fk_cost_skips_pruned_rows() {
+        let mut m0 = dense(4, 9, 3);
+        let m1 = dense(4, 9, 4);
+        // channel 0's kernel for output 2 pruned entirely
+        for v in m0.row_mut(2) {
+            *v = 0.0;
+        }
+        let mut zero = |_: &Matrix| 0usize;
+        let c = ConvCost::fk(1, &[m0, m1], 4, &mut zero);
+        // outputs 0,1,3: 2 partials -> 1 add; output 2: 1 partial -> 0
+        assert_eq!(c.recombine_per_position, 3);
+    }
+
+    #[test]
+    fn pk_cost_counts_partials() {
+        // co=2, kw=3: matrices rows = 6
+        let mats = vec![dense(6, 3, 5)];
+        let mut zero = |_: &Matrix| 0usize;
+        let c = ConvCost::pk(10, &mats, 2, 3, &mut zero);
+        // each output: 3 partials -> 2 adds
+        assert_eq!(c.recombine_per_position, 4);
+        assert_eq!(c.total(), 40);
+    }
+
+    #[test]
+    fn pk_cost_skips_pruned_columns() {
+        let mut m = dense(6, 3, 6);
+        // output 0, kernel-column 1 pruned
+        for v in m.row_mut(1) {
+            *v = 0.0;
+        }
+        let mut zero = |_: &Matrix| 0usize;
+        let c = ConvCost::pk(1, &[m], 2, 3, &mut zero);
+        assert_eq!(c.recombine_per_position, 1 + 2); // output0: 2 partials, output1: 3
+    }
+
+    #[test]
+    fn fully_pruned_channel_costs_nothing() {
+        let zero_m = Matrix::zeros(4, 9);
+        let mut cost = |m: &Matrix| m.nnz();
+        let c = ConvCost::fk(5, &[zero_m], 4, &mut cost);
+        assert_eq!(c.total(), 0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Full-kernel (FK) reformulation: one `N × (kh·kw)` matrix per input
+//! channel.
+
+use super::conv_geometry;
+use crate::tensor::{Conv2dParams, Matrix, Tensor4};
+
+/// Extract the FK matrices from an HWIO kernel: element `[n, ky*kw+kx]`
+/// of matrix k is `kernel[ky, kx, k, n]`.
+pub fn fk_matrices(kernel: &Tensor4) -> Vec<Matrix> {
+    let (kh, kw, ci, co) = kernel.shape();
+    (0..ci)
+        .map(|k| {
+            let mut m = Matrix::zeros(co, kh * kw);
+            for n in 0..co {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        *m.at_mut(n, ky * kw + kx) = kernel.at(ky, kx, k, n);
+                    }
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Forward pass through the FK formulation:
+/// `y[:, p] = Σ_k W_k x_k(p)` with `x_k(p)` the flattened receptive field.
+///
+/// `apply` evaluates one per-channel matvec — inject `|k, x| mats[k].matvec(x)`
+/// for the dense path or an adder-graph execution for the compressed path.
+pub fn conv_forward_fk(
+    input: &Tensor4,
+    kernel_shape: (usize, usize, usize, usize),
+    params: Conv2dParams,
+    mut apply: impl FnMut(usize, &[f32]) -> Vec<f32>,
+) -> Tensor4 {
+    let (n, h, w, ci) = input.shape();
+    let (kh, kw, kci, co) = kernel_shape;
+    assert_eq!(ci, kci, "channel mismatch");
+    let (oh, ow, ph, pw) = conv_geometry(h, w, kh, kw, params);
+    let s = params.stride;
+    let mut out = Tensor4::zeros(n, oh, ow, co);
+    let mut patch = vec![0.0f32; kh * kw];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for k in 0..ci {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * s + ky) as isize - ph;
+                            let ix = (ox * s + kx) as isize - pw;
+                            patch[ky * kw + kx] = input.at_padded(b, iy, ix, k);
+                        }
+                    }
+                    let y = apply(k, &patch);
+                    debug_assert_eq!(y.len(), co);
+                    for (c_out, &v) in y.iter().enumerate() {
+                        *out.at_mut(b, oy, ox, c_out) += v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d, Padding};
+    use crate::util::Rng;
+
+    fn rand_t4(n: usize, h: usize, w: usize, c: usize, seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(n, h, w, c, rng.normal_vec(n * h * w * c, 1.0))
+    }
+
+    #[test]
+    fn fk_matrix_layout() {
+        let mut kernel = Tensor4::zeros(2, 2, 1, 3);
+        *kernel.at_mut(1, 0, 0, 2) = 5.0; // ky=1,kx=0,k=0,n=2
+        let mats = fk_matrices(&kernel);
+        assert_eq!(mats.len(), 1);
+        assert_eq!(mats[0].rows(), 3);
+        assert_eq!(mats[0].cols(), 4);
+        assert_eq!(mats[0].at(2, 2), 5.0); // row n=2, col ky*kw+kx = 2
+    }
+
+    #[test]
+    fn fk_forward_matches_direct_conv_same() {
+        let input = rand_t4(2, 6, 6, 3, 0);
+        let kernel = rand_t4(3, 3, 3, 4, 1); // (kh,kw,ci,co) reuse of T4
+        let params = Conv2dParams { stride: 1, padding: Padding::Same };
+        let want = conv2d(&input, &kernel, params);
+        let mats = fk_matrices(&kernel);
+        let got = conv_forward_fk(&input, kernel.shape(), params, |k, x| mats[k].matvec(x));
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fk_forward_matches_direct_conv_stride2_valid() {
+        let input = rand_t4(1, 7, 7, 2, 2);
+        let kernel = rand_t4(3, 3, 2, 5, 3);
+        let params = Conv2dParams { stride: 2, padding: Padding::Valid };
+        let want = conv2d(&input, &kernel, params);
+        let mats = fk_matrices(&kernel);
+        let got = conv_forward_fk(&input, kernel.shape(), params, |k, x| mats[k].matvec(x));
+        assert_eq!(want.shape(), got.shape());
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

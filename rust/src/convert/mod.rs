@@ -1,0 +1,48 @@
+//! Convolution → matrix-vector reformulations (paper Sec. III-D).
+//!
+//! A conv layer with K input maps and N kernels of size O×O becomes, per
+//! input channel k, a constant matrix:
+//!
+//! * **FK (full kernel)**: `W_k ∈ R^{N × O²}` — row n is kernel (k, n)
+//!   flattened; one matvec per output position per channel against the
+//!   flattened receptive field.
+//! * **PK (partial kernel)**: `W_k ∈ R^{N·O × O}` — row (n, c) is column
+//!   c of kernel (k, n); one matvec per *image column* of the receptive
+//!   field, partial outputs recombined across the O column offsets. The
+//!   matrix is O× taller and O× narrower — the aspect ratio LCC wants.
+//!
+//! Both forwards are tested for exact equivalence against
+//! [`crate::tensor::conv2d`], and [`ConvCost`] gives the addition
+//! accounting used by the Table-I bench (identical structure for the CSD
+//! baseline and the LCC-compressed versions, so ratios are consistent).
+
+mod cost;
+mod fk;
+mod pk;
+
+pub use cost::{conv_positions, ConvCost};
+pub use fk::{conv_forward_fk, fk_matrices};
+pub use pk::{conv_forward_pk, pk_matrices};
+
+use crate::tensor::{Conv2dParams, Padding};
+
+/// Output spatial dims + padding offsets for a conv (SAME/VALID).
+pub(crate) fn conv_geometry(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    params: Conv2dParams,
+) -> (usize, usize, isize, isize) {
+    let s = params.stride;
+    match params.padding {
+        Padding::Same => {
+            let oh = h.div_ceil(s);
+            let ow = w.div_ceil(s);
+            let ph = (((oh - 1) * s + kh).saturating_sub(h) / 2) as isize;
+            let pw = (((ow - 1) * s + kw).saturating_sub(w) / 2) as isize;
+            (oh, ow, ph, pw)
+        }
+        Padding::Valid => ((h - kh) / s + 1, (w - kw) / s + 1, 0, 0),
+    }
+}

@@ -1,0 +1,152 @@
+//! Partial-kernel (PK) reformulation: one `(N·kw) × kh` matrix per input
+//! channel; rows are single kernel columns (paper Sec. III-D, footnote 4:
+//! columns are used here, rows work equally).
+//!
+//! The same image column feeds the kernel columns of `kw` adjacent output
+//! positions, so the forward pass computes each column product once per
+//! (row-strip, image-column) and recombines — the line-buffer evaluation
+//! an FPGA implementation would use.
+
+use super::conv_geometry;
+use crate::tensor::{Conv2dParams, Matrix, Tensor4};
+use std::collections::HashMap;
+
+/// Extract PK matrices from an HWIO kernel: element `[n*kw + c, r]` of
+/// matrix k is `kernel[r, c, k, n]` (kernel column c of output n).
+pub fn pk_matrices(kernel: &Tensor4) -> Vec<Matrix> {
+    let (kh, kw, ci, co) = kernel.shape();
+    (0..ci)
+        .map(|k| {
+            let mut m = Matrix::zeros(co * kw, kh);
+            for n in 0..co {
+                for c in 0..kw {
+                    for r in 0..kh {
+                        *m.at_mut(n * kw + c, r) = kernel.at(r, c, k, n);
+                    }
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Forward pass through the PK formulation. `apply(k, col)` multiplies
+/// the channel-k PK matrix by one kh-long image column, returning the
+/// `co*kw` partial products; results are cached per image column within a
+/// row strip and recombined across the kw offsets.
+pub fn conv_forward_pk(
+    input: &Tensor4,
+    kernel_shape: (usize, usize, usize, usize),
+    params: Conv2dParams,
+    mut apply: impl FnMut(usize, &[f32]) -> Vec<f32>,
+) -> Tensor4 {
+    let (n, h, w, ci) = input.shape();
+    let (kh, kw, kci, co) = kernel_shape;
+    assert_eq!(ci, kci, "channel mismatch");
+    let (oh, ow, ph, pw) = conv_geometry(h, w, kh, kw, params);
+    let s = params.stride;
+    let mut out = Tensor4::zeros(n, oh, ow, co);
+    let mut col = vec![0.0f32; kh];
+    for b in 0..n {
+        for oy in 0..oh {
+            let iy0 = (oy * s) as isize - ph;
+            for k in 0..ci {
+                // column products for this (batch, row strip, channel)
+                let mut cache: HashMap<isize, Vec<f32>> = HashMap::new();
+                for ox in 0..ow {
+                    for c in 0..kw {
+                        let ix = (ox * s) as isize - pw + c as isize;
+                        let partials = cache.entry(ix).or_insert_with(|| {
+                            for (r, cv) in col.iter_mut().enumerate() {
+                                *cv = input.at_padded(b, iy0 + r as isize, ix, k);
+                            }
+                            apply(k, &col)
+                        });
+                        debug_assert_eq!(partials.len(), co * kw);
+                        for n_out in 0..co {
+                            *out.at_mut(b, oy, ox, n_out) += partials[n_out * kw + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d, Padding};
+    use crate::util::Rng;
+
+    fn rand_t4(n: usize, h: usize, w: usize, c: usize, seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        Tensor4::from_vec(n, h, w, c, rng.normal_vec(n * h * w * c, 1.0))
+    }
+
+    #[test]
+    fn pk_matrix_layout() {
+        let mut kernel = Tensor4::zeros(3, 3, 1, 2);
+        *kernel.at_mut(2, 1, 0, 1) = 7.0; // r=2, c=1, k=0, n=1
+        let mats = pk_matrices(&kernel);
+        assert_eq!(mats[0].rows(), 6); // co*kw = 2*3
+        assert_eq!(mats[0].cols(), 3); // kh
+        assert_eq!(mats[0].at(1 * 3 + 1, 2), 7.0);
+    }
+
+    #[test]
+    fn pk_taller_than_fk() {
+        let kernel = rand_t4(3, 3, 4, 8, 0);
+        let fkm = super::super::fk_matrices(&kernel);
+        let pkm = pk_matrices(&kernel);
+        assert_eq!(fkm[0].rows(), 8);
+        assert_eq!(fkm[0].cols(), 9);
+        assert_eq!(pkm[0].rows(), 24);
+        assert_eq!(pkm[0].cols(), 3);
+        // same number of entries, steeper aspect ratio
+        assert_eq!(fkm[0].rows() * fkm[0].cols(), pkm[0].rows() * pkm[0].cols());
+    }
+
+    #[test]
+    fn pk_forward_matches_direct_conv_same() {
+        let input = rand_t4(2, 6, 6, 3, 1);
+        let kernel = rand_t4(3, 3, 3, 4, 2);
+        let params = Conv2dParams { stride: 1, padding: Padding::Same };
+        let want = conv2d(&input, &kernel, params);
+        let mats = pk_matrices(&kernel);
+        let got = conv_forward_pk(&input, kernel.shape(), params, |k, x| mats[k].matvec(x));
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pk_forward_matches_direct_conv_stride2() {
+        let input = rand_t4(1, 8, 8, 2, 3);
+        let kernel = rand_t4(3, 3, 2, 3, 4);
+        let params = Conv2dParams { stride: 2, padding: Padding::Same };
+        let want = conv2d(&input, &kernel, params);
+        let mats = pk_matrices(&kernel);
+        let got = conv_forward_pk(&input, kernel.shape(), params, |k, x| mats[k].matvec(x));
+        assert_eq!(want.shape(), got.shape());
+        for (a, b) in want.data().iter().zip(got.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn column_products_are_reused_at_stride1() {
+        let input = rand_t4(1, 5, 5, 1, 5);
+        let kernel = rand_t4(3, 3, 1, 2, 6);
+        let params = Conv2dParams { stride: 1, padding: Padding::Valid };
+        let mats = pk_matrices(&kernel);
+        let mut calls = 0usize;
+        let _ = conv_forward_pk(&input, kernel.shape(), params, |k, x| {
+            calls += 1;
+            mats[k].matvec(x)
+        });
+        // valid 5x5 / 3x3 -> oh=ow=3; per strip 5 unique columns, 3 strips
+        assert_eq!(calls, 15, "expected column reuse");
+    }
+}

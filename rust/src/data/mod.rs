@@ -1,0 +1,133 @@
+//! Synthetic datasets (DESIGN.md Substitutions: no MNIST/TinyImageNet on
+//! this host, so procedurally generated stand-ins with the same shapes
+//! and task structure drive the pipeline end to end).
+
+pub mod synth_mnist;
+pub mod synth_tiny;
+
+use crate::util::Rng;
+
+/// A labelled dataset of flattened f32 examples.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// row-major: example i occupies [i*dims, (i+1)*dims)
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub dims: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn example(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dims..(i + 1) * self.dims]
+    }
+
+    /// Gather a batch by indices into contiguous buffers.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.dims);
+        let mut ys = Vec::with_capacity(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.example(i));
+            ys.push(self.labels[i]);
+        }
+        (xs, ys)
+    }
+
+    /// Split off the last `n` examples as a held-out set.
+    pub fn split_off(mut self, n: usize) -> (Dataset, Dataset) {
+        assert!(n <= self.len());
+        let keep = self.len() - n;
+        let test = Dataset {
+            images: self.images.split_off(keep * self.dims),
+            labels: self.labels.split_off(keep),
+            dims: self.dims,
+        };
+        (self, test)
+    }
+}
+
+/// Shuffled epoch iterator producing fixed-size batches (drops the
+/// ragged tail, as the AOT artifacts have a fixed batch dimension).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        BatchIter { data, batch, order, pos: 0, rng }
+    }
+
+    /// Next batch, reshuffling at epoch end. Returns (x, y, new_epoch).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>, bool) {
+        let mut new_epoch = false;
+        if self.pos + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            new_epoch = true;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        let (x, y) = self.data.gather(idx);
+        (x, y, new_epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            images: (0..20).map(|v| v as f32).collect(),
+            labels: (0..10).collect(),
+            dims: 2,
+        }
+    }
+
+    #[test]
+    fn gather_batches() {
+        let d = toy();
+        let (x, y) = d.gather(&[1, 3]);
+        assert_eq!(x, vec![2.0, 3.0, 6.0, 7.0]);
+        assert_eq!(y, vec![1, 3]);
+    }
+
+    #[test]
+    fn split_off_sizes() {
+        let (train, test) = toy().split_off(3);
+        assert_eq!(train.len(), 7);
+        assert_eq!(test.len(), 3);
+        assert_eq!(test.labels, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let d = toy();
+        let mut it = BatchIter::new(&d, 3, 0);
+        let mut seen = 0;
+        let mut epochs = 0;
+        for _ in 0..6 {
+            let (_, y, new_epoch) = it.next_batch();
+            assert_eq!(y.len(), 3);
+            if new_epoch {
+                epochs += 1;
+            }
+            seen += 3;
+        }
+        assert!(seen >= 10 && epochs >= 1);
+    }
+}

@@ -1,0 +1,176 @@
+//! Procedural 28×28 digit dataset — the MNIST stand-in.
+//!
+//! Digits are rendered as seven-segment strokes with per-sample affine
+//! jitter (shift/scale/rotation), stroke-thickness variation, Gaussian
+//! blur and pixel noise, giving a learnable 10-class task with the exact
+//! MNIST geometry (784-d inputs) the paper's MLP experiment uses.
+
+use super::Dataset;
+use crate::util::Rng;
+
+pub const SIDE: usize = 28;
+pub const DIMS: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// Segment endpoints in a unit box (x0, y0, x1, y1); standard 7-seg
+/// layout: 0 top, 1 top-left, 2 top-right, 3 middle, 4 bottom-left,
+/// 5 bottom-right, 6 bottom.
+const SEGMENTS: [(f32, f32, f32, f32); 7] = [
+    (0.2, 0.1, 0.8, 0.1),
+    (0.2, 0.1, 0.2, 0.5),
+    (0.8, 0.1, 0.8, 0.5),
+    (0.2, 0.5, 0.8, 0.5),
+    (0.2, 0.5, 0.2, 0.9),
+    (0.8, 0.5, 0.8, 0.9),
+    (0.2, 0.9, 0.8, 0.9),
+];
+
+const DIGIT_SEGMENTS: [&[usize]; 10] = [
+    &[0, 1, 2, 4, 5, 6],    // 0
+    &[2, 5],                // 1
+    &[0, 2, 3, 4, 6],       // 2
+    &[0, 2, 3, 5, 6],       // 3
+    &[1, 2, 3, 5],          // 4
+    &[0, 1, 3, 5, 6],       // 5
+    &[0, 1, 3, 4, 5, 6],    // 6
+    &[0, 2, 5],             // 7
+    &[0, 1, 2, 3, 4, 5, 6], // 8
+    &[0, 1, 2, 3, 5, 6],    // 9
+];
+
+fn render_digit(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    out.fill(0.0);
+    let cx = 0.5 + rng.range_f64(-0.07, 0.07) as f32;
+    let cy = 0.5 + rng.range_f64(-0.07, 0.07) as f32;
+    let scale = rng.range_f64(0.8, 1.15) as f32;
+    let theta = rng.range_f64(-0.18, 0.18) as f32;
+    let (sin, cos) = theta.sin_cos();
+    let thickness = rng.range_f64(1.0, 1.8) as f32;
+    let tf = |x: f32, y: f32| -> (f32, f32) {
+        // center, scale, rotate, recenter, to pixels
+        let (dx, dy) = ((x - 0.5) * scale, (y - 0.5) * scale);
+        let (rx, ry) = (dx * cos - dy * sin, dx * sin + dy * cos);
+        ((rx + cx) * SIDE as f32, (ry + cy) * SIDE as f32)
+    };
+    for &seg in DIGIT_SEGMENTS[digit] {
+        let (x0, y0, x1, y1) = SEGMENTS[seg];
+        let (px0, py0) = tf(x0, y0);
+        let (px1, py1) = tf(x1, y1);
+        let len = ((px1 - px0).powi(2) + (py1 - py0).powi(2)).sqrt();
+        let steps = (len * 2.0).ceil().max(2.0) as usize;
+        for s in 0..=steps {
+            let t = s as f32 / steps as f32;
+            let (sx, sy) = (px0 + t * (px1 - px0), py0 + t * (py1 - py0));
+            // splat a Gaussian brush
+            let r = thickness.ceil() as isize + 1;
+            for dy in -r..=r {
+                for dx in -r..=r {
+                    let (ix, iy) = (sx as isize + dx, sy as isize + dy);
+                    if ix < 0 || iy < 0 || ix >= SIDE as isize || iy >= SIDE as isize {
+                        continue;
+                    }
+                    let d2 = ((ix as f32 - sx).powi(2) + (iy as f32 - sy).powi(2))
+                        / (thickness * thickness);
+                    let v = (-d2).exp();
+                    let p = &mut out[iy as usize * SIDE + ix as usize];
+                    *p = (*p + v * 0.8).min(1.0);
+                }
+            }
+        }
+    }
+    // pixel noise
+    for p in out.iter_mut() {
+        *p = (*p + 0.04 * rng.normal_f32()).clamp(0.0, 1.0);
+    }
+}
+
+/// Generate `n` examples with balanced random classes.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * DIMS];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let digit = i % CLASSES; // balanced
+        render_digit(digit, &mut rng, &mut images[i * DIMS..(i + 1) * DIMS]);
+        labels.push(digit as i32);
+    }
+    // shuffle examples jointly
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut ds = Dataset { images: vec![0.0; n * DIMS], labels: vec![0; n], dims: DIMS };
+    for (new_i, &old_i) in order.iter().enumerate() {
+        ds.images[new_i * DIMS..(new_i + 1) * DIMS]
+            .copy_from_slice(&images[old_i * DIMS..(old_i + 1) * DIMS]);
+        ds.labels[new_i] = labels[old_i];
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = generate(50, 7);
+        let b = generate(50, 7);
+        assert_eq!(a.len(), 50);
+        assert_eq!(a.dims, 784);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn pixels_in_range_and_nontrivial() {
+        let d = generate(30, 1);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let mean: f32 = d.images.iter().sum::<f32>() / d.images.len() as f32;
+        assert!(mean > 0.02 && mean < 0.6, "mean {mean}");
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = generate(100, 2);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_matching() {
+        // nearest-mean classifier on raw pixels should beat chance by a lot
+        let train = generate(400, 3);
+        let test = generate(100, 4);
+        let mut means = vec![vec![0.0f32; DIMS]; CLASSES];
+        let mut counts = vec![0usize; CLASSES];
+        for i in 0..train.len() {
+            let l = train.labels[i] as usize;
+            counts[l] += 1;
+            for (m, &v) in means[l].iter_mut().zip(train.example(i)) {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..test.len() {
+            let x = test.example(i);
+            let pred = (0..CLASSES)
+                .min_by(|&a, &b| {
+                    let da: f32 = x.iter().zip(&means[a]).map(|(&p, &q)| (p - q) * (p - q)).sum();
+                    let db: f32 = x.iter().zip(&means[b]).map(|(&p, &q)| (p - q) * (p - q)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 60, "nearest-mean accuracy {correct}/100");
+    }
+}

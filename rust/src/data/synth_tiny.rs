@@ -1,0 +1,146 @@
+//! Procedural 32×32×3 shape/texture dataset — the TinyImageNet stand-in
+//! (DESIGN.md Substitutions), 40 classes = 8 shapes × 5 color palettes.
+
+use super::Dataset;
+use crate::util::Rng;
+
+pub const SIDE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const DIMS: usize = SIDE * SIDE * CHANNELS;
+pub const SHAPES: usize = 8;
+pub const PALETTES: usize = 5;
+pub const CLASSES: usize = SHAPES * PALETTES;
+
+const PALETTE_RGB: [[f32; 3]; PALETTES] = [
+    [0.9, 0.2, 0.2],
+    [0.2, 0.8, 0.3],
+    [0.25, 0.35, 0.95],
+    [0.9, 0.8, 0.2],
+    [0.8, 0.3, 0.85],
+];
+
+fn shape_mask(shape: usize, fx: f32, fy: f32, size: f32, rot: f32) -> f32 {
+    // fx, fy in [-1, 1] centered coords (already jitter-shifted)
+    let (s, c) = rot.sin_cos();
+    let x = fx * c - fy * s;
+    let y = fx * s + fy * c;
+    let r = (x * x + y * y).sqrt();
+    match shape {
+        0 => ((size - r) * 8.0).clamp(0.0, 1.0),                     // disc
+        1 => {
+            let ring = (r - size * 0.75).abs();
+            ((size * 0.25 - ring) * 10.0).clamp(0.0, 1.0)            // ring
+        }
+        2 => {
+            let d = x.abs().max(y.abs());
+            ((size - d) * 8.0).clamp(0.0, 1.0)                       // square
+        }
+        3 => {
+            let d = x.abs() + y.abs();
+            ((size - d) * 8.0).clamp(0.0, 1.0)                       // diamond
+        }
+        4 => {
+            // triangle: inside y > -size/2 and below the two slanted edges
+            let inside = y > -size * 0.6
+                && y < size * 0.9 - 2.0 * x.abs();
+            if inside { 1.0 } else { 0.0 }
+        }
+        5 => (0.5 + 0.5 * (x * std::f32::consts::PI * 4.0 / size).sin()).powi(2), // v stripes
+        6 => (0.5 + 0.5 * (y * std::f32::consts::PI * 4.0 / size).sin()).powi(2), // h stripes
+        _ => {
+            let cxs = (x * std::f32::consts::PI * 3.0 / size).sin();
+            let cys = (y * std::f32::consts::PI * 3.0 / size).sin();
+            if cxs * cys > 0.0 { 1.0 } else { 0.0 }                  // checker
+        }
+    }
+}
+
+fn render(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    let shape = class % SHAPES;
+    let palette = class / SHAPES;
+    let base = PALETTE_RGB[palette];
+    let cx = rng.range_f64(-0.25, 0.25) as f32;
+    let cy = rng.range_f64(-0.25, 0.25) as f32;
+    let size = rng.range_f64(0.45, 0.75) as f32;
+    let rot = rng.range_f64(-0.5, 0.5) as f32;
+    let tint: [f32; 3] = [
+        (base[0] + 0.1 * rng.normal_f32()).clamp(0.05, 1.0),
+        (base[1] + 0.1 * rng.normal_f32()).clamp(0.05, 1.0),
+        (base[2] + 0.1 * rng.normal_f32()).clamp(0.05, 1.0),
+    ];
+    let bg = rng.range_f64(0.0, 0.25) as f32;
+    for py in 0..SIDE {
+        for px in 0..SIDE {
+            let fx = (px as f32 / SIDE as f32) * 2.0 - 1.0 - cx;
+            let fy = (py as f32 / SIDE as f32) * 2.0 - 1.0 - cy;
+            let m = shape_mask(shape, fx, fy, size, rot);
+            for ch in 0..CHANNELS {
+                let v = bg * (1.0 - m) + tint[ch] * m + 0.03 * rng.normal_f32();
+                out[(py * SIDE + px) * CHANNELS + ch] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` examples with balanced classes (NHWC flattened).
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut images = vec![0.0f32; n * DIMS];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % CLASSES;
+        render(class, &mut rng, &mut images[i * DIMS..(i + 1) * DIMS]);
+        labels.push(class as i32);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut ds = Dataset { images: vec![0.0; n * DIMS], labels: vec![0; n], dims: DIMS };
+    for (new_i, &old_i) in order.iter().enumerate() {
+        ds.images[new_i * DIMS..(new_i + 1) * DIMS]
+            .copy_from_slice(&images[old_i * DIMS..(old_i + 1) * DIMS]);
+        ds.labels[new_i] = labels[old_i];
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let a = generate(40, 0);
+        let b = generate(40, 0);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.dims, 32 * 32 * 3);
+        assert!(a.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn covers_all_classes() {
+        let d = generate(CLASSES * 2, 1);
+        let mut seen = vec![0usize; CLASSES];
+        for &l in &d.labels {
+            seen[l as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c == 2), "{seen:?}");
+    }
+
+    #[test]
+    fn classes_differ_visually() {
+        // mean intensity per class should not all collapse to one value
+        let d = generate(CLASSES * 4, 2);
+        let mut per_class = vec![Vec::new(); CLASSES];
+        for i in 0..d.len() {
+            let m: f32 = d.example(i).iter().sum::<f32>() / DIMS as f32;
+            per_class[d.labels[i] as usize].push(m);
+        }
+        let means: Vec<f32> = per_class
+            .iter()
+            .map(|v| v.iter().sum::<f32>() / v.len() as f32)
+            .collect();
+        let spread = means.iter().cloned().fold(f32::MIN, f32::max)
+            - means.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 0.05, "class means too similar: {spread}");
+    }
+}

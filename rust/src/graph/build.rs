@@ -1,0 +1,203 @@
+//! Builders: lower LCC decompositions (factor chains, FS subgraphs) into
+//! one flat [`AdderGraph`] covering the whole matrix, including the
+//! cross-slice output summation of eq. (3).
+
+use super::ir::{AdderGraph, NodeRef, Operand, OutputSpec};
+use crate::lcc::decompose::{LccDecomposition, SliceKind};
+use crate::lcc::factor::P2Factor;
+
+/// Append a factor chain (F_0 first) whose F_0 consumes `inputs`.
+/// Returns one optional operand per final-factor row (None = zero row).
+pub fn append_factor_chain(
+    g: &mut AdderGraph,
+    factors: &[P2Factor],
+    inputs: &[Operand],
+) -> Vec<Option<Operand>> {
+    let mut layer: Vec<Option<Operand>> = inputs.iter().copied().map(Some).collect();
+    for f in factors {
+        assert_eq!(f.in_dim, layer.len(), "factor chain dim mismatch");
+        let mut next = Vec::with_capacity(f.out_dim());
+        for row in &f.rows {
+            let ops: Vec<Operand> = row
+                .iter()
+                .filter_map(|t| layer[t.src].map(|op| op.scaled(t.shift, t.negative)))
+                .collect();
+            next.push(g.push_sum(ops));
+        }
+        layer = next;
+    }
+    layer
+}
+
+/// Inline `sub` into `g`, wiring `sub`'s inputs to the given operands.
+/// Returns `sub`'s outputs as operands of `g` (None for Zero outputs).
+pub fn append_subgraph(
+    g: &mut AdderGraph,
+    sub: &AdderGraph,
+    input_map: &[Operand],
+) -> Vec<Option<Operand>> {
+    assert_eq!(input_map.len(), sub.num_inputs(), "subgraph input mismatch");
+    let mut node_map: Vec<Operand> = Vec::with_capacity(sub.nodes().len());
+    let remap = |op: Operand, node_map: &[Operand]| -> Operand {
+        let base = match op.src {
+            NodeRef::Input(i) => input_map[i as usize],
+            NodeRef::Node(i) => node_map[i as usize],
+        };
+        base.scaled(op.shift, op.negative)
+    };
+    for node in sub.nodes() {
+        let a = remap(node.a, &node_map);
+        let b = remap(node.b, &node_map);
+        node_map.push(g.push_add(a, b));
+    }
+    sub.outputs()
+        .iter()
+        .map(|o| match o {
+            OutputSpec::Zero => None,
+            OutputSpec::Ref(op) => Some(remap(*op, &node_map)),
+        })
+        .collect()
+}
+
+/// Lower a full decomposition to a single graph over all `n_cols` inputs:
+/// each slice's program runs on its column range and the per-row slice
+/// outputs are summed with balanced trees.
+pub fn decomposition_to_graph(d: &LccDecomposition) -> AdderGraph {
+    let mut g = AdderGraph::new(d.n_cols);
+    // per output row, the operands contributed by each slice
+    let mut row_parts: Vec<Vec<Operand>> = vec![Vec::new(); d.n_rows];
+    for slice in &d.slices {
+        let inputs: Vec<Operand> =
+            (slice.col_start..slice.col_start + slice.width).map(Operand::input).collect();
+        let outs = match &slice.kind {
+            SliceKind::Factors(factors) => append_factor_chain(&mut g, factors, &inputs),
+            SliceKind::Graph(sub) => append_subgraph(&mut g, sub, &inputs),
+        };
+        assert_eq!(outs.len(), d.n_rows, "slice output arity");
+        for (r, op) in outs.into_iter().enumerate() {
+            if let Some(op) = op {
+                row_parts[r].push(op);
+            }
+        }
+    }
+    let outputs = row_parts
+        .into_iter()
+        .map(|parts| match_sum(&mut g, parts))
+        .collect();
+    g.set_outputs(outputs);
+    g
+}
+
+fn match_sum(g: &mut AdderGraph, parts: Vec<Operand>) -> OutputSpec {
+    match g.push_sum(parts) {
+        None => OutputSpec::Zero,
+        Some(op) => OutputSpec::Ref(op),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lcc::factor::Term;
+    use crate::tensor::Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn factor_chain_equals_dense_product() {
+        // F0: 3x2, F1: 2x3 random po2 factors
+        let f0 = P2Factor {
+            in_dim: 2,
+            rows: vec![
+                vec![Term { src: 0, shift: 1, negative: false }],
+                vec![
+                    Term { src: 0, shift: 0, negative: true },
+                    Term { src: 1, shift: -1, negative: false },
+                ],
+                vec![Term { src: 1, shift: 2, negative: false }],
+            ],
+        };
+        let f1 = P2Factor {
+            in_dim: 3,
+            rows: vec![
+                vec![
+                    Term { src: 0, shift: 0, negative: false },
+                    Term { src: 2, shift: -2, negative: true },
+                ],
+                vec![Term { src: 1, shift: 3, negative: false }],
+            ],
+        };
+        let mut g = AdderGraph::new(2);
+        let inputs: Vec<Operand> = (0..2).map(Operand::input).collect();
+        let outs = append_factor_chain(&mut g, &[f0.clone(), f1.clone()], &inputs);
+        g.set_outputs(outs.into_iter().map(|o| match o {
+            Some(op) => OutputSpec::Ref(op),
+            None => OutputSpec::Zero,
+        }).collect());
+
+        let dense = crate::lcc::factor::chain_to_dense(&[f0, f1]);
+        let mut rng = Rng::new(0);
+        let rep = crate::graph::verify_against(&g, &dense, 8, &mut rng);
+        assert!(rep.passes(1e-6), "{rep:?}");
+    }
+
+    #[test]
+    fn subgraph_inlining_preserves_semantics() {
+        // sub computes [x0 + 2 x1]; inline with inputs swapped and scaled
+        let mut sub = AdderGraph::new(2);
+        let n = sub.push_add(Operand::input(0), Operand::input(1).scaled(1, false));
+        sub.set_outputs(vec![OutputSpec::Ref(n)]);
+
+        let mut g = AdderGraph::new(2);
+        let outs = append_subgraph(
+            &mut g,
+            &sub,
+            &[Operand::input(1), Operand::input(0).scaled(0, true)],
+        );
+        g.set_outputs(vec![OutputSpec::Ref(outs[0].unwrap())]);
+        // expected: x1 + 2*(-x0)
+        let y = g.execute(&[3.0, 5.0]);
+        assert_eq!(y, vec![5.0 - 6.0]);
+    }
+
+    #[test]
+    fn zero_rows_propagate_through_chain() {
+        let f0 = P2Factor { in_dim: 1, rows: vec![vec![], vec![Term { src: 0, shift: 0, negative: false }]] };
+        let f1 = P2Factor {
+            in_dim: 2,
+            rows: vec![vec![
+                Term { src: 0, shift: 0, negative: false }, // hits zero row -> dropped
+                Term { src: 1, shift: 1, negative: false },
+            ]],
+        };
+        let mut g = AdderGraph::new(1);
+        let outs = append_factor_chain(&mut g, &[f0, f1], &[Operand::input(0)]);
+        // single term survives: no adder needed
+        assert_eq!(g.additions(), 0);
+        let op = outs[0].unwrap();
+        g.set_outputs(vec![OutputSpec::Ref(op)]);
+        assert_eq!(g.execute(&[3.0]), vec![6.0]);
+    }
+
+    #[test]
+    fn decomposition_graph_cross_slice_sum() {
+        // two 1-col slices, each identity-ish: y = x0 + x1 per row
+        use crate::lcc::decompose::{LccDecomposition, SliceDecomposition};
+        let mk = || {
+            P2Factor { in_dim: 1, rows: vec![vec![Term { src: 0, shift: 0, negative: false }]] }
+        };
+        let d = LccDecomposition::from_parts(
+            1,
+            2,
+            vec![
+                SliceDecomposition { col_start: 0, width: 1, kind: SliceKind::Factors(vec![mk()]) },
+                SliceDecomposition { col_start: 1, width: 1, kind: SliceKind::Factors(vec![mk()]) },
+            ],
+        );
+        let g = decomposition_to_graph(&d);
+        assert_eq!(g.additions(), 1); // one cross-slice add
+        assert_eq!(g.execute(&[2.0, 3.0]), vec![5.0]);
+        let w = Matrix::from_rows(&[&[1.0, 1.0]]);
+        let mut rng = Rng::new(1);
+        assert!(crate::graph::verify_against(&g, &w, 4, &mut rng).passes(1e-6));
+    }
+}

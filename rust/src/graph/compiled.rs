@@ -1,0 +1,160 @@
+//! Compiled form of an adder graph for fast VM execution.
+//!
+//! `AdderGraph::execute` resolves every operand through a `NodeRef` match
+//! and recomputes `exp2(shift)` per visit. For serving and accuracy
+//! evaluation the graph is executed millions of times, so this module
+//! flattens it once: one contiguous value array (inputs followed by node
+//! values), direct indices, and precomputed f32 coefficients.
+//! §Perf (EXPERIMENTS.md) records the measured speedup.
+
+use super::ir::{AdderGraph, NodeRef, OutputSpec};
+
+#[derive(Clone, Copy, Debug)]
+struct Op {
+    ia: u32,
+    ca: f32,
+    ib: u32,
+    cb: f32,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum OutOp {
+    Zero,
+    Scaled { idx: u32, c: f32 },
+}
+
+/// Flattened executable graph.
+#[derive(Clone, Debug)]
+pub struct CompiledGraph {
+    num_inputs: usize,
+    ops: Vec<Op>,
+    outs: Vec<OutOp>,
+}
+
+impl CompiledGraph {
+    pub fn new(g: &AdderGraph) -> Self {
+        let base = g.num_inputs() as u32;
+        let idx = |r: NodeRef| match r {
+            NodeRef::Input(i) => i,
+            NodeRef::Node(i) => base + i,
+        };
+        let ops = g
+            .nodes()
+            .iter()
+            .map(|n| Op {
+                ia: idx(n.a.src),
+                ca: n.a.coeff(),
+                ib: idx(n.b.src),
+                cb: n.b.coeff(),
+            })
+            .collect();
+        let outs = g
+            .outputs()
+            .iter()
+            .map(|o| match o {
+                OutputSpec::Zero => OutOp::Zero,
+                OutputSpec::Ref(op) => OutOp::Scaled { idx: idx(op.src), c: op.coeff() },
+            })
+            .collect();
+        CompiledGraph { num_inputs: g.num_inputs(), ops, outs }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outs.len()
+    }
+
+    pub fn additions(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Execute with a caller-provided scratch buffer (len >= num_inputs +
+    /// ops). Returns the outputs in `out`.
+    pub fn execute_into(&self, x: &[f32], scratch: &mut Vec<f32>, out: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.num_inputs, "input length mismatch");
+        scratch.clear();
+        scratch.extend_from_slice(x);
+        for op in &self.ops {
+            let v = op.ca * scratch[op.ia as usize] + op.cb * scratch[op.ib as usize];
+            scratch.push(v);
+        }
+        out.clear();
+        out.extend(self.outs.iter().map(|o| match o {
+            OutOp::Zero => 0.0,
+            OutOp::Scaled { idx, c } => c * scratch[*idx as usize],
+        }));
+    }
+
+    /// Convenience allocating execute.
+    pub fn execute(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = Vec::with_capacity(self.num_inputs + self.ops.len());
+        let mut out = Vec::with_capacity(self.outs.len());
+        self.execute_into(x, &mut scratch, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AdderGraph, Operand, OutputSpec};
+    use crate::util::Rng;
+
+    fn random_graph(seed: u64) -> AdderGraph {
+        let mut rng = Rng::new(seed);
+        let inputs = 4 + rng.below(8);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..30 {
+            let a = refs[rng.below(refs.len())]
+                .scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+            let b = refs[rng.below(refs.len())]
+                .scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..6)
+            .map(|_| {
+                if rng.f32() < 0.1 {
+                    OutputSpec::Zero
+                } else {
+                    OutputSpec::Ref(refs[rng.below(refs.len())].scaled(1, false))
+                }
+            })
+            .collect();
+        g.set_outputs(outs);
+        g
+    }
+
+    #[test]
+    fn compiled_matches_interpreter() {
+        let mut rng = Rng::new(1);
+        for seed in 0..10 {
+            let g = random_graph(seed);
+            let c = CompiledGraph::new(&g);
+            assert_eq!(c.additions(), g.additions());
+            let x: Vec<f32> = rng.normal_vec(g.num_inputs(), 1.0);
+            let want = g.execute(&x);
+            let got = c.execute(&x);
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_into_reuses_buffers() {
+        let g = random_graph(42);
+        let c = CompiledGraph::new(&g);
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        let x = vec![1.0; g.num_inputs()];
+        c.execute_into(&x, &mut scratch, &mut out);
+        let first = out.clone();
+        c.execute_into(&x, &mut scratch, &mut out);
+        assert_eq!(first, out);
+    }
+}

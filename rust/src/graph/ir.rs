@@ -1,0 +1,202 @@
+//! The adder-graph intermediate representation.
+
+/// Reference to a value: either one of the graph inputs or the result of
+/// an earlier add node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NodeRef {
+    Input(u32),
+    Node(u32),
+}
+
+/// A referenced value, bit-shifted by `shift` (multiplication by
+/// 2^shift — free in hardware) and optionally negated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Operand {
+    pub src: NodeRef,
+    pub shift: i32,
+    pub negative: bool,
+}
+
+impl Operand {
+    pub fn input(i: usize) -> Self {
+        Operand { src: NodeRef::Input(i as u32), shift: 0, negative: false }
+    }
+
+    pub fn node(i: usize) -> Self {
+        Operand { src: NodeRef::Node(i as u32), shift: 0, negative: false }
+    }
+
+    /// Compose an additional scale on top of this operand:
+    /// (±2^s) * (self) — shifts add, negations xor.
+    pub fn scaled(self, shift: i32, negative: bool) -> Self {
+        Operand {
+            src: self.src,
+            shift: self.shift + shift,
+            negative: self.negative ^ negative,
+        }
+    }
+
+    pub fn coeff(&self) -> f32 {
+        let m = (self.shift as f32).exp2();
+        if self.negative {
+            -m
+        } else {
+            m
+        }
+    }
+}
+
+/// One hardware adder: value = coeff(a) * val(a.src) + coeff(b) * val(b.src).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddNode {
+    pub a: Operand,
+    pub b: Operand,
+}
+
+/// A graph output: zero (a pruned row) or a scaled reference.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OutputSpec {
+    Zero,
+    Ref(Operand),
+}
+
+/// DAG of shift-add nodes over `num_inputs` external inputs.
+///
+/// Nodes are in topological order by construction: a node may only
+/// reference inputs or strictly earlier nodes (checked on push).
+#[derive(Clone, Debug, Default)]
+pub struct AdderGraph {
+    num_inputs: usize,
+    nodes: Vec<AddNode>,
+    outputs: Vec<OutputSpec>,
+}
+
+impl AdderGraph {
+    pub fn new(num_inputs: usize) -> Self {
+        AdderGraph { num_inputs, nodes: Vec::new(), outputs: Vec::new() }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn nodes(&self) -> &[AddNode] {
+        &self.nodes
+    }
+
+    pub fn outputs(&self) -> &[OutputSpec] {
+        &self.outputs
+    }
+
+    /// The paper's cost metric: one addition per node.
+    pub fn additions(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn check(&self, op: Operand) {
+        match op.src {
+            NodeRef::Input(i) => assert!((i as usize) < self.num_inputs, "input oob"),
+            NodeRef::Node(i) => assert!((i as usize) < self.nodes.len(), "forward node ref"),
+        }
+    }
+
+    /// Append an adder; returns a reference to its value.
+    pub fn push_add(&mut self, a: Operand, b: Operand) -> Operand {
+        self.check(a);
+        self.check(b);
+        self.nodes.push(AddNode { a, b });
+        Operand::node(self.nodes.len() - 1)
+    }
+
+    /// Sum a list of operands with a balanced tree (minimal depth),
+    /// returning the root operand. Returns `None` for an empty list.
+    pub fn push_sum(&mut self, mut ops: Vec<Operand>) -> Option<Operand> {
+        if ops.is_empty() {
+            return None;
+        }
+        while ops.len() > 1 {
+            let mut next = Vec::with_capacity(ops.len().div_ceil(2));
+            let mut it = ops.chunks(2);
+            for pair in &mut it {
+                if pair.len() == 2 {
+                    next.push(self.push_add(pair[0], pair[1]));
+                } else {
+                    next.push(pair[0]);
+                }
+            }
+            ops = next;
+        }
+        Some(ops[0])
+    }
+
+    pub fn push_output(&mut self, out: OutputSpec) {
+        if let OutputSpec::Ref(op) = out {
+            self.check(op);
+        }
+        self.outputs.push(out);
+    }
+
+    pub fn set_outputs(&mut self, outs: Vec<OutputSpec>) {
+        self.outputs.clear();
+        for o in outs {
+            self.push_output(o);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_add_returns_sequential_refs() {
+        let mut g = AdderGraph::new(2);
+        let n0 = g.push_add(Operand::input(0), Operand::input(1));
+        assert_eq!(n0.src, NodeRef::Node(0));
+        let n1 = g.push_add(n0, Operand::input(0));
+        assert_eq!(n1.src, NodeRef::Node(1));
+        assert_eq!(g.additions(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "forward node ref")]
+    fn forward_reference_rejected() {
+        let mut g = AdderGraph::new(1);
+        g.push_add(Operand::node(0), Operand::input(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "input oob")]
+    fn input_oob_rejected() {
+        let mut g = AdderGraph::new(1);
+        g.push_add(Operand::input(1), Operand::input(0));
+    }
+
+    #[test]
+    fn scaled_composes_shift_and_sign() {
+        let op = Operand::input(0).scaled(2, true).scaled(-1, true);
+        assert_eq!(op.shift, 1);
+        assert!(!op.negative);
+        assert_eq!(op.coeff(), 2.0);
+    }
+
+    #[test]
+    fn push_sum_balanced() {
+        let mut g = AdderGraph::new(4);
+        let ops: Vec<Operand> = (0..4).map(Operand::input).collect();
+        let root = g.push_sum(ops).unwrap();
+        assert_eq!(g.additions(), 3);
+        g.set_outputs(vec![OutputSpec::Ref(root)]);
+        assert_eq!(g.num_outputs(), 1);
+    }
+
+    #[test]
+    fn push_sum_empty_is_none() {
+        let mut g = AdderGraph::new(1);
+        assert!(g.push_sum(vec![]).is_none());
+    }
+}

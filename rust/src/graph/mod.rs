@@ -1,0 +1,24 @@
+//! Adder-graph IR + shift-add virtual machine — the "reconfigurable
+//! hardware" substrate.
+//!
+//! Everything the compressed network ultimately executes is a DAG of
+//! two-operand additions whose operands are bit-shifted (and possibly
+//! negated) earlier values. The number of nodes in the graph **is** the
+//! paper's cost metric (additions); bitshifts are free. The VM executes
+//! the graph so every claimed adder count is backed by a runnable,
+//! numerically-verified program, and the scheduler reports pipeline
+//! depth/width — the FPGA parallelism proxy (see DESIGN.md
+//! §Hardware-Adaptation).
+
+mod build;
+mod compiled;
+mod ir;
+mod schedule;
+mod verify;
+mod vm;
+
+pub use build::{append_factor_chain, append_subgraph, decomposition_to_graph};
+pub use compiled::CompiledGraph;
+pub use ir::{AddNode, AdderGraph, NodeRef, Operand, OutputSpec};
+pub use schedule::{schedule, Schedule};
+pub use verify::{verify_against, VerifyReport};

@@ -1,0 +1,96 @@
+//! ASAP scheduling of an adder graph: pipeline depth and per-level width.
+//!
+//! On an FPGA every adder at the same ASAP level can evaluate in the same
+//! cycle, so `depth` is the latency (critical path in adder stages) and
+//! `max_width` is the peak number of simultaneously busy adders — the
+//! resource/parallelism proxy used in the benches. The FP algorithm's
+//! selling point (paper Sec. III-A) shows up here: its graphs are shallow
+//! and wide, while FS graphs are deeper chains.
+
+use super::ir::{AdderGraph, NodeRef, OutputSpec};
+
+/// ASAP schedule summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// ASAP level of each node (inputs are level 0; a node is
+    /// 1 + max(level of operands)).
+    pub levels: Vec<usize>,
+    /// critical path over the outputs, in adder stages
+    pub depth: usize,
+    /// number of adders at each level (level 1..=depth)
+    pub width_histogram: Vec<usize>,
+    /// peak simultaneous adders
+    pub max_width: usize,
+}
+
+fn ref_level(levels: &[usize], src: NodeRef) -> usize {
+    match src {
+        NodeRef::Input(_) => 0,
+        NodeRef::Node(i) => levels[i as usize],
+    }
+}
+
+/// Compute the ASAP schedule.
+pub fn schedule(g: &AdderGraph) -> Schedule {
+    let mut levels = Vec::with_capacity(g.nodes().len());
+    for node in g.nodes() {
+        let l = 1 + ref_level(&levels, node.a.src).max(ref_level(&levels, node.b.src));
+        levels.push(l);
+    }
+    let depth = g
+        .outputs()
+        .iter()
+        .map(|o| match o {
+            OutputSpec::Zero => 0,
+            OutputSpec::Ref(op) => ref_level(&levels, op.src),
+        })
+        .max()
+        .unwrap_or_else(|| levels.iter().copied().max().unwrap_or(0));
+    let max_level = levels.iter().copied().max().unwrap_or(0);
+    let mut width_histogram = vec![0usize; max_level];
+    for &l in &levels {
+        width_histogram[l - 1] += 1;
+    }
+    let max_width = width_histogram.iter().copied().max().unwrap_or(0);
+    Schedule { levels, depth, width_histogram, max_width }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::{AdderGraph, Operand, OutputSpec};
+    use super::*;
+
+    #[test]
+    fn chain_has_linear_depth() {
+        let mut g = AdderGraph::new(2);
+        let mut acc = g.push_add(Operand::input(0), Operand::input(1));
+        for _ in 0..5 {
+            acc = g.push_add(acc, Operand::input(0));
+        }
+        g.set_outputs(vec![OutputSpec::Ref(acc)]);
+        let s = schedule(&g);
+        assert_eq!(s.depth, 6);
+        assert_eq!(s.max_width, 1);
+    }
+
+    #[test]
+    fn balanced_tree_has_log_depth() {
+        let mut g = AdderGraph::new(8);
+        let ops: Vec<Operand> = (0..8).map(Operand::input).collect();
+        let root = g.push_sum(ops).unwrap();
+        g.set_outputs(vec![OutputSpec::Ref(root)]);
+        let s = schedule(&g);
+        assert_eq!(s.depth, 3);
+        assert_eq!(s.width_histogram, vec![4, 2, 1]);
+        assert_eq!(s.max_width, 4);
+    }
+
+    #[test]
+    fn empty_graph_zero_depth() {
+        let mut g = AdderGraph::new(3);
+        g.set_outputs(vec![OutputSpec::Ref(Operand::input(2))]);
+        let s = schedule(&g);
+        assert_eq!(s.depth, 0);
+        assert!(s.width_histogram.is_empty());
+    }
+}

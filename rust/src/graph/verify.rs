@@ -1,0 +1,86 @@
+//! Numeric verification: an adder graph claiming to implement `W x` is
+//! executed on random inputs and compared against the dense product.
+//! Every decomposition the pipeline emits passes through here before its
+//! adder count is reported (DESIGN.md: counts must be execution-backed).
+
+use super::ir::AdderGraph;
+use crate::tensor::Matrix;
+use crate::util::{stats, Rng};
+
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub trials: usize,
+    pub max_abs_err: f64,
+    /// max |err| / ||y_ref||_inf per trial, worst case
+    pub max_rel_err: f64,
+    /// SQNR (dB) pooled over all trials
+    pub sqnr_db: f64,
+}
+
+impl VerifyReport {
+    /// The graph reproduces the matrix within `tol` relative error.
+    pub fn passes(&self, tol: f64) -> bool {
+        self.max_rel_err <= tol
+    }
+}
+
+/// Execute `g` on `trials` random vectors and compare with `w.matvec`.
+pub fn verify_against(g: &AdderGraph, w: &Matrix, trials: usize, rng: &mut Rng) -> VerifyReport {
+    assert_eq!(g.num_inputs(), w.cols(), "graph/matrix input mismatch");
+    assert_eq!(g.num_outputs(), w.rows(), "graph/matrix output mismatch");
+    let mut max_abs: f64 = 0.0;
+    let mut max_rel: f64 = 0.0;
+    let mut all_ref = Vec::new();
+    let mut all_got = Vec::new();
+    for _ in 0..trials {
+        let x: Vec<f32> = rng.normal_vec(w.cols(), 1.0);
+        let want = w.matvec(&x);
+        let got = g.execute(&x);
+        let scale = want.iter().fold(0.0f64, |m, &v| m.max(v.abs() as f64)).max(1e-12);
+        for (a, b) in want.iter().zip(&got) {
+            let err = (*a as f64 - *b as f64).abs();
+            max_abs = max_abs.max(err);
+            max_rel = max_rel.max(err / scale);
+        }
+        all_ref.extend_from_slice(&want);
+        all_got.extend_from_slice(&got);
+    }
+    VerifyReport {
+        trials,
+        max_abs_err: max_abs,
+        max_rel_err: max_rel,
+        sqnr_db: stats::sqnr_db(&all_ref, &all_got),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::{AdderGraph, Operand, OutputSpec};
+    use super::*;
+
+    #[test]
+    fn exact_graph_verifies() {
+        // W = [[1, 2], [4, -0.5]] built by hand
+        let w = Matrix::from_rows(&[&[1.0, 2.0], &[4.0, -0.5]]);
+        let mut g = AdderGraph::new(2);
+        let n0 = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false));
+        let n1 = g.push_add(Operand::input(0).scaled(2, false),
+                            Operand::input(1).scaled(-1, true));
+        g.set_outputs(vec![OutputSpec::Ref(n0), OutputSpec::Ref(n1)]);
+        let mut rng = Rng::new(0);
+        let rep = verify_against(&g, &w, 16, &mut rng);
+        assert!(rep.passes(1e-6), "{rep:?}");
+        assert!(rep.sqnr_db > 100.0);
+    }
+
+    #[test]
+    fn wrong_graph_fails() {
+        let w = Matrix::from_rows(&[&[1.0, 1.0]]);
+        let mut g = AdderGraph::new(2);
+        let n0 = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false)); // 1,2 not 1,1
+        g.set_outputs(vec![OutputSpec::Ref(n0)]);
+        let mut rng = Rng::new(1);
+        let rep = verify_against(&g, &w, 8, &mut rng);
+        assert!(!rep.passes(1e-3));
+    }
+}

@@ -1,0 +1,86 @@
+//! Shift-add virtual machine: executes an [`AdderGraph`] on concrete
+//! inputs. This simulates the FPGA datapath; numerics are f32 with exact
+//! power-of-two scaling, so results are bit-comparable with the dense
+//! product up to float addition order.
+
+use super::ir::{AdderGraph, NodeRef, OutputSpec};
+
+impl AdderGraph {
+    /// Execute the graph on one input vector.
+    pub fn execute(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.num_inputs(), "input length mismatch");
+        let mut vals = Vec::with_capacity(self.nodes().len());
+        for node in self.nodes() {
+            let a = operand_value(x, &vals, node.a.src) * node.a.coeff();
+            let b = operand_value(x, &vals, node.b.src) * node.b.coeff();
+            vals.push(a + b);
+        }
+        self.outputs()
+            .iter()
+            .map(|o| match o {
+                OutputSpec::Zero => 0.0,
+                OutputSpec::Ref(op) => operand_value(x, &vals, op.src) * op.coeff(),
+            })
+            .collect()
+    }
+
+    /// Execute on a batch of input vectors (reusing the node buffer).
+    pub fn execute_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| self.execute(x)).collect()
+    }
+}
+
+#[inline]
+fn operand_value(x: &[f32], vals: &[f32], src: NodeRef) -> f32 {
+    match src {
+        NodeRef::Input(i) => x[i as usize],
+        NodeRef::Node(i) => vals[i as usize],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::{AdderGraph, Operand, OutputSpec};
+
+    #[test]
+    fn executes_paper_eq2_by_hand() {
+        // eq. (2): y0 = 2 x0 + (2^-1 - 2^-3) x1 ; y1 = -2^-2 x0 + x1
+        // with the shared subexpression m = 2 x0 + 2^-1 x1 ... here the
+        // straightforward 3-adder program:
+        let mut g = AdderGraph::new(2);
+        // n0 = 2^1 x0 + 2^-1 x1
+        let n0 = g.push_add(Operand::input(0).scaled(1, false),
+                            Operand::input(1).scaled(-1, false));
+        // n1 = n0 - 2^-3 x1     (y0)
+        let n1 = g.push_add(n0, Operand::input(1).scaled(-3, true));
+        // n2 = -2^-2 x0 + x1    (y1)
+        let n2 = g.push_add(Operand::input(0).scaled(-2, true),
+                            Operand::input(1));
+        g.set_outputs(vec![OutputSpec::Ref(n1), OutputSpec::Ref(n2)]);
+
+        let y = g.execute(&[1.0, 2.0]);
+        assert_eq!(y[0], 2.0 * 1.0 + 0.375 * 2.0);
+        assert_eq!(y[1], -0.25 * 1.0 + 1.0 * 2.0);
+        assert_eq!(g.additions(), 3);
+    }
+
+    #[test]
+    fn zero_output_is_zero() {
+        let mut g = AdderGraph::new(1);
+        g.set_outputs(vec![OutputSpec::Zero, OutputSpec::Ref(Operand::input(0))]);
+        assert_eq!(g.execute(&[5.0]), vec![0.0, 5.0]);
+        assert_eq!(g.additions(), 0);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut g = AdderGraph::new(2);
+        let n = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false));
+        g.set_outputs(vec![OutputSpec::Ref(n)]);
+        let xs = vec![vec![1.0, 2.0], vec![-3.0, 0.5]];
+        let batch = g.execute_batch(&xs);
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(*y, g.execute(x));
+        }
+    }
+}

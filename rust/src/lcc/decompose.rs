@@ -1,0 +1,301 @@
+//! Top-level LCC API: slice, decompose each slice with FP or FS, lower to
+//! one adder graph, and report execution-backed addition counts.
+
+use super::fp::{decompose_fp, FpParams};
+use super::fs::{decompose_fs, FsParams};
+use super::slicing;
+use crate::graph::{decomposition_to_graph, AdderGraph};
+use crate::tensor::Matrix;
+use crate::util::stats;
+
+/// Which LCC algorithm to run (paper Sec. III-A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LccAlgorithm {
+    FullyParallel { terms_per_row: usize, max_factors: usize },
+    FullySequential { max_terms_per_row: usize },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LccConfig {
+    pub algo: LccAlgorithm,
+    /// None = auto (≈ log2 rows, paper Sec. III-A)
+    pub slice_width: Option<usize>,
+    /// per-row relative approximation error target
+    pub target_rel_err: f64,
+    /// quantization step of the fixed-point baseline: rows never get
+    /// approximated beyond the distortion round-to-nearest quantization
+    /// already accepts (per-slice floor = step/2 * sqrt(width)). 0
+    /// disables the floor.
+    pub quant_step: f64,
+    pub shift_range: (i32, i32),
+}
+
+impl LccConfig {
+    pub fn fp() -> Self {
+        LccConfig {
+            algo: LccAlgorithm::FullyParallel { terms_per_row: 2, max_factors: 16 },
+            slice_width: None,
+            target_rel_err: 0.02,
+            quant_step: crate::quant::FixedPointFormat::default_weights().step(),
+            shift_range: (-14, 14),
+        }
+    }
+
+    pub fn fs() -> Self {
+        LccConfig {
+            algo: LccAlgorithm::FullySequential { max_terms_per_row: 64 },
+            slice_width: None,
+            target_rel_err: 0.02,
+            quant_step: crate::quant::FixedPointFormat::default_weights().step(),
+            shift_range: (-14, 14),
+        }
+    }
+}
+
+/// Per-slice program: a factor chain (FP) or an unstructured graph (FS).
+#[derive(Clone, Debug)]
+pub enum SliceKind {
+    Factors(Vec<super::factor::P2Factor>),
+    Graph(AdderGraph),
+}
+
+#[derive(Clone, Debug)]
+pub struct SliceDecomposition {
+    pub col_start: usize,
+    pub width: usize,
+    pub kind: SliceKind,
+}
+
+/// Addition-count breakdown of a lowered decomposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdditionBreakdown {
+    /// adds inside slice programs
+    pub intra_slice: usize,
+    /// adds combining slice outputs (eq. 3 recombination)
+    pub cross_slice: usize,
+}
+
+impl AdditionBreakdown {
+    pub fn total(&self) -> usize {
+        self.intra_slice + self.cross_slice
+    }
+}
+
+/// A complete decomposition of one matrix: slice programs plus the flat
+/// adder graph that executes `W x` end to end.
+#[derive(Clone, Debug)]
+pub struct LccDecomposition {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub slices: Vec<SliceDecomposition>,
+    graph: Option<AdderGraph>,
+    breakdown: AdditionBreakdown,
+}
+
+impl LccDecomposition {
+    /// Assemble from already-built slices (used by the graph builder's
+    /// tests); `finalize` lowers the graph.
+    pub fn from_parts(n_rows: usize, n_cols: usize, slices: Vec<SliceDecomposition>) -> Self {
+        LccDecomposition {
+            n_rows,
+            n_cols,
+            slices,
+            graph: None,
+            breakdown: AdditionBreakdown { intra_slice: 0, cross_slice: 0 },
+        }
+    }
+
+    fn finalize(mut self) -> Self {
+        let intra: usize = self
+            .slices
+            .iter()
+            .map(|s| match &s.kind {
+                SliceKind::Factors(fs) => fs.iter().map(|f| f.additions()).sum(),
+                SliceKind::Graph(g) => g.additions(),
+            })
+            .sum();
+        let g = decomposition_to_graph(&self);
+        let total = g.additions();
+        self.breakdown = AdditionBreakdown {
+            intra_slice: intra,
+            cross_slice: total - intra,
+        };
+        self.graph = Some(g);
+        self
+    }
+
+    /// The lowered shift-add program.
+    pub fn graph(&self) -> &AdderGraph {
+        self.graph.as_ref().expect("decomposition not finalized")
+    }
+
+    /// Total additions (== graph nodes, execution-backed).
+    pub fn additions(&self) -> usize {
+        self.graph().additions()
+    }
+
+    pub fn breakdown(&self) -> AdditionBreakdown {
+        self.breakdown
+    }
+
+    /// Evaluate `W x` through the shift-add program.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.graph().execute(x)
+    }
+
+    /// Dense reconstruction (for error reporting).
+    pub fn to_dense(&self) -> Matrix {
+        let g = self.graph();
+        let mut m = Matrix::zeros(self.n_rows, self.n_cols);
+        let mut e = vec![0.0f32; self.n_cols];
+        for c in 0..self.n_cols {
+            e[c] = 1.0;
+            let col = g.execute(&e);
+            for r in 0..self.n_rows {
+                *m.at_mut(r, c) = col[r];
+            }
+            e[c] = 0.0;
+        }
+        m
+    }
+
+    /// SQNR (dB) of the reconstruction against the original matrix.
+    pub fn sqnr_db(&self, w: &Matrix) -> f64 {
+        let approx = self.to_dense();
+        stats::sqnr_db(w.data(), approx.data())
+    }
+}
+
+/// Decompose `w` per the config: vertical slicing (eq. 3) + per-slice
+/// FP/FS programs (eq. 4), lowered to one adder graph.
+pub fn decompose(w: &Matrix, cfg: &LccConfig) -> LccDecomposition {
+    let width = cfg
+        .slice_width
+        .unwrap_or_else(|| slicing::auto_width(w.rows(), w.cols()));
+    let slices = slicing::slice_columns(w.cols(), width.max(1));
+    let mut out = Vec::with_capacity(slices.len());
+    for s in slices {
+        let sub = w.slice_cols(s.start, s.width);
+        // quantization-matched residual floor: round-to-nearest at
+        // quant_step admits per-row error up to step/2 per entry
+        let abs_err_floor = 0.5 * cfg.quant_step * (s.width as f64).sqrt();
+        let kind = match cfg.algo {
+            LccAlgorithm::FullyParallel { terms_per_row, max_factors } => {
+                let p = FpParams {
+                    terms_per_row,
+                    max_factors,
+                    shift_range: cfg.shift_range,
+                    target_rel_err: cfg.target_rel_err,
+                    abs_err_floor,
+                };
+                SliceKind::Factors(decompose_fp(&sub, &p))
+            }
+            LccAlgorithm::FullySequential { max_terms_per_row } => {
+                let p = FsParams {
+                    max_terms_per_row,
+                    shift_range: cfg.shift_range,
+                    target_rel_err: cfg.target_rel_err,
+                    abs_err_floor,
+                    ..Default::default()
+                };
+                SliceKind::Graph(decompose_fs(&sub, &p))
+            }
+        };
+        out.push(SliceDecomposition { col_start: s.start, width: s.width, kind });
+    }
+    LccDecomposition::from_parts(w.rows(), w.cols(), out).finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::verify_against;
+    use crate::quant::{matrix_csd_adders, FixedPointFormat};
+    use crate::util::Rng;
+
+    fn tall_matrix(seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::randn(128, 24, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn fs_decomposition_verifies_numerically() {
+        let w = tall_matrix(0);
+        let d = decompose(&w, &LccConfig::fs());
+        let mut rng = Rng::new(1);
+        let rep = verify_against(d.graph(), &w, 8, &mut rng);
+        assert!(rep.sqnr_db > 25.0, "{rep:?}");
+    }
+
+    #[test]
+    fn fp_decomposition_verifies_numerically() {
+        let w = tall_matrix(2);
+        let d = decompose(&w, &LccConfig::fp());
+        let mut rng = Rng::new(3);
+        let rep = verify_against(d.graph(), &w, 8, &mut rng);
+        assert!(rep.sqnr_db > 25.0, "{rep:?}");
+    }
+
+    #[test]
+    fn lcc_beats_csd_baseline_on_tall_matrix() {
+        // The headline property: LCC needs fewer additions than the CSD
+        // dense baseline at comparable precision.
+        let w = tall_matrix(4);
+        let csd = matrix_csd_adders(&w, FixedPointFormat::default_weights());
+        let fs = decompose(&w, &LccConfig::fs()).additions();
+        let fp = decompose(&w, &LccConfig::fp()).additions();
+        assert!(fs < csd, "FS {fs} !< CSD {csd}");
+        assert!(fp < csd, "FP {fp} !< CSD {csd}");
+    }
+
+    #[test]
+    fn fs_beats_fp_on_small_matrices() {
+        // Table I's qualitative claim: FS wins when matrices are small
+        let mut rng = Rng::new(5);
+        let w = Matrix::randn(24, 12, 0.5, &mut rng);
+        let fs = decompose(&w, &LccConfig::fs()).additions();
+        let fp = decompose(&w, &LccConfig::fp()).additions();
+        assert!(fs <= fp, "FS {fs} > FP {fp}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let w = tall_matrix(6);
+        let d = decompose(&w, &LccConfig::fs());
+        assert_eq!(d.breakdown().total(), d.additions());
+        assert!(d.breakdown().cross_slice > 0); // >1 slice at K=24
+    }
+
+    #[test]
+    fn apply_matches_dense_reconstruction() {
+        let w = tall_matrix(7);
+        let d = decompose(&w, &LccConfig::fs());
+        let dense = d.to_dense();
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = rng.normal_vec(w.cols(), 1.0);
+        let ya = d.apply(&x);
+        let yd = dense.matvec(&x);
+        for (a, b) in ya.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn explicit_slice_width_respected() {
+        let w = tall_matrix(9);
+        let mut cfg = LccConfig::fs();
+        cfg.slice_width = Some(6);
+        let d = decompose(&w, &cfg);
+        assert_eq!(d.slices.len(), 4); // 24 / 6
+        assert!(d.slices.iter().all(|s| s.width == 6));
+    }
+
+    #[test]
+    fn sqnr_meets_target() {
+        let w = tall_matrix(10);
+        let mut cfg = LccConfig::fs();
+        cfg.target_rel_err = 0.01;
+        let d = decompose(&w, &cfg);
+        assert!(d.sqnr_db(&w) > 35.0, "sqnr {}", d.sqnr_db(&w));
+    }
+}

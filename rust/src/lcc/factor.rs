@@ -1,0 +1,147 @@
+//! Sparse signed-power-of-two matrix factors (the `F_{e,p}` of eq. 4).
+
+use crate::tensor::Matrix;
+
+/// One term of a factor row: `±2^shift * source[src]` where `src` indexes
+/// the previous factor's output vector (or the input slice for F_0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Term {
+    pub src: usize,
+    pub shift: i32,
+    pub negative: bool,
+}
+
+impl Term {
+    pub fn coeff(&self) -> f32 {
+        let m = (self.shift as f32).exp2();
+        if self.negative {
+            -m
+        } else {
+            m
+        }
+    }
+}
+
+/// A sparse matrix whose entries are signed powers of two, stored by row.
+/// An empty row is an all-zero row.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct P2Factor {
+    pub in_dim: usize,
+    pub rows: Vec<Vec<Term>>,
+}
+
+impl P2Factor {
+    pub fn new(in_dim: usize, out_dim: usize) -> Self {
+        P2Factor { in_dim, rows: vec![Vec::new(); out_dim] }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Additions to evaluate this factor: `max(terms - 1, 0)` per row.
+    pub fn additions(&self) -> usize {
+        self.rows.iter().map(|r| r.len().saturating_sub(1)).sum()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+
+    /// y = F x.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim, "factor apply dim mismatch");
+        self.rows
+            .iter()
+            .map(|row| row.iter().map(|t| t.coeff() * x[t.src]).sum())
+            .collect()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.out_dim(), self.in_dim);
+        for (r, row) in self.rows.iter().enumerate() {
+            for t in row {
+                *m.at_mut(r, t.src) += t.coeff();
+            }
+        }
+        m
+    }
+}
+
+/// Dense matrix of a whole chain `F_P ... F_1 F_0` (F_0 first in the
+/// slice).
+pub fn chain_to_dense(factors: &[P2Factor]) -> Matrix {
+    assert!(!factors.is_empty());
+    let mut acc = factors[0].to_dense();
+    for f in &factors[1..] {
+        acc = f.to_dense().matmul(&acc);
+    }
+    acc
+}
+
+/// Apply a chain to a vector (F_0 first).
+pub fn apply_chain(factors: &[P2Factor], x: &[f32]) -> Vec<f32> {
+    let mut v = factors[0].apply(x);
+    for f in &factors[1..] {
+        v = f.apply(&v);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_factor() -> P2Factor {
+        // rows: [2^1 x0 - 2^-1 x1, 2^0 x1, (zero row)]
+        P2Factor {
+            in_dim: 2,
+            rows: vec![
+                vec![
+                    Term { src: 0, shift: 1, negative: false },
+                    Term { src: 1, shift: -1, negative: true },
+                ],
+                vec![Term { src: 1, shift: 0, negative: false }],
+                vec![],
+            ],
+        }
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let f = simple_factor();
+        let x = [3.0, 4.0];
+        let y = f.apply(&x);
+        let yd = f.to_dense().matvec(&x);
+        assert_eq!(y, yd);
+        assert_eq!(y, vec![6.0 - 2.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn additions_per_row() {
+        let f = simple_factor();
+        assert_eq!(f.additions(), 1); // 2-term row costs 1, others 0
+        assert_eq!(f.nnz(), 3);
+    }
+
+    #[test]
+    fn chain_matches_explicit_product() {
+        let f0 = simple_factor(); // 3x2
+        let f1 = P2Factor {
+            in_dim: 3,
+            rows: vec![vec![
+                Term { src: 0, shift: 0, negative: false },
+                Term { src: 2, shift: 2, negative: false },
+            ]],
+        }; // 1x3
+        let x = [1.0, -2.0];
+        let y = apply_chain(&[f0.clone(), f1.clone()], &x);
+        let dense = chain_to_dense(&[f0, f1]);
+        assert_eq!(dense.rows(), 1);
+        assert_eq!(dense.cols(), 2);
+        let yd = dense.matvec(&x);
+        for (a, b) in y.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

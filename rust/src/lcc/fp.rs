@@ -1,0 +1,172 @@
+//! Fully parallel (FP) LCC algorithm (paper Sec. III-A).
+//!
+//! Factor after factor, every target row is re-approximated with at most
+//! `S` signed-po2 terms over the rows of the *current* product
+//! `F_p ... F_0` — all rows of a factor depend only on the previous
+//! factor's outputs, so the resulting adder graph is level-parallel:
+//! ideal for FPGA row-pipelining, at the cost of efficiency on small or
+//! ill-behaved matrices (which Table I of the paper demonstrates).
+
+use super::factor::{P2Factor, Term};
+use super::pursuit::{pursue, Dict};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FpParams {
+    /// S: max nonzero terms per factor row
+    pub terms_per_row: usize,
+    /// P cap: maximum number of factors
+    pub max_factors: usize,
+    /// allowed power-of-two exponents
+    pub shift_range: (i32, i32),
+    /// stop when every row's relative residual ||r||/||w_row|| is below
+    /// this
+    pub target_rel_err: f64,
+    /// absolute per-row residual floor: LCC never spends adders below the
+    /// distortion the fixed-point baseline already accepts (the paper's
+    /// joint quantization+computing framing)
+    pub abs_err_floor: f64,
+}
+
+impl Default for FpParams {
+    fn default() -> Self {
+        FpParams {
+            terms_per_row: 2,
+            max_factors: 16,
+            shift_range: (-14, 14),
+            target_rel_err: 0.02, // ~34 dB per row
+            abs_err_floor: 0.0,
+        }
+    }
+}
+
+/// Decompose a (tall) matrix into a chain of P2 factors, F_0 first
+/// (F_0 consumes the input slice; later factors consume the previous
+/// factor's N outputs).
+pub fn decompose_fp(w: &Matrix, p: &FpParams) -> Vec<P2Factor> {
+    let n = w.rows();
+    let k = w.cols();
+    assert!(p.terms_per_row >= 1 && p.max_factors >= 1);
+
+    let row_norms_sq: Vec<f64> = (0..n)
+        .map(|r| w.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum())
+        .collect();
+    let floor_sq = p.abs_err_floor * p.abs_err_floor;
+    let targets_sq: Vec<f64> = row_norms_sq
+        .iter()
+        .map(|&nsq| (nsq * p.target_rel_err * p.target_rel_err).max(floor_sq))
+        .collect();
+
+    let mut factors: Vec<P2Factor> = Vec::new();
+    let mut dict = Dict::identity(k);
+
+    for _ in 0..p.max_factors {
+        let mut factor = P2Factor::new(dict.len(), n);
+        let mut approx_rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut all_converged = true;
+        for i in 0..n {
+            let (picks, residual) =
+                pursue(w.row(i), &dict, p.terms_per_row, targets_sq[i], p.shift_range);
+            let mut row_val = vec![0.0f32; k];
+            for pk in &picks {
+                factor.rows[i].push(Term {
+                    src: pk.atom,
+                    shift: pk.shift,
+                    negative: pk.negative,
+                });
+                let c = (pk.shift as f32).exp2() * if pk.negative { -1.0 } else { 1.0 };
+                for (rv, &av) in row_val.iter_mut().zip(dict.atom(pk.atom)) {
+                    *rv += c * av;
+                }
+            }
+            let res_sq: f64 = residual.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            if res_sq > targets_sq[i] {
+                all_converged = false;
+            }
+            approx_rows.push(row_val);
+        }
+        factors.push(factor);
+        if all_converged {
+            break;
+        }
+        dict = Dict::from_atoms(approx_rows);
+    }
+    factors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lcc::factor::chain_to_dense;
+    use crate::util::Rng;
+
+    fn rel_err(w: &Matrix, approx: &Matrix) -> f64 {
+        let mut diff = approx.clone();
+        diff.sub_assign(w);
+        diff.frobenius() / w.frobenius()
+    }
+
+    #[test]
+    fn error_decreases_with_factors() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(64, 6, 1.0, &mut rng);
+        let mut errs = Vec::new();
+        for max_f in [1, 2, 4, 8] {
+            let p = FpParams { max_factors: max_f, target_rel_err: 0.0, ..Default::default() };
+            let f = decompose_fp(&w, &p);
+            errs.push(rel_err(&w, &chain_to_dense(&f)));
+        }
+        assert!(errs.windows(2).all(|w| w[1] <= w[0] + 1e-9), "{errs:?}");
+        assert!(errs.last().unwrap() < &0.05, "{errs:?}");
+    }
+
+    #[test]
+    fn converges_to_target() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(128, 7, 1.0, &mut rng);
+        let p = FpParams::default();
+        let f = decompose_fp(&w, &p);
+        let approx = chain_to_dense(&f);
+        // per-row check
+        for i in 0..w.rows() {
+            let wn: f64 = w.row(i).iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+            let en: f64 = w
+                .row(i)
+                .iter()
+                .zip(approx.row(i))
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(en <= wn * p.target_rel_err * 1.5, "row {i}: {en} vs {wn}");
+        }
+    }
+
+    #[test]
+    fn respects_terms_per_row() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(32, 5, 1.0, &mut rng);
+        let p = FpParams { terms_per_row: 3, target_rel_err: 0.0, max_factors: 4, ..Default::default() };
+        for f in decompose_fp(&w, &p) {
+            assert!(f.rows.iter().all(|r| r.len() <= 3));
+        }
+    }
+
+    #[test]
+    fn zero_matrix_gives_empty_rows() {
+        let w = Matrix::zeros(8, 4);
+        let f = decompose_fp(&w, &FpParams::default());
+        assert_eq!(f.len(), 1);
+        assert!(f[0].rows.iter().all(|r| r.is_empty()));
+        assert_eq!(f[0].additions(), 0);
+    }
+
+    #[test]
+    fn power_of_two_matrix_exact_one_factor() {
+        let w = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, -0.5]]);
+        let p = FpParams { terms_per_row: 2, ..Default::default() };
+        let f = decompose_fp(&w, &p);
+        let approx = chain_to_dense(&f);
+        assert!(rel_err(&w, &approx) < 1e-7);
+        assert_eq!(f[0].additions(), 0); // single-term rows: shifts only
+    }
+}

@@ -1,0 +1,172 @@
+//! Fully sequential (FS) LCC algorithm (paper Sec. III-A; graph-based
+//! greedy in the spirit of [Rosenberger et al., IZS 2024]).
+//!
+//! Unlike FP, computations need not be independent: every partial sum
+//! computed for any output row becomes a reusable dictionary atom for all
+//! later rows, so common subexpressions are shared across the whole
+//! matrix. The result is emitted directly as an [`AdderGraph`]; its node
+//! count is the addition cost.
+
+use super::pursuit::{apply_pick, best_pick, Dict};
+use crate::graph::{AdderGraph, Operand, OutputSpec};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FsParams {
+    /// cap on pursuit terms per output row
+    pub max_terms_per_row: usize,
+    /// allowed power-of-two exponents
+    pub shift_range: (i32, i32),
+    /// stop a row when ||r|| / ||w_row|| drops below this
+    pub target_rel_err: f64,
+    /// absolute per-row residual floor (quantization-matched; see
+    /// [`super::fp::FpParams::abs_err_floor`])
+    pub abs_err_floor: f64,
+    /// cap on reusable dictionary atoms (memory/search-time guard)
+    pub max_dict_atoms: usize,
+}
+
+impl Default for FsParams {
+    fn default() -> Self {
+        FsParams {
+            max_terms_per_row: 48,
+            shift_range: (-14, 14),
+            target_rel_err: 0.02,
+            abs_err_floor: 0.0,
+            max_dict_atoms: 4096,
+        }
+    }
+}
+
+/// Decompose `w` into a shift-add graph over `w.cols()` inputs with
+/// `w.rows()` outputs.
+pub fn decompose_fs(w: &Matrix, p: &FsParams) -> AdderGraph {
+    let n = w.rows();
+    let k = w.cols();
+    let mut graph = AdderGraph::new(k);
+    // dictionary: value vectors + the operand that computes each
+    let mut dict = Dict::identity(k);
+    let mut handles: Vec<Operand> = (0..k).map(Operand::input).collect();
+    let mut outputs: Vec<OutputSpec> = Vec::with_capacity(n);
+
+    for i in 0..n {
+        let t = w.row(i);
+        let t_sq: f64 = t.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let target_sq =
+            (t_sq * p.target_rel_err * p.target_rel_err).max(p.abs_err_floor * p.abs_err_floor);
+        let mut r = t.to_vec();
+        let mut partial: Option<(Operand, Vec<f32>)> = None;
+        for _ in 0..p.max_terms_per_row {
+            let r_sq: f64 = r.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            if r_sq <= target_sq {
+                break;
+            }
+            let Some(pick) = best_pick(&r, &dict, p.shift_range) else {
+                break;
+            };
+            let term_op = handles[pick.atom].scaled(pick.shift, pick.negative);
+            let c = (pick.shift as f32).exp2() * if pick.negative { -1.0 } else { 1.0 };
+            apply_pick(&mut r, &dict, &pick);
+            partial = Some(match partial {
+                None => {
+                    // first term: a pure scaled reference, no adder yet
+                    let val: Vec<f32> =
+                        dict.atom(pick.atom).iter().map(|&v| c * v).collect();
+                    (term_op, val)
+                }
+                Some((prev_op, prev_val)) => {
+                    let node = graph.push_add(prev_op, term_op);
+                    let val: Vec<f32> = prev_val
+                        .iter()
+                        .zip(dict.atom(pick.atom))
+                        .map(|(&pv, &av)| pv + c * av)
+                        .collect();
+                    // the new partial sum is a reusable subexpression
+                    if dict.len() < p.max_dict_atoms {
+                        dict.push(val.clone());
+                        handles.push(node);
+                    }
+                    (node, val)
+                }
+            });
+        }
+        outputs.push(match partial {
+            None => OutputSpec::Zero,
+            Some((op, _)) => OutputSpec::Ref(op),
+        });
+    }
+    graph.set_outputs(outputs);
+    graph
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::verify_against;
+    use crate::util::Rng;
+
+    #[test]
+    fn graph_approximates_matrix() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(48, 6, 1.0, &mut rng);
+        let g = decompose_fs(&w, &FsParams::default());
+        let rep = verify_against(&g, &w, 16, &mut rng);
+        // target_rel_err is per row; pooled SQNR should be ~-20log10(0.02)
+        assert!(rep.sqnr_db > 25.0, "{rep:?}");
+    }
+
+    #[test]
+    fn reuse_beats_no_reuse_on_correlated_rows() {
+        // duplicate rows: the second copy must cost 0 extra additions
+        let mut rng = Rng::new(1);
+        let base = Matrix::randn(1, 6, 1.0, &mut rng);
+        let w = Matrix::from_vec(
+            2,
+            6,
+            [base.row(0), base.row(0)].concat(),
+        );
+        let g = decompose_fs(&w, &FsParams::default());
+        let single = decompose_fs(&base, &FsParams::default());
+        assert_eq!(g.additions(), single.additions(), "duplicate row should be free");
+    }
+
+    #[test]
+    fn scaled_row_is_free() {
+        // row1 = 2 * row0: one shift, zero additional adders
+        let mut rng = Rng::new(2);
+        let base: Vec<f32> = rng.normal_vec(5, 1.0);
+        let scaled: Vec<f32> = base.iter().map(|&v| 2.0 * v).collect();
+        let w = Matrix::from_vec(2, 5, [base, scaled].concat());
+        let g = decompose_fs(&w, &FsParams::default());
+        let single = decompose_fs(&w.select_rows(&[0]), &FsParams::default());
+        assert_eq!(g.additions(), single.additions());
+    }
+
+    #[test]
+    fn zero_rows_cost_nothing() {
+        let mut w = Matrix::zeros(4, 5);
+        *w.at_mut(1, 2) = 1.0; // one po2 entry: a pure shift
+        let g = decompose_fs(&w, &FsParams::default());
+        assert_eq!(g.additions(), 0);
+        let y = g.execute(&[1.0, 1.0, 3.0, 1.0, 1.0]);
+        assert_eq!(y, vec![0.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn tighter_target_costs_more_adders() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(32, 6, 1.0, &mut rng);
+        let loose = decompose_fs(&w, &FsParams { target_rel_err: 0.1, ..Default::default() });
+        let tight = decompose_fs(&w, &FsParams { target_rel_err: 0.005, ..Default::default() });
+        assert!(tight.additions() > loose.additions());
+    }
+
+    #[test]
+    fn dict_cap_respected() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(64, 8, 1.0, &mut rng);
+        let p = FsParams { max_dict_atoms: 10, ..Default::default() };
+        let g = decompose_fs(&w, &p); // must not panic / grow unbounded
+        assert!(g.additions() > 0);
+    }
+}

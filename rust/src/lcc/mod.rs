@@ -1,0 +1,27 @@
+//! Linear computation coding (paper Sec. III-A).
+//!
+//! LCC approximates a (tall) matrix by a product of sparse factors whose
+//! nonzero entries are signed powers of two (eq. 3-4), turning the
+//! matrix-vector product into a shift-add program. Two decomposition
+//! algorithms are provided, mirroring the paper:
+//!
+//! * [`fp`] — **fully parallel**: every factor row holds at most `S`
+//!   signed-po2 terms drawn from the *previous* factor's outputs, so all
+//!   rows of a factor evaluate independently (shallow, wide graphs).
+//! * [`fs`] — **fully sequential**: a graph-based greedy that may reuse
+//!   *any* previously computed subexpression (deep, narrow graphs, better
+//!   compression on small/ill-conditioned matrices).
+//!
+//! Wide matrices are vertically sliced into tall submatrices first
+//! ([`slicing`]); LCC quality improves with the aspect ratio (paper
+//! Sec. III-A properties).
+
+pub mod decompose;
+pub mod factor;
+pub mod fp;
+pub mod fs;
+pub mod pursuit;
+pub mod slicing;
+
+pub use decompose::{decompose, AdditionBreakdown, LccAlgorithm, LccConfig, LccDecomposition, SliceDecomposition, SliceKind};
+pub use factor::{chain_to_dense, P2Factor, Term};

@@ -1,0 +1,245 @@
+//! Greedy signed-power-of-two matching pursuit — the shared inner loop of
+//! both LCC algorithms.
+//!
+//! Given a target vector `t` and a dictionary of atoms, repeatedly pick
+//! the (atom, ±2^shift) pair that maximally reduces the residual energy
+//! `||r - c a||^2`, i.e. maximizes `2 c <r,a> - c^2 ||a||^2` over the
+//! power-of-two grid. The optimal unconstrained coefficient is
+//! `<r,a>/||a||^2`; only the two nearest powers of two need checking
+//! (the reduction is unimodal in log-space).
+
+/// A selected pursuit term.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pick {
+    pub atom: usize,
+    pub shift: i32,
+    pub negative: bool,
+    /// residual energy after applying this pick
+    pub residual_sq: f64,
+}
+
+/// Dictionary with cached squared norms.
+pub struct Dict {
+    atoms: Vec<Vec<f32>>,
+    norms_sq: Vec<f64>,
+    dim: usize,
+}
+
+impl Dict {
+    pub fn new(dim: usize) -> Self {
+        Dict { atoms: Vec::new(), norms_sq: Vec::new(), dim }
+    }
+
+    pub fn from_atoms(atoms: Vec<Vec<f32>>) -> Self {
+        assert!(!atoms.is_empty());
+        let dim = atoms[0].len();
+        let mut d = Dict::new(dim);
+        for a in atoms {
+            d.push(a);
+        }
+        d
+    }
+
+    /// Unit-vector dictionary e_0..e_{dim-1}.
+    pub fn identity(dim: usize) -> Self {
+        let mut d = Dict::new(dim);
+        for i in 0..dim {
+            let mut e = vec![0.0; dim];
+            e[i] = 1.0;
+            d.push(e);
+        }
+        d
+    }
+
+    pub fn push(&mut self, atom: Vec<f32>) {
+        assert_eq!(atom.len(), self.dim, "atom dim mismatch");
+        let nsq = atom.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        self.atoms.push(atom);
+        self.norms_sq.push(nsq);
+    }
+
+    pub fn len(&self) -> usize {
+        self.atoms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.atoms.is_empty()
+    }
+
+    pub fn atom(&self, i: usize) -> &[f32] {
+        &self.atoms[i]
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Round `c` to the best signed power of two within `shift_range`,
+/// measured by residual reduction `2 c d - c^2 n` (d = <r,a>, n = ||a||^2).
+/// Returns None when no po2 coefficient reduces the residual.
+fn best_po2(d: f64, nsq: f64, shift_range: (i32, i32)) -> Option<(i32, bool, f64)> {
+    if nsq <= 0.0 || d == 0.0 {
+        return None;
+    }
+    let c_opt = d / nsq;
+    let mag = c_opt.abs();
+    let negative = c_opt < 0.0;
+    let raw = mag.log2();
+    let mut best: Option<(i32, bool, f64)> = None;
+    for shift in [raw.floor() as i32, raw.ceil() as i32] {
+        let shift = shift.clamp(shift_range.0, shift_range.1);
+        let c = (shift as f64).exp2() * if negative { -1.0 } else { 1.0 };
+        let reduction = 2.0 * c * d - c * c * nsq;
+        if reduction > 0.0 && best.map(|b| reduction > b.2).unwrap_or(true) {
+            best = Some((shift, negative, reduction));
+        }
+    }
+    best
+}
+
+/// Chunked f32 dot product (perf: the f64-widening scalar loop inhibits
+/// vectorization and this dot dominates both LCC algorithms — see
+/// EXPERIMENTS.md §Perf). f32 accumulation in 8 lanes is accurate enough
+/// here: dims are small (slice widths ≤ ~32) and picks only need the
+/// argmax, not exact energies.
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let (xa, xb) = (&a[i * 8..i * 8 + 8], &b[i * 8..i * 8 + 8]);
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s as f64
+}
+
+/// One pursuit step: the best (atom, signed po2) pick over the whole
+/// dictionary for residual `r`, or None if nothing reduces the energy.
+pub fn best_pick(r: &[f32], dict: &Dict, shift_range: (i32, i32)) -> Option<Pick> {
+    let r_sq: f64 = dot_f32(r, r);
+    let mut best: Option<(Pick, f64)> = None;
+    for ai in 0..dict.len() {
+        let a = dict.atom(ai);
+        let d: f64 = dot_f32(r, a);
+        if let Some((shift, negative, reduction)) = best_po2(d, dict.norms_sq[ai], shift_range) {
+            if best.as_ref().map(|b| reduction > b.1).unwrap_or(true) {
+                best = Some((
+                    Pick { atom: ai, shift, negative, residual_sq: r_sq - reduction },
+                    reduction,
+                ));
+            }
+        }
+    }
+    best.map(|(p, _)| p)
+}
+
+/// Subtract `±2^shift * atom` from the residual in place.
+pub fn apply_pick(r: &mut [f32], dict: &Dict, pick: &Pick) {
+    let c = (pick.shift as f32).exp2() * if pick.negative { -1.0 } else { 1.0 };
+    for (rv, &av) in r.iter_mut().zip(dict.atom(pick.atom)) {
+        *rv -= c * av;
+    }
+}
+
+/// Greedy pursuit of `t` with up to `max_terms` picks, stopping early when
+/// the residual energy falls below `target_res_sq`. Returns the picks and
+/// the final residual.
+pub fn pursue(
+    t: &[f32],
+    dict: &Dict,
+    max_terms: usize,
+    target_res_sq: f64,
+    shift_range: (i32, i32),
+) -> (Vec<Pick>, Vec<f32>) {
+    let mut r = t.to_vec();
+    let mut picks = Vec::new();
+    for _ in 0..max_terms {
+        let r_sq: f64 = r.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        if r_sq <= target_res_sq {
+            break;
+        }
+        match best_pick(&r, dict, shift_range) {
+            Some(p) => {
+                apply_pick(&mut r, dict, &p);
+                picks.push(p);
+            }
+            None => break,
+        }
+    }
+    (picks, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn best_po2_exact_power() {
+        // c_opt = 0.5 exactly
+        let (shift, neg, red) = best_po2(0.5, 1.0, (-8, 8)).unwrap();
+        assert_eq!((shift, neg), (-1, false));
+        assert!((red - 0.25).abs() < 1e-12); // 2*0.5*0.5 - 0.25*1
+    }
+
+    #[test]
+    fn best_po2_negative() {
+        let (shift, neg, _) = best_po2(-2.0, 1.0, (-8, 8)).unwrap();
+        assert_eq!((shift, neg), (1, true));
+    }
+
+    #[test]
+    fn best_po2_zero_dot_is_none() {
+        assert!(best_po2(0.0, 1.0, (-8, 8)).is_none());
+    }
+
+    #[test]
+    fn pursuit_recovers_po2_combination() {
+        // t = 2 a0 - 0.25 a2 should be found exactly in 2 picks
+        let dict = Dict::identity(4);
+        let t = vec![2.0, 0.0, -0.25, 0.0];
+        let (picks, r) = pursue(&t, &dict, 4, 1e-12, (-8, 8));
+        assert_eq!(picks.len(), 2);
+        assert!(r.iter().all(|&v| v.abs() < 1e-7), "{r:?}");
+    }
+
+    #[test]
+    fn pursuit_monotone_residual() {
+        let mut rng = Rng::new(0);
+        let atoms: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(6, 1.0)).collect();
+        let dict = Dict::from_atoms(atoms);
+        let t = rng.normal_vec(6, 1.0);
+        let (picks, _) = pursue(&t, &dict, 12, 0.0, (-10, 10));
+        let mut prev = f64::INFINITY;
+        for p in &picks {
+            assert!(p.residual_sq <= prev + 1e-9, "residual increased");
+            prev = p.residual_sq;
+        }
+        assert!(!picks.is_empty());
+    }
+
+    #[test]
+    fn pursuit_respects_target() {
+        let dict = Dict::identity(3);
+        let t = vec![1.0, 1.0, 1.0];
+        // target = 2.5 allows stopping after one pick (residual 2.0)
+        let (picks, _) = pursue(&t, &dict, 10, 2.5, (-8, 8));
+        assert_eq!(picks.len(), 1);
+    }
+
+    #[test]
+    fn shift_clamped_to_range() {
+        let dict = Dict::identity(1);
+        let t = vec![1024.0];
+        let (picks, _) = pursue(&t, &dict, 1, 0.0, (-2, 2));
+        assert_eq!(picks[0].shift, 2);
+    }
+}

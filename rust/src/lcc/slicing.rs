@@ -1,0 +1,78 @@
+//! Vertical slicing of wide matrices into tall submatrices (paper eq. 3).
+//!
+//! LCC wants an exponential aspect ratio: for an N-row matrix the
+//! per-slice width should scale like log2(N) [Lehnert et al. 2023], so a
+//! wide `N x K` matrix is cut into `ceil(K / w)` slices of width
+//! `w ≈ log2(N)`.
+
+/// A vertical slice: columns `[start, start + width)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slice {
+    pub start: usize,
+    pub width: usize,
+}
+
+/// Heuristic slice width for an `rows x cols` matrix.
+pub fn auto_width(rows: usize, cols: usize) -> usize {
+    if cols == 0 {
+        return 0;
+    }
+    let w = (rows.max(2) as f64).log2().round() as usize;
+    w.clamp(1, cols)
+}
+
+/// Partition `cols` columns into slices of width `w` (last may be
+/// narrower).
+pub fn slice_columns(cols: usize, w: usize) -> Vec<Slice> {
+    assert!(w > 0 || cols == 0, "slice width must be positive");
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < cols {
+        let width = w.min(cols - start);
+        out.push(Slice { start, width });
+        start += width;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_width_grows_with_rows() {
+        assert_eq!(auto_width(256, 100), 8);
+        assert_eq!(auto_width(1024, 100), 10);
+        assert!(auto_width(2, 100) >= 1);
+    }
+
+    #[test]
+    fn auto_width_clamped_by_cols() {
+        assert_eq!(auto_width(1 << 20, 5), 5);
+    }
+
+    #[test]
+    fn slices_cover_without_overlap() {
+        let slices = slice_columns(23, 5);
+        assert_eq!(slices.len(), 5);
+        let mut covered = 0;
+        for s in &slices {
+            assert_eq!(s.start, covered);
+            covered += s.width;
+        }
+        assert_eq!(covered, 23);
+        assert_eq!(slices.last().unwrap().width, 3);
+    }
+
+    #[test]
+    fn exact_division() {
+        let slices = slice_columns(20, 5);
+        assert_eq!(slices.len(), 4);
+        assert!(slices.iter().all(|s| s.width == 5));
+    }
+
+    #[test]
+    fn zero_cols_empty() {
+        assert!(slice_columns(0, 4).is_empty());
+    }
+}

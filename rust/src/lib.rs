@@ -1,0 +1,45 @@
+//! # lccnn — Coding for Computation
+//!
+//! Reproduction of *"Coding for Computation: Efficient Compression of Neural
+//! Networks for Reconfigurable Hardware"* (Rosenberger, Fischer, Fröhlich,
+//! Bereyhi, Müller; 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library compresses neural networks so that inference on
+//! reconfigurable hardware (FPGAs) needs as few *additions* as possible:
+//!
+//! 1. **Pruning via group-lasso regularized training** (proximal gradient,
+//!    block soft-thresholding) removes input neurons / kernel columns while
+//!    keeping weight matrices dense — which is what LCC needs.
+//! 2. **Weight sharing** ties highly correlated columns to shared centroids
+//!    found by affinity propagation, turning `W x` into a small centroid
+//!    matrix times pre-summed inputs (scalar additions only).
+//! 3. **Linear computation coding (LCC)** factorizes the remaining dense
+//!    matrix into sparse factors whose entries are signed powers of two, so
+//!    the matrix-vector product becomes a shift-add adder graph.
+//!
+//! The crate also contains every substrate the paper depends on: a CSD
+//! (canonical signed digit) cost model for the baseline, an adder-graph IR
+//! plus a shift-add virtual machine that simulates the FPGA datapath, conv
+//! layer reformulations (full-kernel / partial-kernel), an affinity
+//! propagation implementation, synthetic dataset generators, a PJRT runtime
+//! that executes the AOT-compiled JAX training/eval artifacts, and a
+//! pipeline coordinator + serving layer.
+
+pub mod util;
+pub mod tensor;
+pub mod quant;
+pub mod lcc;
+pub mod graph;
+pub mod cluster;
+pub mod prune;
+pub mod share;
+pub mod convert;
+pub mod nn;
+pub mod data;
+pub mod config;
+pub mod metrics;
+pub mod runtime;
+pub mod train;
+pub mod pipeline;
+pub mod serve;
+pub mod report;

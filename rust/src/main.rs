@@ -1,0 +1,172 @@
+//! lccnn CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                          list artifacts + platform
+//!   fig2    [--lambda F] [...]    run the Fig. 2 MLP pipeline for one λ
+//!   table1  [--steps N] [...]     run the Table-I residual-CNN pipeline
+//!   decompose --rows N --cols K   LCC vs CSD on a random matrix
+//!
+//! First-party flag parsing (offline build: no clap); every flag has the
+//! form --name value.
+
+use anyhow::{bail, Context, Result};
+use lccnn::config::{MlpPipelineConfig, ResnetPipelineConfig};
+use lccnn::lcc::{decompose, LccConfig};
+use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
+use lccnn::report::{percent, ratio, Table};
+use lccnn::runtime::Runtime;
+use lccnn::tensor::Matrix;
+use lccnn::util::{logger, Rng};
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        if !k.starts_with("--") {
+            bail!("expected --flag, got {k:?}");
+        }
+        let v = args.get(i + 1).with_context(|| format!("missing value for {k}"))?;
+        flags.insert(k[2..].to_string(), v.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(name) {
+        None => Ok(default),
+        Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts:");
+    for name in rt.artifact_names() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn cmd_fig2(flags: HashMap<String, String>) -> Result<()> {
+    let mut cfg = MlpPipelineConfig::default();
+    cfg.lambda = flag(&flags, "lambda", cfg.lambda)?;
+    cfg.train_steps = flag(&flags, "steps", cfg.train_steps)?;
+    cfg.share_retrain_steps = flag(&flags, "retrain-steps", cfg.share_retrain_steps)?;
+    cfg.train_examples = flag(&flags, "train-examples", cfg.train_examples)?;
+    cfg.seed = flag(&flags, "seed", cfg.seed)?;
+    if let Some(algo) = flags.get("lcc") {
+        cfg.lcc_algo = lccnn::config::LccAlgoConfig::parse(algo)
+            .with_context(|| format!("--lcc {algo:?} (use fp|fs)"))?;
+    }
+    let rt = Runtime::open_default()?;
+    let out = lccnn::pipeline::run_mlp_pipeline(&rt, &cfg)?;
+    let mut t = Table::new(
+        &format!("Fig. 2 point (lambda = {})", cfg.lambda),
+        &["stage", "layer-1 adds", "ratio", "accuracy", "cols", "clusters"],
+    );
+    t.add_row(vec![
+        "baseline (dense CSD)".into(),
+        out.baseline_additions.to_string(),
+        "1.0".into(),
+        percent(out.baseline_accuracy),
+        "784".into(),
+        "-".into(),
+    ]);
+    for s in &out.stages {
+        t.add_row(vec![
+            s.stage.clone(),
+            s.additions.to_string(),
+            ratio(out.baseline_additions, s.additions),
+            percent(s.accuracy),
+            s.active_columns.to_string(),
+            if s.clusters > 0 { s.clusters.to_string() } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!("final LCC SQNR: {:.1} dB", out.lcc_sqnr_db);
+    Ok(())
+}
+
+fn cmd_table1(flags: HashMap<String, String>) -> Result<()> {
+    let mut cfg = ResnetPipelineConfig::default();
+    cfg.train_steps = flag(&flags, "steps", cfg.train_steps)?;
+    cfg.lambda = flag(&flags, "lambda", cfg.lambda)?;
+    cfg.train_examples = flag(&flags, "train-examples", cfg.train_examples)?;
+    cfg.eval_limit = flag(&flags, "eval-limit", cfg.eval_limit)?;
+    cfg.seed = flag(&flags, "seed", cfg.seed)?;
+    let rt = Runtime::open_default()?;
+    let out = lccnn::pipeline::run_resnet_pipeline(&rt, &cfg)?;
+    let mut t = Table::new(
+        &format!(
+            "Table I (baseline acc {} / {} adds)",
+            percent(out.baseline_accuracy),
+            out.baseline_additions
+        ),
+        &["method", "FK ratio", "FK acc", "PK ratio", "PK acc"],
+    );
+    for (name, fk, pk) in &out.rows {
+        t.add_row(vec![
+            name.clone(),
+            format!("{:.1}", fk.ratio),
+            percent(fk.accuracy),
+            format!("{:.1}", pk.ratio),
+            percent(pk.accuracy),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_decompose(flags: HashMap<String, String>) -> Result<()> {
+    let rows: usize = flag(&flags, "rows", 128)?;
+    let cols: usize = flag(&flags, "cols", 16)?;
+    let seed: u64 = flag(&flags, "seed", 0)?;
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(rows, cols, 0.5, &mut rng);
+    let fmt = FixedPointFormat::default_weights();
+    let csd = matrix_csd_adders(&w, fmt);
+    let mut t = Table::new(
+        &format!("LCC vs CSD on random {rows}x{cols}"),
+        &["method", "adds", "ratio", "sqnr dB", "depth"],
+    );
+    t.add_row(vec!["CSD".into(), csd.to_string(), "1.0".into(), "-".into(), "-".into()]);
+    for (name, cfg) in [("LCC-FP", LccConfig::fp()), ("LCC-FS", LccConfig::fs())] {
+        let d = decompose(&w, &cfg);
+        let sched = lccnn::graph::schedule(d.graph());
+        t.add_row(vec![
+            name.into(),
+            d.additions().to_string(),
+            ratio(csd, d.additions()),
+            format!("{:.1}", d.sqnr_db(&w)),
+            sched.depth.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("usage: lccnn <info|fig2|table1|decompose> [--flag value ...]");
+            return Ok(());
+        }
+    };
+    match cmd {
+        "info" => cmd_info(),
+        "fig2" => cmd_fig2(parse_flags(&rest)?),
+        "table1" => cmd_table1(parse_flags(&rest)?),
+        "decompose" => cmd_decompose(parse_flags(&rest)?),
+        other => bail!("unknown command {other:?}"),
+    }
+}

@@ -1,0 +1,143 @@
+//! Process-wide metrics registry: counters, gauges and latency
+//! histograms, shared between the pipeline coordinator and the serving
+//! layer, rendered as text by the CLI and benches.
+
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Vec<f64>>,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&self, name: &str, value: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .entry(name.to_string())
+            .or_default()
+            .push(value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// (count, mean, p50, p99) of a histogram.
+    pub fn summary(&self, name: &str) -> Option<(usize, f64, f64, f64)> {
+        let m = self.inner.lock().unwrap();
+        let h = m.histograms.get(name)?;
+        Some((
+            h.len(),
+            stats::mean(h),
+            stats::percentile(h, 50.0),
+            stats::percentile(h, 99.0),
+        ))
+    }
+
+    /// Render every metric as aligned text.
+    pub fn render(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &m.counters {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in &m.gauges {
+            out.push_str(&format!("gauge   {k} = {v:.6}\n"));
+        }
+        for (k, h) in &m.histograms {
+            out.push_str(&format!(
+                "hist    {k}: n={} mean={:.6} p50={:.6} p99={:.6}\n",
+                h.len(),
+                stats::mean(h),
+                stats::percentile(h, 50.0),
+                stats::percentile(h, 99.0),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("a", 2);
+        m.incr("a", 3);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn histogram_summary() {
+        let m = Metrics::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.observe("lat", v);
+        }
+        let (n, mean, p50, _) = m.summary("lat").unwrap();
+        assert_eq!(n, 4);
+        assert!((mean - 2.5).abs() < 1e-9);
+        assert!(p50 >= 2.0 && p50 <= 3.0);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.incr("n", 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 400);
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let m = Metrics::new();
+        m.incr("c", 1);
+        m.gauge("g", 2.0);
+        m.observe("h", 3.0);
+        let r = m.render();
+        assert!(r.contains("counter c") && r.contains("gauge   g") && r.contains("hist    h"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Directory-based checkpoints: one `.npy` per named parameter, written
+//! and read by the rust coordinator (and loadable from numpy for
+//! debugging).
+
+use super::npy::{read_npy, write_npy, NpyArray};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Ordered name → array map (BTreeMap: deterministic iteration, which the
+/// artifact calling convention relies on when flattening).
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    arrays: BTreeMap<String, NpyArray>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, arr: NpyArray) {
+        self.arrays.insert(name.to_string(), arr);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&NpyArray> {
+        self.arrays.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut NpyArray> {
+        self.arrays.get_mut(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.arrays.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrays.is_empty()
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("mkdir {}", dir.display()))?;
+        for (name, arr) in &self.arrays {
+            write_npy(&dir.join(format!("{name}.npy")), arr)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mut store = ParamStore::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("read_dir {}", dir.display()))?
+        {
+            let path = entry?.path();
+            if path.extension().map(|e| e == "npy").unwrap_or(false) {
+                let name = path
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .context("bad filename")?
+                    .to_string();
+                store.arrays.insert(name, read_npy(&path)?);
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lccnn-ckpt-{}", std::process::id()));
+        let mut s = ParamStore::new();
+        s.insert("w1", NpyArray::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        s.insert("b1", NpyArray::f32(vec![2], vec![0.5, -0.5]));
+        s.save(&dir).unwrap();
+        let back = ParamStore::load(&dir).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("w1").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back.get("b1").unwrap().shape, vec![2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn names_sorted() {
+        let mut s = ParamStore::new();
+        s.insert("z", NpyArray::f32(vec![1], vec![0.0]));
+        s.insert("a", NpyArray::f32(vec![1], vec![0.0]));
+        let names: Vec<_> = s.names().cloned().collect();
+        assert_eq!(names, vec!["a", "z"]);
+    }
+}

@@ -1,0 +1,196 @@
+//! The compressed MLP: layer 1 replaced by one of the paper's three
+//! stages (Fig. 2 series) — pruned-dense, +weight-sharing, +LCC — with
+//! exact addition accounting per stage and accuracy evaluation through
+//! the *actual* compressed computation (the LCC stage runs the shift-add
+//! VM, not a dense stand-in).
+
+use super::mlp::argmax;
+use crate::data::Dataset;
+use crate::quant::{matrix_csd_adders, FixedPointFormat};
+use crate::share::{SharedLayer, SharedLcc};
+use crate::tensor::Matrix;
+
+/// Layer-1 evaluation strategy (the three Fig. 2 series).
+pub enum Layer1 {
+    /// regularized training only: compacted dense matrix, CSD adders
+    Dense(Matrix),
+    /// + weight sharing: segment sums + centroid matrix via CSD
+    Shared(SharedLayer),
+    /// + LCC: segment sums + shift-add program
+    SharedLcc(SharedLcc),
+}
+
+impl Layer1 {
+    pub fn apply(&self, x_kept: &[f32]) -> Vec<f32> {
+        match self {
+            Layer1::Dense(w) => w.matvec(x_kept),
+            Layer1::Shared(s) => s.apply(x_kept),
+            Layer1::SharedLcc(s) => s.apply(x_kept),
+        }
+    }
+
+    /// Additions to evaluate layer 1 (the quantity Fig. 2's ratio uses).
+    pub fn additions(&self, fmt: FixedPointFormat) -> usize {
+        match self {
+            Layer1::Dense(w) => matrix_csd_adders(w, fmt),
+            Layer1::Shared(s) => s.additions_with_csd(fmt),
+            Layer1::SharedLcc(s) => s.additions(),
+        }
+    }
+
+    pub fn stage_name(&self) -> &'static str {
+        match self {
+            Layer1::Dense(_) => "reg-training",
+            Layer1::Shared(_) => "reg+sharing",
+            Layer1::SharedLcc(_) => "reg+sharing+LCC",
+        }
+    }
+}
+
+/// MLP with a compressed first layer. `kept` maps the compacted inputs
+/// back to original feature indices (pruned features are never read —
+/// on the FPGA they are simply not wired).
+pub struct CompressedMlp {
+    pub kept: Vec<usize>,
+    pub layer1: Layer1,
+    pub b1: Vec<f32>,
+    pub w2: Matrix,
+    pub b2: Vec<f32>,
+}
+
+impl CompressedMlp {
+    pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
+        let x_kept: Vec<f32> = self.kept.iter().map(|&i| x[i]).collect();
+        let mut h = self.layer1.apply(&x_kept);
+        for (hv, &b) in h.iter_mut().zip(&self.b1) {
+            *hv = (*hv + b).max(0.0);
+        }
+        let mut out = self.w2.matvec(&h);
+        for (ov, &b) in out.iter_mut().zip(&self.b2) {
+            *ov += b;
+        }
+        out
+    }
+
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            let pred = argmax(&self.forward_one(data.example(i)));
+            if pred == data.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.len().max(1) as f64
+    }
+
+    pub fn layer1_additions(&self, fmt: FixedPointFormat) -> usize {
+        self.layer1.additions(fmt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::affinity::{cluster_columns, AffinityParams};
+    use crate::lcc::LccConfig;
+    use crate::prune::compact_columns;
+    use crate::util::Rng;
+
+    /// A weight matrix with pruned columns and duplicated column groups.
+    fn synthetic_w1(rows: usize) -> Matrix {
+        let mut rng = Rng::new(0);
+        let mut w = Matrix::zeros(rows, 20);
+        // 4 groups of 4 near-identical active columns + 4 pruned columns
+        for g in 0..4 {
+            let base = rng.normal_vec(rows, 0.8);
+            for j in 0..4 {
+                let col = g * 5 + j; // every 5th column left at zero
+                for r in 0..rows {
+                    *w.at_mut(r, col) = base[r] + 0.005 * rng.normal_f32();
+                }
+            }
+        }
+        w
+    }
+
+    fn build(stage: usize) -> (CompressedMlp, Matrix) {
+        let rows = 16;
+        let w1 = synthetic_w1(rows);
+        let compact = compact_columns(&w1, 1e-6);
+        let mut rng = Rng::new(9);
+        let w2 = Matrix::randn(4, rows, 0.3, &mut rng);
+        let layer1 = match stage {
+            0 => Layer1::Dense(compact.weights.clone()),
+            1 => {
+                let c = cluster_columns(&compact.weights, &AffinityParams::default());
+                Layer1::Shared(SharedLayer::from_clustering(&compact.weights, &c))
+            }
+            _ => {
+                let c = cluster_columns(&compact.weights, &AffinityParams::default());
+                let sl = SharedLayer::from_clustering(&compact.weights, &c);
+                Layer1::SharedLcc(sl.with_lcc(&LccConfig::fs()))
+            }
+        };
+        (
+            CompressedMlp {
+                kept: compact.kept,
+                layer1,
+                b1: vec![0.0; rows],
+                w2,
+                b2: vec![0.0; 4],
+            },
+            w1,
+        )
+    }
+
+    #[test]
+    fn stages_agree_numerically() {
+        // sharing/LCC outputs stay close to the pruned-dense forward
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = rng.normal_vec(20, 1.0);
+        let (dense, _) = build(0);
+        let y0 = dense.forward_one(&x);
+        for stage in 1..3 {
+            let (m, _) = build(stage);
+            let y = m.forward_one(&x);
+            for (a, b) in y0.iter().zip(&y) {
+                assert!((a - b).abs() < 0.3 + 0.1 * a.abs(), "stage {stage}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn additions_decrease_along_the_pipeline() {
+        let fmt = FixedPointFormat::default_weights();
+        let (d, _) = build(0);
+        let (s, _) = build(1);
+        let (l, _) = build(2);
+        let (a0, a1, a2) = (
+            d.layer1_additions(fmt),
+            s.layer1_additions(fmt),
+            l.layer1_additions(fmt),
+        );
+        assert!(a1 < a0, "sharing {a1} !< dense {a0}");
+        assert!(a2 < a1, "lcc {a2} !< sharing {a1}");
+    }
+
+    #[test]
+    fn pruned_inputs_are_ignored() {
+        let (m, _) = build(0);
+        let mut x = vec![0.0f32; 20];
+        // set only pruned columns (indices 4, 9, 14, 19)
+        for &i in &[4usize, 9, 14, 19] {
+            x[i] = 100.0;
+        }
+        let y = m.forward_one(&x);
+        // all-zero active inputs -> logits == bias path (all zeros here)
+        assert!(y.iter().all(|&v| v == 0.0), "{y:?}");
+    }
+
+    #[test]
+    fn stage_names() {
+        assert_eq!(build(0).0.layer1.stage_name(), "reg-training");
+        assert_eq!(build(1).0.layer1.stage_name(), "reg+sharing");
+        assert_eq!(build(2).0.layer1.stage_name(), "reg+sharing+LCC");
+    }
+}

@@ -1,0 +1,131 @@
+//! The paper's MLP (784 → 300 → 10, Sec. IV-A): rust-side parameter
+//! container, He init, CPU reference forward and accuracy evaluation.
+//! Training itself runs through the AOT JAX artifact (see
+//! [`crate::train`]); this forward is the baseline evaluator and the
+//! numerical reference the compressed model is compared against.
+
+use super::checkpoint::ParamStore;
+use super::npy::NpyArray;
+use crate::data::Dataset;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+pub const INPUT: usize = 784;
+pub const HIDDEN: usize = 300;
+pub const OUTPUT: usize = 10;
+
+#[derive(Clone, Debug)]
+pub struct MlpParams {
+    pub w1: Matrix, // HIDDEN x INPUT
+    pub b1: Vec<f32>,
+    pub w2: Matrix, // OUTPUT x HIDDEN
+    pub b2: Vec<f32>,
+}
+
+impl MlpParams {
+    /// He-normal init (scale sqrt(2/fan_in)).
+    pub fn init(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let s1 = (2.0f32 / INPUT as f32).sqrt();
+        let s2 = (2.0f32 / HIDDEN as f32).sqrt();
+        MlpParams {
+            w1: Matrix::randn(HIDDEN, INPUT, s1, &mut rng),
+            b1: vec![0.0; HIDDEN],
+            w2: Matrix::randn(OUTPUT, HIDDEN, s2, &mut rng),
+            b2: vec![0.0; OUTPUT],
+        }
+    }
+
+    /// Logits for one flattened example.
+    pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
+        let mut h = self.w1.matvec(x);
+        for (hv, &b) in h.iter_mut().zip(&self.b1) {
+            *hv = (*hv + b).max(0.0);
+        }
+        let mut out = self.w2.matvec(&h);
+        for (ov, &b) in out.iter_mut().zip(&self.b2) {
+            *ov += b;
+        }
+        out
+    }
+
+    /// Top-1 accuracy over a dataset.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            let logits = self.forward_one(data.example(i));
+            let pred = argmax(&logits);
+            if pred == data.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.len().max(1) as f64
+    }
+
+    /// Flatten into a ParamStore using the artifact naming convention.
+    pub fn to_store(&self) -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("W1", NpyArray::f32(vec![HIDDEN, INPUT], self.w1.data().to_vec()));
+        s.insert("b1", NpyArray::f32(vec![HIDDEN], self.b1.clone()));
+        s.insert("W2", NpyArray::f32(vec![OUTPUT, HIDDEN], self.w2.data().to_vec()));
+        s.insert("b2", NpyArray::f32(vec![OUTPUT], self.b2.clone()));
+        s
+    }
+
+    pub fn from_store(s: &ParamStore) -> Option<Self> {
+        Some(MlpParams {
+            w1: Matrix::from_vec(HIDDEN, INPUT, s.get("W1")?.data.clone()),
+            b1: s.get("b1")?.data.clone(),
+            w2: Matrix::from_vec(OUTPUT, HIDDEN, s.get("W2")?.data.clone()),
+            b2: s.get("b2")?.data.clone(),
+        })
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_mnist;
+
+    #[test]
+    fn forward_shapes() {
+        let p = MlpParams::init(0);
+        let x = vec![0.1; INPUT];
+        assert_eq!(p.forward_one(&x).len(), OUTPUT);
+    }
+
+    #[test]
+    fn random_init_near_chance() {
+        let p = MlpParams::init(1);
+        let data = synth_mnist::generate(200, 0);
+        let acc = p.accuracy(&data);
+        assert!(acc < 0.35, "untrained accuracy suspiciously high: {acc}");
+    }
+
+    #[test]
+    fn store_roundtrip() {
+        let p = MlpParams::init(2);
+        let s = p.to_store();
+        let q = MlpParams::from_store(&s).unwrap();
+        assert_eq!(p.w1, q.w1);
+        assert_eq!(p.b2, q.b2);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Neural-network substrate: parameter storage, checkpoint I/O (first-
+//! party `.npy`), CPU reference forwards for the MLP and the residual
+//! CNN, the full ResNet-34 layer inventory for exact adder accounting,
+//! and the compressed-model evaluators that execute the paper's scheme
+//! (pruning + sharing + LCC) end to end.
+
+pub mod checkpoint;
+pub mod compressed;
+pub mod mlp;
+pub mod npy;
+pub mod resnet;
+
+pub use checkpoint::ParamStore;
+pub use compressed::{CompressedMlp, Layer1};
+pub use mlp::MlpParams;

@@ -1,0 +1,201 @@
+//! Minimal `.npy` (format version 1.0) reader/writer for f32 and i32
+//! arrays — checkpoint interchange with the python build path without an
+//! external dependency.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn descr(&self) -> &'static str {
+        match self {
+            DType::F32 => "<f4",
+            DType::I32 => "<i4",
+        }
+    }
+}
+
+/// An n-dimensional array as (shape, flat f32 data). i32 arrays are
+/// converted losslessly for |v| < 2^24; checkpoints only carry weights
+/// and small integer labels, well within range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<f32>,
+}
+
+impl NpyArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyArray { shape, dtype: DType::F32, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Write an array to `.npy` v1.0.
+pub fn write_npy(path: &Path, arr: &NpyArray) -> Result<()> {
+    let shape_str = match arr.shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", arr.shape[0]),
+        _ => format!(
+            "({})",
+            arr.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        arr.dtype.descr(),
+        shape_str
+    );
+    // pad so that magic(6) + ver(2) + len(2) + header is a multiple of 64
+    let unpadded = MAGIC.len() + 2 + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    match arr.dtype {
+        DType::F32 => {
+            for v in &arr.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        DType::I32 => {
+            for v in &arr.data {
+                f.write_all(&(*v as i32).to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a `.npy` file (v1.x, little-endian f4/i4, C order).
+pub fn read_npy(path: &Path) -> Result<NpyArray> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() < 10 || &buf[..6] != MAGIC {
+        bail!("not an npy file: {}", path.display());
+    }
+    let major = buf[6];
+    if major != 1 {
+        bail!("unsupported npy version {major}");
+    }
+    let hlen = u16::from_le_bytes([buf[8], buf[9]]) as usize;
+    let header = std::str::from_utf8(&buf[10..10 + hlen]).context("header utf8")?;
+    let dtype = if header.contains("'<f4'") {
+        DType::F32
+    } else if header.contains("'<i4'") {
+        DType::I32
+    } else {
+        bail!("unsupported dtype in header: {header}");
+    };
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order unsupported");
+    }
+    let shape_part = header
+        .split("'shape':")
+        .nth(1)
+        .context("no shape")?
+        .split('(')
+        .nth(1)
+        .context("no shape tuple")?
+        .split(')')
+        .next()
+        .context("unterminated shape")?;
+    let shape: Vec<usize> = shape_part
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("shape parse"))
+        .collect::<Result<_>>()?;
+    let numel: usize = shape.iter().product();
+    let body = &buf[10 + hlen..];
+    if body.len() < numel * 4 {
+        bail!("truncated npy body");
+    }
+    let data: Vec<f32> = (0..numel)
+        .map(|i| {
+            let b = [body[i * 4], body[i * 4 + 1], body[i * 4 + 2], body[i * 4 + 3]];
+            match dtype {
+                DType::F32 => f32::from_le_bytes(b),
+                DType::I32 => i32::from_le_bytes(b) as f32,
+            }
+        })
+        .collect();
+    Ok(NpyArray { shape, dtype, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lccnn-npy-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let p = tmpdir().join("a.npy");
+        let arr = NpyArray::f32(vec![2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 9.9]);
+        write_npy(&p, &arr).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back, arr);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let p = tmpdir().join("b.npy");
+        let arr = NpyArray { shape: vec![4], dtype: DType::I32, data: vec![1.0, -7.0, 0.0, 42.0] };
+        write_npy(&p, &arr).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(back.dtype, DType::I32);
+        assert_eq!(back.data, arr.data);
+    }
+
+    #[test]
+    fn vector_shape() {
+        let p = tmpdir().join("c.npy");
+        let arr = NpyArray::f32(vec![5], vec![0.0; 5]);
+        write_npy(&p, &arr).unwrap();
+        assert_eq!(read_npy(&p).unwrap().shape, vec![5]);
+    }
+
+    #[test]
+    fn python_numpy_can_read_ours() {
+        // cross-checked via header layout: 64-byte aligned, v1.0
+        let p = tmpdir().join("d.npy");
+        write_npy(&p, &NpyArray::f32(vec![1], vec![1.0])).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..6], MAGIC);
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0, "header must align to 64");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpdir().join("e.npy");
+        std::fs::write(&p, b"not an npy").unwrap();
+        assert!(read_npy(&p).is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! The Fig. 2 pipeline: MLP on synthetic digits, layer 1 regularized,
+//! three compression stages measured against the unregularized CSD
+//! baseline.
+
+use crate::cluster::affinity::{cluster_columns, AffinityParams};
+use crate::cluster::Clustering;
+use crate::config::{LccAlgoConfig, MlpPipelineConfig};
+use crate::data::synth_mnist;
+use crate::lcc::{LccConfig, LccDecomposition};
+use crate::nn::compressed::{CompressedMlp, Layer1};
+use crate::nn::mlp::MlpParams;
+use crate::prune::{column_mask, compact_columns};
+use crate::quant::{matrix_csd_adders, FixedPointFormat};
+use crate::runtime::Runtime;
+use crate::share::SharedLayer;
+use crate::train::{LossCurve, LrSchedule, MlpTrainer};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// One Fig. 2 point.
+#[derive(Clone, Debug)]
+pub struct StageResult {
+    pub stage: String,
+    /// layer-1 additions (the quantity Fig. 2 tracks)
+    pub additions: usize,
+    /// baseline additions / stage additions
+    pub ratio: f64,
+    pub accuracy: f64,
+    pub active_columns: usize,
+    pub clusters: usize,
+}
+
+#[derive(Debug)]
+pub struct MlpPipelineOutput {
+    pub baseline_additions: usize,
+    pub baseline_accuracy: f64,
+    pub baseline_curve: LossCurve,
+    pub reg_curve: LossCurve,
+    pub stages: Vec<StageResult>,
+    /// verification SQNR of the final LCC graph vs the shared matrix
+    pub lcc_sqnr_db: f64,
+    /// SQNR the CSD baseline's own quantization admits on that matrix —
+    /// the fair yardstick for lcc_sqnr_db (joint quantization+computing)
+    pub quant_sqnr_db: f64,
+}
+
+fn lcc_config(cfg: &MlpPipelineConfig) -> LccConfig {
+    let mut c = match cfg.lcc_algo {
+        LccAlgoConfig::Fp => LccConfig::fp(),
+        LccAlgoConfig::Fs => LccConfig::fs(),
+    };
+    c.target_rel_err = cfg.target_rel_err;
+    c
+}
+
+/// Map a compact-space clustering to artifact-space labels: active
+/// column j gets its cluster exemplar's *original* index; pruned columns
+/// point at themselves (so eq. 9 averaging never mixes them in).
+pub fn artifact_labels(
+    clustering: &Clustering,
+    kept: &[usize],
+    total: usize,
+) -> Vec<i32> {
+    let mut labels: Vec<i32> = (0..total as i32).collect();
+    for (compact_j, &orig_j) in kept.iter().enumerate() {
+        let exemplar_compact = clustering.exemplars[clustering.labels[compact_j]];
+        labels[orig_j] = kept[exemplar_compact] as i32;
+    }
+    labels
+}
+
+/// Run the full Fig. 2 pipeline for one lambda.
+pub fn run_mlp_pipeline(rt: &Runtime, cfg: &MlpPipelineConfig) -> Result<MlpPipelineOutput> {
+    let fmt = FixedPointFormat::default_weights();
+    let sched = LrSchedule { base: cfg.lr, every: cfg.lr_decay_every, factor: cfg.lr_decay };
+    let train_data = synth_mnist::generate(cfg.train_examples, cfg.seed);
+    let test_data = synth_mnist::generate(cfg.test_examples, cfg.seed + 1);
+
+    // --- baseline: unregularized training, CSD cost of dense W1 ----------
+    log::info!("[mlp] baseline training ({} steps)", cfg.train_steps);
+    let mut base_tr = MlpTrainer::new(rt, &MlpParams::init(cfg.seed + 10))?;
+    let baseline_curve = base_tr.train(&train_data, cfg.train_steps, sched, 20, cfg.seed + 20)?;
+    let (_, baseline_accuracy) = base_tr.evaluate(&test_data)?;
+    let baseline_w1 = base_tr.params().w1;
+    let baseline_additions = matrix_csd_adders(&baseline_w1, fmt);
+
+    // --- stage 1: regularized training (group lasso on W1 columns) -------
+    log::info!("[mlp] regularized training (lambda={})", cfg.lambda);
+    let mut reg_tr = MlpTrainer::new(rt, &MlpParams::init(cfg.seed + 11))?;
+    reg_tr.lambda = cfg.lambda;
+    let reg_curve = reg_tr.train(&train_data, cfg.train_steps, sched, 20, cfg.seed + 21)?;
+    let reg_params = reg_tr.params();
+    let mask = column_mask(&reg_params.w1, cfg.prune_eps);
+    let compact = compact_columns(&reg_params.w1, cfg.prune_eps);
+    log::info!("[mlp] pruning kept {}/{} input columns", compact.kept.len(), mask.len());
+
+    let mut stages = Vec::new();
+    let stage_a = CompressedMlp {
+        kept: compact.kept.clone(),
+        layer1: Layer1::Dense(compact.weights.clone()),
+        b1: reg_params.b1.clone(),
+        w2: reg_params.w2.clone(),
+        b2: reg_params.b2.clone(),
+    };
+    let a_adds = stage_a.layer1_additions(fmt);
+    stages.push(StageResult {
+        stage: "reg-training".into(),
+        additions: a_adds,
+        ratio: baseline_additions as f64 / a_adds.max(1) as f64,
+        accuracy: stage_a.accuracy(&test_data),
+        active_columns: compact.kept.len(),
+        clusters: 0,
+    });
+
+    // --- stage 2: weight sharing (cluster + retrain with eq. 9 tying) ----
+    let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+    log::info!(
+        "[mlp] affinity propagation: {} clusters over {} columns",
+        clustering.num_clusters(),
+        compact.kept.len()
+    );
+    reg_tr.lambda = 0.0; // retraining only ties weights, no more pruning
+    reg_tr.set_colmask(mask.clone());
+    reg_tr.set_cluster_labels(artifact_labels(&clustering, &compact.kept, mask.len()));
+    reg_tr.set_share_flag(true);
+    let retrain_sched = LrSchedule { base: cfg.lr * 0.2, every: cfg.lr_decay_every, factor: cfg.lr_decay };
+    reg_tr.train(&train_data, cfg.share_retrain_steps, retrain_sched, 20, cfg.seed + 22)?;
+    let shared_params = reg_tr.params();
+    let shared_compact = shared_params.w1.select_cols(&compact.kept);
+    let shared_layer = SharedLayer::from_clustering(&shared_compact, &clustering);
+
+    let stage_b = CompressedMlp {
+        kept: compact.kept.clone(),
+        layer1: Layer1::Shared(shared_layer.clone()),
+        b1: shared_params.b1.clone(),
+        w2: shared_params.w2.clone(),
+        b2: shared_params.b2.clone(),
+    };
+    let b_adds = stage_b.layer1_additions(fmt);
+    stages.push(StageResult {
+        stage: "reg+sharing".into(),
+        additions: b_adds,
+        ratio: baseline_additions as f64 / b_adds.max(1) as f64,
+        accuracy: stage_b.accuracy(&test_data),
+        active_columns: compact.kept.len(),
+        clusters: clustering.num_clusters(),
+    });
+
+    // --- stage 3: LCC decomposition of the centroid matrix ---------------
+    let shared_lcc = shared_layer.with_lcc(&lcc_config(cfg));
+    let lcc_sqnr_db = shared_lcc.decomposition.sqnr_db(&shared_layer.centroids);
+    let quant_sqnr_db = {
+        let (_, deq) = crate::quant::quantize_matrix(&shared_layer.centroids, fmt);
+        crate::util::stats::sqnr_db(shared_layer.centroids.data(), deq.data())
+    };
+    let stage_c = CompressedMlp {
+        kept: compact.kept.clone(),
+        layer1: Layer1::SharedLcc(shared_lcc),
+        b1: shared_params.b1,
+        w2: shared_params.w2,
+        b2: shared_params.b2,
+    };
+    let c_adds = stage_c.layer1_additions(fmt);
+    stages.push(StageResult {
+        stage: "reg+sharing+LCC".into(),
+        additions: c_adds,
+        ratio: baseline_additions as f64 / c_adds.max(1) as f64,
+        accuracy: stage_c.accuracy(&test_data),
+        active_columns: compact.kept.len(),
+        clusters: clustering.num_clusters(),
+    });
+
+    Ok(MlpPipelineOutput {
+        baseline_additions,
+        baseline_accuracy,
+        baseline_curve,
+        reg_curve,
+        stages,
+        lcc_sqnr_db,
+        quant_sqnr_db,
+    })
+}
+
+/// The paper's Sec. IV-A side claim: LCC applied directly to the dense,
+/// unpruned matrix only doubles compression. Returns (additions, ratio).
+pub fn lcc_only_reference(w1: &crate::tensor::Matrix, cfg: &MlpPipelineConfig) -> (usize, f64) {
+    let fmt = FixedPointFormat::default_weights();
+    let baseline = matrix_csd_adders(w1, fmt);
+    let d: LccDecomposition = crate::lcc::decompose(w1, &lcc_config(cfg));
+    let adds = d.additions();
+    (adds, baseline as f64 / adds.max(1) as f64)
+}
+
+/// Deterministic fake trained weights for unit tests (no PJRT needed).
+pub fn synthetic_reg_weights(seed: u64, active: usize) -> crate::tensor::Matrix {
+    use crate::tensor::Matrix;
+    let mut rng = Rng::new(seed);
+    let mut w = Matrix::zeros(300, 784);
+    // `active` surviving columns arranged in correlated groups of ~4
+    let group = 4.max(active / 12);
+    let mut col = 7usize;
+    let mut placed = 0;
+    while placed < active {
+        let base = rng.normal_vec(300, 0.4);
+        for _ in 0..group.min(active - placed) {
+            for r in 0..300 {
+                *w.at_mut(r, col) = base[r] + 0.01 * rng.normal_f32();
+            }
+            col = (col + 13) % 784;
+            placed += 1;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::compact_columns;
+
+    #[test]
+    fn artifact_labels_identity_for_pruned() {
+        let w = synthetic_reg_weights(0, 24);
+        let compact = compact_columns(&w, 1e-6);
+        let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+        let labels = artifact_labels(&clustering, &compact.kept, 784);
+        // pruned columns point at themselves
+        for j in 0..784 {
+            if !compact.kept.contains(&j) {
+                assert_eq!(labels[j], j as i32);
+            }
+        }
+        // active columns point at an active exemplar
+        for &j in &compact.kept {
+            assert!(compact.kept.contains(&(labels[j] as usize)));
+        }
+    }
+
+    #[test]
+    fn artifact_labels_members_share_exemplar() {
+        let w = synthetic_reg_weights(1, 16);
+        let compact = compact_columns(&w, 1e-6);
+        let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+        let labels = artifact_labels(&clustering, &compact.kept, 784);
+        for (cj, &oj) in compact.kept.iter().enumerate() {
+            let exemplar = clustering.exemplars[clustering.labels[cj]];
+            assert_eq!(labels[oj], compact.kept[exemplar] as i32);
+        }
+    }
+
+    #[test]
+    fn lcc_only_reference_compresses_but_less() {
+        let w = synthetic_reg_weights(2, 200);
+        // dense-ish matrix: LCC alone should compress > 1x
+        let cfg = MlpPipelineConfig::default();
+        let (_, ratio) = lcc_only_reference(&w, &cfg);
+        assert!(ratio > 1.0, "ratio {ratio}");
+    }
+}

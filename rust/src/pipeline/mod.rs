@@ -1,0 +1,14 @@
+//! Pipeline coordinator: the paper's Algorithm 1 as staged jobs —
+//! regularized training → prune/compact → cluster → sharing retrain →
+//! LCC decomposition → verification → evaluation → report.
+//!
+//! [`mlp`] reproduces the Fig. 2 experiment, [`resnet`] the Table-I
+//! experiment. Both drive training through the PJRT artifacts
+//! ([`crate::train`]) and all compression through the rust substrates;
+//! every adder count is backed by a verified adder graph.
+
+pub mod mlp;
+pub mod resnet;
+
+pub use mlp::{run_mlp_pipeline, MlpPipelineOutput, StageResult};
+pub use resnet::{run_resnet_pipeline, ResnetPipelineOutput, TableCell};

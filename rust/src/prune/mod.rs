@@ -1,0 +1,139 @@
+//! Structured pruning via group lasso (paper Sec. III-B).
+//!
+//! The training-side proximal step runs inside the AOT JAX artifact (L1
+//! Pallas kernel `prox.py`); this module is the rust-side mirror used to
+//! (a) verify artifact parity, (b) extract prune masks from trained
+//! weights and (c) physically compact matrices for LCC, which needs
+//! *dense small* matrices rather than masked big ones.
+
+use crate::tensor::Matrix;
+
+/// Block soft-thresholding on matrix rows (eq. 8) — rust reference of the
+/// Pallas kernel.
+pub fn prox_group_lasso_rows(a: &Matrix, thresh: f32) -> Matrix {
+    let mut out = a.clone();
+    for r in 0..a.rows() {
+        let norm: f32 = a.row(r).iter().map(|&v| v * v).sum::<f32>().sqrt();
+        let scale = if norm > 0.0 { (1.0 - thresh / norm).max(0.0) } else { 0.0 };
+        for v in out.row_mut(r) {
+            *v *= scale;
+        }
+    }
+    out
+}
+
+/// Columns whose l2 norm is at most `eps` are considered pruned.
+pub fn active_columns(w: &Matrix, eps: f32) -> Vec<usize> {
+    w.col_norms()
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > eps)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// 0/1 mask over columns (artifact input `colmask`).
+pub fn column_mask(w: &Matrix, eps: f32) -> Vec<f32> {
+    w.col_norms().iter().map(|&n| if n > eps { 1.0 } else { 0.0 }).collect()
+}
+
+/// Result of physically removing pruned columns.
+#[derive(Clone, Debug)]
+pub struct CompactedLayer {
+    /// dense matrix over the surviving inputs
+    pub weights: Matrix,
+    /// original column index of each surviving column
+    pub kept: Vec<usize>,
+}
+
+/// Drop pruned columns; the caller must gather the matching input
+/// features (`kept`) at inference time — free on FPGAs (wiring).
+pub fn compact_columns(w: &Matrix, eps: f32) -> CompactedLayer {
+    let kept = active_columns(w, eps);
+    CompactedLayer { weights: w.select_cols(&kept), kept }
+}
+
+/// Sparsity statistics for reporting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PruneStats {
+    pub total_columns: usize,
+    pub active_columns: usize,
+}
+
+impl PruneStats {
+    pub fn of(w: &Matrix, eps: f32) -> Self {
+        PruneStats {
+            total_columns: w.cols(),
+            active_columns: active_columns(w, eps).len(),
+        }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.active_columns as f64 / self.total_columns.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prox_matches_closed_form() {
+        // row norm 5 (3-4-0), thresh 1 => scale 0.8
+        let a = Matrix::from_rows(&[&[3.0, 4.0, 0.0], &[0.0, 0.0, 0.0]]);
+        let out = prox_group_lasso_rows(&a, 1.0);
+        assert!((out.at(0, 0) - 2.4).abs() < 1e-6);
+        assert!((out.at(0, 1) - 3.2).abs() < 1e-6);
+        assert_eq!(out.row(1), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn prox_zeroes_small_rows() {
+        let a = Matrix::from_rows(&[&[0.1, 0.1], &[5.0, 5.0]]);
+        let out = prox_group_lasso_rows(&a, 1.0);
+        assert_eq!(out.row(0), &[0.0, 0.0]);
+        assert!(out.at(1, 0) > 0.0);
+    }
+
+    #[test]
+    fn prox_zero_threshold_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        assert_eq!(prox_group_lasso_rows(&a, 0.0), a);
+    }
+
+    #[test]
+    fn compaction_keeps_only_active() {
+        let w = Matrix::from_rows(&[&[1.0, 0.0, 2.0], &[1.0, 0.0, -1.0]]);
+        let c = compact_columns(&w, 1e-6);
+        assert_eq!(c.kept, vec![0, 2]);
+        assert_eq!(c.weights, Matrix::from_rows(&[&[1.0, 2.0], &[1.0, -1.0]]));
+    }
+
+    #[test]
+    fn compacted_product_matches_masked_product() {
+        let mut rng = Rng::new(1);
+        let mut w = Matrix::randn(5, 8, 1.0, &mut rng);
+        for r in 0..5 {
+            w.row_mut(r)[2] = 0.0;
+            w.row_mut(r)[6] = 0.0;
+        }
+        let c = compact_columns(&w, 1e-9);
+        let x: Vec<f32> = rng.normal_vec(8, 1.0);
+        let x_kept: Vec<f32> = c.kept.iter().map(|&i| x[i]).collect();
+        let y_full = w.matvec(&x);
+        let y_comp = c.weights.matvec(&x_kept);
+        for (a, b) in y_full.iter().zip(&y_comp) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn stats_sparsity() {
+        let w = Matrix::from_rows(&[&[1.0, 0.0, 0.0, 2.0]]);
+        let s = PruneStats::of(&w, 1e-9);
+        assert_eq!(s.active_columns, 2);
+        assert!((s.sparsity() - 0.5).abs() < 1e-12);
+    }
+}

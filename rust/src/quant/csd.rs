@@ -1,0 +1,140 @@
+//! Canonical signed digit (CSD) recoding [Booth 1951].
+//!
+//! CSD writes an integer as sum of signed powers of two with no two
+//! adjacent nonzero digits — the minimal-weight signed-digit form. The
+//! number of additions to multiply by a constant is
+//! `(#nonzero digits) - 1`; this is the paper's baseline cost for the
+//! uncompressed matrix-vector product.
+
+use super::fixed::{quantize_value, FixedPointFormat};
+use crate::tensor::Matrix;
+
+/// One CSD digit: value contribution is `sign * 2^shift` where shift is
+/// relative to the *integer mantissa* LSB.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsdDigit {
+    pub shift: i32,
+    pub negative: bool,
+}
+
+/// Non-adjacent-form recoding of an integer mantissa. Digits are returned
+/// LSB-first. The empty vec encodes zero.
+pub fn csd_digits(mantissa: i64) -> Vec<CsdDigit> {
+    let mut n = mantissa;
+    let mut digits = Vec::new();
+    let mut shift = 0i32;
+    while n != 0 {
+        if n & 1 != 0 {
+            // z in {-1, +1}: choose so that (n - z) is divisible by 4
+            let z: i64 = 2 - (n.rem_euclid(4));
+            digits.push(CsdDigit { shift, negative: z < 0 });
+            n -= z;
+        }
+        n >>= 1;
+        shift += 1;
+    }
+    digits
+}
+
+/// Reconstruct the integer mantissa from CSD digits.
+pub fn csd_value(digits: &[CsdDigit]) -> i64 {
+    digits
+        .iter()
+        .map(|d| {
+            let v = 1i64 << d.shift;
+            if d.negative {
+                -v
+            } else {
+                v
+            }
+        })
+        .sum()
+}
+
+/// Number of nonzero CSD digits of a float under the given fixed-point
+/// format.
+pub fn csd_nonzero_digits(v: f32, fmt: FixedPointFormat) -> usize {
+    csd_digits(quantize_value(v, fmt)).len()
+}
+
+/// Additions to compute `row . x` with CSD-recoded constants:
+/// per entry `digits - 1` adds for the multiple, plus
+/// `(#nonzero entries) - 1` adds to accumulate. Equivalently
+/// `(total nonzero digits) - 1` when at least one entry is nonzero.
+pub fn row_csd_adders(row: &[f32], fmt: FixedPointFormat) -> usize {
+    let total: usize = row.iter().map(|&v| csd_nonzero_digits(v, fmt)).sum();
+    total.saturating_sub(1)
+}
+
+/// Baseline adders for the full matrix-vector product `W x` (paper
+/// Sec. IV): sum of per-row costs.
+pub fn matrix_csd_adders(w: &Matrix, fmt: FixedPointFormat) -> usize {
+    (0..w.rows()).map(|r| row_csd_adders(w.row(r), fmt)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn csd_roundtrip_small_integers() {
+        for n in -1000i64..=1000 {
+            assert_eq!(csd_value(&csd_digits(n)), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn csd_nonadjacent_property() {
+        let mut rng = Rng::new(0);
+        for _ in 0..500 {
+            let n = (rng.next_u64() % 100_000) as i64 - 50_000;
+            let digits = csd_digits(n);
+            for w in digits.windows(2) {
+                assert!(
+                    (w[1].shift - w[0].shift) >= 2,
+                    "adjacent digits in CSD of {n}: {digits:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csd_weight_not_worse_than_binary() {
+        for n in 1..4096i64 {
+            let csd = csd_digits(n).len();
+            let bin = n.count_ones() as usize;
+            assert!(csd <= bin, "n={n} csd={csd} bin={bin}");
+        }
+    }
+
+    #[test]
+    fn csd_known_examples() {
+        // 15 = 16 - 1: two digits in CSD, four in binary
+        assert_eq!(csd_digits(15).len(), 2);
+        // 0.375 * 8 = 3 = 4 - 1
+        assert_eq!(csd_digits(3).len(), 2);
+        // powers of two have a single digit
+        assert_eq!(csd_digits(64).len(), 1);
+        assert!(csd_digits(0).is_empty());
+    }
+
+    #[test]
+    fn paper_eq2_example_costs() {
+        // W = [[2, 0.375], [3.75, 1]] (paper eq. 2):
+        // 2 -> 1 digit; 0.375 -> 2 digits (2^-1 - 2^-3);
+        // 3.75 -> 2 digits (4 - 0.25); 1 -> 1 digit.
+        // Row 0: 3 digits -> 2 adds; row 1: 3 digits -> 2 adds; total 4
+        // (matches the "two additions, two subtractions" of eq. 2).
+        let fmt = FixedPointFormat::new(3, 8);
+        let w = Matrix::from_rows(&[&[2.0, 0.375], &[3.75, 1.0]]);
+        assert_eq!(matrix_csd_adders(&w, fmt), 4);
+    }
+
+    #[test]
+    fn zero_rows_cost_nothing() {
+        let fmt = FixedPointFormat::default_weights();
+        let w = Matrix::zeros(4, 4);
+        assert_eq!(matrix_csd_adders(&w, fmt), 0);
+    }
+}

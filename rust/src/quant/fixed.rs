@@ -1,0 +1,91 @@
+//! Fixed-point quantization: round-to-nearest onto a signed grid with a
+//! configurable number of fractional bits.
+
+use crate::tensor::Matrix;
+
+/// Signed fixed-point format: values are integer multiples of 2^-frac_bits
+/// with magnitude below 2^int_bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedPointFormat {
+    /// bits left of the binary point (excluding sign)
+    pub int_bits: u32,
+    /// bits right of the binary point
+    pub frac_bits: u32,
+}
+
+impl FixedPointFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        FixedPointFormat { int_bits, frac_bits }
+    }
+
+    /// The paper's 8-bit-ish default for weight matrices (range ±4).
+    pub const fn default_weights() -> Self {
+        FixedPointFormat { int_bits: 2, frac_bits: 8 }
+    }
+
+    pub fn step(&self) -> f64 {
+        (2.0f64).powi(-(self.frac_bits as i32))
+    }
+
+    pub fn max_value(&self) -> f64 {
+        (2.0f64).powi(self.int_bits as i32) - self.step()
+    }
+}
+
+/// Round `v` to the nearest representable value (saturating), returning
+/// the integer mantissa: value = mantissa * 2^-frac_bits.
+pub fn quantize_value(v: f32, fmt: FixedPointFormat) -> i64 {
+    let scale = (2.0f64).powi(fmt.frac_bits as i32);
+    let max_m = (fmt.max_value() * scale).round() as i64;
+    let m = (v as f64 * scale).round() as i64;
+    m.clamp(-max_m, max_m)
+}
+
+/// Quantize every entry; returns (mantissas, dequantized matrix).
+pub fn quantize_matrix(w: &Matrix, fmt: FixedPointFormat) -> (Vec<i64>, Matrix) {
+    let step = fmt.step() as f32;
+    let mut mantissas = Vec::with_capacity(w.rows() * w.cols());
+    let mut deq = Matrix::zeros(w.rows(), w.cols());
+    for r in 0..w.rows() {
+        for c in 0..w.cols() {
+            let m = quantize_value(w.at(r, c), fmt);
+            mantissas.push(m);
+            *deq.at_mut(r, c) = m as f32 * step;
+        }
+    }
+    (mantissas, deq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_grid_values_roundtrip() {
+        let fmt = FixedPointFormat::new(2, 3); // step 0.125
+        assert_eq!(quantize_value(0.375, fmt), 3);
+        assert_eq!(quantize_value(-1.5, fmt), -12);
+        assert_eq!(quantize_value(0.0, fmt), 0);
+    }
+
+    #[test]
+    fn saturates_at_range() {
+        let fmt = FixedPointFormat::new(1, 2); // max 2 - 0.25 = 1.75 -> m 7
+        assert_eq!(quantize_value(100.0, fmt), 7);
+        assert_eq!(quantize_value(-100.0, fmt), -7);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        let fmt = FixedPointFormat::default_weights();
+        let mut rng = Rng::new(0);
+        let w = Matrix::randn(20, 20, 0.5, &mut rng);
+        let (_, deq) = quantize_matrix(&w, fmt);
+        let half = fmt.step() as f32 / 2.0;
+        for i in 0..w.data().len() {
+            let err = (w.data()[i] - deq.data()[i]).abs();
+            assert!(err <= half + 1e-7, "err {err} > {half}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Quantization substrate: fixed-point representation and canonical
+//! signed digit (CSD) recoding.
+//!
+//! The paper's baseline cost model (Sec. IV): the uncompressed network is
+//! quantized and each weight is written in CSD form; multiplying by a
+//! weight with `d` nonzero CSD digits costs `d - 1` additions (plus
+//! bitshifts, which are free on FPGAs), and accumulating `K` partial
+//! products per output row costs another `K - 1` additions.
+
+mod csd;
+mod fixed;
+
+pub use csd::{csd_digits, csd_nonzero_digits, csd_value, matrix_csd_adders, row_csd_adders, CsdDigit};
+pub use fixed::{quantize_matrix, quantize_value, FixedPointFormat};

@@ -1,0 +1,98 @@
+//! Text tables for bench output — every paper table/figure bench renders
+//! its rows through this module so the output format is uniform and
+//! grep-able in bench_output.txt.
+
+/// Column-aligned text table.
+#[derive(Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a compression ratio like the paper's tables ("46.5").
+pub fn ratio(baseline: usize, compressed: usize) -> String {
+    if compressed == 0 {
+        return "inf".to_string();
+    }
+    format!("{:.1}", baseline as f64 / compressed as f64)
+}
+
+/// Format an accuracy like the paper's tables ("55.2 %").
+pub fn percent(frac: f64) -> String {
+    format!("{:.1} %", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["method", "ratio"]);
+        t.add_row(vec!["fs".into(), "46.5".into()]);
+        t.add_row(vec!["fp-long-name".into(), "2.0".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("fs") && r.contains("46.5"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ratio_and_percent() {
+        assert_eq!(ratio(100, 4), "25.0");
+        assert_eq!(ratio(10, 0), "inf");
+        assert_eq!(percent(0.552), "55.2 %");
+    }
+}

@@ -1,0 +1,166 @@
+//! `artifacts/manifest.tsv` parser — the contract between `aot.py` and
+//! the rust runtime. Line format:
+//!
+//! ```text
+//! artifact <name> <file>
+//! in       <arg>  <f32|i32> <d0,d1,...>
+//! out      <name> <f32|i32> <dims>
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of the input with the given argument name.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s.trim().is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| d.trim().parse::<usize>().context("dim parse"))
+        .collect()
+}
+
+/// Parse a manifest file into artifact specs.
+pub fn load_manifest(path: &Path) -> Result<Vec<ArtifactSpec>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut specs: Vec<ArtifactSpec> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        match fields.as_slice() {
+            ["artifact", name, file] => specs.push(ArtifactSpec {
+                name: name.to_string(),
+                file: file.to_string(),
+                inputs: vec![],
+                outputs: vec![],
+            }),
+            ["in", name, dt, dims] => {
+                let spec = specs
+                    .last_mut()
+                    .with_context(|| format!("line {}: in before artifact", lineno + 1))?;
+                spec.inputs.push(TensorSpec {
+                    name: name.to_string(),
+                    dtype: DType::parse(dt)?,
+                    dims: parse_dims(dims)?,
+                });
+            }
+            ["out", name, dt, dims] => {
+                let spec = specs
+                    .last_mut()
+                    .with_context(|| format!("line {}: out before artifact", lineno + 1))?;
+                spec.outputs.push(TensorSpec {
+                    name: name.to_string(),
+                    dtype: DType::parse(dt)?,
+                    dims: parse_dims(dims)?,
+                });
+            }
+            other => bail!("line {}: unrecognized row {other:?}", lineno + 1),
+        }
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "lccnn-manifest-{}-{}.tsv",
+            std::process::id(),
+            content.len()
+        ));
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn parses_artifacts() {
+        let p = write_tmp(
+            "artifact\tmlp_fwd\tmlp_fwd.hlo.txt\nin\tW1\tf32\t300,784\nin\tx\tf32\t32,784\nout\tlogits\tf32\t32,10\n",
+        );
+        let specs = load_manifest(&p).unwrap();
+        assert_eq!(specs.len(), 1);
+        let s = &specs[0];
+        assert_eq!(s.name, "mlp_fwd");
+        assert_eq!(s.inputs.len(), 2);
+        assert_eq!(s.inputs[0].dims, vec![300, 784]);
+        assert_eq!(s.inputs[0].numel(), 235_200);
+        assert_eq!(s.outputs[0].dtype, DType::F32);
+        assert_eq!(s.input_index("x"), Some(1));
+        assert_eq!(s.input_index("nope"), None);
+    }
+
+    #[test]
+    fn rejects_orphan_rows() {
+        let p = write_tmp("in\tx\tf32\t3\n");
+        assert!(load_manifest(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let p = write_tmp("artifact\ta\ta.hlo\nin\tx\tf64\t3\n");
+        assert!(load_manifest(&p).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.tsv");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let specs = load_manifest(&path).unwrap();
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        for expected in ["mlp_train_step", "mlp_eval", "mlp_fwd", "resnet_eval"] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client and
+//! executes them from the rust hot path. Python is never invoked at
+//! runtime — the manifest + HLO text files are the entire contract.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod manifest;
+mod service;
+mod tensor_bridge;
+
+pub use manifest::{load_manifest, ArtifactSpec, DType, TensorSpec};
+pub use service::PjrtService;
+pub use tensor_bridge::HostTensor;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled artifact: PJRT executable + its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest and unpacks the output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            t.validate(spec).with_context(|| {
+                format!("{}: input {}", self.spec.name, spec.name)
+            })?;
+            literals.push(t.to_literal()?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let tuple = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: empty result", self.spec.name))?
+            .to_literal_sync()?
+            .to_tuple()?;
+        if tuple.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                tuple.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(&lit, spec))
+            .collect()
+    }
+
+    /// Execute with pre-built literals, returning literals (perf path:
+    /// training state stays in literal form across steps instead of
+    /// round-tripping through host vectors — see EXPERIMENTS.md §Perf).
+    /// Only arity is validated; shape errors surface from PJRT itself.
+    pub fn run_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let tuple = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("{}: empty result", self.spec.name))?
+            .to_literal_sync()?
+            .to_tuple()?;
+        if tuple.len() != self.spec.outputs.len() {
+            bail!("{}: bad output arity {}", self.spec.name, tuple.len());
+        }
+        Ok(tuple)
+    }
+}
+
+/// Artifact registry: one PJRT client, lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain manifest.tsv).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let specs = load_manifest(&dir.join("manifest.tsv"))?
+            .into_iter()
+            .map(|s| (s.name.clone(), s))
+            .collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), specs, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact location (repo-root/artifacts), honoring
+    /// `LCCNN_ARTIFACTS`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("LCCNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Self::open(&dir)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.specs.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the named artifact.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have {:?}", self.artifact_names()))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let executable = std::sync::Arc::new(Executable { exe, spec });
+        self.compiled.lock().unwrap().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}

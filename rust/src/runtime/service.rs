@@ -1,0 +1,87 @@
+//! Thread-confined PJRT service.
+//!
+//! The `xla` crate's client/executable types are `!Send` (Rc internals),
+//! so multi-threaded users (the serving layer) talk to a dedicated
+//! runtime thread over channels. anyhow::Error is Send+Sync, so errors
+//! propagate cleanly.
+
+use super::{HostTensor, Runtime};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+enum Call {
+    Run { name: String, inputs: Vec<HostTensor>, resp: Sender<Result<Vec<HostTensor>>> },
+    Shutdown,
+}
+
+/// Send+Sync handle to a runtime living on its own thread.
+pub struct PjrtService {
+    tx: Mutex<Sender<Call>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the runtime thread on the given artifact directory. Blocks
+    /// until the runtime has opened (or failed to open).
+    pub fn start(dir: PathBuf) -> Result<Self> {
+        let (tx, rx) = channel::<Call>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("lccnn-pjrt".into())
+            .spawn(move || {
+                let rt = match Runtime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for call in rx {
+                    match call {
+                        Call::Run { name, inputs, resp } => {
+                            let result = rt.get(&name).and_then(|exe| exe.run(&inputs));
+                            let _ = resp.send(result);
+                        }
+                        Call::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt thread");
+        ready_rx.recv().map_err(|_| anyhow!("pjrt thread died during open"))??;
+        Ok(PjrtService { tx: Mutex::new(tx), handle: Some(handle) })
+    }
+
+    /// Start on the default artifact directory.
+    pub fn start_default() -> Result<Self> {
+        let dir = std::env::var("LCCNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Self::start(dir)
+    }
+
+    /// Execute an artifact by name (blocking).
+    pub fn call(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Call::Run { name: name.to_string(), inputs, resp: resp_tx })
+            .map_err(|_| anyhow!("pjrt thread gone"))?;
+        resp_rx.recv().map_err(|_| anyhow!("pjrt thread dropped response"))?
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Call::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Host tensor <-> xla::Literal bridge.
+
+use super::manifest::{DType, TensorSpec};
+use anyhow::{anyhow, bail, Result};
+
+/// A host-side tensor in the two dtypes the artifacts use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![1], vec![v])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(d, _) => d,
+            HostTensor::I32(d, _) => d,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(_, v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(_, v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// First element as f64 (loss scalars etc.).
+    pub fn first(&self) -> f64 {
+        match self {
+            HostTensor::F32(_, v) => v.first().copied().unwrap_or(0.0) as f64,
+            HostTensor::I32(_, v) => v.first().copied().unwrap_or(0) as f64,
+        }
+    }
+
+    pub fn validate(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("dtype mismatch: got {:?}, want {:?}", self.dtype(), spec.dtype);
+        }
+        if self.dims() != spec.dims.as_slice() {
+            bail!("shape mismatch: got {:?}, want {:?}", self.dims(), spec.dims);
+        }
+        Ok(())
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims_i64: Vec<i64> = self.dims().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(_, v) => xla::Literal::vec1(v),
+            HostTensor::I32(_, v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        Ok(match spec.dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))?;
+                if v.len() != spec.numel() {
+                    bail!("{}: size {} != {}", spec.name, v.len(), spec.numel());
+                }
+                HostTensor::F32(spec.dims.clone(), v)
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e:?}"))?;
+                if v.len() != spec.numel() {
+                    bail!("{}: size {} != {}", spec.name, v.len(), spec.numel());
+                }
+                HostTensor::I32(spec.dims.clone(), v)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, dtype: DType, dims: Vec<usize>) -> TensorSpec {
+        TensorSpec { name: name.into(), dtype, dims }
+    }
+
+    #[test]
+    fn validate_accepts_matching() {
+        let t = HostTensor::F32(vec![2, 3], vec![0.0; 6]);
+        assert!(t.validate(&spec("x", DType::F32, vec![2, 3])).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_mismatches() {
+        let t = HostTensor::F32(vec![2, 3], vec![0.0; 6]);
+        assert!(t.validate(&spec("x", DType::I32, vec![2, 3])).is_err());
+        assert!(t.validate(&spec("x", DType::F32, vec![3, 2])).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec("x", DType::F32, vec![2, 2])).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::I32(vec![3], vec![-1, 0, 7]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec("y", DType::I32, vec![3])).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_helper() {
+        let t = HostTensor::scalar_f32(0.5);
+        assert_eq!(t.dims(), &[1]);
+        assert_eq!(t.first(), 0.5);
+    }
+}

@@ -1,0 +1,108 @@
+//! Inference backends for the serving layer.
+
+use crate::nn::compressed::CompressedMlp;
+use crate::nn::mlp::{INPUT, OUTPUT};
+use crate::runtime::{HostTensor, PjrtService};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Evaluates one batch of flattened inputs to one output vector each.
+pub trait BatchEvaluator: Send + Sync {
+    fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+    /// Preferred batch size (the batcher aims for it; backends must
+    /// accept anything from 1 up to this).
+    fn max_batch(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// The compressed model on the shift-add VM (the "FPGA" path).
+pub struct CompressedMlpBackend {
+    pub model: Arc<CompressedMlp>,
+}
+
+impl BatchEvaluator for CompressedMlpBackend {
+    fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        Ok(xs.iter().map(|x| self.model.forward_one(x)).collect())
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+
+    fn name(&self) -> &'static str {
+        "compressed-vm"
+    }
+}
+
+/// The dense model through the PJRT `mlp_fwd` artifact, via the
+/// thread-confined [`PjrtService`] (the xla handles are !Send). Partial
+/// batches are zero-padded to the artifact's fixed batch and the padding
+/// discarded.
+pub struct PjrtMlpBackend {
+    service: Arc<PjrtService>,
+    params: Vec<HostTensor>,
+    batch: usize,
+}
+
+impl PjrtMlpBackend {
+    /// `params` = [W1, b1, W2, b2]; `batch` must match the lowered
+    /// `mlp_fwd` batch dimension (32 in the default manifest).
+    pub fn new(service: Arc<PjrtService>, params: Vec<HostTensor>, batch: usize) -> Self {
+        PjrtMlpBackend { service, params, batch }
+    }
+}
+
+impl BatchEvaluator for PjrtMlpBackend {
+    fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(self.batch) {
+            let mut flat = vec![0.0f32; self.batch * INPUT];
+            for (i, x) in chunk.iter().enumerate() {
+                flat[i * INPUT..(i + 1) * INPUT].copy_from_slice(x);
+            }
+            let mut inputs = self.params.clone();
+            inputs.push(HostTensor::F32(vec![self.batch, INPUT], flat));
+            let outs = self.service.call("mlp_fwd", inputs)?;
+            let logits = outs[0].as_f32()?;
+            for i in 0..chunk.len() {
+                out.push(logits[i * OUTPUT..(i + 1) * OUTPUT].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn name(&self) -> &'static str {
+        "dense-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::compressed::Layer1;
+    use crate::tensor::Matrix;
+
+    fn tiny_model() -> CompressedMlp {
+        CompressedMlp {
+            kept: vec![0, 1],
+            layer1: Layer1::Dense(Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]])),
+            b1: vec![0.0, 0.0],
+            w2: Matrix::from_rows(&[&[1.0, 1.0]]),
+            b2: vec![0.0],
+        }
+    }
+
+    #[test]
+    fn compressed_backend_batches() {
+        let be = CompressedMlpBackend { model: Arc::new(tiny_model()) };
+        let xs = vec![vec![1.0, 2.0], vec![3.0, -4.0]];
+        let ys = be.eval_batch(&xs).unwrap();
+        assert_eq!(ys.len(), 2);
+        assert_eq!(ys[0], vec![3.0]); // relu(1)+relu(2)
+        assert_eq!(ys[1], vec![3.0]); // relu(3)+relu(-4)=3
+    }
+}

@@ -1,0 +1,15 @@
+//! Serving layer: an in-process inference service with a dynamic batcher
+//! and a worker pool — the deployment context the paper motivates
+//! (FPGA-accelerated datacenter inference, Sec. I).
+//!
+//! Requests are queued; a batcher thread drains up to `max_batch`
+//! requests (waiting at most `batch_timeout`) and hands the batch to a
+//! [`BatchEvaluator`]. Two backends are provided: the compressed
+//! shift-add model (VM execution — what the FPGA would run) and the
+//! dense PJRT executable (the DSP baseline).
+
+mod backend;
+mod server;
+
+pub use backend::{BatchEvaluator, CompressedMlpBackend, PjrtMlpBackend};
+pub use server::{MutexEvaluator, Server, ServerStats};

@@ -1,0 +1,228 @@
+//! Dynamic-batching request server.
+
+use super::backend::BatchEvaluator;
+use crate::config::ServeConfig;
+use crate::metrics::Metrics;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Snapshot of serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+/// In-process inference server: submit() from any thread; a batcher
+/// thread groups requests (up to max_batch, waiting at most
+/// batch_timeout) and runs them on the backend.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Server {
+    pub fn start(backend: Arc<dyn BatchEvaluator>, cfg: ServeConfig) -> Self {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let m = Arc::clone(&metrics);
+        let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
+        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let worker = std::thread::Builder::new()
+            .name("lccnn-serve-batcher".into())
+            .spawn(move || batcher_loop(rx, backend, max_batch, timeout, m))
+            .expect("spawn batcher");
+        Server { tx: Some(tx), worker: Some(worker), metrics }
+    }
+
+    /// Submit one request; returns a receiver for the response.
+    pub fn submit(&self, x: Vec<f32>) -> Receiver<Result<Vec<f32>, String>> {
+        let (resp_tx, resp_rx) = channel();
+        let req = Request { x, enqueued: Instant::now(), resp: resp_tx };
+        self.tx.as_ref().expect("server alive").send(req).expect("batcher alive");
+        resp_rx
+    }
+
+    /// Blocking convenience call.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.submit(x).recv().map_err(|e| e.to_string())?
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let (n, mean, _, _) = self.metrics.summary("batch_size").unwrap_or((0, 0.0, 0.0, 0.0));
+        let (_, _, p50, p99) = self.metrics.summary("latency_us").unwrap_or((0, 0.0, 0.0, 0.0));
+        ServerStats {
+            requests: self.metrics.counter("requests"),
+            batches: n as u64,
+            mean_batch_size: mean,
+            p50_latency_us: p50,
+            p99_latency_us: p99,
+        }
+    }
+
+    /// Stop the batcher and join (drains the queue first).
+    pub fn shutdown(mut self) -> ServerStats {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    backend: Arc<dyn BatchEvaluator>,
+    max_batch: usize,
+    timeout: Duration,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + timeout;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.incr("requests", batch.len() as u64);
+        metrics.observe("batch_size", batch.len() as f64);
+        let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+        match backend.eval_batch(&xs) {
+            Ok(ys) => {
+                for (req, y) in batch.into_iter().zip(ys) {
+                    metrics.observe(
+                        "latency_us",
+                        req.enqueued.elapsed().as_secs_f64() * 1e6,
+                    );
+                    let _ = req.resp.send(Ok(y));
+                }
+            }
+            Err(e) => {
+                let msg = format!("backend error: {e:#}");
+                metrics.incr("errors", 1);
+                for req in batch {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// A Mutex-wrapped evaluator adapter for backends that need &mut access.
+pub struct MutexEvaluator<F> {
+    inner: Mutex<F>,
+    max_batch: usize,
+    name: &'static str,
+}
+
+impl<F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>> + Send> MutexEvaluator<F> {
+    pub fn new(f: F, max_batch: usize, name: &'static str) -> Self {
+        MutexEvaluator { inner: Mutex::new(f), max_batch, name }
+    }
+}
+
+impl<F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>> + Send> BatchEvaluator for MutexEvaluator<F> {
+    fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        (self.inner.lock().unwrap())(xs)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+
+    fn echo_backend() -> Arc<dyn BatchEvaluator> {
+        Arc::new(MutexEvaluator::new(
+            |xs: &[Vec<f32>]| Ok(xs.iter().map(|x| vec![x.iter().sum()]).collect()),
+            8,
+            "echo",
+        ))
+    }
+
+    #[test]
+    fn serves_requests() {
+        let server = Server::start(echo_backend(), ServeConfig::default());
+        let y = server.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(y, vec![6.0]);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let cfg = ServeConfig { max_batch: 16, batch_timeout_us: 20_000, ..Default::default() };
+        let server = Arc::new(Server::start(echo_backend(), cfg));
+        let receivers: Vec<_> = (0..12)
+            .map(|i| server.submit(vec![i as f32]))
+            .collect();
+        for (i, rx) in receivers.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 12);
+        assert!(stats.mean_batch_size > 1.0, "no batching happened: {stats:?}");
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let failing: Arc<dyn BatchEvaluator> = Arc::new(MutexEvaluator::new(
+            |_: &[Vec<f32>]| anyhow::bail!("boom"),
+            4,
+            "fail",
+        ));
+        let server = Server::start(failing, ServeConfig::default());
+        let err = server.infer(vec![1.0]).unwrap_err();
+        assert!(err.contains("boom"));
+    }
+
+    #[test]
+    fn shutdown_joins() {
+        let server = Server::start(echo_backend(), ServeConfig::default());
+        let _ = server.infer(vec![1.0]);
+        let stats = server.shutdown(); // must not hang
+        assert!(stats.requests >= 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Weight sharing (paper Sec. III-C, eq. 10).
+//!
+//! After clustering ties similar columns to shared centroids,
+//! `W x = Σ_i g_i Σ_{j∈I_i} x_j`: first sum the inputs of every cluster
+//! (scalar additions), then multiply the small centroid matrix `G`
+//! (N × C, C ≪ K) — which is what LCC then decomposes. This module holds
+//! the shared representation, its exact addition accounting and its
+//! composition with an LCC graph.
+
+use crate::cluster::Clustering;
+use crate::graph::{AdderGraph, CompiledGraph};
+use crate::lcc::{decompose, LccConfig, LccDecomposition};
+use crate::quant::{matrix_csd_adders, FixedPointFormat};
+use crate::tensor::Matrix;
+
+/// A dense layer after weight sharing: y = G * segsum(x).
+#[derive(Clone, Debug)]
+pub struct SharedLayer {
+    /// centroid matrix G (N x C)
+    pub centroids: Matrix,
+    /// cluster id per input column (length K)
+    pub labels: Vec<usize>,
+}
+
+impl SharedLayer {
+    pub fn from_clustering(w: &Matrix, c: &Clustering) -> Self {
+        SharedLayer { centroids: c.centroids(w), labels: c.labels.clone() }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    /// Segment sums: s_i = Σ_{j ∈ I_i} x_j.
+    pub fn segment_sums(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.labels.len(), "input dim mismatch");
+        let mut s = vec![0.0f32; self.num_clusters()];
+        for (&l, &xv) in self.labels.iter().zip(x) {
+            s[l] += xv;
+        }
+        s
+    }
+
+    /// Exact additions for the segment-sum stage: one add per input beyond
+    /// the first in each cluster, i.e. K_active - C.
+    pub fn segment_additions(&self) -> usize {
+        self.num_inputs() - self.num_clusters()
+    }
+
+    /// y = G segsum(x) — the eq. (10) evaluation.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.centroids.matvec(&self.segment_sums(x))
+    }
+
+    /// Equivalent expanded dense matrix (centroid per column).
+    pub fn expand(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.centroids.rows(), self.labels.len());
+        for (col, &l) in self.labels.iter().enumerate() {
+            for r in 0..self.centroids.rows() {
+                *out.at_mut(r, col) = self.centroids.at(r, l);
+            }
+        }
+        out
+    }
+
+    /// Total additions when the centroid product uses CSD (no LCC).
+    pub fn additions_with_csd(&self, fmt: FixedPointFormat) -> usize {
+        self.segment_additions() + matrix_csd_adders(&self.centroids, fmt)
+    }
+
+    /// Decompose the centroid matrix with LCC; returns the combined
+    /// shared+LCC representation.
+    pub fn with_lcc(&self, cfg: &LccConfig) -> SharedLcc {
+        let decomposition = decompose(&self.centroids, cfg);
+        let compiled = CompiledGraph::new(decomposition.graph());
+        SharedLcc { layer: self.clone(), decomposition, compiled }
+    }
+}
+
+/// Weight sharing composed with an LCC decomposition of the centroid
+/// matrix — the paper's full compression stack for one layer.
+#[derive(Clone, Debug)]
+pub struct SharedLcc {
+    pub layer: SharedLayer,
+    pub decomposition: LccDecomposition,
+    /// flattened VM form of the LCC graph (perf: the serving/accuracy
+    /// hot path executes this per example — see EXPERIMENTS.md §Perf)
+    compiled: CompiledGraph,
+}
+
+impl SharedLcc {
+    /// Total additions: segment sums + LCC program.
+    pub fn additions(&self) -> usize {
+        self.layer.segment_additions() + self.decomposition.additions()
+    }
+
+    /// Evaluate y = LCC(G) segsum(x) through the compiled shift-add VM.
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        self.compiled.execute(&self.layer.segment_sums(x))
+    }
+
+    /// The LCC program over the centroid inputs.
+    pub fn graph(&self) -> &AdderGraph {
+        self.decomposition.graph()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::affinity::{cluster_columns, AffinityParams};
+    use crate::util::Rng;
+
+    /// Matrix with duplicated column groups (ideal sharing conditions).
+    fn grouped_matrix(rows: usize, groups: usize, per: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut w = Matrix::zeros(rows, groups * per);
+        for g in 0..groups {
+            let base = rng.normal_vec(rows, 1.0);
+            for j in 0..per {
+                for r in 0..rows {
+                    *w.at_mut(r, g * per + j) = base[r] + 0.01 * rng.normal_f32();
+                }
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn apply_matches_expanded_dense() {
+        let w = grouped_matrix(8, 3, 4, 0);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        let sl = SharedLayer::from_clustering(&w, &c);
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = rng.normal_vec(12, 1.0);
+        let y_shared = sl.apply(&x);
+        let y_dense = sl.expand().matvec(&x);
+        for (a, b) in y_shared.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sharing_reduces_additions() {
+        let w = grouped_matrix(16, 4, 8, 2);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        let sl = SharedLayer::from_clustering(&w, &c);
+        assert!(sl.num_clusters() < w.cols(), "no sharing found");
+        let fmt = FixedPointFormat::default_weights();
+        let baseline = matrix_csd_adders(&w, fmt);
+        assert!(sl.additions_with_csd(fmt) < baseline,
+                "{} !< {}", sl.additions_with_csd(fmt), baseline);
+    }
+
+    #[test]
+    fn segment_additions_formula() {
+        let sl = SharedLayer {
+            centroids: Matrix::zeros(4, 3),
+            labels: vec![0, 1, 2, 0, 1, 0],
+        };
+        assert_eq!(sl.segment_additions(), 3);
+    }
+
+    #[test]
+    fn segment_sums_known() {
+        let sl = SharedLayer {
+            centroids: Matrix::zeros(1, 2),
+            labels: vec![0, 1, 0],
+        };
+        assert_eq!(sl.segment_sums(&[1.0, 10.0, 2.0]), vec![3.0, 10.0]);
+    }
+
+    #[test]
+    fn shared_lcc_apply_close_to_dense() {
+        let w = grouped_matrix(32, 4, 6, 3);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        let sl = SharedLayer::from_clustering(&w, &c);
+        let slcc = sl.with_lcc(&LccConfig::fs());
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = rng.normal_vec(w.cols(), 1.0);
+        let y_ref = sl.apply(&x);
+        let y_lcc = slcc.apply(&x);
+        let num: f64 = y_ref.iter().zip(&y_lcc).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = y_ref.iter().map(|&a| (a as f64).powi(2)).sum();
+        assert!(num / den.max(1e-12) < 1e-2, "rel err {}", num / den);
+    }
+
+    #[test]
+    fn shared_lcc_cheaper_than_shared_csd() {
+        let w = grouped_matrix(64, 5, 6, 5);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        let sl = SharedLayer::from_clustering(&w, &c);
+        let fmt = FixedPointFormat::default_weights();
+        let slcc = sl.with_lcc(&LccConfig::fs());
+        assert!(slcc.additions() < sl.additions_with_csd(fmt),
+                "{} !< {}", slcc.additions(), sl.additions_with_csd(fmt));
+    }
+}

@@ -1,0 +1,122 @@
+//! Direct 2-d convolution (NHWC activations, HWIO kernels).
+//!
+//! This is the reference semantics that the FK/PK matrix reformulations in
+//! [`crate::convert`] must reproduce exactly, and the fallback used by the
+//! compressed-model evaluator for unreformulated layers.
+
+use super::Tensor4;
+
+/// SAME (zero) padding or VALID.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dParams {
+    pub stride: usize,
+    pub padding: Padding,
+}
+
+impl Default for Conv2dParams {
+    fn default() -> Self {
+        Conv2dParams { stride: 1, padding: Padding::Same }
+    }
+}
+
+/// out[n, y, x, co] = sum_{ky,kx,ci} in[n, y*s - ph + ky, x*s - pw + kx, ci]
+///                    * k[ky, kx, ci, co]
+///
+/// SAME uses the TF/JAX convention: pad_total = (k - 1) for stride 1,
+/// generally `max((out-1)*s + k - in, 0)` split low/high (low = total/2).
+pub fn conv2d(input: &Tensor4, kernel: &Tensor4, params: Conv2dParams) -> Tensor4 {
+    let (n, h, w, ci) = input.shape();
+    let (kh, kw, kci, co) = kernel.shape();
+    assert_eq!(ci, kci, "channel mismatch");
+    let s = params.stride;
+    let (oh, ow, ph, pw) = match params.padding {
+        Padding::Same => {
+            let oh = h.div_ceil(s);
+            let ow = w.div_ceil(s);
+            let pad_h = ((oh - 1) * s + kh).saturating_sub(h);
+            let pad_w = ((ow - 1) * s + kw).saturating_sub(w);
+            (oh, ow, pad_h / 2, pad_w / 2)
+        }
+        Padding::Valid => ((h - kh) / s + 1, (w - kw) / s + 1, 0, 0),
+    };
+    let mut out = Tensor4::zeros(n, oh, ow, co);
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kh {
+                    let iy = (oy * s + ky) as isize - ph as isize;
+                    for kx in 0..kw {
+                        let ix = (ox * s + kx) as isize - pw as isize;
+                        for c_in in 0..ci {
+                            let v = input.at_padded(b, iy, ix, c_in);
+                            if v == 0.0 {
+                                continue;
+                            }
+                            for c_out in 0..co {
+                                *out.at_mut(b, oy, ox, c_out) +=
+                                    v * kernel.at(ky, kx, c_in, c_out);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 kernel = identity over channels
+        let mut input = Tensor4::zeros(1, 3, 3, 2);
+        for i in 0..18 {
+            input.data_mut()[i] = i as f32;
+        }
+        let mut k = Tensor4::zeros(1, 1, 2, 2);
+        *k.at_mut(0, 0, 0, 0) = 1.0;
+        *k.at_mut(0, 0, 1, 1) = 1.0;
+        let out = conv2d(&input, &k, Conv2dParams::default());
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn known_3x3_valid() {
+        // single channel, all-ones 3x3 kernel over a 3x3 image = sum
+        let input = Tensor4::from_vec(1, 3, 3, 1, (1..=9).map(|v| v as f32).collect());
+        let k = Tensor4::from_vec(3, 3, 1, 1, vec![1.0; 9]);
+        let out = conv2d(&input, &k, Conv2dParams { stride: 1, padding: Padding::Valid });
+        assert_eq!(out.shape(), (1, 1, 1, 1));
+        assert_eq!(out.at(0, 0, 0, 0), 45.0);
+    }
+
+    #[test]
+    fn same_padding_shape_stride2() {
+        let input = Tensor4::zeros(2, 8, 8, 3);
+        let k = Tensor4::zeros(3, 3, 3, 16);
+        let out = conv2d(&input, &k, Conv2dParams { stride: 2, padding: Padding::Same });
+        assert_eq!(out.shape(), (2, 4, 4, 16));
+    }
+
+    #[test]
+    fn same_padding_centers_kernel() {
+        // delta image, 3x3 averaging kernel: center output sees the delta
+        let mut input = Tensor4::zeros(1, 5, 5, 1);
+        *input.at_mut(0, 2, 2, 0) = 1.0;
+        let k = Tensor4::from_vec(3, 3, 1, 1, vec![1.0; 9]);
+        let out = conv2d(&input, &k, Conv2dParams::default());
+        assert_eq!(out.shape(), (1, 5, 5, 1));
+        assert_eq!(out.at(0, 2, 2, 0), 1.0);
+        assert_eq!(out.at(0, 1, 2, 0), 1.0);
+        assert_eq!(out.at(0, 0, 2, 0), 0.0);
+    }
+}

@@ -1,0 +1,297 @@
+//! Row-major dense f32 matrix with the operations the compression
+//! pipeline needs: products, slicing, column norms/selection, transposes.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a row-of-rows literal (tests, examples).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// Gaussian random matrix (for LCC ablations and init).
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, scale) }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// y = self * x  (x.len() == cols).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (w, xv) in row.iter().zip(x) {
+                acc += w * xv;
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// C = self * other.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let crow = out.row_mut(i);
+                for (cv, &ov) in crow.iter_mut().zip(orow) {
+                    *cv += a * ov;
+                }
+            }
+        }
+        out
+    }
+
+    /// Vertical slice: columns [start, start+width).
+    pub fn slice_cols(&self, start: usize, width: usize) -> Matrix {
+        assert!(start + width <= self.cols, "slice out of range");
+        let mut out = Matrix::zeros(self.rows, width);
+        for r in 0..self.rows {
+            out.row_mut(r)
+                .copy_from_slice(&self.row(r)[start..start + width]);
+        }
+        out
+    }
+
+    /// New matrix keeping only the given columns (in the given order).
+    pub fn select_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            for (j, &c) in idx.iter().enumerate() {
+                *out.at_mut(r, j) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// New matrix keeping only the given rows.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Horizontal concatenation [self | other].
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// L2 norm of every column.
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut sq = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                sq[c] += v * v;
+            }
+        }
+        sq.into_iter().map(|s| s.sqrt()).collect()
+    }
+
+    /// L2 norm of every row.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .collect()
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Number of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// self -= other
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_known() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(5, 7, 1.0, &mut rng);
+        let i = Matrix::identity(7);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_matches_matvec() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(4, 6, 1.0, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(6, 1.0);
+        let xm = Matrix::from_vec(6, 1, x.clone());
+        let y1 = a.matvec(&x);
+        let y2 = a.matmul(&xm);
+        for r in 0..4 {
+            assert!((y1[r] - y2.at(r, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(3, 8, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn slice_and_hcat_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(4, 10, 1.0, &mut rng);
+        let left = a.slice_cols(0, 4);
+        let right = a.slice_cols(4, 6);
+        assert_eq!(left.hcat(&right), a);
+    }
+
+    #[test]
+    fn select_cols_reorders() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let s = a.select_cols(&[2, 0]);
+        assert_eq!(s, Matrix::from_rows(&[&[3.0, 1.0], &[6.0, 4.0]]));
+    }
+
+    #[test]
+    fn col_norms_known() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[4.0, 2.0]]);
+        let n = a.col_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_norms_known() {
+        let a = Matrix::from_rows(&[&[3.0, 4.0], &[0.0, 0.0]]);
+        let n = a.row_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert_eq!(n[1], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "matvec dim mismatch")]
+    fn matvec_checks_dims() {
+        Matrix::zeros(2, 3).matvec(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense tensor substrate: row-major f32 matrices and NHWC image tensors.
+//!
+//! This is the numeric foundation every other module builds on: the LCC
+//! decomposer consumes [`Matrix`] weights, the adder-graph verifier
+//! compares against [`Matrix::matvec`], the conv reformulations
+//! ([`crate::convert`]) turn [`Tensor4`] kernels into matrices.
+
+mod conv;
+mod matrix;
+mod tensor4;
+
+pub use conv::{conv2d, Conv2dParams, Padding};
+pub use matrix::Matrix;
+pub use tensor4::Tensor4;

@@ -1,0 +1,83 @@
+//! NHWC 4-d tensor for images and HWIO conv kernels.
+
+/// Dense f32 tensor with shape (n, h, w, c), row-major in that order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor4 {
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Tensor4 { n, h, w, c, data: vec![0.0; n * h * w * c] }
+    }
+
+    pub fn from_vec(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * h * w * c, "shape/data mismatch");
+        Tensor4 { n, h, w, c, data }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize, usize) {
+        (self.n, self.h, self.w, self.c)
+    }
+
+    #[inline]
+    fn idx(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert!(n < self.n && h < self.h && w < self.w && c < self.c);
+        ((n * self.h + h) * self.w + w) * self.c + c
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.idx(n, h, w, c)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        let i = self.idx(n, h, w, c);
+        &mut self.data[i]
+    }
+
+    /// Value with zero padding outside the spatial extent.
+    #[inline]
+    pub fn at_padded(&self, n: usize, h: isize, w: isize, c: usize) -> f32 {
+        if h < 0 || w < 0 || h as usize >= self.h || w as usize >= self.w {
+            0.0
+        } else {
+            self.at(n, h as usize, w as usize, c)
+        }
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut t = Tensor4::zeros(2, 3, 4, 5);
+        *t.at_mut(1, 2, 3, 4) = 7.0;
+        assert_eq!(t.at(1, 2, 3, 4), 7.0);
+        assert_eq!(t.data().iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn padded_reads_zero_outside() {
+        let t = Tensor4::from_vec(1, 1, 1, 1, vec![3.0]);
+        assert_eq!(t.at_padded(0, -1, 0, 0), 0.0);
+        assert_eq!(t.at_padded(0, 0, 1, 0), 0.0);
+        assert_eq!(t.at_padded(0, 0, 0, 0), 3.0);
+    }
+}

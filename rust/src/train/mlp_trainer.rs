@@ -1,0 +1,195 @@
+//! MLP training through the `mlp_train_step` / `mlp_eval` artifacts.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the 8 state tensors (params +
+//! momenta, ~1.9 MB) stay in `xla::Literal` form between steps — only
+//! the batch, the scalars, and the rarely-changing mask/label tensors
+//! are converted per step.
+
+use super::{LossCurve, LrSchedule};
+use crate::data::{BatchIter, Dataset};
+use crate::nn::mlp::{MlpParams, HIDDEN, INPUT, OUTPUT};
+use crate::runtime::{Executable, HostTensor, Runtime};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+pub struct MlpTrainer {
+    step_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    /// W1, b1, W2, b2, mW1, mb1, mW2, mb2 — artifact state order, kept
+    /// as literals across steps
+    state: Vec<xla::Literal>,
+    /// group-lasso weight for layer 1 (0 disables)
+    pub lambda: f32,
+    colmask: Vec<f32>,
+    cluster_labels: Vec<i32>,
+    share_flag: f32,
+    /// cached literals for the rarely-changing inputs
+    colmask_lit: xla::Literal,
+    labels_lit: xla::Literal,
+    pub steps_taken: usize,
+}
+
+fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    HostTensor::F32(dims.to_vec(), data.to_vec()).to_literal()
+}
+
+fn lit_i32(dims: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    HostTensor::I32(dims.to_vec(), data.to_vec()).to_literal()
+}
+
+fn lit_to_vec_f32(lit: &xla::Literal) -> Vec<f32> {
+    lit.to_vec::<f32>().expect("state literal is f32")
+}
+
+impl MlpTrainer {
+    pub fn new(rt: &Runtime, params: &MlpParams) -> Result<Self> {
+        let step_exe = rt.get("mlp_train_step")?;
+        let eval_exe = rt.get("mlp_eval")?;
+        let zeros = |d: &[usize]| -> Result<xla::Literal> {
+            let n: usize = d.iter().product();
+            lit_f32(d, &vec![0.0; n])
+        };
+        let state = vec![
+            lit_f32(&[HIDDEN, INPUT], params.w1.data())?,
+            lit_f32(&[HIDDEN], &params.b1)?,
+            lit_f32(&[OUTPUT, HIDDEN], params.w2.data())?,
+            lit_f32(&[OUTPUT], &params.b2)?,
+            zeros(&[HIDDEN, INPUT])?,
+            zeros(&[HIDDEN])?,
+            zeros(&[OUTPUT, HIDDEN])?,
+            zeros(&[OUTPUT])?,
+        ];
+        let colmask = vec![1.0; INPUT];
+        let cluster_labels: Vec<i32> = (0..INPUT as i32).collect();
+        Ok(MlpTrainer {
+            step_exe,
+            eval_exe,
+            state,
+            lambda: 0.0,
+            colmask_lit: lit_f32(&[INPUT], &colmask)?,
+            labels_lit: lit_i32(&[INPUT], &cluster_labels)?,
+            colmask,
+            cluster_labels,
+            share_flag: 0.0,
+            steps_taken: 0,
+        })
+    }
+
+    /// Batch size the artifact was lowered with.
+    pub fn batch_size(&self) -> usize {
+        self.step_exe.spec.inputs[8].dims[0]
+    }
+
+    pub fn colmask(&self) -> &[f32] {
+        &self.colmask
+    }
+
+    pub fn set_colmask(&mut self, mask: Vec<f32>) {
+        assert_eq!(mask.len(), INPUT);
+        self.colmask_lit = lit_f32(&[INPUT], &mask).expect("colmask literal");
+        self.colmask = mask;
+    }
+
+    pub fn set_cluster_labels(&mut self, labels: Vec<i32>) {
+        assert_eq!(labels.len(), INPUT);
+        self.labels_lit = lit_i32(&[INPUT], &labels).expect("labels literal");
+        self.cluster_labels = labels;
+    }
+
+    pub fn set_share_flag(&mut self, on: bool) {
+        self.share_flag = if on { 1.0 } else { 0.0 };
+    }
+
+    /// One SGD-momentum + prox step; returns the batch loss.
+    pub fn step(&mut self, x: &[f32], y: &[i32], lr: f32) -> Result<f64> {
+        let b = self.batch_size();
+        if x.len() != b * INPUT || y.len() != b {
+            bail!("bad batch: x {} y {}", x.len(), y.len());
+        }
+        let x_lit = lit_f32(&[b, INPUT], x)?;
+        let y_lit = lit_i32(&[b], y)?;
+        let lr_lit = lit_f32(&[1], &[lr])?;
+        let lam_lit = lit_f32(&[1], &[self.lambda])?;
+        let share_lit = lit_f32(&[1], &[self.share_flag])?;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.extend([
+            &x_lit, &y_lit, &lr_lit, &lam_lit, &self.colmask_lit, &self.labels_lit, &share_lit,
+        ]);
+        let mut outs = self.step_exe.run_literals(&inputs)?;
+        let loss_lit = outs.pop().expect("loss output");
+        let loss = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss literal: {e:?}"))?[0] as f64;
+        self.state = outs;
+        self.steps_taken += 1;
+        Ok(loss)
+    }
+
+    /// Run `steps` batches with the given schedule; records the loss
+    /// every `log_every` steps.
+    pub fn train(
+        &mut self,
+        data: &Dataset,
+        steps: usize,
+        sched: LrSchedule,
+        log_every: usize,
+        seed: u64,
+    ) -> Result<LossCurve> {
+        let mut iter = BatchIter::new(data, self.batch_size(), seed);
+        let mut curve = Vec::new();
+        for s in 0..steps {
+            let (x, y, _) = iter.next_batch();
+            let loss = self.step(&x, &y, sched.at(s))?;
+            if s % log_every.max(1) == 0 || s + 1 == steps {
+                curve.push((s, loss));
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Current parameters (copied out of the training state).
+    pub fn params(&self) -> MlpParams {
+        MlpParams {
+            w1: Matrix::from_vec(HIDDEN, INPUT, lit_to_vec_f32(&self.state[0])),
+            b1: lit_to_vec_f32(&self.state[1]),
+            w2: Matrix::from_vec(OUTPUT, HIDDEN, lit_to_vec_f32(&self.state[2])),
+            b2: lit_to_vec_f32(&self.state[3]),
+        }
+    }
+
+    /// Overwrite W1 in the training state (e.g. after centroid
+    /// projection) and reset its momentum.
+    pub fn set_w1(&mut self, w1: &Matrix) {
+        assert_eq!((w1.rows(), w1.cols()), (HIDDEN, INPUT));
+        self.state[0] = lit_f32(&[HIDDEN, INPUT], w1.data()).expect("w1 literal");
+        self.state[4] =
+            lit_f32(&[HIDDEN, INPUT], &vec![0.0; HIDDEN * INPUT]).expect("m1 literal");
+    }
+
+    /// (mean loss, accuracy) over the largest multiple of the eval batch.
+    pub fn evaluate(&self, data: &Dataset) -> Result<(f64, f64)> {
+        let b = self.eval_exe.spec.inputs[4].dims[0];
+        let batches = data.len() / b;
+        if batches == 0 {
+            bail!("eval set smaller than eval batch {b}");
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for i in 0..batches {
+            let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+            let (x, y) = data.gather(&idx);
+            let x_lit = lit_f32(&[b, INPUT], &x)?;
+            let y_lit = lit_i32(&[b], &y)?;
+            let inputs: Vec<&xla::Literal> = self.state[..4]
+                .iter()
+                .chain([&x_lit, &y_lit])
+                .collect();
+            let outs = self.eval_exe.run_literals(&inputs)?;
+            loss_sum += outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+            correct += outs[1].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+        }
+        let n = (batches * b) as f64;
+        Ok((loss_sum / n, correct / n))
+    }
+}

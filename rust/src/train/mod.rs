@@ -1,0 +1,55 @@
+//! Training orchestrator: drives the AOT train-step artifacts from rust.
+//!
+//! The rust side owns all state (parameters, momenta, masks, cluster
+//! labels); each step sends the state + a batch through the PJRT
+//! executable and receives the updated state + loss. The group-lasso
+//! proximal step and the weight-sharing gradient averaging (paper eq.
+//! 7-9) happen *inside* the artifact — rust only flips `lam`,
+//! `colmask`, `cluster_labels` and `share_flag` between pipeline stages.
+
+mod mlp_trainer;
+mod resnet_trainer;
+
+pub use mlp_trainer::MlpTrainer;
+pub use resnet_trainer::{ConvGrouping, ResnetTrainer};
+
+/// (step, loss) samples recorded during training.
+pub type LossCurve = Vec<(usize, f64)>;
+
+/// Exponential step-decay schedule (paper Sec. IV-A: decay every
+/// `every` steps by `factor`).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub every: usize,
+    pub factor: f32,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        if self.every == 0 {
+            return self.base;
+        }
+        self.base * self.factor.powi((step / self.every) as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_decays() {
+        let s = LrSchedule { base: 1.0, every: 10, factor: 0.5 };
+        assert_eq!(s.at(0), 1.0);
+        assert_eq!(s.at(9), 1.0);
+        assert_eq!(s.at(10), 0.5);
+        assert_eq!(s.at(25), 0.25);
+    }
+
+    #[test]
+    fn schedule_zero_every_is_constant() {
+        let s = LrSchedule { base: 0.1, every: 0, factor: 0.5 };
+        assert_eq!(s.at(1000), 0.1);
+    }
+}

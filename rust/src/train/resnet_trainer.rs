@@ -1,0 +1,143 @@
+//! Residual-CNN training through the `resnet_train_step_{fk,pk}` /
+//! `resnet_eval` artifacts. Parameter order follows
+//! [`crate::nn::resnet::param_specs`] (the artifact calling convention),
+//! *not* alphabetical checkpoint order.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): all ~50 state tensors stay in
+//! `xla::Literal` form between steps; only the image batch and the two
+//! scalars are built per step.
+
+use super::{LossCurve, LrSchedule};
+use crate::data::{BatchIter, Dataset};
+use crate::nn::checkpoint::ParamStore;
+use crate::nn::npy::NpyArray;
+use crate::nn::resnet::{param_specs, CHANNELS, IMG};
+use crate::runtime::{Executable, HostTensor, Runtime};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Conv prox grouping (paper Sec. III-D): full-kernel or partial-kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvGrouping {
+    Fk,
+    Pk,
+}
+
+pub struct ResnetTrainer {
+    step_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    /// params then momenta, in param_specs order (literals)
+    state: Vec<xla::Literal>,
+    specs: Vec<(String, Vec<usize>)>,
+    pub lambda: f32,
+    pub steps_taken: usize,
+}
+
+fn lit_f32(dims: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    HostTensor::F32(dims.to_vec(), data.to_vec()).to_literal()
+}
+
+impl ResnetTrainer {
+    pub fn new(rt: &Runtime, init: &ParamStore, grouping: ConvGrouping) -> Result<Self> {
+        let name = match grouping {
+            ConvGrouping::Fk => "resnet_train_step_fk",
+            ConvGrouping::Pk => "resnet_train_step_pk",
+        };
+        let step_exe = rt.get(name)?;
+        let eval_exe = rt.get("resnet_eval")?;
+        let specs = param_specs();
+        let mut state = Vec::with_capacity(specs.len() * 2);
+        for (pname, shape) in &specs {
+            let arr = init
+                .get(pname)
+                .unwrap_or_else(|| panic!("init missing param {pname}"));
+            assert_eq!(&arr.shape, shape, "shape mismatch for {pname}");
+            state.push(lit_f32(shape, &arr.data)?);
+        }
+        for (_, shape) in &specs {
+            let n: usize = shape.iter().product();
+            state.push(lit_f32(shape, &vec![0.0; n])?);
+        }
+        Ok(ResnetTrainer { step_exe, eval_exe, state, specs, lambda: 0.0, steps_taken: 0 })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        let np = self.specs.len();
+        self.step_exe.spec.inputs[2 * np].dims[0]
+    }
+
+    pub fn step(&mut self, x: &[f32], y: &[i32], lr: f32) -> Result<f64> {
+        let b = self.batch_size();
+        let img_elems = IMG * IMG * CHANNELS;
+        if x.len() != b * img_elems || y.len() != b {
+            bail!("bad resnet batch: x {} y {}", x.len(), y.len());
+        }
+        let x_lit = lit_f32(&[b, IMG, IMG, CHANNELS], x)?;
+        let y_lit = HostTensor::I32(vec![b], y.to_vec()).to_literal()?;
+        let lr_lit = lit_f32(&[1], &[lr])?;
+        let lam_lit = lit_f32(&[1], &[self.lambda])?;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.extend([&x_lit, &y_lit, &lr_lit, &lam_lit]);
+        let mut outs = self.step_exe.run_literals(&inputs)?;
+        let loss_lit = outs.pop().expect("loss");
+        let loss = loss_lit.to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0] as f64;
+        self.state = outs;
+        self.steps_taken += 1;
+        Ok(loss)
+    }
+
+    pub fn train(
+        &mut self,
+        data: &Dataset,
+        steps: usize,
+        sched: LrSchedule,
+        log_every: usize,
+        seed: u64,
+    ) -> Result<LossCurve> {
+        let mut iter = BatchIter::new(data, self.batch_size(), seed);
+        let mut curve = Vec::new();
+        for s in 0..steps {
+            let (x, y, _) = iter.next_batch();
+            let loss = self.step(&x, &y, sched.at(s))?;
+            if s % log_every.max(1) == 0 || s + 1 == steps {
+                curve.push((s, loss));
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Snapshot the parameters as a named store.
+    pub fn params_store(&self) -> ParamStore {
+        let mut store = ParamStore::new();
+        for (i, (name, shape)) in self.specs.iter().enumerate() {
+            let data = self.state[i].to_vec::<f32>().expect("param literal");
+            store.insert(name, NpyArray::f32(shape.clone(), data));
+        }
+        store
+    }
+
+    /// (mean loss, accuracy) over the largest multiple of the eval batch.
+    pub fn evaluate(&self, data: &Dataset) -> Result<(f64, f64)> {
+        let np = self.specs.len();
+        let b = self.eval_exe.spec.inputs[np].dims[0];
+        let batches = data.len() / b;
+        if batches == 0 {
+            bail!("eval set smaller than eval batch {b}");
+        }
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        for i in 0..batches {
+            let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+            let (x, y) = data.gather(&idx);
+            let x_lit = lit_f32(&[b, IMG, IMG, CHANNELS], &x)?;
+            let y_lit = HostTensor::I32(vec![b], y).to_literal()?;
+            let inputs: Vec<&xla::Literal> =
+                self.state[..np].iter().chain([&x_lit, &y_lit]).collect();
+            let outs = self.eval_exe.run_literals(&inputs)?;
+            loss_sum += outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+            correct += outs[1].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?[0] as f64;
+        }
+        let n = (batches * b) as f64;
+        Ok((loss_sum / n, correct / n))
+    }
+}

@@ -1,0 +1,59 @@
+//! Tiny `log`-facade backend: level from `LCCNN_LOG` (error..trace),
+//! timestamps relative to process start.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+static START: OnceLock<Instant> = OnceLock::new();
+static LOGGER: Logger = Logger;
+
+struct Logger;
+
+impl Log for Logger {
+    fn enabled(&self, _meta: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Level from `LCCNN_LOG`, default info.
+pub fn init() {
+    let level = match std::env::var("LCCNN_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

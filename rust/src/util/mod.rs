@@ -1,0 +1,14 @@
+//! First-party utilities: PRNG, thread pool, logger, statistics, timers.
+//!
+//! The offline vendor tree only carries the `xla` crate's dependency
+//! closure, so randomness, parallelism, logging and stats are implemented
+//! here instead of pulling `rand`/`rayon`/`env_logger`.
+
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use threadpool::ThreadPool;

@@ -1,0 +1,92 @@
+//! Small statistics helpers used by benches and the serving metrics.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Signal-to-quantization-noise ratio in dB between a reference signal and
+/// its approximation: 10 log10(||ref||^2 / ||ref - approx||^2).
+pub fn sqnr_db(reference: &[f32], approx: &[f32]) -> f64 {
+    assert_eq!(reference.len(), approx.len());
+    let sig: f64 = reference.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let err: f64 = reference
+        .iter()
+        .zip(approx)
+        .map(|(&r, &a)| {
+            let d = r as f64 - a as f64;
+            d * d
+        })
+        .sum();
+    if err == 0.0 {
+        return f64::INFINITY;
+    }
+    if sig == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    10.0 * (sig / err).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn sqnr_perfect_is_infinite() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!(sqnr_db(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn sqnr_known_value() {
+        let r = [1.0f32, 0.0];
+        let a = [0.9f32, 0.0];
+        let db = sqnr_db(&r, &a);
+        assert!((db - 20.0).abs() < 0.1, "{db}"); // err 0.01, sig 1 -> 20 dB
+    }
+}

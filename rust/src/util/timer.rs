@@ -1,0 +1,42 @@
+//! Wall-clock timing helpers for the first-party bench harness.
+
+use std::time::Instant;
+
+/// Measure `f`, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// Run `f` `iters` times after `warmup` runs; returns per-iteration seconds.
+pub fn bench(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let start = Instant::now();
+            f();
+            start.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn time_returns_result() {
+        let (v, secs) = super::time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let samples = super::bench(1, 5, || {
+            std::hint::black_box(0u64);
+        });
+        assert_eq!(samples.len(), 5);
+    }
+}

@@ -1,0 +1,18 @@
+//! Shared helpers for integration tests. Tests are skipped (not failed)
+//! when the AOT artifacts have not been built yet — run `make artifacts`.
+
+use lccnn::runtime::Runtime;
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("runtime open"))
+}

@@ -1,0 +1,65 @@
+//! Integration: the full Fig. 2 pipeline end to end at a small budget.
+//! This is the system-level correctness test — training through PJRT,
+//! pruning, affinity propagation, sharing retrain, LCC, VM-backed
+//! accuracy — all composing.
+
+mod common;
+
+use common::runtime_or_skip;
+use lccnn::config::MlpPipelineConfig;
+use lccnn::pipeline::run_mlp_pipeline;
+
+#[test]
+fn fig2_pipeline_small_budget() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = MlpPipelineConfig {
+        train_examples: 1536,
+        test_examples: 512,
+        train_steps: 150,
+        share_retrain_steps: 40,
+        lambda: 0.25,
+        ..Default::default()
+    };
+    let out = run_mlp_pipeline(&rt, &cfg).expect("pipeline");
+
+    // baseline learned something
+    assert!(out.baseline_accuracy > 0.5, "baseline acc {}", out.baseline_accuracy);
+    assert!(out.baseline_additions > 100_000);
+
+    // three stages, ratios strictly improving along the pipeline
+    assert_eq!(out.stages.len(), 3);
+    let r: Vec<f64> = out.stages.iter().map(|s| s.ratio).collect();
+    assert!(r[0] > 1.0, "pruning ratio {}", r[0]);
+    assert!(r[1] > r[0], "sharing did not improve: {r:?}");
+    assert!(r[2] > r[1], "LCC did not improve: {r:?}");
+
+    // pruning actually removed columns; clustering actually merged some
+    assert!(out.stages[0].active_columns < 784);
+    assert!(out.stages[1].clusters > 0);
+    assert!(out.stages[1].clusters <= out.stages[1].active_columns);
+
+    // compressed accuracy stays in the baseline's neighbourhood
+    for s in &out.stages {
+        assert!(
+            s.accuracy > out.baseline_accuracy - 0.25,
+            "stage {} collapsed: {} vs baseline {}",
+            s.stage,
+            s.accuracy,
+            out.baseline_accuracy
+        );
+    }
+
+    // the LCC graph is as faithful as the CSD baseline's quantization
+    // (joint quantization+computing: LCC replaces quantization, so its
+    // distortion is matched to — not better than — the 8-bit grid)
+    assert!(
+        out.lcc_sqnr_db > out.quant_sqnr_db - 3.0,
+        "LCC SQNR {} vs quantization SQNR {}",
+        out.lcc_sqnr_db,
+        out.quant_sqnr_db
+    );
+
+    // loss curves recorded
+    assert!(out.baseline_curve.len() > 3);
+    assert!(out.reg_curve.last().unwrap().1 < out.reg_curve.first().unwrap().1);
+}

@@ -1,0 +1,127 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and matches
+//! the rust-side reference numerics (artifact ≡ substrate parity).
+
+mod common;
+
+use common::runtime_or_skip;
+use lccnn::nn::mlp::MlpParams;
+use lccnn::prune::prox_group_lasso_rows;
+use lccnn::runtime::HostTensor;
+use lccnn::tensor::Matrix;
+use lccnn::util::Rng;
+
+#[test]
+fn artifact_registry_lists_everything() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.artifact_names();
+    for expected in [
+        "mlp_train_step",
+        "mlp_eval",
+        "mlp_fwd",
+        "prox_step",
+        "shared_matvec",
+        "resnet_train_step_fk",
+        "resnet_train_step_pk",
+        "resnet_eval",
+    ] {
+        assert!(names.iter().any(|n| n == expected), "missing {expected}");
+    }
+}
+
+#[test]
+fn mlp_fwd_matches_rust_forward() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.get("mlp_fwd").expect("compile mlp_fwd");
+    let params = MlpParams::init(7);
+    let batch = exe.spec.inputs[4].dims[0];
+    let mut rng = Rng::new(8);
+    let x: Vec<f32> = rng.normal_vec(batch * 784, 1.0);
+    let inputs = vec![
+        HostTensor::F32(vec![300, 784], params.w1.data().to_vec()),
+        HostTensor::F32(vec![300], params.b1.clone()),
+        HostTensor::F32(vec![10, 300], params.w2.data().to_vec()),
+        HostTensor::F32(vec![10], params.b2.clone()),
+        HostTensor::F32(vec![batch, 784], x.clone()),
+    ];
+    let outs = exe.run(&inputs).expect("run");
+    let logits = outs[0].as_f32().unwrap();
+    for b in 0..batch {
+        let want = params.forward_one(&x[b * 784..(b + 1) * 784]);
+        for j in 0..10 {
+            let got = logits[b * 10 + j];
+            assert!(
+                (got - want[j]).abs() < 1e-3 + 1e-3 * want[j].abs(),
+                "b={b} j={j}: {got} vs {}",
+                want[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn prox_artifact_matches_rust_prox() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.get("prox_step").expect("compile prox_step");
+    let mut rng = Rng::new(9);
+    // artifact shape: W [784, 300] (rows = groups = W1 columns)
+    let w = Matrix::randn(784, 300, 0.1, &mut rng);
+    let thresh = 0.3f32;
+    let outs = exe
+        .run(&[
+            HostTensor::F32(vec![784, 300], w.data().to_vec()),
+            HostTensor::scalar_f32(thresh),
+        ])
+        .expect("run");
+    let got = outs[0].as_f32().unwrap();
+    let want = prox_group_lasso_rows(&w, thresh);
+    for (g, w) in got.iter().zip(want.data()) {
+        assert!((g - w).abs() < 1e-5 + 1e-4 * w.abs(), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn shared_matvec_artifact_matches_rust_shared_layer() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.get("shared_matvec").expect("compile shared_matvec");
+    let batch = exe.spec.inputs[0].dims[0];
+    let k = exe.spec.inputs[0].dims[1];
+    let c = exe.spec.inputs[1].dims[1];
+    let n = exe.spec.inputs[2].dims[0];
+    let mut rng = Rng::new(10);
+    let x: Vec<f32> = rng.normal_vec(batch * k, 1.0);
+    let labels: Vec<usize> = (0..k).map(|_| rng.below(c)).collect();
+    let mut onehot = vec![0.0f32; k * c];
+    for (j, &l) in labels.iter().enumerate() {
+        onehot[j * c + l] = 1.0;
+    }
+    let centroids = Matrix::randn(n, c, 0.5, &mut rng);
+    let outs = exe
+        .run(&[
+            HostTensor::F32(vec![batch, k], x.clone()),
+            HostTensor::F32(vec![k, c], onehot),
+            HostTensor::F32(vec![n, c], centroids.data().to_vec()),
+        ])
+        .expect("run");
+    let got = outs[0].as_f32().unwrap();
+    let layer = lccnn::share::SharedLayer { centroids, labels };
+    for b in 0..batch {
+        let want = layer.apply(&x[b * k..(b + 1) * k]);
+        for j in 0..n {
+            let g = got[b * n + j];
+            assert!((g - want[j]).abs() < 1e-2 + 1e-3 * want[j].abs(), "{g} vs {}", want[j]);
+        }
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.get("prox_step").expect("compile");
+    let bad = exe.run(&[
+        HostTensor::F32(vec![10, 10], vec![0.0; 100]),
+        HostTensor::scalar_f32(0.0),
+    ]);
+    assert!(bad.is_err(), "shape mismatch must be rejected");
+    let wrong_arity = exe.run(&[HostTensor::scalar_f32(0.0)]);
+    assert!(wrong_arity.is_err());
+}

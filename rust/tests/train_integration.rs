@@ -1,0 +1,96 @@
+//! Integration: training orchestration through the PJRT artifacts.
+
+mod common;
+
+use common::runtime_or_skip;
+use lccnn::data::synth_mnist;
+use lccnn::nn::mlp::MlpParams;
+use lccnn::nn::resnet::init_params;
+use lccnn::train::{ConvGrouping, LrSchedule, MlpTrainer, ResnetTrainer};
+
+#[test]
+fn mlp_loss_decreases() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let data = synth_mnist::generate(1024, 0);
+    let mut tr = MlpTrainer::new(&rt, &MlpParams::init(0)).unwrap();
+    let sched = LrSchedule { base: 0.05, every: 100, factor: 0.95 };
+    let curve = tr.train(&data, 60, sched, 10, 1).unwrap();
+    let first = curve.first().unwrap().1;
+    let last = curve.last().unwrap().1;
+    assert!(last < first * 0.8, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn mlp_prox_prunes_columns() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let data = synth_mnist::generate(512, 1);
+    let mut tr = MlpTrainer::new(&rt, &MlpParams::init(1)).unwrap();
+    tr.lambda = 1.0; // aggressive pruning: per-step threshold lr*lambda
+    let sched = LrSchedule { base: 0.05, every: 1000, factor: 1.0 };
+    tr.train(&data, 60, sched, 10, 2).unwrap();
+    let w1 = tr.params().w1;
+    let zero_cols = w1
+        .col_norms()
+        .iter()
+        .filter(|&&n| n == 0.0)
+        .count();
+    assert!(zero_cols > 100, "only {zero_cols} columns pruned");
+}
+
+#[test]
+fn mlp_colmask_freezes_columns() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let data = synth_mnist::generate(512, 2);
+    let mut tr = MlpTrainer::new(&rt, &MlpParams::init(2)).unwrap();
+    let mut mask = vec![0.0; 784];
+    for m in mask.iter_mut().skip(392) {
+        *m = 1.0;
+    }
+    tr.set_colmask(mask);
+    let sched = LrSchedule { base: 0.05, every: 1000, factor: 1.0 };
+    tr.train(&data, 10, sched, 5, 3).unwrap();
+    let w1 = tr.params().w1;
+    let norms = w1.col_norms();
+    // masked-out columns keep receiving no gradient, but they started
+    // nonzero; the artifact multiplies W1 by the mask, so they are zero
+    for j in 0..392 {
+        assert_eq!(norms[j], 0.0, "col {j} not masked");
+    }
+    assert!(norms[500] > 0.0);
+}
+
+#[test]
+fn mlp_evaluate_reports_accuracy_in_range() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let data = synth_mnist::generate(512, 3);
+    let tr = MlpTrainer::new(&rt, &MlpParams::init(3)).unwrap();
+    let (loss, acc) = tr.evaluate(&data).unwrap();
+    assert!(loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn resnet_step_runs_and_loss_finite() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let data = lccnn::data::synth_tiny::generate(128, 4);
+    let mut tr = ResnetTrainer::new(&rt, &init_params(4), ConvGrouping::Fk).unwrap();
+    let sched = LrSchedule { base: 0.02, every: 1000, factor: 1.0 };
+    let curve = tr.train(&data, 6, sched, 1, 5).unwrap();
+    assert_eq!(tr.steps_taken, 6);
+    for (_, loss) in &curve {
+        assert!(loss.is_finite() && *loss > 0.0, "bad loss {loss}");
+    }
+}
+
+#[test]
+fn resnet_pk_grouping_also_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let data = lccnn::data::synth_tiny::generate(64, 5);
+    let mut tr = ResnetTrainer::new(&rt, &init_params(5), ConvGrouping::Pk).unwrap();
+    tr.lambda = 0.01;
+    let sched = LrSchedule { base: 0.02, every: 1000, factor: 1.0 };
+    let curve = tr.train(&data, 3, sched, 1, 6).unwrap();
+    assert!(curve.last().unwrap().1.is_finite());
+    let (_, acc) = tr.evaluate(&data).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
