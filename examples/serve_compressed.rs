@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
-use lccnn::config::ServeConfig;
+use lccnn::config::{ExecConfig, ServeConfig};
 use lccnn::lcc::LccConfig;
 use lccnn::nn::compressed::{CompressedMlp, Layer1};
 use lccnn::nn::mlp::MlpParams;
@@ -31,15 +31,20 @@ fn build_compressed(params: &MlpParams) -> CompressedMlp {
     let compact = compact_columns(&w1, 1e-6);
     let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
     let shared = SharedLayer::from_clustering(&compact.weights, &clustering);
+    // batch-major exec engine tuning; override per field with the
+    // LCCNN_EXEC_* env vars (see ExecConfig::from_env)
+    let exec_cfg = ExecConfig::from_env();
+    let slcc = shared.with_lcc_exec(&LccConfig::fs(), exec_cfg);
     println!(
         "compressed model: {} active inputs -> {} clusters, LCC graph {} adds",
         compact.kept.len(),
         clustering.num_clusters(),
-        shared.with_lcc(&LccConfig::fs()).additions()
+        slcc.additions()
     );
+    println!("exec engine: {exec_cfg:?}");
     CompressedMlp {
         kept: compact.kept,
-        layer1: Layer1::SharedLcc(shared.with_lcc(&LccConfig::fs())),
+        layer1: Layer1::SharedLcc(slcc),
         b1: params.b1.clone(),
         w2: params.w2.clone(),
         b2: params.b2.clone(),
@@ -75,7 +80,7 @@ fn main() -> Result<()> {
     let server = Server::start(backend, ServeConfig::default());
     let thpt = drive(&server, n_requests, 1);
     let stats = server.shutdown();
-    println!("\n[compressed-vm]  {:>8.0} req/s  p50 {:>7.1} us  p99 {:>7.1} us  mean batch {:.1}",
+    println!("\n[compressed-exec] {:>7.0} req/s  p50 {:>7.1} us  p99 {:>7.1} us  mean batch {:.1}",
         thpt, stats.p50_latency_us, stats.p99_latency_us, stats.mean_batch_size);
 
     // --- dense PJRT backend ---------------------------------------------

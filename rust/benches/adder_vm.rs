@@ -1,59 +1,100 @@
-//! ABL-VM bench: shift-add VM throughput + ASAP schedule stats (the FPGA
-//! parallelism proxy) on MLP-shaped decompositions.
+//! ABL-VM bench: adder-graph execution throughput across the engine
+//! family — naive interpreter, scalar plan (the old `CompiledGraph`
+//! path), batch-major engine (1 thread) and parallel engine — plus ASAP
+//! schedule stats (the FPGA parallelism proxy) on MLP-shaped
+//! decompositions. Record the resulting table in EXPERIMENTS.md §Perf.
 //!
 //!     cargo bench --bench adder_vm
+#![allow(deprecated)]
 
+use lccnn::config::ExecConfig;
+use lccnn::exec::{BatchEngine, Executor};
 use lccnn::graph::{schedule, CompiledGraph};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::report::Table;
 use lccnn::tensor::Matrix;
 use lccnn::util::{stats, timer, Rng};
 
+/// per-sample microseconds for a whole-batch closure
+fn per_sample_us(batch: usize, warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    let samples = timer::bench(warmup, iters, &mut f);
+    stats::mean(&samples) * 1e6 / batch as f64
+}
+
 fn main() {
     let mut rng = Rng::new(0);
+    const BATCH: usize = 512;
     let mut t = Table::new(
-        "shift-add VM execution (per matvec) + schedule",
-        &["matrix", "algo", "adds", "depth", "max width", "interp us", "compiled us",
-          "speedup", "dense us"],
+        &format!("adder-graph execution, us/sample (batch {BATCH} for the engine columns)"),
+        &["matrix", "algo", "adds", "depth", "max width", "interp", "scalar plan",
+          "batch x1", "parallel", "par speedup", "dense"],
     );
     for &(n, k) in &[(300usize, 30usize), (300, 60), (64, 9), (192, 3)] {
         let w = Matrix::randn(n, k, 0.5, &mut rng);
-        let x: Vec<f32> = rng.normal_vec(k, 1.0);
-        let dense_samples = timer::bench(10, 200, || {
-            std::hint::black_box(w.matvec(std::hint::black_box(&x)));
+        let xs: Vec<Vec<f32>> = (0..BATCH).map(|_| rng.normal_vec(k, 1.0)).collect();
+        let dense_us = per_sample_us(BATCH, 3, 30, || {
+            for x in &xs {
+                std::hint::black_box(w.matvec(std::hint::black_box(x)));
+            }
         });
-        let dense_us = stats::mean(&dense_samples) * 1e6;
         for (name, cfg) in [("fp", LccConfig::fp()), ("fs", LccConfig::fs())] {
             let d = decompose(&w, &cfg);
             let g = d.graph();
             let s = schedule(g);
-            let samples = timer::bench(10, 200, || {
-                std::hint::black_box(g.execute(std::hint::black_box(&x)));
+
+            let interp_us = per_sample_us(BATCH, 3, 30, || {
+                for x in &xs {
+                    std::hint::black_box(g.execute(std::hint::black_box(x)));
+                }
             });
-            let us = stats::mean(&samples) * 1e6;
+
+            // the seed CompiledGraph per-sample path (now an ExecPlan shim)
             let c = CompiledGraph::new(g);
             let mut scratch = Vec::new();
             let mut out = Vec::new();
-            let csamples = timer::bench(10, 200, || {
-                c.execute_into(std::hint::black_box(&x), &mut scratch, &mut out);
-                std::hint::black_box(&out);
+            let scalar_us = per_sample_us(BATCH, 3, 30, || {
+                for x in &xs {
+                    c.execute_into(std::hint::black_box(x), &mut scratch, &mut out);
+                    std::hint::black_box(&out);
+                }
             });
-            let cus = stats::mean(&csamples) * 1e6;
+
+            let serial = BatchEngine::with_config(g, ExecConfig::serial());
+            let mut ys = Vec::new();
+            let batch_us = per_sample_us(BATCH, 3, 30, || {
+                serial.execute_batch_into(std::hint::black_box(&xs), &mut ys);
+                std::hint::black_box(&ys);
+            });
+
+            let parallel = BatchEngine::with_config(
+                g,
+                ExecConfig { chunk: 64, parallel_min_batch: 128, ..ExecConfig::default() },
+            );
+            let par_us = per_sample_us(BATCH, 3, 30, || {
+                parallel.execute_batch_into(std::hint::black_box(&xs), &mut ys);
+                std::hint::black_box(&ys);
+            });
+
             t.add_row(vec![
                 format!("{n}x{k}"),
                 name.into(),
                 g.additions().to_string(),
                 s.depth.to_string(),
                 s.max_width.to_string(),
-                format!("{us:.1}"),
-                format!("{cus:.1}"),
-                format!("{:.1}x", us / cus.max(1e-9)),
-                format!("{dense_us:.1}"),
+                format!("{interp_us:.2}"),
+                format!("{scalar_us:.2}"),
+                format!("{batch_us:.2}"),
+                format!("{par_us:.2}"),
+                format!("{:.1}x", scalar_us / par_us.max(1e-9)),
+                format!("{dense_us:.2}"),
             ]);
         }
     }
     println!("{}", t.render());
-    println!("depth = FPGA pipeline latency in adder stages; max width = peak");
-    println!("simultaneous adders. The VM is the numeric/count oracle, not a");
-    println!("performance claim — the addition count is the hardware cost model.");
+    println!("interp = per-sample graph interpreter (oracle); scalar plan = seed");
+    println!("CompiledGraph path; batch x1 = exec::BatchEngine lane-major, one");
+    println!("thread; parallel = chunks across cores. depth = FPGA pipeline");
+    println!("latency in adder stages; max width = peak simultaneous adders.");
+    println!("The addition count, not wall time, is the hardware cost model —");
+    println!("the engine columns measure the *simulation/serving* hot path.");
 }

@@ -12,7 +12,7 @@ use lccnn::pipeline::mlp::synthetic_reg_weights;
 use lccnn::prune::compact_columns;
 use lccnn::report::Table;
 use lccnn::runtime::{HostTensor, PjrtService};
-use lccnn::serve::{BatchEvaluator, CompressedMlpBackend, PjrtMlpBackend, Server};
+use lccnn::serve::{BatchEvaluator, CompressedMlpBackend, MutexEvaluator, PjrtMlpBackend, Server};
 use lccnn::share::SharedLayer;
 use lccnn::util::Rng;
 use std::sync::Arc;
@@ -67,7 +67,17 @@ fn main() {
     );
     for burst in [1usize, 8, 32] {
         let model = Arc::new(compressed_model(&params));
-        run(Arc::new(CompressedMlpBackend { model }), "compressed-vm", burst, n, &mut t);
+        run(Arc::new(CompressedMlpBackend { model }), "compressed-exec", burst, n, &mut t);
+    }
+    // the pre-exec-engine behaviour (forward_one per sample) for comparison
+    for burst in [1usize, 8, 32] {
+        let model = Arc::new(compressed_model(&params));
+        let scalar = MutexEvaluator::new(
+            move |xs: &[Vec<f32>]| Ok(xs.iter().map(|x| model.forward_one(x)).collect()),
+            64,
+            "compressed-scalar",
+        );
+        run(Arc::new(scalar), "compressed-scalar", burst, n, &mut t);
     }
     match PjrtService::start_default() {
         Ok(service) => {

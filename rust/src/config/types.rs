@@ -152,6 +152,91 @@ impl Default for ServeConfig {
     }
 }
 
+/// Tuning for the adder-graph execution engine (`crate::exec`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// worker threads; 0 = one per available core
+    pub threads: usize,
+    /// samples per lane chunk (the batch-major lane width)
+    pub chunk: usize,
+    /// minimum batch size before chunks are spread across threads —
+    /// below this, thread spawn overhead beats the parallelism (serving
+    /// latency path stays single-threaded)
+    pub parallel_min_batch: usize,
+    /// minimum ops in an ASAP level before the ops of that level are
+    /// split across threads for a *single* chunk (wide-graph, small-batch
+    /// workloads)
+    pub level_parallel_min_ops: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            threads: 0,
+            chunk: 64,
+            parallel_min_batch: 128,
+            level_parallel_min_ops: 8192,
+        }
+    }
+}
+
+impl ExecConfig {
+    /// Single-threaded variant (deterministic scheduling, no spawns).
+    pub fn serial() -> Self {
+        ExecConfig { threads: 1, ..ExecConfig::default() }
+    }
+
+    /// Environment overrides, one per field: `LCCNN_EXEC_THREADS`,
+    /// `LCCNN_EXEC_CHUNK`, `LCCNN_EXEC_PARALLEL_MIN_BATCH`,
+    /// `LCCNN_EXEC_LEVEL_MIN_OPS`.
+    pub fn from_env() -> Self {
+        fn env_usize(name: &str) -> Option<usize> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        let mut c = ExecConfig::default();
+        if let Some(v) = env_usize("LCCNN_EXEC_THREADS") {
+            c.threads = v;
+        }
+        if let Some(v) = env_usize("LCCNN_EXEC_CHUNK") {
+            c.chunk = v.max(1);
+        }
+        if let Some(v) = env_usize("LCCNN_EXEC_PARALLEL_MIN_BATCH") {
+            c.parallel_min_batch = v;
+        }
+        if let Some(v) = env_usize("LCCNN_EXEC_LEVEL_MIN_OPS") {
+            c.level_parallel_min_ops = v;
+        }
+        c
+    }
+
+    /// Overrides from an `[exec]` TOML section.
+    pub fn from_toml(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let t = parse_toml(&text)?;
+        // negative values are nonsense here (0 already means "auto" for
+        // threads): ignore them instead of letting `as usize` wrap
+        let read = |key: &str| -> Option<usize> {
+            get(&t, "exec", key)
+                .and_then(TomlValue::as_int)
+                .and_then(|v| usize::try_from(v).ok())
+        };
+        let mut c = ExecConfig::default();
+        if let Some(v) = read("threads") {
+            c.threads = v;
+        }
+        if let Some(v) = read("chunk") {
+            c.chunk = v.max(1);
+        }
+        if let Some(v) = read("parallel_min_batch") {
+            c.parallel_min_batch = v;
+        }
+        if let Some(v) = read("level_parallel_min_ops") {
+            c.level_parallel_min_ops = v;
+        }
+        Ok(c)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +267,22 @@ mod tests {
     fn algo_parse() {
         assert_eq!(LccAlgoConfig::parse("FS"), Some(LccAlgoConfig::Fs));
         assert_eq!(LccAlgoConfig::parse("nope"), None);
+    }
+
+    #[test]
+    fn exec_defaults_and_toml_overrides() {
+        let d = ExecConfig::default();
+        assert!(d.chunk > 0);
+        assert_eq!(ExecConfig::serial().threads, 1);
+        let dir = std::env::temp_dir().join(format!("lccnn-exec-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("e.toml");
+        std::fs::write(&p, "[exec]\nthreads = 2\nchunk = 16\nlevel_parallel_min_ops = 5\n")
+            .unwrap();
+        let c = ExecConfig::from_toml(&p).unwrap();
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.chunk, 16);
+        assert_eq!(c.level_parallel_min_ops, 5);
+        assert_eq!(c.parallel_min_batch, d.parallel_min_batch);
     }
 }

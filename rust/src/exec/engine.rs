@@ -1,0 +1,242 @@
+//! The batch-major engine: chunked, pooled, optionally parallel
+//! evaluation of an [`ExecPlan`].
+
+use super::plan::ExecPlan;
+use super::pool::BufferPool;
+use super::Executor;
+use crate::config::ExecConfig;
+use crate::graph::AdderGraph;
+use std::sync::Mutex;
+
+/// Batch-major adder-graph executor.
+///
+/// A batch of `B` samples is split into chunks of `cfg.chunk` samples;
+/// each chunk is evaluated lane-wise (every graph value holds a
+/// contiguous chunk-wide lane). Chunks run in parallel on scoped threads
+/// when the batch is large enough (`cfg.parallel_min_batch`); for small
+/// batches of very wide graphs the engine instead splits the independent
+/// ops *within* each ASAP level across threads
+/// (`cfg.level_parallel_min_ops`). Lane buffers are recycled through a
+/// [`BufferPool`], so steady-state execution does not allocate them.
+///
+/// Parallelism uses `std::thread::scope` (workers borrow the batch), so
+/// each parallel `execute_batch` spawns and joins its workers. That
+/// overhead is why `parallel_min_batch` defaults above the serving
+/// layer's batch sizes: the latency path stays spawn-free, and the
+/// throughput path (offline eval, benches) amortizes the spawns over
+/// large batches. A persistent scoped worker pool is a known follow-up
+/// (ROADMAP).
+#[derive(Debug)]
+pub struct BatchEngine {
+    plan: ExecPlan,
+    cfg: ExecConfig,
+    pool: BufferPool,
+}
+
+impl Clone for BatchEngine {
+    fn clone(&self) -> Self {
+        // the pool is a cache, not state: a clone starts with an empty one
+        BatchEngine { plan: self.plan.clone(), cfg: self.cfg, pool: BufferPool::new() }
+    }
+}
+
+impl BatchEngine {
+    /// Lower and wrap a graph with the default [`ExecConfig`].
+    pub fn new(g: &AdderGraph) -> Self {
+        Self::with_config(g, ExecConfig::default())
+    }
+
+    pub fn with_config(g: &AdderGraph, cfg: ExecConfig) -> Self {
+        Self::from_plan(ExecPlan::new(g), cfg)
+    }
+
+    pub fn from_plan(plan: ExecPlan, cfg: ExecConfig) -> Self {
+        BatchEngine { plan, cfg, pool: BufferPool::new() }
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    pub fn config(&self) -> &ExecConfig {
+        &self.cfg
+    }
+
+    fn resolved_threads(&self) -> usize {
+        // hard cap: a misconfigured thread count must never translate
+        // into unbounded OS-thread spawns in the kernels below
+        const MAX_THREADS: usize = 1024;
+        let t = if self.cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.cfg.threads
+        };
+        t.clamp(1, MAX_THREADS)
+    }
+}
+
+impl Executor for BatchEngine {
+    fn num_inputs(&self) -> usize {
+        self.plan.num_inputs()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.plan.num_outputs()
+    }
+
+    fn name(&self) -> &'static str {
+        "batch-engine"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        let b = xs.len();
+        ys.resize_with(b, Vec::new);
+        if b == 0 {
+            return;
+        }
+        let chunk = self.cfg.chunk.max(1);
+        let threads = self.resolved_threads();
+        let n_chunks = b.div_ceil(chunk);
+        if threads > 1 && n_chunks > 1 && b >= self.cfg.parallel_min_batch {
+            // data parallelism: independent chunks, one worker + one lane
+            // buffer each, pulled from a shared job list
+            let jobs: Mutex<Vec<(&[Vec<f32>], &mut [Vec<f32>])>> =
+                Mutex::new(xs.chunks(chunk).zip(ys.chunks_mut(chunk)).collect());
+            let workers = threads.min(n_chunks);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| {
+                        let mut buf = self.pool.take();
+                        loop {
+                            let job = jobs.lock().unwrap().pop();
+                            match job {
+                                Some((xc, yc)) => self.plan.eval_lanes(xc, &mut buf, yc),
+                                None => break,
+                            }
+                        }
+                        self.pool.put(buf);
+                    });
+                }
+            });
+        } else {
+            let mut buf = self.pool.take();
+            let level_parallel =
+                threads > 1 && self.plan.max_level_ops() >= self.cfg.level_parallel_min_ops;
+            for (xc, yc) in xs.chunks(chunk).zip(ys.chunks_mut(chunk)) {
+                if level_parallel {
+                    self.plan.eval_lanes_level_parallel(
+                        xc,
+                        &mut buf,
+                        yc,
+                        threads,
+                        self.cfg.level_parallel_min_ops,
+                    );
+                } else {
+                    self.plan.eval_lanes(xc, &mut buf, yc);
+                }
+            }
+            self.pool.put(buf);
+        }
+    }
+
+    fn execute_one(&self, x: &[f32]) -> Vec<f32> {
+        // scalar fast path: no lane layout, just the flattened program
+        let mut scratch = self.pool.take();
+        let mut out = Vec::with_capacity(self.plan.num_outputs());
+        self.plan.execute_one_into(x, &mut scratch, &mut out);
+        self.pool.put(scratch);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Operand, OutputSpec};
+    use crate::util::Rng;
+
+    fn ladder_graph(inputs: usize, nodes: usize, seed: u64) -> AdderGraph {
+        let mut rng = Rng::new(seed);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..nodes {
+            let a = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+            let b = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..4)
+            .map(|_| OutputSpec::Ref(refs[rng.below(refs.len())]))
+            .collect();
+        g.set_outputs(outs);
+        g
+    }
+
+    #[test]
+    fn all_configs_match_scalar_plan() {
+        let mut rng = Rng::new(0);
+        let g = ladder_graph(6, 50, 1);
+        let plan = ExecPlan::new(&g);
+        let configs = [
+            ExecConfig { threads: 1, chunk: 4, ..ExecConfig::default() },
+            ExecConfig { threads: 4, chunk: 4, parallel_min_batch: 2, ..ExecConfig::default() },
+            ExecConfig {
+                threads: 3,
+                chunk: 1024,
+                parallel_min_batch: usize::MAX,
+                level_parallel_min_ops: 1,
+                ..ExecConfig::default()
+            },
+        ];
+        for cfg in configs {
+            let engine = BatchEngine::with_config(&g, cfg);
+            for b in [0usize, 1, 3, 17, 33] {
+                let xs: Vec<Vec<f32>> =
+                    (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+                let ys = engine.execute_batch(&xs);
+                assert_eq!(ys.len(), b);
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert_eq!(*y, plan.execute_one(x), "cfg {cfg:?} b {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn execute_one_matches_batch() {
+        let mut rng = Rng::new(2);
+        let g = ladder_graph(4, 20, 3);
+        let engine = BatchEngine::new(&g);
+        let x: Vec<f32> = rng.normal_vec(g.num_inputs(), 1.0);
+        let one = engine.execute_one(&x);
+        let batch = engine.execute_batch(&[x.clone()]);
+        assert_eq!(one, batch[0]);
+        assert_eq!(one.len(), engine.num_outputs());
+    }
+
+    #[test]
+    fn steady_state_reuses_pooled_buffers() {
+        let g = ladder_graph(4, 20, 4);
+        let engine = BatchEngine::with_config(
+            &g,
+            ExecConfig { threads: 1, ..ExecConfig::default() },
+        );
+        let xs: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 4]).collect();
+        let mut ys = Vec::new();
+        engine.execute_batch_into(&xs, &mut ys);
+        assert_eq!(engine.pool.cached(), 1, "lane buffer must return to the pool");
+        let first = ys.clone();
+        engine.execute_batch_into(&xs, &mut ys);
+        assert_eq!(first, ys);
+        assert_eq!(engine.pool.cached(), 1);
+    }
+
+    #[test]
+    fn engine_is_shareable_as_dyn_executor() {
+        let g = ladder_graph(3, 10, 5);
+        let engine: std::sync::Arc<dyn Executor> = std::sync::Arc::new(BatchEngine::new(&g));
+        let xs = vec![vec![1.0, 2.0, 3.0]];
+        let ys = engine.execute_batch(&xs);
+        assert_eq!(ys.len(), 1);
+        assert_eq!(ys[0].len(), engine.num_outputs());
+    }
+}

@@ -1,0 +1,80 @@
+//! The adder-graph execution engine — the single runtime for everything
+//! the compressed network ultimately executes.
+//!
+//! The paper's cost model is *additions*; this module is where those
+//! additions actually run. It replaces the three historical paths (the
+//! scalar interpreter in `graph::vm`, the flattened `graph::CompiledGraph`
+//! and the per-sample loops in `serve`) with one engine:
+//!
+//! * [`ExecPlan`] lowers an [`crate::graph::AdderGraph`] plus its ASAP
+//!   [`crate::graph::Schedule`] into a level-sorted structure-of-arrays
+//!   instruction stream: separate `u32` operand-index and `f32`
+//!   coefficient arrays, outputs resolved to direct value indices, and
+//!   per-level op ranges (ops of ASAP level *l* are contiguous).
+//! * [`BatchEngine`] evaluates a plan **batch-major**: every graph value
+//!   owns a contiguous `B`-wide lane of samples, so each op is a tight
+//!   `d[s] = ca*a[s] + cb*b[s]` loop over the lane — cache-friendly and
+//!   auto-vectorizable — instead of re-walking the graph per sample.
+//!   Batches are split into chunks executed in parallel with scoped
+//!   threads; within a single chunk, very wide ASAP levels can also be
+//!   split across threads (every op in a level is independent — the same
+//!   property that makes the level a single FPGA cycle). Lane buffers
+//!   come from a [`BufferPool`], so steady-state serving performs no
+//!   values-buffer allocation per batch.
+//! * [`Executor`] is the extension point future backends implement
+//!   (sharded engines, GPU/accelerator lowerings, remote execution). The
+//!   serving layer's `ExecutorBackend` serves any `Arc<dyn Executor>`.
+//! * [`NaiveExecutor`] wraps the original interpreter and is kept only as
+//!   the reference oracle for equivalence tests
+//!   (`rust/tests/exec_equivalence.rs`).
+//!
+//! Numerics: the engine evaluates exactly the same `mul, mul, add`
+//! expression per node as the interpreter, in topological order, so
+//! outputs are bit-identical to the oracle (no FMA contraction, no
+//! reassociation). Tuning lives in [`crate::config::ExecConfig`].
+
+mod engine;
+mod oracle;
+mod plan;
+mod pool;
+
+pub use engine::BatchEngine;
+pub use oracle::NaiveExecutor;
+pub use plan::ExecPlan;
+pub use pool::BufferPool;
+
+/// A runtime for adder graphs: evaluates batches of input vectors to
+/// batches of output vectors. Implementations must be shareable across
+/// threads (the serving layer holds them behind `Arc<dyn Executor>`).
+pub trait Executor: Send + Sync {
+    /// Number of graph inputs each sample must provide.
+    fn num_inputs(&self) -> usize;
+
+    /// Number of outputs produced per sample.
+    fn num_outputs(&self) -> usize;
+
+    /// Short identifier for logs and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// Evaluate a batch; `ys` is resized to `xs.len()` rows. Hot-path
+    /// implementations ([`BatchEngine`]) reuse existing row allocations
+    /// (zero per-row allocation in steady state); the testing oracle
+    /// ([`NaiveExecutor`]) allocates per sample. Panics if a sample has
+    /// the wrong input length.
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>);
+
+    /// Allocating convenience wrapper around [`Executor::execute_batch_into`].
+    fn execute_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut ys = Vec::new();
+        self.execute_batch_into(xs, &mut ys);
+        ys
+    }
+
+    /// Evaluate a single sample.
+    fn execute_one(&self, x: &[f32]) -> Vec<f32> {
+        let xs = [x.to_vec()];
+        let mut ys = Vec::new();
+        self.execute_batch_into(&xs, &mut ys);
+        ys.pop().expect("one output row per sample")
+    }
+}

@@ -1,0 +1,67 @@
+//! The reference oracle: the original scalar interpreter behind the
+//! [`Executor`] interface. Kept for differential testing only — the
+//! batch engine must match it bit-for-bit (see
+//! `rust/tests/exec_equivalence.rs`). It deliberately stays as simple
+//! as possible (allocates per sample, no buffer reuse): its job is to
+//! be obviously correct, not fast.
+
+use super::Executor;
+use crate::graph::AdderGraph;
+
+/// Per-sample interpreter over the un-lowered graph.
+pub struct NaiveExecutor {
+    graph: AdderGraph,
+}
+
+impl NaiveExecutor {
+    pub fn new(graph: AdderGraph) -> Self {
+        NaiveExecutor { graph }
+    }
+
+    pub fn graph(&self) -> &AdderGraph {
+        &self.graph
+    }
+}
+
+impl Executor for NaiveExecutor {
+    fn num_inputs(&self) -> usize {
+        self.graph.num_inputs()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.graph.num_outputs()
+    }
+
+    fn name(&self) -> &'static str {
+        "naive-interpreter"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        ys.resize_with(xs.len(), Vec::new);
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            *y = self.graph.execute(x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AdderGraph, Operand, OutputSpec};
+
+    #[test]
+    fn oracle_matches_direct_interpreter() {
+        let mut g = AdderGraph::new(2);
+        let n = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false));
+        g.set_outputs(vec![OutputSpec::Ref(n)]);
+        let oracle = NaiveExecutor::new(g.clone());
+        assert_eq!(oracle.num_inputs(), 2);
+        assert_eq!(oracle.num_outputs(), 1);
+        let xs = vec![vec![1.0, 2.0], vec![-0.5, 4.0]];
+        let ys = oracle.execute_batch(&xs);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(*y, g.execute(x));
+        }
+        assert_eq!(oracle.execute_one(&[1.0, 2.0]), g.execute(&[1.0, 2.0]));
+    }
+}

@@ -1,0 +1,370 @@
+//! Lowering: adder graph + ASAP schedule → level-sorted SoA instruction
+//! stream with direct indices and precomputed coefficients.
+
+use crate::graph::{schedule, AdderGraph, NodeRef, OutputSpec, Schedule};
+
+/// Output resolution: zero row or a scaled read of a value slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum OutOp {
+    Zero,
+    Scaled { idx: u32, c: f32 },
+}
+
+/// Executable lowering of an [`AdderGraph`].
+///
+/// Value slots are numbered `0..num_inputs` for the graph inputs followed
+/// by one slot per op in **ASAP-level order** (stable within a level), so
+/// the ops of level *l* write the contiguous slot range
+/// `num_inputs + level_range(l)`. That contiguity is what lets the batch
+/// engine split a level's lanes across threads with safe disjoint
+/// borrows. Operand indices always point at strictly earlier slots.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    num_inputs: usize,
+    ia: Vec<u32>,
+    ca: Vec<f32>,
+    ib: Vec<u32>,
+    cb: Vec<f32>,
+    /// ops of ASAP level `l` (1-based) occupy `level_starts[l-1]..level_starts[l]`
+    level_starts: Vec<u32>,
+    outs: Vec<OutOp>,
+    max_level_ops: usize,
+}
+
+impl ExecPlan {
+    /// Lower a graph, computing its ASAP schedule internally.
+    pub fn new(g: &AdderGraph) -> Self {
+        Self::with_schedule(g, &schedule(g))
+    }
+
+    /// Lower a graph with a precomputed schedule (must belong to `g`).
+    pub fn with_schedule(g: &AdderGraph, s: &Schedule) -> Self {
+        let n = g.nodes().len();
+        assert_eq!(s.levels.len(), n, "schedule does not match graph");
+        let num_levels = s.levels.iter().copied().max().unwrap_or(0);
+
+        // stable sort by ASAP level: contiguous levels, original order kept
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| s.levels[i]);
+        let mut perm = vec![0u32; n];
+        for (new, &orig) in order.iter().enumerate() {
+            perm[orig] = new as u32;
+        }
+
+        let base = g.num_inputs() as u32;
+        let idx = |r: NodeRef| -> u32 {
+            match r {
+                NodeRef::Input(i) => i,
+                NodeRef::Node(i) => base + perm[i as usize],
+            }
+        };
+
+        let mut ia = Vec::with_capacity(n);
+        let mut ca = Vec::with_capacity(n);
+        let mut ib = Vec::with_capacity(n);
+        let mut cb = Vec::with_capacity(n);
+        for &orig in &order {
+            let node = g.nodes()[orig];
+            ia.push(idx(node.a.src));
+            ca.push(node.a.coeff());
+            ib.push(idx(node.b.src));
+            cb.push(node.b.coeff());
+        }
+
+        let mut level_starts = vec![0u32; num_levels + 1];
+        for &l in &s.levels {
+            level_starts[l] += 1; // node levels are 1-based; slot 0 stays 0
+        }
+        for l in 1..=num_levels {
+            level_starts[l] += level_starts[l - 1];
+        }
+        let max_level_ops = (1..=num_levels)
+            .map(|l| (level_starts[l] - level_starts[l - 1]) as usize)
+            .max()
+            .unwrap_or(0);
+
+        let outs = g
+            .outputs()
+            .iter()
+            .map(|o| match o {
+                OutputSpec::Zero => OutOp::Zero,
+                OutputSpec::Ref(op) => OutOp::Scaled { idx: idx(op.src), c: op.coeff() },
+            })
+            .collect();
+
+        ExecPlan {
+            num_inputs: g.num_inputs(),
+            ia,
+            ca,
+            ib,
+            cb,
+            level_starts,
+            outs,
+            max_level_ops,
+        }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outs.len()
+    }
+
+    /// Op count — the paper's addition metric.
+    pub fn additions(&self) -> usize {
+        self.ia.len()
+    }
+
+    /// Total value slots (inputs + one per op).
+    pub fn num_values(&self) -> usize {
+        self.num_inputs + self.ia.len()
+    }
+
+    /// Pipeline depth (number of ASAP levels with at least one op).
+    pub fn num_levels(&self) -> usize {
+        self.level_starts.len() - 1
+    }
+
+    /// Widest level — the available intra-batch op parallelism.
+    pub fn max_level_ops(&self) -> usize {
+        self.max_level_ops
+    }
+
+    /// Execute one sample with caller-provided buffers (the scalar path;
+    /// `CompiledGraph` delegates here). `scratch` holds the value slots.
+    pub fn execute_one_into(&self, x: &[f32], scratch: &mut Vec<f32>, out: &mut Vec<f32>) {
+        assert_eq!(x.len(), self.num_inputs, "input length mismatch");
+        scratch.clear();
+        scratch.reserve(self.num_values());
+        scratch.extend_from_slice(x);
+        for j in 0..self.ia.len() {
+            let v = self.ca[j] * scratch[self.ia[j] as usize]
+                + self.cb[j] * scratch[self.ib[j] as usize];
+            scratch.push(v);
+        }
+        out.clear();
+        out.extend(self.outs.iter().map(|o| match *o {
+            OutOp::Zero => 0.0,
+            OutOp::Scaled { idx, c } => c * scratch[idx as usize],
+        }));
+    }
+
+    /// Allocating scalar execute.
+    pub fn execute_one(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = Vec::with_capacity(self.num_values());
+        let mut out = Vec::with_capacity(self.outs.len());
+        self.execute_one_into(x, &mut scratch, &mut out);
+        out
+    }
+
+    /// Fill the input lanes of a batch-major values buffer:
+    /// `buf[v * width + s]` is value `v` of sample `s`. Grow-only: stale
+    /// contents are never read, because the input loop writes every input
+    /// lane and the level ranges cover every op lane before any read.
+    fn fill_input_lanes(&self, xs: &[Vec<f32>], buf: &mut Vec<f32>) {
+        let width = xs.len();
+        let needed = self.num_values() * width;
+        if buf.len() < needed {
+            buf.resize(needed, 0.0);
+        }
+        for (s, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.num_inputs, "input length mismatch");
+            for (i, &v) in x.iter().enumerate() {
+                buf[i * width + s] = v;
+            }
+        }
+    }
+
+    fn read_output_lanes(&self, buf: &[f32], width: usize, ys: &mut [Vec<f32>]) {
+        for (s, y) in ys.iter_mut().enumerate() {
+            y.clear();
+            y.reserve(self.outs.len());
+            for o in &self.outs {
+                y.push(match *o {
+                    OutOp::Zero => 0.0,
+                    OutOp::Scaled { idx, c } => c * buf[idx as usize * width + s],
+                });
+            }
+        }
+    }
+
+    /// Batch-major evaluation of one chunk of samples. `ys.len()` must
+    /// equal `xs.len()`; `buf` is the reusable lane buffer.
+    pub(crate) fn eval_lanes(&self, xs: &[Vec<f32>], buf: &mut Vec<f32>, ys: &mut [Vec<f32>]) {
+        let width = xs.len();
+        debug_assert_eq!(ys.len(), width);
+        if width == 0 {
+            return;
+        }
+        self.fill_input_lanes(xs, buf);
+        for j in 0..self.ia.len() {
+            let dst_start = (self.num_inputs + j) * width;
+            let (src, dst) = buf.split_at_mut(dst_start);
+            let a = &src[self.ia[j] as usize * width..][..width];
+            let b = &src[self.ib[j] as usize * width..][..width];
+            let (ca, cb) = (self.ca[j], self.cb[j]);
+            let d = &mut dst[..width];
+            for s in 0..width {
+                d[s] = ca * a[s] + cb * b[s];
+            }
+        }
+        self.read_output_lanes(buf, width, ys);
+    }
+
+    /// Like [`ExecPlan::eval_lanes`], but splits the ops of each wide
+    /// ASAP level across `threads` scoped threads. Sound because ops in
+    /// one level only read strictly earlier slots (lower levels/inputs)
+    /// and write disjoint contiguous lanes.
+    pub(crate) fn eval_lanes_level_parallel(
+        &self,
+        xs: &[Vec<f32>],
+        buf: &mut Vec<f32>,
+        ys: &mut [Vec<f32>],
+        threads: usize,
+        min_ops: usize,
+    ) {
+        let width = xs.len();
+        debug_assert_eq!(ys.len(), width);
+        if width == 0 {
+            return;
+        }
+        self.fill_input_lanes(xs, buf);
+        for l in 1..self.level_starts.len() {
+            let lo = self.level_starts[l - 1] as usize;
+            let hi = self.level_starts[l] as usize;
+            let nops = hi - lo;
+            if nops == 0 {
+                continue;
+            }
+            let base = (self.num_inputs + lo) * width;
+            let (src, rest) = buf.split_at_mut(base);
+            let dst_level = &mut rest[..nops * width];
+            let threads = threads.min(nops); // never more spawns than ops
+            if threads <= 1 || nops < min_ops {
+                self.eval_op_span(src, dst_level, lo, width);
+            } else {
+                let span = nops.div_ceil(threads);
+                let src: &[f32] = src;
+                std::thread::scope(|scope| {
+                    for (t, dspan) in dst_level.chunks_mut(span * width).enumerate() {
+                        let j0 = lo + t * span;
+                        scope.spawn(move || {
+                            self.eval_op_span(src, dspan, j0, width);
+                        });
+                    }
+                });
+            }
+        }
+        self.read_output_lanes(buf, width, ys);
+    }
+
+    /// Evaluate ops `j0..j0 + dst.len()/width` into `dst` (their lanes),
+    /// reading operands from `src` (all strictly earlier lanes).
+    fn eval_op_span(&self, src: &[f32], dst: &mut [f32], j0: usize, width: usize) {
+        for (k, d) in dst.chunks_mut(width).enumerate() {
+            let j = j0 + k;
+            let a = &src[self.ia[j] as usize * width..][..width];
+            let b = &src[self.ib[j] as usize * width..][..width];
+            let (ca, cb) = (self.ca[j], self.cb[j]);
+            for s in 0..width {
+                d[s] = ca * a[s] + cb * b[s];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AdderGraph, Operand, OutputSpec};
+    use crate::util::Rng;
+
+    fn random_graph(seed: u64) -> AdderGraph {
+        let mut rng = Rng::new(seed);
+        let inputs = 2 + rng.below(8);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..40 {
+            let a = refs[rng.below(refs.len())].scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+            let b = refs[rng.below(refs.len())].scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..5)
+            .map(|_| {
+                if rng.f32() < 0.1 {
+                    OutputSpec::Zero
+                } else {
+                    OutputSpec::Ref(refs[rng.below(refs.len())].scaled(1, false))
+                }
+            })
+            .collect();
+        g.set_outputs(outs);
+        g
+    }
+
+    #[test]
+    fn scalar_path_bit_identical_to_interpreter() {
+        let mut rng = Rng::new(1);
+        for seed in 0..8 {
+            let g = random_graph(seed);
+            let plan = ExecPlan::new(&g);
+            assert_eq!(plan.additions(), g.additions());
+            assert_eq!(plan.num_outputs(), g.num_outputs());
+            let x: Vec<f32> = rng.normal_vec(g.num_inputs(), 1.0);
+            // same per-node expression in topological order: exact equality
+            assert_eq!(plan.execute_one(&x), g.execute(&x));
+        }
+    }
+
+    #[test]
+    fn level_ranges_cover_all_ops_in_schedule_order() {
+        let g = random_graph(3);
+        let s = schedule(&g);
+        let plan = ExecPlan::with_schedule(&g, &s);
+        assert_eq!(plan.num_levels(), s.width_histogram.len());
+        assert_eq!(
+            *plan.level_starts.last().unwrap() as usize,
+            plan.additions(),
+            "levels must cover every op"
+        );
+        for l in 1..plan.level_starts.len() {
+            let n = (plan.level_starts[l] - plan.level_starts[l - 1]) as usize;
+            assert_eq!(n, s.width_histogram[l - 1], "level {l} width");
+            assert!(plan.max_level_ops() >= n);
+        }
+        // every operand strictly precedes its destination slot
+        for j in 0..plan.additions() {
+            let dst = (plan.num_inputs() + j) as u32;
+            assert!(plan.ia[j] < dst && plan.ib[j] < dst, "op {j} reads forward");
+        }
+    }
+
+    #[test]
+    fn batch_lanes_match_scalar_path() {
+        let mut rng = Rng::new(7);
+        let g = random_graph(11);
+        let plan = ExecPlan::new(&g);
+        let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+        let mut buf = Vec::new();
+        let mut ys: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
+        plan.eval_lanes(&xs, &mut buf, &mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(*y, plan.execute_one(x));
+        }
+        // level-parallel kernel agrees too (forced on with min_ops = 1)
+        let mut ys2: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
+        plan.eval_lanes_level_parallel(&xs, &mut buf, &mut ys2, 3, 1);
+        assert_eq!(ys, ys2);
+    }
+
+    #[test]
+    fn empty_graph_and_zero_outputs() {
+        let mut g = AdderGraph::new(2);
+        g.set_outputs(vec![OutputSpec::Zero, OutputSpec::Ref(Operand::input(1))]);
+        let plan = ExecPlan::new(&g);
+        assert_eq!(plan.num_levels(), 0);
+        assert_eq!(plan.execute_one(&[4.0, 5.0]), vec![0.0, 5.0]);
+    }
+}

@@ -1,0 +1,72 @@
+//! Reusable lane-buffer pool: steady-state batch execution allocates no
+//! values buffers (the serving hot path calls `execute_batch` per
+//! request batch; buffers grown once are recycled forever).
+
+use std::sync::Mutex;
+
+/// Upper bound on cached buffers. Matches the engine's hard thread cap
+/// (`BatchEngine`'s `MAX_THREADS = 1024`): caching everything that was
+/// simultaneously in flight never raises peak memory, while the bound
+/// keeps a buggy put-loop from hoarding unbounded buffers.
+const MAX_CACHED: usize = 1024;
+
+/// Thread-safe free list of `f32` scratch buffers.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<f32>>>,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer. Contents are unspecified (stale data from the last
+    /// user) — every caller fully overwrites before reading, which is
+    /// what keeps steady state free of redundant zeroing.
+    pub fn take(&self) -> Vec<f32> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a buffer for reuse (length and contents kept as-is).
+    pub fn put(&self, buf: Vec<f32>) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < MAX_CACHED {
+            free.push(buf);
+        }
+    }
+
+    /// Number of currently cached buffers (for tests/metrics).
+    pub fn cached(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_recycles_storage() {
+        let pool = BufferPool::new();
+        let mut b = pool.take();
+        assert!(b.is_empty(), "fresh buffer");
+        b.resize(1024, 0.0);
+        let cap = b.capacity();
+        pool.put(b);
+        assert_eq!(pool.cached(), 1);
+        let b2 = pool.take();
+        assert_eq!(b2.len(), 1024, "length kept as-is (contents unspecified)");
+        assert!(b2.capacity() >= cap, "capacity must be retained");
+        assert_eq!(pool.cached(), 0);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let pool = BufferPool::new();
+        for _ in 0..(MAX_CACHED + 10) {
+            pool.put(Vec::new());
+        }
+        assert_eq!(pool.cached(), MAX_CACHED);
+    }
+}

@@ -1,103 +1,57 @@
-//! Compiled form of an adder graph for fast VM execution.
+//! Compatibility wrapper around the unified execution engine.
 //!
-//! `AdderGraph::execute` resolves every operand through a `NodeRef` match
-//! and recomputes `exp2(shift)` per visit. For serving and accuracy
-//! evaluation the graph is executed millions of times, so this module
-//! flattens it once: one contiguous value array (inputs followed by node
-//! values), direct indices, and precomputed f32 coefficients.
-//! §Perf (EXPERIMENTS.md) records the measured speedup.
+//! `CompiledGraph` used to own its own flattening of the adder graph
+//! (direct indices + precomputed coefficients). That lowering now lives
+//! in [`crate::exec::ExecPlan`] — level-sorted, batch-capable, shared by
+//! every runtime path — and this type is a thin deprecated shim kept so
+//! old call sites and benches keep working. §Perf (EXPERIMENTS.md)
+//! records the measured speedups of the engine family.
 
-use super::ir::{AdderGraph, NodeRef, OutputSpec};
+use super::ir::AdderGraph;
+use crate::exec::ExecPlan;
 
-#[derive(Clone, Copy, Debug)]
-struct Op {
-    ia: u32,
-    ca: f32,
-    ib: u32,
-    cb: f32,
-}
-
-#[derive(Clone, Copy, Debug)]
-enum OutOp {
-    Zero,
-    Scaled { idx: u32, c: f32 },
-}
-
-/// Flattened executable graph.
+/// Flattened executable graph (deprecated shim over [`ExecPlan`]).
+#[deprecated(
+    note = "superseded by crate::exec::{ExecPlan, BatchEngine}; this wrapper only \
+            forwards to ExecPlan's scalar path"
+)]
 #[derive(Clone, Debug)]
 pub struct CompiledGraph {
-    num_inputs: usize,
-    ops: Vec<Op>,
-    outs: Vec<OutOp>,
+    plan: ExecPlan,
 }
 
+#[allow(deprecated)]
 impl CompiledGraph {
     pub fn new(g: &AdderGraph) -> Self {
-        let base = g.num_inputs() as u32;
-        let idx = |r: NodeRef| match r {
-            NodeRef::Input(i) => i,
-            NodeRef::Node(i) => base + i,
-        };
-        let ops = g
-            .nodes()
-            .iter()
-            .map(|n| Op {
-                ia: idx(n.a.src),
-                ca: n.a.coeff(),
-                ib: idx(n.b.src),
-                cb: n.b.coeff(),
-            })
-            .collect();
-        let outs = g
-            .outputs()
-            .iter()
-            .map(|o| match o {
-                OutputSpec::Zero => OutOp::Zero,
-                OutputSpec::Ref(op) => OutOp::Scaled { idx: idx(op.src), c: op.coeff() },
-            })
-            .collect();
-        CompiledGraph { num_inputs: g.num_inputs(), ops, outs }
+        CompiledGraph { plan: ExecPlan::new(g) }
     }
 
     pub fn num_inputs(&self) -> usize {
-        self.num_inputs
+        self.plan.num_inputs()
     }
 
     pub fn num_outputs(&self) -> usize {
-        self.outs.len()
+        self.plan.num_outputs()
     }
 
     pub fn additions(&self) -> usize {
-        self.ops.len()
+        self.plan.additions()
     }
 
     /// Execute with a caller-provided scratch buffer (len >= num_inputs +
     /// ops). Returns the outputs in `out`.
     pub fn execute_into(&self, x: &[f32], scratch: &mut Vec<f32>, out: &mut Vec<f32>) {
-        assert_eq!(x.len(), self.num_inputs, "input length mismatch");
-        scratch.clear();
-        scratch.extend_from_slice(x);
-        for op in &self.ops {
-            let v = op.ca * scratch[op.ia as usize] + op.cb * scratch[op.ib as usize];
-            scratch.push(v);
-        }
-        out.clear();
-        out.extend(self.outs.iter().map(|o| match o {
-            OutOp::Zero => 0.0,
-            OutOp::Scaled { idx, c } => c * scratch[*idx as usize],
-        }));
+        self.plan.execute_one_into(x, scratch, out);
     }
 
     /// Convenience allocating execute.
     pub fn execute(&self, x: &[f32]) -> Vec<f32> {
-        let mut scratch = Vec::with_capacity(self.num_inputs + self.ops.len());
-        let mut out = Vec::with_capacity(self.outs.len());
-        self.execute_into(x, &mut scratch, &mut out);
-        out
+        self.plan.execute_one(x)
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::graph::{AdderGraph, Operand, OutputSpec};

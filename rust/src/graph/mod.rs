@@ -9,6 +9,10 @@
 //! numerically-verified program, and the scheduler reports pipeline
 //! depth/width — the FPGA parallelism proxy (see DESIGN.md
 //! §Hardware-Adaptation).
+//!
+//! Execution hot paths live in [`crate::exec`]: this module keeps the IR,
+//! the scheduler, the verifier and the scalar interpreter (the numeric
+//! oracle the engine is tested against).
 
 mod build;
 mod compiled;
@@ -18,6 +22,7 @@ mod verify;
 mod vm;
 
 pub use build::{append_factor_chain, append_subgraph, decomposition_to_graph};
+#[allow(deprecated)]
 pub use compiled::CompiledGraph;
 pub use ir::{AddNode, AdderGraph, NodeRef, Operand, OutputSpec};
 pub use schedule::{schedule, Schedule};

@@ -2,31 +2,49 @@
 //! inputs. This simulates the FPGA datapath; numerics are f32 with exact
 //! power-of-two scaling, so results are bit-comparable with the dense
 //! product up to float addition order.
+//!
+//! This interpreter is the *numeric oracle*: every faster path
+//! ([`crate::exec::ExecPlan`], [`crate::exec::BatchEngine`]) is tested
+//! for bit-identical outputs against it. Hot paths should not call it —
+//! use the `exec` engine.
 
 use super::ir::{AdderGraph, NodeRef, OutputSpec};
 
 impl AdderGraph {
     /// Execute the graph on one input vector.
     pub fn execute(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.num_inputs(), "input length mismatch");
         let mut vals = Vec::with_capacity(self.nodes().len());
+        self.execute_reusing(x, &mut vals)
+    }
+
+    /// Execute with a caller-owned node-value buffer (reused across calls).
+    fn execute_reusing(&self, x: &[f32], vals: &mut Vec<f32>) -> Vec<f32> {
+        assert_eq!(x.len(), self.num_inputs(), "input length mismatch");
+        vals.clear();
         for node in self.nodes() {
-            let a = operand_value(x, &vals, node.a.src) * node.a.coeff();
-            let b = operand_value(x, &vals, node.b.src) * node.b.coeff();
+            let a = operand_value(x, vals.as_slice(), node.a.src) * node.a.coeff();
+            let b = operand_value(x, vals.as_slice(), node.b.src) * node.b.coeff();
             vals.push(a + b);
         }
+        let vals: &[f32] = vals;
         self.outputs()
             .iter()
             .map(|o| match o {
                 OutputSpec::Zero => 0.0,
-                OutputSpec::Ref(op) => operand_value(x, &vals, op.src) * op.coeff(),
+                OutputSpec::Ref(op) => operand_value(x, vals, op.src) * op.coeff(),
             })
             .collect()
     }
 
-    /// Execute on a batch of input vectors (reusing the node buffer).
+    /// Execute on a batch of input vectors, reusing one node buffer
+    /// across samples.
+    #[deprecated(
+        note = "use crate::exec::BatchEngine: batch-major lanes, buffer pooling and \
+                parallel chunks instead of a per-sample interpreter loop"
+    )]
     pub fn execute_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
-        xs.iter().map(|x| self.execute(x)).collect()
+        let mut vals = Vec::with_capacity(self.nodes().len());
+        xs.iter().map(|x| self.execute_reusing(x, &mut vals)).collect()
     }
 }
 
@@ -73,6 +91,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn batch_matches_single() {
         let mut g = AdderGraph::new(2);
         let n = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false));

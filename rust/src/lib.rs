@@ -19,17 +19,19 @@
 //!
 //! The crate also contains every substrate the paper depends on: a CSD
 //! (canonical signed digit) cost model for the baseline, an adder-graph IR
-//! plus a shift-add virtual machine that simulates the FPGA datapath, conv
-//! layer reformulations (full-kernel / partial-kernel), an affinity
-//! propagation implementation, synthetic dataset generators, a PJRT runtime
-//! that executes the AOT-compiled JAX training/eval artifacts, and a
-//! pipeline coordinator + serving layer.
+//! plus a shift-add virtual machine that simulates the FPGA datapath, the
+//! unified batch-major execution engine ([`exec`]) every runtime path
+//! funnels through, conv layer reformulations (full-kernel /
+//! partial-kernel), an affinity propagation implementation, synthetic
+//! dataset generators, a PJRT runtime that executes the AOT-compiled JAX
+//! training/eval artifacts, and a pipeline coordinator + serving layer.
 
 pub mod util;
 pub mod tensor;
 pub mod quant;
 pub mod lcc;
 pub mod graph;
+pub mod exec;
 pub mod cluster;
 pub mod prune;
 pub mod share;

@@ -29,6 +29,17 @@ impl Layer1 {
         }
     }
 
+    /// Batched evaluation. The LCC stage routes the whole batch through
+    /// the `exec` engine's batch-major kernels; the other stages map the
+    /// scalar path per sample (their inner product is already dense).
+    pub fn apply_batch(&self, xs_kept: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        match self {
+            Layer1::Dense(w) => xs_kept.iter().map(|x| w.matvec(x)).collect(),
+            Layer1::Shared(s) => xs_kept.iter().map(|x| s.apply(x)).collect(),
+            Layer1::SharedLcc(s) => s.apply_batch(xs_kept),
+        }
+    }
+
     /// Additions to evaluate layer 1 (the quantity Fig. 2's ratio uses).
     pub fn additions(&self, fmt: FixedPointFormat) -> usize {
         match self {
@@ -61,7 +72,28 @@ pub struct CompressedMlp {
 impl CompressedMlp {
     pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
         let x_kept: Vec<f32> = self.kept.iter().map(|&i| x[i]).collect();
-        let mut h = self.layer1.apply(&x_kept);
+        let h = self.layer1.apply(&x_kept);
+        self.head(h)
+    }
+
+    /// Batched forward: gather the kept features per sample, run layer 1
+    /// through its batch path (the LCC stage uses the `exec` engine's
+    /// lane-major kernels), then the dense head per sample.
+    pub fn forward_batch<X: AsRef<[f32]>>(&self, xs: &[X]) -> Vec<Vec<f32>> {
+        let kept: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| {
+                let x = x.as_ref();
+                self.kept.iter().map(|&i| x[i]).collect()
+            })
+            .collect();
+        let hs = self.layer1.apply_batch(&kept);
+        hs.into_iter().map(|h| self.head(h)).collect()
+    }
+
+    /// Bias + ReLU + second layer + bias (identical for both paths, so
+    /// batch and scalar forwards stay bit-identical).
+    fn head(&self, mut h: Vec<f32>) -> Vec<f32> {
         for (hv, &b) in h.iter_mut().zip(&self.b1) {
             *hv = (*hv + b).max(0.0);
         }
@@ -73,12 +105,18 @@ impl CompressedMlp {
     }
 
     pub fn accuracy(&self, data: &Dataset) -> f64 {
+        const EVAL_CHUNK: usize = 64;
         let mut correct = 0usize;
-        for i in 0..data.len() {
-            let pred = argmax(&self.forward_one(data.example(i)));
-            if pred == data.labels[i] as usize {
-                correct += 1;
+        let mut start = 0usize;
+        while start < data.len() {
+            let end = (start + EVAL_CHUNK).min(data.len());
+            let xs: Vec<&[f32]> = (start..end).map(|i| data.example(i)).collect();
+            for (k, y) in self.forward_batch(&xs).iter().enumerate() {
+                if argmax(y) == data.labels[start + k] as usize {
+                    correct += 1;
+                }
             }
+            start = end;
         }
         correct as f64 / data.len().max(1) as f64
     }
@@ -185,6 +223,19 @@ mod tests {
         let y = m.forward_one(&x);
         // all-zero active inputs -> logits == bias path (all zeros here)
         assert!(y.iter().all(|&v| v == 0.0), "{y:?}");
+    }
+
+    #[test]
+    fn forward_batch_matches_forward_one_every_stage() {
+        let mut rng = Rng::new(17);
+        let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(20, 1.0)).collect();
+        for stage in 0..3 {
+            let (m, _) = build(stage);
+            let batch = m.forward_batch(&xs);
+            for (x, y) in xs.iter().zip(&batch) {
+                assert_eq!(*y, m.forward_one(x), "stage {stage}");
+            }
+        }
     }
 
     #[test]

@@ -55,6 +55,43 @@ impl HostTensor {
         }
     }
 
+    /// Build a rank-2 `[padded_rows, dim]` f32 tensor from sample rows,
+    /// zero-padding to `padded_rows` (the serve layer's bridge from
+    /// request batches to fixed-batch artifacts).
+    pub fn from_rows_padded(rows: &[Vec<f32>], padded_rows: usize, dim: usize) -> Result<Self> {
+        if rows.len() > padded_rows {
+            bail!("{} rows exceed padded batch {padded_rows}", rows.len());
+        }
+        let mut flat = vec![0.0f32; padded_rows * dim];
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != dim {
+                bail!("row {i}: {} values, want {dim}", row.len());
+            }
+            flat[i * dim..(i + 1) * dim].copy_from_slice(row);
+        }
+        Ok(HostTensor::F32(vec![padded_rows, dim], flat))
+    }
+
+    /// Split a rank-2 f32 tensor into its sample rows — the bridge from
+    /// artifact outputs to the `exec`/serve per-sample representation.
+    pub fn to_rows(&self) -> Result<Vec<Vec<f32>>> {
+        self.to_rows_first(usize::MAX)
+    }
+
+    /// Like [`HostTensor::to_rows`] but converts only the first `n` rows
+    /// (cheaply dropping batch padding instead of materializing it).
+    pub fn to_rows_first(&self, n: usize) -> Result<Vec<Vec<f32>>> {
+        match self {
+            HostTensor::F32(dims, data) if dims.len() == 2 && dims[1] > 0 => {
+                if data.len() != dims[0] * dims[1] {
+                    bail!("inconsistent tensor: {} values for dims {dims:?}", data.len());
+                }
+                Ok(data.chunks(dims[1]).take(n).map(|c| c.to_vec()).collect())
+            }
+            _ => bail!("expected rank-2 f32 tensor, got {:?} {:?}", self.dtype(), self.dims()),
+        }
+    }
+
     pub fn validate(&self, spec: &TensorSpec) -> Result<()> {
         if self.dtype() != spec.dtype {
             bail!("dtype mismatch: got {:?}, want {:?}", self.dtype(), spec.dtype);
@@ -136,5 +173,22 @@ mod tests {
         let t = HostTensor::scalar_f32(0.5);
         assert_eq!(t.dims(), &[1]);
         assert_eq!(t.first(), 0.5);
+    }
+
+    #[test]
+    fn rows_roundtrip_with_padding() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let t = HostTensor::from_rows_padded(&rows, 3, 2).unwrap();
+        assert_eq!(t.dims(), &[3, 2]);
+        let back = t.to_rows().unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0], rows[0]);
+        assert_eq!(back[1], rows[1]);
+        assert_eq!(back[2], vec![0.0, 0.0]); // padding
+        let first = t.to_rows_first(2).unwrap();
+        assert_eq!(first, rows, "to_rows_first drops the padding rows");
+        assert!(HostTensor::from_rows_padded(&rows, 1, 2).is_err());
+        assert!(HostTensor::from_rows_padded(&rows, 4, 3).is_err());
+        assert!(HostTensor::I32(vec![2, 2], vec![0; 4]).to_rows().is_err());
     }
 }

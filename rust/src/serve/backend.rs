@@ -1,9 +1,15 @@
-//! Inference backends for the serving layer.
+//! Inference backends for the serving layer. Every adder-graph path
+//! funnels through the unified [`crate::exec`] engine: the compressed
+//! model backend batches whole requests through
+//! [`CompressedMlp::forward_batch`], and [`ExecutorBackend`] serves any
+//! [`Executor`] (raw graph serving, future sharded/multi-backend
+//! engines) directly.
 
+use crate::exec::Executor;
 use crate::nn::compressed::CompressedMlp;
-use crate::nn::mlp::{INPUT, OUTPUT};
+use crate::nn::mlp::INPUT;
 use crate::runtime::{HostTensor, PjrtService};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Evaluates one batch of flattened inputs to one output vector each.
@@ -15,14 +21,16 @@ pub trait BatchEvaluator: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// The compressed model on the shift-add VM (the "FPGA" path).
+/// The compressed model on the unified execution engine (the "FPGA"
+/// path): the batcher's whole batch is evaluated batch-major instead of
+/// sample by sample.
 pub struct CompressedMlpBackend {
     pub model: Arc<CompressedMlp>,
 }
 
 impl BatchEvaluator for CompressedMlpBackend {
     fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        Ok(xs.iter().map(|x| self.model.forward_one(x)).collect())
+        Ok(self.model.forward_batch(xs))
     }
 
     fn max_batch(&self) -> usize {
@@ -30,7 +38,44 @@ impl BatchEvaluator for CompressedMlpBackend {
     }
 
     fn name(&self) -> &'static str {
-        "compressed-vm"
+        "compressed-exec"
+    }
+}
+
+/// Serve a bare adder-graph executor: requests are the graph inputs,
+/// responses its outputs. The extension point for serving future
+/// [`Executor`] implementations without a model wrapper.
+pub struct ExecutorBackend {
+    exec: Arc<dyn Executor>,
+    max_batch: usize,
+}
+
+impl ExecutorBackend {
+    pub fn new(exec: Arc<dyn Executor>, max_batch: usize) -> Self {
+        ExecutorBackend { exec, max_batch: max_batch.max(1) }
+    }
+}
+
+impl BatchEvaluator for ExecutorBackend {
+    fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        for (i, x) in xs.iter().enumerate() {
+            if x.len() != self.exec.num_inputs() {
+                bail!(
+                    "request {i}: {} inputs, executor wants {}",
+                    x.len(),
+                    self.exec.num_inputs()
+                );
+            }
+        }
+        Ok(self.exec.execute_batch(xs))
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn name(&self) -> &'static str {
+        "adder-exec"
     }
 }
 
@@ -56,17 +101,10 @@ impl BatchEvaluator for PjrtMlpBackend {
     fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(xs.len());
         for chunk in xs.chunks(self.batch) {
-            let mut flat = vec![0.0f32; self.batch * INPUT];
-            for (i, x) in chunk.iter().enumerate() {
-                flat[i * INPUT..(i + 1) * INPUT].copy_from_slice(x);
-            }
             let mut inputs = self.params.clone();
-            inputs.push(HostTensor::F32(vec![self.batch, INPUT], flat));
+            inputs.push(HostTensor::from_rows_padded(chunk, self.batch, INPUT)?);
             let outs = self.service.call("mlp_fwd", inputs)?;
-            let logits = outs[0].as_f32()?;
-            for i in 0..chunk.len() {
-                out.push(logits[i * OUTPUT..(i + 1) * OUTPUT].to_vec());
-            }
+            out.extend(outs[0].to_rows_first(chunk.len())?);
         }
         Ok(out)
     }
@@ -83,6 +121,8 @@ impl BatchEvaluator for PjrtMlpBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::BatchEngine;
+    use crate::graph::{AdderGraph, Operand, OutputSpec};
     use crate::nn::compressed::Layer1;
     use crate::tensor::Matrix;
 
@@ -104,5 +144,17 @@ mod tests {
         assert_eq!(ys.len(), 2);
         assert_eq!(ys[0], vec![3.0]); // relu(1)+relu(2)
         assert_eq!(ys[1], vec![3.0]); // relu(3)+relu(-4)=3
+    }
+
+    #[test]
+    fn executor_backend_serves_raw_graphs() {
+        let mut g = AdderGraph::new(2);
+        let n = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false));
+        g.set_outputs(vec![OutputSpec::Ref(n)]);
+        let be = ExecutorBackend::new(Arc::new(BatchEngine::new(&g)), 16);
+        let ys = be.eval_batch(&[vec![1.0, 2.0], vec![3.0, 0.5]]).unwrap();
+        assert_eq!(ys, vec![vec![5.0], vec![4.0]]);
+        assert!(be.eval_batch(&[vec![1.0]]).is_err(), "arity must be validated");
+        assert_eq!(be.name(), "adder-exec");
     }
 }

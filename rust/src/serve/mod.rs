@@ -4,12 +4,13 @@
 //!
 //! Requests are queued; a batcher thread drains up to `max_batch`
 //! requests (waiting at most `batch_timeout`) and hands the batch to a
-//! [`BatchEvaluator`]. Two backends are provided: the compressed
-//! shift-add model (VM execution — what the FPGA would run) and the
-//! dense PJRT executable (the DSP baseline).
+//! [`BatchEvaluator`]. Backends: the compressed model on the unified
+//! [`crate::exec`] engine (batch-major — what the FPGA would run), a raw
+//! [`crate::exec::Executor`] server, and the dense PJRT executable (the
+//! DSP baseline).
 
 mod backend;
 mod server;
 
-pub use backend::{BatchEvaluator, CompressedMlpBackend, PjrtMlpBackend};
+pub use backend::{BatchEvaluator, CompressedMlpBackend, ExecutorBackend, PjrtMlpBackend};
 pub use server::{MutexEvaluator, Server, ServerStats};

@@ -8,7 +8,9 @@
 //! composition with an LCC graph.
 
 use crate::cluster::Clustering;
-use crate::graph::{AdderGraph, CompiledGraph};
+use crate::config::ExecConfig;
+use crate::exec::{BatchEngine, Executor};
+use crate::graph::AdderGraph;
 use crate::lcc::{decompose, LccConfig, LccDecomposition};
 use crate::quant::{matrix_csd_adders, FixedPointFormat};
 use crate::tensor::Matrix;
@@ -73,11 +75,16 @@ impl SharedLayer {
     }
 
     /// Decompose the centroid matrix with LCC; returns the combined
-    /// shared+LCC representation.
+    /// shared+LCC representation (default engine tuning).
     pub fn with_lcc(&self, cfg: &LccConfig) -> SharedLcc {
+        self.with_lcc_exec(cfg, ExecConfig::default())
+    }
+
+    /// Like [`SharedLayer::with_lcc`] with explicit engine tuning.
+    pub fn with_lcc_exec(&self, cfg: &LccConfig, exec: ExecConfig) -> SharedLcc {
         let decomposition = decompose(&self.centroids, cfg);
-        let compiled = CompiledGraph::new(decomposition.graph());
-        SharedLcc { layer: self.clone(), decomposition, compiled }
+        let engine = BatchEngine::with_config(decomposition.graph(), exec);
+        SharedLcc { layer: self.clone(), decomposition, engine }
     }
 }
 
@@ -87,9 +94,9 @@ impl SharedLayer {
 pub struct SharedLcc {
     pub layer: SharedLayer,
     pub decomposition: LccDecomposition,
-    /// flattened VM form of the LCC graph (perf: the serving/accuracy
-    /// hot path executes this per example — see EXPERIMENTS.md §Perf)
-    compiled: CompiledGraph,
+    /// batch-major execution engine over the LCC graph (the serving /
+    /// accuracy hot path — see EXPERIMENTS.md §Perf)
+    engine: BatchEngine,
 }
 
 impl SharedLcc {
@@ -98,9 +105,21 @@ impl SharedLcc {
         self.layer.segment_additions() + self.decomposition.additions()
     }
 
-    /// Evaluate y = LCC(G) segsum(x) through the compiled shift-add VM.
+    /// Evaluate y = LCC(G) segsum(x) through the execution engine.
     pub fn apply(&self, x: &[f32]) -> Vec<f32> {
-        self.compiled.execute(&self.layer.segment_sums(x))
+        self.engine.execute_one(&self.layer.segment_sums(x))
+    }
+
+    /// Batched evaluation: segment-sum every sample, then run the whole
+    /// batch through the engine's lane-major kernels.
+    pub fn apply_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let sums: Vec<Vec<f32>> = xs.iter().map(|x| self.layer.segment_sums(x)).collect();
+        self.engine.execute_batch(&sums)
+    }
+
+    /// The engine executing the LCC program.
+    pub fn engine(&self) -> &BatchEngine {
+        &self.engine
     }
 
     /// The LCC program over the centroid inputs.
@@ -187,6 +206,22 @@ mod tests {
         let num: f64 = y_ref.iter().zip(&y_lcc).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
         let den: f64 = y_ref.iter().map(|&a| (a as f64).powi(2)).sum();
         assert!(num / den.max(1e-12) < 1e-2, "rel err {}", num / den);
+    }
+
+    #[test]
+    fn shared_lcc_apply_batch_matches_apply() {
+        let w = grouped_matrix(16, 3, 5, 7);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        let slcc = SharedLayer::from_clustering(&w, &c)
+            .with_lcc_exec(&LccConfig::fs(), ExecConfig::serial());
+        let mut rng = Rng::new(8);
+        let xs: Vec<Vec<f32>> = (0..11).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        let batch = slcc.apply_batch(&xs);
+        assert_eq!(batch.len(), xs.len());
+        for (x, y) in xs.iter().zip(&batch) {
+            assert_eq!(*y, slcc.apply(x), "batch path must match scalar path");
+        }
+        assert_eq!(slcc.engine().num_inputs(), slcc.layer.num_clusters());
     }
 
     #[test]

@@ -1,0 +1,136 @@
+//! Property test: the batch-major execution engine is equivalent to the
+//! naive interpreter oracle on random adder graphs and random batches.
+//!
+//! The engine evaluates the same `mul, mul, add` expression per node in
+//! topological order as the oracle (no FMA contraction, no
+//! reassociation), so the primary assertion is **bit-identical** outputs.
+//! A secondary tolerance sweep (documented slack `1e-5 * (1 + |y|)`, the
+//! float-reassociation budget) guards the invariant even if a future
+//! kernel rewrite introduces a different-but-legal summation order.
+
+use lccnn::config::ExecConfig;
+use lccnn::exec::{BatchEngine, Executor, NaiveExecutor};
+use lccnn::graph::{AdderGraph, Operand, OutputSpec};
+use lccnn::util::Rng;
+
+/// Random DAG: mixed depth/width, scaled+negated operands, some Zero and
+/// scaled outputs — the full IR surface.
+fn random_graph(rng: &mut Rng) -> AdderGraph {
+    let inputs = 1 + rng.below(12);
+    let mut g = AdderGraph::new(inputs);
+    let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+    let nodes = rng.below(80);
+    for _ in 0..nodes {
+        let a = refs[rng.below(refs.len())].scaled(rng.below(9) as i32 - 4, rng.f32() < 0.5);
+        let b = refs[rng.below(refs.len())].scaled(rng.below(9) as i32 - 4, rng.f32() < 0.5);
+        refs.push(g.push_add(a, b));
+    }
+    let outs = (0..1 + rng.below(8))
+        .map(|_| {
+            if rng.f32() < 0.15 {
+                OutputSpec::Zero
+            } else {
+                OutputSpec::Ref(
+                    refs[rng.below(refs.len())].scaled(rng.below(3) as i32 - 1, rng.f32() < 0.5),
+                )
+            }
+        })
+        .collect();
+    g.set_outputs(outs);
+    g
+}
+
+fn engine_configs() -> Vec<(&'static str, ExecConfig)> {
+    vec![
+        ("serial", ExecConfig { threads: 1, chunk: 8, ..ExecConfig::default() }),
+        (
+            "chunk-parallel",
+            ExecConfig { threads: 4, chunk: 4, parallel_min_batch: 2, ..ExecConfig::default() },
+        ),
+        (
+            "level-parallel",
+            ExecConfig {
+                threads: 3,
+                chunk: 4096,
+                parallel_min_batch: usize::MAX,
+                level_parallel_min_ops: 1,
+                ..ExecConfig::default()
+            },
+        ),
+    ]
+}
+
+#[test]
+fn prop_engine_bit_identical_to_oracle() {
+    let mut rng = Rng::new(0xE8EC);
+    for trial in 0..25 {
+        let g = random_graph(&mut rng);
+        let oracle = NaiveExecutor::new(g.clone());
+        for &b in &[0usize, 1, 2, 7, 33, 65] {
+            let xs: Vec<Vec<f32>> =
+                (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let want = oracle.execute_batch(&xs);
+            for (name, cfg) in engine_configs() {
+                let engine = BatchEngine::with_config(&g, cfg);
+                let got = engine.execute_batch(&xs);
+                assert_eq!(got.len(), b, "trial {trial} {name} b {b}");
+                for s in 0..b {
+                    assert_eq!(
+                        got[s], want[s],
+                        "trial {trial} engine {name} batch {b} sample {s}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_engine_within_reassociation_tolerance() {
+    // redundant with bit-equality today; keeps the documented contract
+    // (1e-5 relative) if a kernel ever changes summation order
+    let mut rng = Rng::new(0xBA7C);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let oracle = NaiveExecutor::new(g.clone());
+        let engine = BatchEngine::with_config(
+            &g,
+            ExecConfig { threads: 2, chunk: 8, parallel_min_batch: 4, ..ExecConfig::default() },
+        );
+        let xs: Vec<Vec<f32>> = (0..17).map(|_| rng.normal_vec(g.num_inputs(), 2.0)).collect();
+        let want = oracle.execute_batch(&xs);
+        let got = engine.execute_batch(&xs);
+        for (ws, gs) in want.iter().zip(&got) {
+            for (w, g) in ws.iter().zip(gs) {
+                assert!(
+                    (w - g).abs() <= 1e-5 * (1.0 + w.abs()),
+                    "outside reassociation tolerance: {w} vs {g}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_execute_one_matches_batch_row() {
+    let mut rng = Rng::new(0x51);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let oracle = NaiveExecutor::new(g.clone());
+        let engine = BatchEngine::with_config(&g, ExecConfig::serial());
+        let x: Vec<f32> = rng.normal_vec(g.num_inputs(), 1.0);
+        let one = engine.execute_one(&x);
+        assert_eq!(one, oracle.execute_one(&x));
+        assert_eq!(one, engine.execute_batch(&[x.clone()])[0]);
+    }
+}
+
+#[test]
+fn engine_reports_graph_shape() {
+    let mut rng = Rng::new(9);
+    let g = random_graph(&mut rng);
+    let engine = BatchEngine::new(&g);
+    assert_eq!(engine.num_inputs(), g.num_inputs());
+    assert_eq!(engine.num_outputs(), g.num_outputs());
+    assert_eq!(engine.plan().additions(), g.additions());
+}
