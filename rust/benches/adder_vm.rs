@@ -7,7 +7,7 @@
 //!     cargo bench --bench adder_vm
 #![allow(deprecated)]
 
-use lccnn::config::ExecConfig;
+use lccnn::config::{ExecConfig, PoolMode};
 use lccnn::exec::{BatchEngine, Executor};
 use lccnn::graph::{schedule, CompiledGraph};
 use lccnn::lcc::{decompose, LccConfig};
@@ -27,7 +27,7 @@ fn main() {
     let mut t = Table::new(
         &format!("adder-graph execution, us/sample (batch {BATCH} for the engine columns)"),
         &["matrix", "algo", "adds", "depth", "max width", "interp", "scalar plan",
-          "batch x1", "parallel", "par speedup", "dense"],
+          "batch x1", "par scoped", "par pool", "pool speedup", "dense"],
     );
     for &(n, k) in &[(300usize, 30usize), (300, 60), (64, 9), (192, 3)] {
         let w = Matrix::randn(n, k, 0.5, &mut rng);
@@ -66,12 +66,31 @@ fn main() {
                 std::hint::black_box(&ys);
             });
 
-            let parallel = BatchEngine::with_config(
+            let scoped = BatchEngine::with_config(
                 g,
-                ExecConfig { chunk: 64, parallel_min_batch: 128, ..ExecConfig::default() },
+                ExecConfig {
+                    chunk: 64,
+                    parallel_min_batch: 128,
+                    pool_mode: PoolMode::Scoped,
+                    ..ExecConfig::default()
+                },
             );
-            let par_us = per_sample_us(BATCH, 3, 30, || {
-                parallel.execute_batch_into(std::hint::black_box(&xs), &mut ys);
+            let scoped_us = per_sample_us(BATCH, 3, 30, || {
+                scoped.execute_batch_into(std::hint::black_box(&xs), &mut ys);
+                std::hint::black_box(&ys);
+            });
+
+            let pooled = BatchEngine::with_config(
+                g,
+                ExecConfig {
+                    chunk: 64,
+                    parallel_min_batch: 128,
+                    pool_mode: PoolMode::Persistent,
+                    ..ExecConfig::default()
+                },
+            );
+            let pooled_us = per_sample_us(BATCH, 3, 30, || {
+                pooled.execute_batch_into(std::hint::black_box(&xs), &mut ys);
                 std::hint::black_box(&ys);
             });
 
@@ -84,8 +103,9 @@ fn main() {
                 format!("{interp_us:.2}"),
                 format!("{scalar_us:.2}"),
                 format!("{batch_us:.2}"),
-                format!("{par_us:.2}"),
-                format!("{:.1}x", scalar_us / par_us.max(1e-9)),
+                format!("{scoped_us:.2}"),
+                format!("{pooled_us:.2}"),
+                format!("{:.2}x", scoped_us / pooled_us.max(1e-9)),
                 format!("{dense_us:.2}"),
             ]);
         }
@@ -93,8 +113,11 @@ fn main() {
     println!("{}", t.render());
     println!("interp = per-sample graph interpreter (oracle); scalar plan = seed");
     println!("CompiledGraph path; batch x1 = exec::BatchEngine lane-major, one");
-    println!("thread; parallel = chunks across cores. depth = FPGA pipeline");
+    println!("thread; par scoped = chunks across per-call scoped threads; par");
+    println!("pool = same chunks on the persistent worker pool (pool speedup =");
+    println!("scoped/pool, the per-call spawn tax). depth = FPGA pipeline");
     println!("latency in adder stages; max width = peak simultaneous adders.");
     println!("The addition count, not wall time, is the hardware cost model —");
     println!("the engine columns measure the *simulation/serving* hot path.");
+    println!("worker pool after run: {:?}", lccnn::exec::global_pool().stats());
 }

@@ -4,7 +4,7 @@
 //!     cargo bench --bench serve_latency
 
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
-use lccnn::config::ServeConfig;
+use lccnn::config::{ExecConfig, PoolMode, ServeConfig};
 use lccnn::lcc::LccConfig;
 use lccnn::nn::compressed::{CompressedMlp, Layer1};
 use lccnn::nn::mlp::MlpParams;
@@ -18,18 +18,28 @@ use lccnn::util::Rng;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn compressed_model(params: &MlpParams) -> CompressedMlp {
+fn compressed_model(params: &MlpParams, exec: ExecConfig) -> CompressedMlp {
     let w1 = synthetic_reg_weights(0, 120);
     let compact = compact_columns(&w1, 1e-6);
     let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
     let shared = SharedLayer::from_clustering(&compact.weights, &clustering);
     CompressedMlp {
         kept: compact.kept,
-        layer1: Layer1::SharedLcc(shared.with_lcc(&LccConfig::fs())),
+        layer1: Layer1::SharedLcc(shared.with_lcc_exec(&LccConfig::fs(), exec)),
         b1: params.b1.clone(),
         w2: params.w2.clone(),
         b2: params.b2.clone(),
     }
+}
+
+/// Engine tuning that parallelizes at serving batch sizes, so the two
+/// dispatch modes (per-call scoped spawns vs the persistent pool) are
+/// actually exercised on the latency path — exactly the workload the
+/// pool exists for. chunk 4 so a batch of 8 already splits into 2
+/// parallel chunks (chunk parallelism needs n_chunks > 1; burst 1 stays
+/// serial in both modes by construction).
+fn serving_exec(mode: PoolMode) -> ExecConfig {
+    ExecConfig { chunk: 4, parallel_min_batch: 8, pool_mode: mode, ..ExecConfig::default() }
 }
 
 fn run(backend: Arc<dyn BatchEvaluator>, name: &str, burst: usize, n: usize, t: &mut Table) {
@@ -66,12 +76,16 @@ fn main() {
         &["backend", "burst", "req/s", "p50 us", "p99 us", "mean batch"],
     );
     for burst in [1usize, 8, 32] {
-        let model = Arc::new(compressed_model(&params));
-        run(Arc::new(CompressedMlpBackend { model }), "compressed-exec", burst, n, &mut t);
+        let model = Arc::new(compressed_model(&params, serving_exec(PoolMode::Persistent)));
+        run(Arc::new(CompressedMlpBackend { model }), "compressed-exec/pool", burst, n, &mut t);
+    }
+    for burst in [1usize, 8, 32] {
+        let model = Arc::new(compressed_model(&params, serving_exec(PoolMode::Scoped)));
+        run(Arc::new(CompressedMlpBackend { model }), "compressed-exec/scoped", burst, n, &mut t);
     }
     // the pre-exec-engine behaviour (forward_one per sample) for comparison
     for burst in [1usize, 8, 32] {
-        let model = Arc::new(compressed_model(&params));
+        let model = Arc::new(compressed_model(&params, ExecConfig::default()));
         let scalar = MutexEvaluator::new(
             move |xs: &[Vec<f32>]| Ok(xs.iter().map(|x| model.forward_one(x)).collect()),
             64,
@@ -97,4 +111,10 @@ fn main() {
         Err(e) => eprintln!("dense-pjrt rows skipped: {e:#}"),
     }
     println!("{}", t.render());
+    println!("compressed-exec rows parallelize at serving batches (chunk 4,");
+    println!("min batch 8, so batches of 8+ split into 2+ chunks): /pool");
+    println!("dispatches on the persistent worker pool, /scoped spawns+joins");
+    println!("threads per batch — their delta is the per-call spawn tax on");
+    println!("the latency path. burst 1 rows are serial in both modes.");
+    println!("worker pool after run: {:?}", lccnn::exec::global_pool().stats());
 }

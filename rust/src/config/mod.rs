@@ -6,4 +6,6 @@ mod toml;
 mod types;
 
 pub use toml::{parse_toml, TomlValue};
-pub use types::{ExecConfig, LccAlgoConfig, MlpPipelineConfig, ResnetPipelineConfig, ServeConfig};
+pub use types::{
+    ExecConfig, LccAlgoConfig, MlpPipelineConfig, PoolMode, ResnetPipelineConfig, ServeConfig,
+};

@@ -152,6 +152,29 @@ impl Default for ServeConfig {
     }
 }
 
+/// How the exec engine dispatches its parallel kernels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PoolMode {
+    /// spawn + join `std::thread::scope` workers per `execute_batch`
+    /// call — the PR-1 behaviour, kept as a fallback and so the
+    /// equivalence suite can diff the two dispatch paths
+    Scoped,
+    /// dispatch onto the persistent worker pool
+    /// (`crate::exec::WorkerPool`): zero thread spawns after warmup
+    #[default]
+    Persistent,
+}
+
+impl PoolMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scoped" => Some(PoolMode::Scoped),
+            "persistent" | "pool" => Some(PoolMode::Persistent),
+            _ => None,
+        }
+    }
+}
+
 /// Tuning for the adder-graph execution engine (`crate::exec`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExecConfig {
@@ -160,13 +183,22 @@ pub struct ExecConfig {
     /// samples per lane chunk (the batch-major lane width)
     pub chunk: usize,
     /// minimum batch size before chunks are spread across threads —
-    /// below this, thread spawn overhead beats the parallelism (serving
+    /// below this, dispatch overhead beats the parallelism (serving
     /// latency path stays single-threaded)
     pub parallel_min_batch: usize,
     /// minimum ops in an ASAP level before the ops of that level are
     /// split across threads for a *single* chunk (wide-graph, small-batch
     /// workloads)
     pub level_parallel_min_ops: usize,
+    /// parallel dispatch strategy: persistent pool (default) or per-call
+    /// scoped threads
+    pub pool_mode: PoolMode,
+    /// idle pool workers spin this long (µs) polling for work before
+    /// parking on the condvar (0 = park immediately)
+    pub pool_spin_us: u64,
+    /// parked pool workers re-check for work/shutdown at this interval
+    /// (ms); bounds worst-case shutdown latency
+    pub pool_park_ms: u64,
 }
 
 impl Default for ExecConfig {
@@ -176,6 +208,9 @@ impl Default for ExecConfig {
             chunk: 64,
             parallel_min_batch: 128,
             level_parallel_min_ops: 8192,
+            pool_mode: PoolMode::Persistent,
+            pool_spin_us: 20,
+            pool_park_ms: 100,
         }
     }
 }
@@ -188,23 +223,35 @@ impl ExecConfig {
 
     /// Environment overrides, one per field: `LCCNN_EXEC_THREADS`,
     /// `LCCNN_EXEC_CHUNK`, `LCCNN_EXEC_PARALLEL_MIN_BATCH`,
-    /// `LCCNN_EXEC_LEVEL_MIN_OPS`.
+    /// `LCCNN_EXEC_LEVEL_MIN_OPS`, `LCCNN_EXEC_POOL_MODE`
+    /// (`scoped`|`persistent`), `LCCNN_EXEC_POOL_SPIN_US`,
+    /// `LCCNN_EXEC_POOL_PARK_MS`.
     pub fn from_env() -> Self {
-        fn env_usize(name: &str) -> Option<usize> {
+        fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
             std::env::var(name).ok().and_then(|v| v.parse().ok())
         }
         let mut c = ExecConfig::default();
-        if let Some(v) = env_usize("LCCNN_EXEC_THREADS") {
+        if let Some(v) = env_parse::<usize>("LCCNN_EXEC_THREADS") {
             c.threads = v;
         }
-        if let Some(v) = env_usize("LCCNN_EXEC_CHUNK") {
+        if let Some(v) = env_parse::<usize>("LCCNN_EXEC_CHUNK") {
             c.chunk = v.max(1);
         }
-        if let Some(v) = env_usize("LCCNN_EXEC_PARALLEL_MIN_BATCH") {
+        if let Some(v) = env_parse::<usize>("LCCNN_EXEC_PARALLEL_MIN_BATCH") {
             c.parallel_min_batch = v;
         }
-        if let Some(v) = env_usize("LCCNN_EXEC_LEVEL_MIN_OPS") {
+        if let Some(v) = env_parse::<usize>("LCCNN_EXEC_LEVEL_MIN_OPS") {
             c.level_parallel_min_ops = v;
+        }
+        if let Some(m) = std::env::var("LCCNN_EXEC_POOL_MODE").ok().as_deref().and_then(PoolMode::parse)
+        {
+            c.pool_mode = m;
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_EXEC_POOL_SPIN_US") {
+            c.pool_spin_us = v;
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_EXEC_POOL_PARK_MS") {
+            c.pool_park_ms = v;
         }
         c
     }
@@ -232,6 +279,16 @@ impl ExecConfig {
         }
         if let Some(v) = read("level_parallel_min_ops") {
             c.level_parallel_min_ops = v;
+        }
+        if let Some(v) = get(&t, "exec", "pool_mode").and_then(TomlValue::as_str).and_then(PoolMode::parse)
+        {
+            c.pool_mode = v;
+        }
+        if let Some(v) = read("pool_spin_us") {
+            c.pool_spin_us = v as u64;
+        }
+        if let Some(v) = read("pool_park_ms") {
+            c.pool_park_ms = v as u64;
         }
         Ok(c)
     }
@@ -273,6 +330,7 @@ mod tests {
     fn exec_defaults_and_toml_overrides() {
         let d = ExecConfig::default();
         assert!(d.chunk > 0);
+        assert_eq!(d.pool_mode, PoolMode::Persistent);
         assert_eq!(ExecConfig::serial().threads, 1);
         let dir = std::env::temp_dir().join(format!("lccnn-exec-cfg-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -284,5 +342,23 @@ mod tests {
         assert_eq!(c.chunk, 16);
         assert_eq!(c.level_parallel_min_ops, 5);
         assert_eq!(c.parallel_min_batch, d.parallel_min_batch);
+        assert_eq!(c.pool_mode, d.pool_mode, "untouched pool fields keep defaults");
+    }
+
+    #[test]
+    fn pool_mode_parse_and_toml_overrides() {
+        assert_eq!(PoolMode::parse("scoped"), Some(PoolMode::Scoped));
+        assert_eq!(PoolMode::parse("PERSISTENT"), Some(PoolMode::Persistent));
+        assert_eq!(PoolMode::parse("pool"), Some(PoolMode::Persistent));
+        assert_eq!(PoolMode::parse("nope"), None);
+        let dir = std::env::temp_dir().join(format!("lccnn-pool-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("p.toml");
+        std::fs::write(&p, "[exec]\npool_mode = \"scoped\"\npool_spin_us = 0\npool_park_ms = 7\n")
+            .unwrap();
+        let c = ExecConfig::from_toml(&p).unwrap();
+        assert_eq!(c.pool_mode, PoolMode::Scoped);
+        assert_eq!(c.pool_spin_us, 0);
+        assert_eq!(c.pool_park_ms, 7);
     }
 }

@@ -3,40 +3,49 @@
 
 use super::plan::ExecPlan;
 use super::pool::BufferPool;
+use super::workers::{self, WorkerPool};
 use super::Executor;
-use crate::config::ExecConfig;
+use crate::config::{ExecConfig, PoolMode};
 use crate::graph::AdderGraph;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Batch-major adder-graph executor.
 ///
 /// A batch of `B` samples is split into chunks of `cfg.chunk` samples;
 /// each chunk is evaluated lane-wise (every graph value holds a
-/// contiguous chunk-wide lane). Chunks run in parallel on scoped threads
-/// when the batch is large enough (`cfg.parallel_min_batch`); for small
-/// batches of very wide graphs the engine instead splits the independent
-/// ops *within* each ASAP level across threads
-/// (`cfg.level_parallel_min_ops`). Lane buffers are recycled through a
-/// [`BufferPool`], so steady-state execution does not allocate them.
+/// contiguous chunk-wide lane). Chunks run in parallel when the batch is
+/// large enough (`cfg.parallel_min_batch`); for small batches of very
+/// wide graphs the engine instead splits the independent ops *within*
+/// each ASAP level across workers (`cfg.level_parallel_min_ops`). Lane
+/// buffers are recycled through a [`BufferPool`], so steady-state
+/// execution does not allocate them.
 ///
-/// Parallelism uses `std::thread::scope` (workers borrow the batch), so
-/// each parallel `execute_batch` spawns and joins its workers. That
-/// overhead is why `parallel_min_batch` defaults above the serving
-/// layer's batch sizes: the latency path stays spawn-free, and the
-/// throughput path (offline eval, benches) amortizes the spawns over
-/// large batches. A persistent scoped worker pool is a known follow-up
-/// (ROADMAP).
+/// Parallel work is dispatched per `cfg.pool_mode`: `Persistent`
+/// (default) runs it on a lazily-started [`WorkerPool`] — shared
+/// process-wide unless the engine was built with its own via
+/// [`BatchEngine::with_workers`] — so steady-state `execute_batch`
+/// spawns no threads; `Scoped` keeps the PR-1 per-call
+/// `std::thread::scope` spawn/join path as a fallback and for
+/// differential testing (`rust/tests/exec_equivalence.rs` diffs the
+/// two).
 #[derive(Debug)]
 pub struct BatchEngine {
     plan: ExecPlan,
     cfg: ExecConfig,
     pool: BufferPool,
+    workers: Arc<WorkerPool>,
 }
 
 impl Clone for BatchEngine {
     fn clone(&self) -> Self {
-        // the pool is a cache, not state: a clone starts with an empty one
-        BatchEngine { plan: self.plan.clone(), cfg: self.cfg, pool: BufferPool::new() }
+        // the buffer pool is a cache, not state: a clone starts with an
+        // empty one; the worker pool is shared infrastructure
+        BatchEngine {
+            plan: self.plan.clone(),
+            cfg: self.cfg,
+            pool: BufferPool::new(),
+            workers: Arc::clone(&self.workers),
+        }
     }
 }
 
@@ -50,8 +59,22 @@ impl BatchEngine {
         Self::from_plan(ExecPlan::new(g), cfg)
     }
 
+    /// Like [`BatchEngine::with_config`] with an engine-private worker
+    /// pool instead of the process-wide one (isolation, tests).
+    pub fn with_workers(g: &AdderGraph, cfg: ExecConfig, workers: Arc<WorkerPool>) -> Self {
+        Self::from_plan_with_workers(ExecPlan::new(g), cfg, workers)
+    }
+
     pub fn from_plan(plan: ExecPlan, cfg: ExecConfig) -> Self {
-        BatchEngine { plan, cfg, pool: BufferPool::new() }
+        Self::from_plan_with_workers(plan, cfg, workers::global_pool())
+    }
+
+    pub fn from_plan_with_workers(
+        plan: ExecPlan,
+        cfg: ExecConfig,
+        workers: Arc<WorkerPool>,
+    ) -> Self {
+        BatchEngine { plan, cfg, pool: BufferPool::new(), workers }
     }
 
     pub fn plan(&self) -> &ExecPlan {
@@ -62,16 +85,14 @@ impl BatchEngine {
         &self.cfg
     }
 
+    /// The worker pool parallel dispatch runs on (shared process-wide
+    /// unless the engine was built with its own).
+    pub fn worker_pool(&self) -> &Arc<WorkerPool> {
+        &self.workers
+    }
+
     fn resolved_threads(&self) -> usize {
-        // hard cap: a misconfigured thread count must never translate
-        // into unbounded OS-thread spawns in the kernels below
-        const MAX_THREADS: usize = 1024;
-        let t = if self.cfg.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            self.cfg.threads
-        };
-        t.clamp(1, MAX_THREADS)
+        workers::resolve_threads(self.cfg.threads)
     }
 }
 
@@ -103,25 +124,44 @@ impl Executor for BatchEngine {
             let jobs: Mutex<Vec<(&[Vec<f32>], &mut [Vec<f32>])>> =
                 Mutex::new(xs.chunks(chunk).zip(ys.chunks_mut(chunk)).collect());
             let workers = threads.min(n_chunks);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| {
-                        let mut buf = self.pool.take();
-                        loop {
-                            let job = jobs.lock().unwrap().pop();
-                            match job {
-                                Some((xc, yc)) => self.plan.eval_lanes(xc, &mut buf, yc),
-                                None => break,
-                            }
+            let drain = || {
+                let mut buf = self.pool.take();
+                loop {
+                    let job = jobs.lock().unwrap().pop();
+                    match job {
+                        Some((xc, yc)) => self.plan.eval_lanes(xc, &mut buf, yc),
+                        None => break,
+                    }
+                }
+                self.pool.put(buf);
+            };
+            match self.cfg.pool_mode {
+                PoolMode::Persistent => {
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(workers);
+                    for _ in 0..workers {
+                        tasks.push(Box::new(&drain));
+                    }
+                    if let Err(e) = self.workers.run_scoped(tasks) {
+                        panic!("exec worker pool: {e}");
+                    }
+                }
+                PoolMode::Scoped => {
+                    std::thread::scope(|scope| {
+                        for _ in 0..workers {
+                            scope.spawn(&drain);
                         }
-                        self.pool.put(buf);
                     });
                 }
-            });
+            }
         } else {
             let mut buf = self.pool.take();
             let level_parallel =
                 threads > 1 && self.plan.max_level_ops() >= self.cfg.level_parallel_min_ops;
+            let level_pool = match self.cfg.pool_mode {
+                PoolMode::Persistent => Some(&*self.workers),
+                PoolMode::Scoped => None,
+            };
             for (xc, yc) in xs.chunks(chunk).zip(ys.chunks_mut(chunk)) {
                 if level_parallel {
                     self.plan.eval_lanes_level_parallel(
@@ -130,6 +170,7 @@ impl Executor for BatchEngine {
                         yc,
                         threads,
                         self.cfg.level_parallel_min_ops,
+                        level_pool,
                     );
                 } else {
                     self.plan.eval_lanes(xc, &mut buf, yc);
@@ -176,7 +217,7 @@ mod tests {
         let mut rng = Rng::new(0);
         let g = ladder_graph(6, 50, 1);
         let plan = ExecPlan::new(&g);
-        let configs = [
+        let base = [
             ExecConfig { threads: 1, chunk: 4, ..ExecConfig::default() },
             ExecConfig { threads: 4, chunk: 4, parallel_min_batch: 2, ..ExecConfig::default() },
             ExecConfig {
@@ -187,18 +228,40 @@ mod tests {
                 ..ExecConfig::default()
             },
         ];
-        for cfg in configs {
-            let engine = BatchEngine::with_config(&g, cfg);
-            for b in [0usize, 1, 3, 17, 33] {
-                let xs: Vec<Vec<f32>> =
-                    (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
-                let ys = engine.execute_batch(&xs);
-                assert_eq!(ys.len(), b);
-                for (x, y) in xs.iter().zip(&ys) {
-                    assert_eq!(*y, plan.execute_one(x), "cfg {cfg:?} b {b}");
+        for mode in [PoolMode::Scoped, PoolMode::Persistent] {
+            for cfg in base {
+                let cfg = ExecConfig { pool_mode: mode, ..cfg };
+                let engine = BatchEngine::with_config(&g, cfg);
+                for b in [0usize, 1, 3, 17, 33] {
+                    let xs: Vec<Vec<f32>> =
+                        (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+                    let ys = engine.execute_batch(&xs);
+                    assert_eq!(ys.len(), b);
+                    for (x, y) in xs.iter().zip(&ys) {
+                        assert_eq!(*y, plan.execute_one(x), "cfg {cfg:?} b {b}");
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn engines_share_the_process_wide_pool_by_default() {
+        let a = BatchEngine::new(&ladder_graph(3, 10, 6));
+        let b = BatchEngine::new(&ladder_graph(3, 10, 7));
+        assert!(
+            std::sync::Arc::ptr_eq(a.worker_pool(), b.worker_pool()),
+            "default engines must share the global worker pool"
+        );
+        // a clone shares its source's pool; an explicit pool is private
+        assert!(std::sync::Arc::ptr_eq(a.clone().worker_pool(), a.worker_pool()));
+        let private = std::sync::Arc::new(WorkerPool::new(2, 0, 20));
+        let c = BatchEngine::with_workers(
+            &ladder_graph(3, 10, 8),
+            ExecConfig::default(),
+            std::sync::Arc::clone(&private),
+        );
+        assert!(!std::sync::Arc::ptr_eq(c.worker_pool(), a.worker_pool()));
     }
 
     #[test]

@@ -21,6 +21,14 @@
 //!   property that makes the level a single FPGA cycle). Lane buffers
 //!   come from a [`BufferPool`], so steady-state serving performs no
 //!   values-buffer allocation per batch.
+//! * [`WorkerPool`] is the persistent, lazily-started worker pool the
+//!   parallel kernels dispatch onto (default `pool_mode = persistent`):
+//!   workers park between batches instead of being spawned per call, so
+//!   steady-state `execute_batch` spawns zero threads. One process-wide
+//!   pool ([`global_pool`]) is shared by every engine unless an engine
+//!   is built with its own; `pool_mode = scoped` keeps the per-call
+//!   `std::thread::scope` path as a selectable fallback. Task panics are
+//!   isolated: the one batch fails, the pool survives.
 //! * [`Executor`] is the extension point future backends implement
 //!   (sharded engines, GPU/accelerator lowerings, remote execution). The
 //!   serving layer's `ExecutorBackend` serves any `Arc<dyn Executor>`.
@@ -37,11 +45,13 @@ mod engine;
 mod oracle;
 mod plan;
 mod pool;
+mod workers;
 
 pub use engine::BatchEngine;
 pub use oracle::NaiveExecutor;
 pub use plan::ExecPlan;
 pub use pool::BufferPool;
+pub use workers::{global_pool, PoolPanic, PoolStats, WorkerPool};
 
 /// A runtime for adder graphs: evaluates batches of input vectors to
 /// batches of output vectors. Implementations must be shareable across

@@ -1,6 +1,7 @@
 //! Lowering: adder graph + ASAP schedule → level-sorted SoA instruction
 //! stream with direct indices and precomputed coefficients.
 
+use super::workers::WorkerPool;
 use crate::graph::{schedule, AdderGraph, NodeRef, OutputSpec, Schedule};
 
 /// Output resolution: zero row or a scaled read of a value slot.
@@ -214,9 +215,11 @@ impl ExecPlan {
     }
 
     /// Like [`ExecPlan::eval_lanes`], but splits the ops of each wide
-    /// ASAP level across `threads` scoped threads. Sound because ops in
-    /// one level only read strictly earlier slots (lower levels/inputs)
-    /// and write disjoint contiguous lanes.
+    /// ASAP level across `threads` workers — dispatched onto `pool` when
+    /// given (the persistent path: no thread spawns), or onto per-level
+    /// `std::thread::scope` workers otherwise. Sound because ops in one
+    /// level only read strictly earlier slots (lower levels/inputs) and
+    /// write disjoint contiguous lanes.
     pub(crate) fn eval_lanes_level_parallel(
         &self,
         xs: &[Vec<f32>],
@@ -224,6 +227,7 @@ impl ExecPlan {
         ys: &mut [Vec<f32>],
         threads: usize,
         min_ops: usize,
+        pool: Option<&WorkerPool>,
     ) {
         let width = xs.len();
         debug_assert_eq!(ys.len(), width);
@@ -241,20 +245,37 @@ impl ExecPlan {
             let base = (self.num_inputs + lo) * width;
             let (src, rest) = buf.split_at_mut(base);
             let dst_level = &mut rest[..nops * width];
-            let threads = threads.min(nops); // never more spawns than ops
+            let threads = threads.min(nops); // never more workers than ops
             if threads <= 1 || nops < min_ops {
                 self.eval_op_span(src, dst_level, lo, width);
             } else {
                 let span = nops.div_ceil(threads);
                 let src: &[f32] = src;
-                std::thread::scope(|scope| {
-                    for (t, dspan) in dst_level.chunks_mut(span * width).enumerate() {
-                        let j0 = lo + t * span;
-                        scope.spawn(move || {
-                            self.eval_op_span(src, dspan, j0, width);
+                match pool {
+                    Some(pool) => {
+                        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                            Vec::with_capacity(threads);
+                        for (t, dspan) in dst_level.chunks_mut(span * width).enumerate() {
+                            let j0 = lo + t * span;
+                            tasks.push(Box::new(move || {
+                                self.eval_op_span(src, dspan, j0, width);
+                            }));
+                        }
+                        if let Err(e) = pool.run_scoped(tasks) {
+                            panic!("exec worker pool: {e}");
+                        }
+                    }
+                    None => {
+                        std::thread::scope(|scope| {
+                            for (t, dspan) in dst_level.chunks_mut(span * width).enumerate() {
+                                let j0 = lo + t * span;
+                                scope.spawn(move || {
+                                    self.eval_op_span(src, dspan, j0, width);
+                                });
+                            }
                         });
                     }
-                });
+                }
             }
         }
         self.read_output_lanes(buf, width, ys);
@@ -353,10 +374,15 @@ mod tests {
         for (x, y) in xs.iter().zip(&ys) {
             assert_eq!(*y, plan.execute_one(x));
         }
-        // level-parallel kernel agrees too (forced on with min_ops = 1)
+        // level-parallel kernel agrees too (forced on with min_ops = 1),
+        // on both dispatch paths
         let mut ys2: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
-        plan.eval_lanes_level_parallel(&xs, &mut buf, &mut ys2, 3, 1);
+        plan.eval_lanes_level_parallel(&xs, &mut buf, &mut ys2, 3, 1, None);
         assert_eq!(ys, ys2);
+        let wp = WorkerPool::new(2, 0, 20);
+        let mut ys3: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
+        plan.eval_lanes_level_parallel(&xs, &mut buf, &mut ys3, 3, 1, Some(&wp));
+        assert_eq!(ys, ys3);
     }
 
     #[test]

@@ -69,4 +69,45 @@ mod tests {
         }
         assert_eq!(pool.cached(), MAX_CACHED);
     }
+
+    #[test]
+    fn concurrent_take_put_conserves_buffers() {
+        // N threads each hold at most one buffer at a time, and the pool
+        // is seeded with N distinct marked buffers — so `take` can never
+        // come up empty, and at the end the exact original set must be
+        // back: nothing lost, nothing duplicated, nothing minted.
+        const N: usize = 8;
+        const LEN: usize = 16;
+        const ITERS: usize = 500;
+        let pool = BufferPool::new();
+        for i in 0..N {
+            let mut b = vec![0.0f32; LEN];
+            b[0] = i as f32;
+            pool.put(b);
+        }
+        std::thread::scope(|s| {
+            for _ in 0..N {
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..ITERS {
+                        let b = pool.take();
+                        assert_eq!(b.len(), LEN, "pool minted a fresh buffer under contention");
+                        let id = b[0] as usize;
+                        assert!(id < N, "corrupted marker {id}");
+                        pool.put(b);
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.cached(), N, "buffers lost or duplicated");
+        let mut seen = [false; N];
+        for _ in 0..N {
+            let b = pool.take();
+            assert_eq!(b.len(), LEN);
+            let id = b[0] as usize;
+            assert!(!seen[id], "buffer {id} duplicated");
+            seen[id] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "a seeded buffer went missing");
+    }
 }

@@ -1,0 +1,549 @@
+//! Persistent worker pool for the execution engine.
+//!
+//! PR 1's parallel kernels spawned and joined `std::thread::scope`
+//! workers on every `execute_batch` call; for the small per-level
+//! kernels that LCC/weight-sharing produce, that spawn tax dominates.
+//! This pool keeps workers hot instead (EIE-style: statically sized,
+//! fed through one queue), parked on a condvar between batches:
+//!
+//! * **Lazily started** — constructing a pool (or merely touching the
+//!   process-wide [`global_pool`]) spawns nothing; worker threads start
+//!   on the first dispatched task, so serial configurations never pay
+//!   for threads they do not use.
+//! * **Scoped dispatch on unscoped threads** — [`WorkerPool::run_scoped`]
+//!   accepts tasks borrowing the caller's stack (the engine's tasks
+//!   borrow the batch being executed) and does not return until every
+//!   task has run, which is what makes the lifetime erasure below sound.
+//! * **Caller participation** — the submitting thread drains *its own
+//!   call's* jobs while it waits (never another caller's, so a
+//!   low-latency batch is never held hostage by a concurrent bulk
+//!   batch), which means a zero-worker or shut-down pool still
+//!   completes every call inline, and an engine asking for `T`-way
+//!   parallelism gets the caller as one of the lanes.
+//! * **Panic isolation** — a panicking task is caught on the worker,
+//!   counted, and reported as an `Err` from `run_scoped`: the one batch
+//!   fails (the engine re-raises), the pool and any concurrent callers'
+//!   tasks are unaffected.
+//! * **Stats** — tasks run, inline (caller-side) runs, worker wakeups,
+//!   busy time, spawn/join counts; snapshot via [`WorkerPool::stats`],
+//!   published into a [`Metrics`] registry via [`WorkerPool::publish`].
+//!
+//! No crossbeam / rayon: a `Mutex<VecDeque>` injector plus a `Condvar`,
+//! with a spin-then-park idle discipline tuned by
+//! `ExecConfig::{pool_spin_us, pool_park_ms}`.
+
+use crate::config::ExecConfig;
+use crate::metrics::Metrics;
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Resolve a configured thread count (0 = one per available core) to a
+/// concrete one. Hard-capped so a misconfigured count can never turn
+/// into unbounded OS threads.
+pub(crate) fn resolve_threads(threads: usize) -> usize {
+    const MAX_THREADS: usize = 1024;
+    let t = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    t.clamp(1, MAX_THREADS)
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+#[derive(Default)]
+struct Stats {
+    threads_spawned: AtomicU64,
+    threads_joined: AtomicU64,
+    tasks_run: AtomicU64,
+    inline_runs: AtomicU64,
+    panics: AtomicU64,
+    wakeups: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// Snapshot of a pool's counters (all monotone except `workers`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// configured worker-thread count
+    pub workers: usize,
+    /// OS threads ever spawned by this pool (steady state: constant)
+    pub threads_spawned: u64,
+    /// OS threads joined back (== spawned after `shutdown`)
+    pub threads_joined: u64,
+    /// tasks executed to completion (includes inline runs)
+    pub tasks_run: u64,
+    /// tasks the submitting threads ran themselves while waiting
+    pub inline_runs: u64,
+    /// tasks that panicked (caught; their batch failed, the pool did not)
+    pub panics: u64,
+    /// times a parked worker woke (timeout or notify)
+    pub wakeups: u64,
+    /// cumulative task execution time, microseconds
+    pub busy_us: u64,
+}
+
+impl PoolStats {
+    /// Publish into a metrics registry under `exec_pool.*`. Counters use
+    /// raise-to-value semantics so republishing is idempotent.
+    pub fn publish(&self, m: &Metrics) {
+        m.gauge("exec_pool.workers", self.workers as f64);
+        m.counter_to("exec_pool.threads_spawned", self.threads_spawned);
+        m.counter_to("exec_pool.threads_joined", self.threads_joined);
+        m.counter_to("exec_pool.tasks_run", self.tasks_run);
+        m.counter_to("exec_pool.inline_runs", self.inline_runs);
+        m.counter_to("exec_pool.panics", self.panics);
+        m.counter_to("exec_pool.wakeups", self.wakeups);
+        m.counter_to("exec_pool.busy_us", self.busy_us);
+    }
+}
+
+/// One or more tasks of a `run_scoped` call panicked. The panics were
+/// contained: sibling tasks, concurrent callers and the workers
+/// themselves are unaffected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolPanic {
+    /// how many of the call's tasks panicked
+    pub tasks: usize,
+}
+
+impl fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} pooled task(s) panicked (batch failed; pool unaffected)", self.tasks)
+    }
+}
+
+/// Completion latch for one `run_scoped` call.
+struct Latch {
+    /// (tasks remaining, tasks panicked)
+    state: Mutex<(usize, usize)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { state: Mutex::new((n, 0)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        if panicked {
+            s.1 += 1;
+        }
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().0 == 0
+    }
+
+    /// Block until every task completed; returns the panic count.
+    fn wait(&self) -> usize {
+        let mut s = self.state.lock().unwrap();
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.1
+    }
+}
+
+struct Inner {
+    /// jobs tagged with their `run_scoped` call id, so a waiting caller
+    /// can drain its own call's jobs without absorbing another caller's
+    queue: Mutex<VecDeque<(u64, Job)>>,
+    available: Condvar,
+    /// queue length mirror, readable without the lock (spin phase)
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    next_call: AtomicU64,
+    spin_us: u64,
+    park_ms: u64,
+    stats: Arc<Stats>,
+}
+
+impl Inner {
+    fn push_jobs(&self, call: u64, jobs: Vec<Job>) {
+        let mut q = self.queue.lock().unwrap();
+        for job in jobs {
+            q.push_back((call, job));
+            self.pending.fetch_add(1, Ordering::Release);
+        }
+        drop(q);
+        self.available.notify_all();
+    }
+
+    /// Pop a job belonging to `call` only. Callers help with their own
+    /// work while they wait — never with another caller's, so a
+    /// low-latency batch cannot be held hostage by a concurrent bulk
+    /// batch it happens to dequeue (and a caller can always finish its
+    /// own call even on a zero-worker or shut-down pool).
+    fn try_pop_call(&self, call: u64) -> Option<Job> {
+        let mut q = self.queue.lock().unwrap();
+        let pos = q.iter().position(|(c, _)| *c == call)?;
+        self.pending.fetch_sub(1, Ordering::Release);
+        q.remove(pos).map(|(_, job)| job)
+    }
+
+    /// Worker idle discipline: spin briefly on the lock-free pending
+    /// counter, then park on the condvar. The park is bounded by
+    /// `park_ms`, so even a missed notification only delays a worker,
+    /// never wedges it. Returns `None` on shutdown.
+    fn next_job(&self) -> Option<Job> {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            if self.spin_us > 0 {
+                let deadline = Instant::now() + Duration::from_micros(self.spin_us);
+                while self.pending.load(Ordering::Acquire) == 0
+                    && !self.shutdown.load(Ordering::SeqCst)
+                    && Instant::now() < deadline
+                {
+                    std::hint::spin_loop();
+                }
+            }
+            let mut q = self.queue.lock().unwrap();
+            if let Some((_, job)) = q.pop_front() {
+                self.pending.fetch_sub(1, Ordering::Release);
+                return Some(job);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let park = Duration::from_millis(self.park_ms.max(1));
+            let (guard, _timed_out) = self.available.wait_timeout(q, park).unwrap();
+            drop(guard);
+            self.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    while let Some(job) = inner.next_job() {
+        job();
+    }
+}
+
+/// Persistent, lazily-started worker pool for the exec engine's parallel
+/// kernels. See the module docs for the dispatch/shutdown contract.
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    workers: usize,
+    started: AtomicBool,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// A pool of `workers` threads (0 is allowed: every task then runs
+    /// inline on the submitting thread), spinning `spin_us` before
+    /// parking and re-checking a park every `park_ms`.
+    pub fn new(workers: usize, spin_us: u64, park_ms: u64) -> Self {
+        WorkerPool {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                pending: AtomicUsize::new(0),
+                shutdown: AtomicBool::new(false),
+                next_call: AtomicU64::new(0),
+                spin_us,
+                park_ms,
+                stats: Arc::new(Stats::default()),
+            }),
+            workers,
+            started: AtomicBool::new(false),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Pool sized and tuned for an engine configuration.
+    pub fn for_config(cfg: &ExecConfig) -> Self {
+        WorkerPool::new(resolve_threads(cfg.threads), cfg.pool_spin_us, cfg.pool_park_ms)
+    }
+
+    /// Configured worker count (threads actually spawn on first use).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn ensure_started(&self) {
+        if self.started.load(Ordering::Acquire) {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        if self.started.load(Ordering::Acquire) || self.inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        for i in 0..self.workers {
+            let inner = Arc::clone(&self.inner);
+            let h = std::thread::Builder::new()
+                .name(format!("lccnn-exec-{i}"))
+                .spawn(move || worker_loop(&inner))
+                .expect("spawn exec pool worker");
+            self.inner.stats.threads_spawned.fetch_add(1, Ordering::Relaxed);
+            handles.push(h);
+        }
+        self.started.store(true, Ordering::Release);
+    }
+
+    /// Run every task to completion, then return. The caller drains its
+    /// own call's jobs while waiting, so the call completes even on a
+    /// zero-worker or already-shut-down pool. `Err` means one or more
+    /// tasks panicked; the panic is confined to this call.
+    pub fn run_scoped<'scope>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) -> Result<(), PoolPanic> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(());
+        }
+        self.ensure_started();
+        let latch = Arc::new(Latch::new(n));
+        let jobs: Vec<Job> = tasks
+            .into_iter()
+            .map(|task| {
+                let latch = Arc::clone(&latch);
+                let stats = Arc::clone(&self.inner.stats);
+                let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                    let start = Instant::now();
+                    let result = catch_unwind(AssertUnwindSafe(move || task()));
+                    stats.busy_ns.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    stats.tasks_run.fetch_add(1, Ordering::Relaxed);
+                    if result.is_err() {
+                        stats.panics.fetch_add(1, Ordering::Relaxed);
+                    }
+                    latch.complete(result.is_err());
+                });
+                // SAFETY: the wrapper always completes the latch (panics
+                // are caught first), and this function only returns after
+                // `latch.wait()` sees all `n` completions — so every
+                // borrow captured for 'scope strictly outlives every
+                // access the erased task makes.
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped) }
+            })
+            .collect();
+        let call = self.inner.next_call.fetch_add(1, Ordering::Relaxed);
+        self.inner.push_jobs(call, jobs);
+        // Help drain this call's own jobs while waiting: bounds the
+        // inline work to what was submitted here (another caller's bulk
+        // batch is never absorbed) while still guaranteeing completion
+        // without any worker at all.
+        while !latch.is_done() {
+            match self.inner.try_pop_call(call) {
+                Some(job) => {
+                    self.inner.stats.inline_runs.fetch_add(1, Ordering::Relaxed);
+                    job();
+                }
+                None => break,
+            }
+        }
+        let panicked = latch.wait();
+        if panicked > 0 {
+            Err(PoolPanic { tasks: panicked })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        let s = &self.inner.stats;
+        PoolStats {
+            workers: self.workers,
+            threads_spawned: s.threads_spawned.load(Ordering::Relaxed),
+            threads_joined: s.threads_joined.load(Ordering::Relaxed),
+            tasks_run: s.tasks_run.load(Ordering::Relaxed),
+            inline_runs: s.inline_runs.load(Ordering::Relaxed),
+            panics: s.panics.load(Ordering::Relaxed),
+            wakeups: s.wakeups.load(Ordering::Relaxed),
+            busy_us: s.busy_ns.load(Ordering::Relaxed) / 1_000,
+        }
+    }
+
+    /// Publish this pool's stats into a metrics registry (`exec_pool.*`).
+    pub fn publish(&self, m: &Metrics) {
+        self.stats().publish(m);
+    }
+
+    /// Stop and join every worker. Graceful: tasks of concurrent
+    /// `run_scoped` calls still complete (their callers drain inline),
+    /// and later calls keep working caller-side. Idempotent; `Drop`
+    /// calls it.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // Pair with the workers' check-then-park under the queue lock: by
+        // taking the lock before notifying, no worker can be between "saw
+        // no shutdown" and "parked" when the notification fires.
+        drop(self.inner.queue.lock().unwrap());
+        self.inner.available.notify_all();
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            if h.join().is_ok() {
+                self.inner.stats.threads_joined.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+static GLOBAL_POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// The process-wide pool every engine shares unless given its own
+/// (`BatchEngine::with_workers`). Sized from `LCCNN_EXEC_*` env at first
+/// touch; threads spawn only when parallel work is actually dispatched.
+pub fn global_pool() -> Arc<WorkerPool> {
+    Arc::clone(
+        GLOBAL_POOL.get_or_init(|| Arc::new(WorkerPool::for_config(&ExecConfig::from_env()))),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn counting_tasks(counter: &AtomicUsize, n: usize) -> Vec<Box<dyn FnOnce() + Send + '_>> {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            tasks.push(Box::new(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        tasks
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3, 0, 20);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(counting_tasks(&counter, 17)).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 17);
+        let s = pool.stats();
+        assert_eq!(s.tasks_run, 17);
+        assert!(s.threads_spawned <= 3);
+    }
+
+    #[test]
+    fn tasks_can_borrow_the_callers_stack() {
+        let pool = WorkerPool::new(2, 0, 20);
+        let mut outputs = vec![0usize; 8];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, slot) in outputs.iter_mut().enumerate() {
+                tasks.push(Box::new(move || *slot = i * i));
+            }
+            pool.run_scoped(tasks).unwrap();
+        }
+        assert_eq!(outputs, (0..8).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0, 0, 20);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(counting_tasks(&counter, 5)).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 5);
+        let s = pool.stats();
+        assert_eq!(s.threads_spawned, 0, "lazy pool must not spawn for inline work");
+        assert_eq!(s.inline_runs, 5);
+    }
+
+    #[test]
+    fn lazily_started_until_first_dispatch() {
+        let pool = WorkerPool::new(4, 0, 20);
+        assert_eq!(pool.stats().threads_spawned, 0);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(counting_tasks(&counter, 1)).unwrap();
+        assert!(pool.stats().threads_spawned <= 4);
+    }
+
+    #[test]
+    fn panic_is_isolated_to_the_call() {
+        let pool = WorkerPool::new(2, 0, 20);
+        let counter = AtomicUsize::new(0);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        tasks.push(Box::new(|| panic!("injected task failure")));
+        for _ in 0..3 {
+            tasks.push(Box::new(|| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let err = pool.run_scoped(tasks).unwrap_err();
+        assert_eq!(err.tasks, 1);
+        assert_eq!(counter.load(Ordering::SeqCst), 3, "siblings still ran");
+        assert_eq!(pool.stats().panics, 1);
+        // the pool still works afterwards
+        pool.run_scoped(counting_tasks(&counter, 4)).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn shutdown_joins_all_spawned_threads_and_stays_usable() {
+        let pool = WorkerPool::new(3, 0, 10);
+        let counter = AtomicUsize::new(0);
+        pool.run_scoped(counting_tasks(&counter, 6)).unwrap();
+        pool.shutdown();
+        let s = pool.stats();
+        assert_eq!(s.threads_joined, s.threads_spawned, "leaked worker threads");
+        pool.shutdown(); // idempotent
+        // post-shutdown calls complete inline on the caller
+        pool.run_scoped(counting_tasks(&counter, 2)).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+        assert_eq!(pool.stats().threads_spawned, s.threads_spawned, "no respawn");
+    }
+
+    #[test]
+    fn concurrent_callers_share_one_pool() {
+        let pool = WorkerPool::new(2, 0, 20);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = &pool;
+                let total = &total;
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        pool.run_scoped(counting_tasks(total, 3)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 10 * 3);
+        assert_eq!(pool.stats().tasks_run, 4 * 10 * 3);
+    }
+
+    #[test]
+    fn resolve_threads_clamps() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(7), 7);
+        assert_eq!(resolve_threads(1_000_000), 1024);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global_pool();
+        let b = global_pool();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

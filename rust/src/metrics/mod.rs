@@ -33,6 +33,15 @@ impl Metrics {
         self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
     }
 
+    /// Raise a counter to an externally tracked monotonic value, so
+    /// counters owned elsewhere (e.g. the exec pool's task totals) can be
+    /// republished idempotently without double counting.
+    pub fn counter_to(&self, name: &str, value: u64) {
+        let mut m = self.inner.lock().unwrap();
+        let c = m.counters.entry(name.to_string()).or_insert(0);
+        *c = (*c).max(value);
+    }
+
     pub fn observe(&self, name: &str, value: f64) {
         self.inner
             .lock()
@@ -98,6 +107,18 @@ mod tests {
         m.incr("a", 3);
         assert_eq!(m.counter("a"), 5);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn counter_to_is_idempotent_and_monotone() {
+        let m = Metrics::new();
+        m.counter_to("pool.tasks", 10);
+        m.counter_to("pool.tasks", 10);
+        assert_eq!(m.counter("pool.tasks"), 10, "republishing must not double count");
+        m.counter_to("pool.tasks", 25);
+        assert_eq!(m.counter("pool.tasks"), 25);
+        m.counter_to("pool.tasks", 7);
+        assert_eq!(m.counter("pool.tasks"), 25, "counters never regress");
     }
 
     #[test]

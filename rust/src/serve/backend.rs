@@ -3,7 +3,10 @@
 //! model backend batches whole requests through
 //! [`CompressedMlp::forward_batch`], and [`ExecutorBackend`] serves any
 //! [`Executor`] (raw graph serving, future sharded/multi-backend
-//! engines) directly.
+//! engines) directly. Engines dispatch parallel work on the process-wide
+//! persistent worker pool (`crate::exec::global_pool`) unless built with
+//! an engine-private one — so a server hosting many models shares one
+//! set of hot worker threads instead of spawning per batch.
 
 use crate::exec::Executor;
 use crate::nn::compressed::CompressedMlp;
@@ -156,5 +159,29 @@ mod tests {
         assert_eq!(ys, vec![vec![5.0], vec![4.0]]);
         assert!(be.eval_batch(&[vec![1.0]]).is_err(), "arity must be validated");
         assert_eq!(be.name(), "adder-exec");
+    }
+
+    #[test]
+    fn executor_backend_dispatches_on_the_worker_pool() {
+        use crate::config::{ExecConfig, PoolMode};
+        use crate::exec::WorkerPool;
+        let mut g = AdderGraph::new(2);
+        let n = g.push_add(Operand::input(0), Operand::input(1).scaled(1, false));
+        g.set_outputs(vec![OutputSpec::Ref(n)]);
+        let pool = Arc::new(WorkerPool::new(2, 0, 20));
+        let cfg = ExecConfig {
+            threads: 2,
+            chunk: 1,
+            parallel_min_batch: 2,
+            pool_mode: PoolMode::Persistent,
+            ..ExecConfig::default()
+        };
+        let be = ExecutorBackend::new(
+            Arc::new(BatchEngine::with_workers(&g, cfg, Arc::clone(&pool))),
+            16,
+        );
+        let ys = be.eval_batch(&[vec![1.0, 2.0], vec![3.0, 0.5]]).unwrap();
+        assert_eq!(ys, vec![vec![5.0], vec![4.0]]);
+        assert!(pool.stats().tasks_run > 0, "batch must have run on the pool");
     }
 }

@@ -7,7 +7,9 @@
 //! [`BatchEvaluator`]. Backends: the compressed model on the unified
 //! [`crate::exec`] engine (batch-major — what the FPGA would run), a raw
 //! [`crate::exec::Executor`] server, and the dense PJRT executable (the
-//! DSP baseline).
+//! DSP baseline). Exec-backed backends share the process-wide persistent
+//! worker pool, whose counters `Server::metrics_text` publishes
+//! alongside the serving histograms.
 
 mod backend;
 mod server;

@@ -32,6 +32,10 @@ pub struct Server {
     tx: Option<Sender<Request>>,
     worker: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    /// exec worker pool whose stats `metrics_text` publishes — the
+    /// process-wide one unless the backend's engine was built with a
+    /// private pool (see [`Server::with_pool_metrics`])
+    exec_pool: Arc<crate::exec::WorkerPool>,
 }
 
 impl Server {
@@ -45,7 +49,21 @@ impl Server {
             .name("lccnn-serve-batcher".into())
             .spawn(move || batcher_loop(rx, backend, max_batch, timeout, m))
             .expect("spawn batcher");
-        Server { tx: Some(tx), worker: Some(worker), metrics }
+        Server {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            exec_pool: crate::exec::global_pool(),
+        }
+    }
+
+    /// Report `pool`'s stats from [`Server::metrics_text`] instead of the
+    /// process-wide pool — for backends whose engine was built with an
+    /// engine-private pool (`BatchEngine::with_workers`), so the metrics
+    /// reflect the pool actually dispatching this server's batches.
+    pub fn with_pool_metrics(mut self, pool: Arc<crate::exec::WorkerPool>) -> Self {
+        self.exec_pool = pool;
+        self
     }
 
     /// Submit one request; returns a receiver for the response.
@@ -71,6 +89,17 @@ impl Server {
             p50_latency_us: p50,
             p99_latency_us: p99,
         }
+    }
+
+    /// Render the server's metrics registry as text, refreshed with the
+    /// exec worker pool's counters (`exec_pool.*`; the process-wide pool
+    /// unless overridden via [`Server::with_pool_metrics`]) — one blob
+    /// for logs and debugging. Exec-backed backends dispatch their
+    /// parallel work on that pool, so its task/busy counters belong next
+    /// to the serving latency histograms.
+    pub fn metrics_text(&self) -> String {
+        self.exec_pool.publish(&self.metrics);
+        self.metrics.render()
     }
 
     /// Stop the batcher and join (drains the queue first).
@@ -224,5 +253,32 @@ mod tests {
         let _ = server.infer(vec![1.0]);
         let stats = server.shutdown(); // must not hang
         assert!(stats.requests >= 1);
+    }
+
+    #[test]
+    fn metrics_text_includes_exec_pool_stats() {
+        let server = Server::start(echo_backend(), ServeConfig::default());
+        let _ = server.infer(vec![1.0]);
+        let text = server.metrics_text();
+        assert!(text.contains("requests"), "{text}");
+        assert!(text.contains("exec_pool.workers"), "{text}");
+        assert!(text.contains("exec_pool.tasks_run"), "{text}");
+    }
+
+    #[test]
+    fn metrics_text_can_track_a_private_pool() {
+        let pool = Arc::new(crate::exec::WorkerPool::new(2, 0, 20));
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for _ in 0..3 {
+                tasks.push(Box::new(|| {}));
+            }
+            pool.run_scoped(tasks).unwrap();
+        }
+        let server = Server::start(echo_backend(), ServeConfig::default())
+            .with_pool_metrics(Arc::clone(&pool));
+        let _ = server.infer(vec![1.0]);
+        let text = server.metrics_text();
+        assert!(text.contains("exec_pool.tasks_run = 3"), "{text}");
     }
 }

@@ -75,9 +75,12 @@ impl SharedLayer {
     }
 
     /// Decompose the centroid matrix with LCC; returns the combined
-    /// shared+LCC representation (default engine tuning).
+    /// shared+LCC representation. Engine tuning comes from the
+    /// `LCCNN_EXEC_*` environment (defaults when unset), so deployments
+    /// — and the CI exec matrix — steer every model-built engine without
+    /// code changes.
     pub fn with_lcc(&self, cfg: &LccConfig) -> SharedLcc {
-        self.with_lcc_exec(cfg, ExecConfig::default())
+        self.with_lcc_exec(cfg, ExecConfig::from_env())
     }
 
     /// Like [`SharedLayer::with_lcc`] with explicit engine tuning.

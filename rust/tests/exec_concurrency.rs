@@ -1,0 +1,168 @@
+//! Concurrency stress tests for the exec engine's persistent worker
+//! pool: many threads hammering one shared engine stay bit-identical to
+//! the oracle, a panicking task poisons only its batch, shutdown joins
+//! every worker, and — the acceptance bar — steady-state
+//! `execute_batch` spawns zero threads after warmup.
+
+use lccnn::config::{ExecConfig, PoolMode};
+use lccnn::exec::{BatchEngine, Executor, NaiveExecutor, WorkerPool};
+use lccnn::graph::{AdderGraph, Operand, OutputSpec};
+use lccnn::util::Rng;
+use std::sync::Arc;
+
+/// Random DAG with scaled/negated operands and a few outputs.
+fn random_graph(seed: u64, inputs: usize, nodes: usize) -> AdderGraph {
+    let mut rng = Rng::new(seed);
+    let mut g = AdderGraph::new(inputs);
+    let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+    for _ in 0..nodes {
+        let a = refs[rng.below(refs.len())].scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+        let b = refs[rng.below(refs.len())].scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+        refs.push(g.push_add(a, b));
+    }
+    let outs = (0..4)
+        .map(|_| OutputSpec::Ref(refs[rng.below(refs.len())].scaled(1, false)))
+        .collect();
+    g.set_outputs(outs);
+    g
+}
+
+/// Engine config that actually exercises the pool at small batches.
+fn pooled_cfg(threads: usize) -> ExecConfig {
+    ExecConfig {
+        threads,
+        chunk: 4,
+        parallel_min_batch: 8,
+        pool_mode: PoolMode::Persistent,
+        pool_spin_us: 0,
+        pool_park_ms: 20,
+        ..ExecConfig::default()
+    }
+}
+
+#[test]
+fn shared_engine_hammered_from_many_threads_matches_oracle() {
+    let g = random_graph(0xC0C0, 6, 60);
+    let oracle = NaiveExecutor::new(g.clone());
+    let engine = Arc::new(BatchEngine::with_workers(
+        &g,
+        pooled_cfg(4),
+        Arc::new(WorkerPool::new(4, 0, 20)),
+    ));
+    let shapes: [usize; 6] = [0, 1, 3, 16, 33, 64];
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let engine = Arc::clone(&engine);
+            let oracle = &oracle;
+            let g = &g;
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + t);
+                for iter in 0..20 {
+                    let b = shapes[(iter + t as usize) % shapes.len()];
+                    let xs: Vec<Vec<f32>> =
+                        (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+                    let got = engine.execute_batch(&xs);
+                    let want = oracle.execute_batch(&xs);
+                    assert_eq!(got, want, "thread {t} iter {iter} batch {b}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn steady_state_execute_batch_spawns_zero_threads_after_warmup() {
+    let g = random_graph(0x5EED, 5, 40);
+    let pool = Arc::new(WorkerPool::new(3, 0, 20));
+    let engine = BatchEngine::with_workers(&g, pooled_cfg(3), Arc::clone(&pool));
+    let mut rng = Rng::new(7);
+    let xs: Vec<Vec<f32>> = (0..48).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+    assert_eq!(pool.stats().threads_spawned, 0, "pool must start lazily");
+    let warm = engine.execute_batch(&xs);
+    let spawned = pool.stats().threads_spawned;
+    assert!(spawned >= 1 && spawned <= 3, "warmup spawns the workers once: {spawned}");
+    let tasks_after_warmup = pool.stats().tasks_run;
+    assert!(tasks_after_warmup > 0, "parallel batch must dispatch pool tasks");
+    for _ in 0..50 {
+        assert_eq!(engine.execute_batch(&xs), warm, "steady-state results must not drift");
+    }
+    let s = pool.stats();
+    assert_eq!(s.threads_spawned, spawned, "steady state spawned threads: {s:?}");
+    assert!(s.tasks_run > tasks_after_warmup, "work stopped flowing through the pool: {s:?}");
+}
+
+#[test]
+fn pool_survives_a_panicking_task() {
+    let g = random_graph(0xBAD, 3, 12);
+    let pool = Arc::new(WorkerPool::new(2, 0, 20));
+    let engine = BatchEngine::with_workers(&g, pooled_cfg(2), Arc::clone(&pool));
+    let mut rng = Rng::new(9);
+    // sample 5 has the wrong arity: the input-length assert fires inside
+    // a pooled task (batch 16 ≥ parallel_min_batch 8 → chunk dispatch)
+    let mut bad: Vec<Vec<f32>> =
+        (0..16).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+    bad[5] = vec![1.0];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.execute_batch(&bad)
+    }));
+    assert!(result.is_err(), "wrong arity must fail the batch");
+    let after_panic = pool.stats();
+    assert!(after_panic.panics >= 1, "panic not recorded: {after_panic:?}");
+    // the pool survives: same engine, same pool, good batches still match
+    // the oracle and no replacement threads were spawned
+    let oracle = NaiveExecutor::new(g.clone());
+    let good: Vec<Vec<f32>> =
+        (0..16).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+    for _ in 0..5 {
+        assert_eq!(engine.execute_batch(&good), oracle.execute_batch(&good));
+    }
+    let s = pool.stats();
+    assert_eq!(s.threads_spawned, after_panic.threads_spawned, "pool respawned workers: {s:?}");
+    assert!(s.tasks_run > after_panic.tasks_run, "pool stopped taking work: {s:?}");
+}
+
+#[test]
+fn clean_shutdown_joins_all_workers() {
+    let g = random_graph(0xD1E, 4, 30);
+    let pool = Arc::new(WorkerPool::new(4, 0, 10));
+    let engine = BatchEngine::with_workers(&g, pooled_cfg(4), Arc::clone(&pool));
+    let mut rng = Rng::new(11);
+    let xs: Vec<Vec<f32>> = (0..32).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+    let want = engine.execute_batch(&xs);
+    pool.shutdown();
+    let s = pool.stats();
+    assert!(s.threads_spawned >= 1);
+    assert_eq!(
+        s.threads_joined, s.threads_spawned,
+        "leaked worker threads after shutdown: {s:?}"
+    );
+    // graceful: the engine still answers (tasks run inline on the caller)
+    assert_eq!(engine.execute_batch(&xs), want);
+    let s2 = pool.stats();
+    assert_eq!(s2.threads_spawned, s.threads_spawned, "shutdown pool must not respawn");
+    assert!(s2.inline_runs > s.inline_runs, "post-shutdown work should run inline: {s2:?}");
+}
+
+#[test]
+fn scoped_and_persistent_modes_agree_on_a_shared_engine() {
+    let g = random_graph(0xABBA, 7, 80);
+    let scoped = BatchEngine::with_config(
+        &g,
+        ExecConfig { pool_mode: PoolMode::Scoped, ..pooled_cfg(4) },
+    );
+    let persistent = Arc::new(BatchEngine::with_workers(
+        &g,
+        pooled_cfg(4),
+        Arc::new(WorkerPool::new(4, 0, 20)),
+    ));
+    let mut rng = Rng::new(21);
+    for b in [0usize, 1, 7, 32, 65] {
+        let xs: Vec<Vec<f32>> =
+            (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+        assert_eq!(
+            scoped.execute_batch(&xs),
+            persistent.execute_batch(&xs),
+            "dispatch paths diverged at batch {b}"
+        );
+    }
+}

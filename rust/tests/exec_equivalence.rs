@@ -8,7 +8,7 @@
 //! float-reassociation budget) guards the invariant even if a future
 //! kernel rewrite introduces a different-but-legal summation order.
 
-use lccnn::config::ExecConfig;
+use lccnn::config::{ExecConfig, PoolMode};
 use lccnn::exec::{BatchEngine, Executor, NaiveExecutor};
 use lccnn::graph::{AdderGraph, Operand, OutputSpec};
 use lccnn::util::Rng;
@@ -40,8 +40,11 @@ fn random_graph(rng: &mut Rng) -> AdderGraph {
     g
 }
 
-fn engine_configs() -> Vec<(&'static str, ExecConfig)> {
-    vec![
+/// Every kernel-selection config crossed with both dispatch paths
+/// (per-call scoped threads vs the persistent worker pool) — the two
+/// must stay bit-identical.
+fn engine_configs() -> Vec<(String, ExecConfig)> {
+    let base = [
         ("serial", ExecConfig { threads: 1, chunk: 8, ..ExecConfig::default() }),
         (
             "chunk-parallel",
@@ -57,7 +60,15 @@ fn engine_configs() -> Vec<(&'static str, ExecConfig)> {
                 ..ExecConfig::default()
             },
         ),
-    ]
+    ];
+    let mut out = Vec::new();
+    for (mode_name, mode) in [("scoped", PoolMode::Scoped), ("persistent", PoolMode::Persistent)]
+    {
+        for (name, cfg) in base {
+            out.push((format!("{name}/{mode_name}"), ExecConfig { pool_mode: mode, ..cfg }));
+        }
+    }
+    out
 }
 
 #[test]
@@ -106,6 +117,49 @@ fn prop_engine_within_reassociation_tolerance() {
                     (w - g).abs() <= 1e-5 * (1.0 + w.abs()),
                     "outside reassociation tolerance: {w} vs {g}"
                 );
+            }
+        }
+    }
+}
+
+/// Degenerate-shape sweep: single-level graphs (every node reads only
+/// inputs — one ASAP level, the widest possible level for its size) and
+/// node-free graphs, at batch 0/1 and chunk-boundary sizes, across every
+/// config × pool-mode combination.
+#[test]
+fn prop_degenerate_shapes_bit_identical_to_oracle() {
+    let mut rng = Rng::new(0xF1A7);
+    for &nodes in &[0usize, 1, 48] {
+        let inputs = 2 + rng.below(6);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..nodes {
+            // operands are inputs only: the whole graph is ASAP level 1
+            let a = Operand::input(rng.below(inputs))
+                .scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+            let b = Operand::input(rng.below(inputs))
+                .scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..3)
+            .map(|_| {
+                if rng.f32() < 0.2 {
+                    OutputSpec::Zero
+                } else {
+                    OutputSpec::Ref(refs[rng.below(refs.len())].scaled(1, false))
+                }
+            })
+            .collect();
+        g.set_outputs(outs);
+        let oracle = NaiveExecutor::new(g.clone());
+        for &b in &[0usize, 1, 2, 8, 9] {
+            let xs: Vec<Vec<f32>> =
+                (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let want = oracle.execute_batch(&xs);
+            for (name, cfg) in engine_configs() {
+                let engine = BatchEngine::with_config(&g, cfg);
+                let got = engine.execute_batch(&xs);
+                assert_eq!(got, want, "nodes {nodes} engine {name} batch {b}");
             }
         }
     }

@@ -8,10 +8,11 @@ use lccnn::config::ServeConfig;
 use lccnn::nn::compressed::{CompressedMlp, Layer1};
 use lccnn::nn::mlp::MlpParams;
 use lccnn::runtime::{HostTensor, PjrtService};
-use lccnn::serve::{CompressedMlpBackend, PjrtMlpBackend, Server};
+use lccnn::serve::{CompressedMlpBackend, MutexEvaluator, PjrtMlpBackend, Server};
 use lccnn::tensor::Matrix;
 use lccnn::util::Rng;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn dense_as_compressed(params: &MlpParams) -> CompressedMlp {
     CompressedMlp {
@@ -69,6 +70,40 @@ fn pjrt_backend_matches_vm_backend() {
     }
     let stats = server.shutdown();
     assert_eq!(stats.requests, 40);
+}
+
+/// Shutdown ordering: every request submitted before shutdown either
+/// completes or gets a clean error — never a hang — and the latency
+/// percentiles the final stats report are monotone (p50 ≤ p99).
+#[test]
+fn shutdown_with_in_flight_requests_never_hangs() {
+    // a deliberately slow backend so shutdown races a deep queue
+    let slow: Arc<dyn lccnn::serve::BatchEvaluator> = Arc::new(MutexEvaluator::new(
+        |xs: &[Vec<f32>]| {
+            std::thread::sleep(Duration::from_millis(1));
+            Ok(xs.iter().map(|x| vec![x.iter().sum()]).collect())
+        },
+        8,
+        "slow-echo",
+    ));
+    let cfg = ServeConfig { max_batch: 8, batch_timeout_us: 100, ..Default::default() };
+    let server = Server::start(slow, cfg);
+    let rxs: Vec<_> = (0..40).map(|i| server.submit(vec![i as f32])).collect();
+    let stats = server.shutdown(); // drains the queue, then joins
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(y)) => assert_eq!(y, vec![i as f32], "request {i} got the wrong answer"),
+            Ok(Err(e)) => panic!("request {i}: drained shutdown must complete, got error {e}"),
+            Err(e) => panic!("request {i} hung or was dropped across shutdown: {e}"),
+        }
+    }
+    assert_eq!(stats.requests, 40);
+    assert!(stats.batches >= 1);
+    assert!(
+        stats.p50_latency_us <= stats.p99_latency_us,
+        "percentiles must be monotone: {stats:?}"
+    );
+    assert!(stats.p50_latency_us >= 0.0 && stats.p99_latency_us.is_finite(), "{stats:?}");
 }
 
 #[test]
