@@ -7,5 +7,6 @@ mod types;
 
 pub use toml::{parse_toml, TomlValue};
 pub use types::{
-    ExecConfig, LccAlgoConfig, MlpPipelineConfig, PoolMode, ResnetPipelineConfig, ServeConfig,
+    serve_models_from_env, serve_models_from_toml, ExecConfig, LccAlgoConfig, MlpPipelineConfig,
+    ModelSpec, PoolMode, ResnetPipelineConfig, ServeConfig,
 };

@@ -152,6 +152,135 @@ impl Default for ServeConfig {
     }
 }
 
+impl ServeConfig {
+    fn overrides(t: &Sections, mut c: ServeConfig) -> ServeConfig {
+        let read = |key: &str| -> Option<usize> {
+            get(t, "serve", key)
+                .and_then(TomlValue::as_int)
+                .and_then(|v| usize::try_from(v).ok())
+        };
+        if let Some(v) = read("max_batch") {
+            c.max_batch = v.max(1);
+        }
+        if let Some(v) = read("batch_timeout_us") {
+            c.batch_timeout_us = v as u64;
+        }
+        if let Some(v) = read("workers") {
+            c.workers = v;
+        }
+        if let Some(v) = read("queue_capacity") {
+            c.queue_capacity = v;
+        }
+        c
+    }
+
+    /// Overrides from a `[serve]` TOML section, over the defaults.
+    pub fn from_toml(path: &Path) -> Result<Self> {
+        Self::from_toml_over(path, ServeConfig::default())
+    }
+
+    /// Overrides from a `[serve]` TOML section layered over `base` —
+    /// keys the file does not set keep `base`'s values, so env- or
+    /// flag-derived settings survive a config file that only lists
+    /// models.
+    pub fn from_toml_over(path: &Path, base: ServeConfig) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let t = parse_toml(&text)?;
+        Ok(Self::overrides(&t, base))
+    }
+
+    /// Environment overrides: `LCCNN_SERVE_MAX_BATCH`,
+    /// `LCCNN_SERVE_BATCH_TIMEOUT_US`.
+    pub fn from_env() -> Self {
+        fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        let mut c = ServeConfig::default();
+        if let Some(v) = env_parse::<usize>("LCCNN_SERVE_MAX_BATCH") {
+            c.max_batch = v.max(1);
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_SERVE_BATCH_TIMEOUT_US") {
+            c.batch_timeout_us = v;
+        }
+        c
+    }
+}
+
+/// One model for the multi-model server: a name, the checkpoint path to
+/// load it from (a 2-D `.npy` or a checkpoint dir), and an optional
+/// per-model engine tuning override.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub path: String,
+    /// per-model `ExecConfig` override (`[serve.exec.<name>]` in TOML);
+    /// `None` = use the deployment-wide default
+    pub exec: Option<ExecConfig>,
+}
+
+impl ModelSpec {
+    /// Parse a `name=path` CLI/env spec.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (name, path) = s.split_once('=')?;
+        let (name, path) = (name.trim(), path.trim());
+        if name.is_empty() || path.is_empty() {
+            return None;
+        }
+        Some(ModelSpec { name: name.to_string(), path: path.to_string(), exec: None })
+    }
+}
+
+/// Models from a `[serve.models]` TOML section (`name = "path"` per
+/// line). A model may carry engine tuning in its own
+/// `[serve.exec.<name>]` section, layered over the file's `[exec]`
+/// section (which itself layers over the defaults).
+pub fn serve_models_from_toml(path: &Path) -> Result<Vec<ModelSpec>> {
+    let text = std::fs::read_to_string(path)?;
+    let t = parse_toml(&text)?;
+    let has_file_exec = t.contains_key("exec");
+    let base = ExecConfig::overrides(&t, "exec", ExecConfig::default());
+    let mut out = Vec::new();
+    if let Some(models) = t.get("serve.models") {
+        for (name, v) in models {
+            let Some(p) = v.as_str() else {
+                anyhow::bail!("[serve.models] {name}: path must be a string, got {v:?}");
+            };
+            // a file-level [exec] section applies to *every* model of
+            // the file; a [serve.exec.<name>] section layers on top
+            let section = format!("serve.exec.{name}");
+            let exec = if t.contains_key(&section) {
+                Some(ExecConfig::overrides(&t, &section, base))
+            } else if has_file_exec {
+                Some(base)
+            } else {
+                None
+            };
+            out.push(ModelSpec { name: name.clone(), path: p.to_string(), exec });
+        }
+    }
+    Ok(out)
+}
+
+/// Models from the `LCCNN_SERVE_MODELS` environment variable — a
+/// comma-separated list of `name=path` specs. Malformed entries are
+/// skipped with a warning.
+pub fn serve_models_from_env() -> Vec<ModelSpec> {
+    let Ok(raw) = std::env::var("LCCNN_SERVE_MODELS") else {
+        return Vec::new();
+    };
+    raw.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| {
+            let spec = ModelSpec::parse(s);
+            if spec.is_none() {
+                log::warn!("LCCNN_SERVE_MODELS: skipping malformed spec {s:?}");
+            }
+            spec
+        })
+        .collect()
+}
+
 /// How the exec engine dispatches its parallel kernels.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum PoolMode {
@@ -256,18 +385,17 @@ impl ExecConfig {
         c
     }
 
-    /// Overrides from an `[exec]` TOML section.
-    pub fn from_toml(path: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(path)?;
-        let t = parse_toml(&text)?;
+    /// Apply the overrides of one parsed TOML section onto `base`.
+    /// Shared by `[exec]` and the per-model `[serve.exec.<name>]`
+    /// sections of a multi-model serve config.
+    fn overrides(t: &Sections, section: &str, mut c: ExecConfig) -> ExecConfig {
         // negative values are nonsense here (0 already means "auto" for
         // threads): ignore them instead of letting `as usize` wrap
         let read = |key: &str| -> Option<usize> {
-            get(&t, "exec", key)
+            get(t, section, key)
                 .and_then(TomlValue::as_int)
                 .and_then(|v| usize::try_from(v).ok())
         };
-        let mut c = ExecConfig::default();
         if let Some(v) = read("threads") {
             c.threads = v;
         }
@@ -280,7 +408,8 @@ impl ExecConfig {
         if let Some(v) = read("level_parallel_min_ops") {
             c.level_parallel_min_ops = v;
         }
-        if let Some(v) = get(&t, "exec", "pool_mode").and_then(TomlValue::as_str).and_then(PoolMode::parse)
+        if let Some(v) =
+            get(t, section, "pool_mode").and_then(TomlValue::as_str).and_then(PoolMode::parse)
         {
             c.pool_mode = v;
         }
@@ -290,7 +419,14 @@ impl ExecConfig {
         if let Some(v) = read("pool_park_ms") {
             c.pool_park_ms = v as u64;
         }
-        Ok(c)
+        c
+    }
+
+    /// Overrides from an `[exec]` TOML section.
+    pub fn from_toml(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let t = parse_toml(&text)?;
+        Ok(Self::overrides(&t, "exec", ExecConfig::default()))
     }
 }
 
@@ -343,6 +479,64 @@ mod tests {
         assert_eq!(c.level_parallel_min_ops, 5);
         assert_eq!(c.parallel_min_batch, d.parallel_min_batch);
         assert_eq!(c.pool_mode, d.pool_mode, "untouched pool fields keep defaults");
+    }
+
+    #[test]
+    fn serve_from_toml_and_model_specs() {
+        let dir = std::env::temp_dir().join(format!("lccnn-serve-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.toml");
+        std::fs::write(
+            &p,
+            "[exec]\nthreads = 2\n\
+             [serve]\nmax_batch = 8\nbatch_timeout_us = 500\n\
+             [serve.models]\nmlp = \"ckpts/mlp\"\nresnet = \"ckpts/resnet\"\n\
+             [serve.exec.resnet]\nchunk = 16\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&p).unwrap();
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.batch_timeout_us, 500);
+        assert_eq!(c.workers, ServeConfig::default().workers, "untouched fields keep defaults");
+        let models = serve_models_from_toml(&p).unwrap();
+        assert_eq!(models.len(), 2);
+        let mlp = models.iter().find(|m| m.name == "mlp").unwrap();
+        assert_eq!(mlp.path, "ckpts/mlp");
+        let mlp_exec = mlp.exec.expect("file-level [exec] applies to every model");
+        assert_eq!(mlp_exec.threads, 2);
+        assert_eq!(mlp_exec.chunk, ExecConfig::default().chunk, "no per-model override");
+        let resnet = models.iter().find(|m| m.name == "resnet").unwrap();
+        let exec = resnet.exec.expect("per-model override");
+        assert_eq!(exec.chunk, 16, "per-model key applied");
+        assert_eq!(exec.threads, 2, "per-model override layers over [exec]");
+    }
+
+    #[test]
+    fn serve_from_toml_over_layers_instead_of_resetting() {
+        let dir = std::env::temp_dir().join(format!("lccnn-serve-layer-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("models-only.toml");
+        std::fs::write(&p, "[serve.models]\nmlp = \"ckpts/mlp\"\n").unwrap();
+        let base = ServeConfig { max_batch: 4, batch_timeout_us: 77, ..Default::default() };
+        let c = ServeConfig::from_toml_over(&p, base).unwrap();
+        assert_eq!(c.max_batch, 4, "file without [serve] must not reset the base");
+        assert_eq!(c.batch_timeout_us, 77);
+    }
+
+    #[test]
+    fn model_spec_parse() {
+        assert_eq!(
+            ModelSpec::parse("mlp=ckpts/mlp"),
+            Some(ModelSpec { name: "mlp".into(), path: "ckpts/mlp".into(), exec: None })
+        );
+        assert_eq!(
+            ModelSpec::parse(" a = b=c "),
+            Some(ModelSpec { name: "a".into(), path: "b=c".into(), exec: None }),
+            "first '=' splits; paths may contain '='"
+        );
+        assert!(ModelSpec::parse("no-equals").is_none());
+        assert!(ModelSpec::parse("=path").is_none());
+        assert!(ModelSpec::parse("name=").is_none());
     }
 
     #[test]

@@ -5,22 +5,41 @@
 //!   fig2    [--lambda F] [...]    run the Fig. 2 MLP pipeline for one λ
 //!   table1  [--steps N] [...]     run the Table-I residual-CNN pipeline
 //!   decompose --rows N --cols K   LCC vs CSD on a random matrix
+//!   serve   [--model name=path]...  multi-model registry server driver
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
-//! form --name value.
+//! form --name value and may repeat (`--model a=p1 --model b=p2`).
 
 use anyhow::{bail, Context, Result};
-use lccnn::config::{MlpPipelineConfig, ResnetPipelineConfig};
+use lccnn::config::{ExecConfig, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
 use lccnn::report::{percent, ratio, Table};
 use lccnn::runtime::Runtime;
+use lccnn::serve::{ModelRegistry, Server};
 use lccnn::tensor::Matrix;
 use lccnn::util::{logger, Rng};
 use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut flags = HashMap::new();
+/// Parsed `--name value` flags; a flag may repeat (all values kept, in
+/// order — `get` returns the last, `get_all` every one).
+struct Flags(HashMap<String, Vec<String>>);
+
+impl Flags {
+    fn get(&self, name: &str) -> Option<&String> {
+        self.0.get(name).and_then(|vs| vs.last())
+    }
+
+    fn get_all(&self, name: &str) -> &[String] {
+        self.0.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+}
+
+fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut flags: HashMap<String, Vec<String>> = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         let k = &args[i];
@@ -28,13 +47,13 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
             bail!("expected --flag, got {k:?}");
         }
         let v = args.get(i + 1).with_context(|| format!("missing value for {k}"))?;
-        flags.insert(k[2..].to_string(), v.clone());
+        flags.entry(k[2..].to_string()).or_default().push(v.clone());
         i += 2;
     }
-    Ok(flags)
+    Ok(Flags(flags))
 }
 
-fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> Result<T>
+fn flag<T: std::str::FromStr>(flags: &Flags, name: &str, default: T) -> Result<T>
 where
     T::Err: std::fmt::Display,
 {
@@ -54,7 +73,7 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-fn cmd_fig2(flags: HashMap<String, String>) -> Result<()> {
+fn cmd_fig2(flags: Flags) -> Result<()> {
     let mut cfg = MlpPipelineConfig::default();
     cfg.lambda = flag(&flags, "lambda", cfg.lambda)?;
     cfg.train_steps = flag(&flags, "steps", cfg.train_steps)?;
@@ -94,7 +113,7 @@ fn cmd_fig2(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_table1(flags: HashMap<String, String>) -> Result<()> {
+fn cmd_table1(flags: Flags) -> Result<()> {
     let mut cfg = ResnetPipelineConfig::default();
     cfg.train_steps = flag(&flags, "steps", cfg.train_steps)?;
     cfg.lambda = flag(&flags, "lambda", cfg.lambda)?;
@@ -124,7 +143,7 @@ fn cmd_table1(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_decompose(flags: HashMap<String, String>) -> Result<()> {
+fn cmd_decompose(flags: Flags) -> Result<()> {
     let rows: usize = flag(&flags, "rows", 128)?;
     let cols: usize = flag(&flags, "cols", 16)?;
     let seed: u64 = flag(&flags, "seed", 0)?;
@@ -152,13 +171,140 @@ fn cmd_decompose(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: stand up the multi-model registry server and drive it with
+/// synthetic traffic — the smoke/demo driver for a deployment.
+///
+/// Models come from (layered, all optional): `LCCNN_SERVE_MODELS` env,
+/// `--config file.toml` (`[serve]` + `[serve.models]` +
+/// `[serve.exec.<name>]`), repeatable `--model name=path` flags, and
+/// `--demo N` synthetic LCC models. Checkpoints are 2-D `.npy` weights
+/// (file or dir) LCC-decomposed at load.
+fn cmd_serve(flags: Flags) -> Result<()> {
+    let mut serve_cfg = ServeConfig::from_env();
+    let mut specs: Vec<ModelSpec> = lccnn::config::serve_models_from_env();
+    if let Some(cfg_path) = flags.get("config") {
+        let p = Path::new(cfg_path);
+        serve_cfg = ServeConfig::from_toml_over(p, serve_cfg)?;
+        specs.extend(lccnn::config::serve_models_from_toml(p)?);
+    }
+    for s in flags.get_all("model") {
+        specs.push(ModelSpec::parse(s).with_context(|| format!("--model {s:?} (use name=path)"))?);
+    }
+    serve_cfg.max_batch = flag(&flags, "max-batch", serve_cfg.max_batch)?.max(1);
+    serve_cfg.batch_timeout_us = flag(&flags, "timeout-us", serve_cfg.batch_timeout_us)?;
+    let demo: usize = flag(&flags, "demo", 0)?;
+    let requests: usize = flag(&flags, "requests", 256)?;
+    let clients: usize = flag(&flags, "client-threads", 4)?.max(1);
+    let seed: u64 = flag(&flags, "seed", 0)?;
+
+    let base_exec = ExecConfig::from_env();
+    let registry = Arc::new(ModelRegistry::new());
+    for spec in &specs {
+        let entry = registry.load_checkpoint(
+            &spec.name,
+            Path::new(&spec.path),
+            &LccConfig::fs(),
+            spec.exec.unwrap_or(base_exec),
+            serve_cfg.max_batch,
+        )?;
+        println!("loaded {:?} from {} ({:?} inputs)", spec.name, spec.path, entry.input_dim());
+    }
+    let mut rng = Rng::new(seed);
+    for i in 0..demo {
+        // distinct shapes per demo model so routing bugs show up as
+        // arity errors instead of silently-wrong numbers
+        let (rows, cols) = (48 + 16 * i, 12 + 4 * i);
+        let w = Matrix::randn(rows, cols, 0.5, &mut rng);
+        let d = decompose(&w, &LccConfig::fs());
+        let name = format!("demo-{i}");
+        registry.register_graph(&name, d.graph(), base_exec, serve_cfg.max_batch);
+        println!("demo model {name:?}: {rows}x{cols} weight, LCC graph {} adds", d.additions());
+    }
+    if registry.is_empty() {
+        bail!("no models to serve: pass --model name=path, --config file.toml or --demo N");
+    }
+
+    let names = registry.names();
+    println!(
+        "serving {} model(s) [{}] with max_batch {} timeout {}us, {} client thread(s) x {} requests",
+        names.len(),
+        names.join(", "),
+        serve_cfg.max_batch,
+        serve_cfg.batch_timeout_us,
+        clients,
+        requests,
+    );
+    let server = Server::start_registry(Arc::clone(&registry), serve_cfg);
+    let per_client = requests.div_ceil(clients);
+    let errors = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..clients {
+            let server = &server;
+            let registry = &registry;
+            let names = &names;
+            let errors = &errors;
+            let mut rng = rng.fork(t as u64 + 1);
+            scope.spawn(move || {
+                for k in 0..per_client {
+                    let name = &names[(t + k) % names.len()];
+                    let Some(dim) = registry.get(name).and_then(|e| e.input_dim()) else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    };
+                    match server.infer_model(name, rng.normal_vec(dim, 1.0)) {
+                        Ok(y) if !y.is_empty() => {}
+                        Ok(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            eprintln!("request to {name:?} failed: {e}");
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let mut t = Table::new(
+        "per-model serving stats",
+        &["model", "requests", "batches", "mean batch", "p50 us", "p99 us"],
+    );
+    // enumerate from the metrics (covers models hot-removed mid-run),
+    // falling back to the roster if nothing was served
+    let mut seen = server.models_seen();
+    if seen.is_empty() {
+        seen = names.clone();
+    }
+    for name in &seen {
+        let s = server.model_stats(name);
+        t.add_row(vec![
+            name.clone(),
+            s.requests.to_string(),
+            s.batches.to_string(),
+            format!("{:.1}", s.mean_batch_size),
+            format!("{:.1}", s.p50_latency_us),
+            format!("{:.1}", s.p99_latency_us),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", server.metrics_text());
+    let stats = server.shutdown();
+    let failed = errors.load(Ordering::Relaxed);
+    if failed > 0 {
+        bail!("{failed} of {} requests failed", clients * per_client);
+    }
+    println!("served {} requests across {} models, 0 errors", stats.requests, names.len());
+    Ok(())
+}
+
 fn main() -> Result<()> {
     logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: lccnn <info|fig2|table1|decompose> [--flag value ...]");
+            eprintln!("usage: lccnn <info|fig2|table1|decompose|serve> [--flag value ...]");
             return Ok(());
         }
     };
@@ -167,6 +313,7 @@ fn main() -> Result<()> {
         "fig2" => cmd_fig2(parse_flags(&rest)?),
         "table1" => cmd_table1(parse_flags(&rest)?),
         "decompose" => cmd_decompose(parse_flags(&rest)?),
+        "serve" => cmd_serve(parse_flags(&rest)?),
         other => bail!("unknown command {other:?}"),
     }
 }

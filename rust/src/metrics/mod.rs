@@ -56,6 +56,22 @@ impl Metrics {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
 
+    /// All counters whose name starts with `prefix`, sorted by name —
+    /// how per-group series are enumerated without this registry
+    /// knowing the group members (the serving layer's
+    /// `Server::models_seen` recovers the `model.<name>.*` roster,
+    /// including hot-removed models, this way).
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    }
+
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
         self.inner.lock().unwrap().gauges.get(name).copied()
     }
@@ -119,6 +135,22 @@ mod tests {
         assert_eq!(m.counter("pool.tasks"), 25);
         m.counter_to("pool.tasks", 7);
         assert_eq!(m.counter("pool.tasks"), 25, "counters never regress");
+    }
+
+    #[test]
+    fn counters_with_prefix_selects_the_group() {
+        let m = Metrics::new();
+        m.incr("model.a.requests", 2);
+        m.incr("model.b.requests", 5);
+        m.incr("model.a.batches", 1);
+        m.incr("requests", 7);
+        let a = m.counters_with_prefix("model.a.");
+        assert_eq!(
+            a,
+            vec![("model.a.batches".to_string(), 1), ("model.a.requests".to_string(), 2)]
+        );
+        assert_eq!(m.counters_with_prefix("model.").len(), 3);
+        assert!(m.counters_with_prefix("nope.").is_empty());
     }
 
     #[test]

@@ -1,18 +1,33 @@
-//! Serving layer: an in-process inference service with a dynamic batcher
-//! and a worker pool — the deployment context the paper motivates
-//! (FPGA-accelerated datacenter inference, Sec. I).
+//! Serving layer: an in-process, multi-model inference service — the
+//! deployment context the paper motivates (FPGA-accelerated datacenter
+//! inference, Sec. I), where one process hosts many compressed models
+//! at once.
 //!
-//! Requests are queued; a batcher thread drains up to `max_batch`
-//! requests (waiting at most `batch_timeout`) and hands the batch to a
-//! [`BatchEvaluator`]. Backends: the compressed model on the unified
-//! [`crate::exec`] engine (batch-major — what the FPGA would run), a raw
-//! [`crate::exec::Executor`] server, and the dense PJRT executable (the
-//! DSP baseline). Exec-backed backends share the process-wide persistent
+//! * [`ModelRegistry`] owns the named engines (`Arc<dyn Executor>`
+//!   behind [`BatchEvaluator`] adapters): register an executor, lower a
+//!   graph, or load an `.npy` checkpoint at runtime, each with its own
+//!   `ExecConfig`; hot add/remove is safe under load.
+//! * [`Router`] tags every submit with its resolved model entry and
+//!   batches per model with fair round-robin draining (deep backlog on
+//!   one model cannot starve the rest).
+//! * [`Server`] is the front end: `submit_to(model, x)` from any
+//!   thread; the historical single-model API (`Server::start` +
+//!   `submit`) is a thin shim that serves its backend as
+//!   [`DEFAULT_MODEL`].
+//!
+//! Backends: the compressed model on the unified [`crate::exec`] engine
+//! (batch-major — what the FPGA would run), any raw
+//! [`crate::exec::Executor`], and the dense PJRT executable (the DSP
+//! baseline). Exec-backed models share the process-wide persistent
 //! worker pool, whose counters `Server::metrics_text` publishes
-//! alongside the serving histograms.
+//! alongside the global and per-model serving series.
 
 mod backend;
+mod registry;
+mod router;
 mod server;
 
 pub use backend::{BatchEvaluator, CompressedMlpBackend, ExecutorBackend, PjrtMlpBackend};
-pub use server::{MutexEvaluator, Server, ServerStats};
+pub use registry::{ModelEntry, ModelRegistry};
+pub use router::{Response, Router};
+pub use server::{MutexEvaluator, Server, ServerStats, DEFAULT_MODEL};

@@ -1,0 +1,382 @@
+//! Multi-model registry: the named engines a serving process hosts.
+//!
+//! A deployment serves many compressed models at once (per-layer adder
+//! graphs, MLP and ResNet variants — EIE-style one-engine-per-model),
+//! all sharing the process-wide persistent worker pool. The registry
+//! owns those engines behind names: models can be registered from an
+//! already-built [`Executor`], lowered from an [`AdderGraph`], or loaded
+//! from an `.npy` checkpoint at runtime (the weight matrix is LCC-
+//! decomposed on the spot), each with its own [`ExecConfig`] override.
+//! Hot add/remove is safe under load: every accepted request holds an
+//! `Arc<ModelEntry>`, so removing a model only stops *new* submits —
+//! in-flight batches keep their engine alive until they complete.
+
+use super::backend::{BatchEvaluator, ExecutorBackend};
+use crate::config::ExecConfig;
+use crate::exec::{BatchEngine, Executor};
+use crate::graph::AdderGraph;
+use crate::lcc::{decompose, LccConfig};
+use crate::nn::npy::read_npy;
+use crate::nn::ParamStore;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+/// One served model: a named evaluator, plus the executor and engine
+/// tuning when the model came in through the exec path (registry-built
+/// engines always do; opaque [`BatchEvaluator`] backends registered via
+/// [`ModelRegistry::register_evaluator`] have neither).
+pub struct ModelEntry {
+    name: String,
+    evaluator: Arc<dyn BatchEvaluator>,
+    executor: Option<Arc<dyn Executor>>,
+    exec_cfg: Option<ExecConfig>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The batch evaluator the router drains batches into.
+    pub fn evaluator(&self) -> &Arc<dyn BatchEvaluator> {
+        &self.evaluator
+    }
+
+    /// The underlying executor, when the model is exec-backed.
+    pub fn executor(&self) -> Option<&Arc<dyn Executor>> {
+        self.executor.as_ref()
+    }
+
+    /// The per-model engine tuning the entry was built with.
+    pub fn exec_config(&self) -> Option<&ExecConfig> {
+        self.exec_cfg.as_ref()
+    }
+
+    /// Input dimension each request must provide (exec-backed models
+    /// know it; opaque evaluators do not).
+    pub fn input_dim(&self) -> Option<usize> {
+        self.executor.as_ref().map(|e| e.num_inputs())
+    }
+
+    /// Preferred batch size (the router caps batches at the smaller of
+    /// this and the server-wide `ServeConfig::max_batch`).
+    pub fn max_batch(&self) -> usize {
+        self.evaluator.max_batch().max(1)
+    }
+
+    /// Evaluate one batch on this model.
+    pub fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.evaluator.eval_batch(xs)
+    }
+}
+
+impl std::fmt::Debug for ModelEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelEntry")
+            .field("name", &self.name)
+            .field("backend", &self.evaluator.name())
+            .field("input_dim", &self.input_dim())
+            .field("max_batch", &self.max_batch())
+            .finish()
+    }
+}
+
+/// Named model registry shared between the router and whoever manages
+/// the deployment (CLI, tests, a future control plane). All methods take
+/// `&self`; an `RwLock` keeps lookups on the submit path cheap.
+///
+/// ```
+/// use lccnn::graph::{AdderGraph, Operand, OutputSpec};
+/// use lccnn::serve::ModelRegistry;
+///
+/// let mut g = AdderGraph::new(2);
+/// let n = g.push_add(Operand::input(0), Operand::input(1));
+/// g.set_outputs(vec![OutputSpec::Ref(n)]);
+/// let registry = ModelRegistry::new();
+/// registry.register_graph("sum", &g, lccnn::config::ExecConfig::serial(), 16);
+/// let entry = registry.get("sum").unwrap();
+/// let y = entry.eval_batch(&[vec![1.0, 2.0]]).unwrap();
+/// assert_eq!(y, vec![vec![3.0]]);
+/// ```
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert an entry, returning (new, previous) under one lock
+    /// acquisition — callers that need the freshly registered entry
+    /// must not re-read the map (a concurrent remove/swap could land in
+    /// between).
+    fn insert(&self, entry: ModelEntry) -> (Arc<ModelEntry>, Option<Arc<ModelEntry>>) {
+        let arc = Arc::new(entry);
+        let prev = self.models.write().unwrap().insert(arc.name.clone(), Arc::clone(&arc));
+        (arc, prev)
+    }
+
+    fn insert_executor(
+        &self,
+        name: &str,
+        executor: Arc<dyn Executor>,
+        exec_cfg: ExecConfig,
+        max_batch: usize,
+    ) -> (Arc<ModelEntry>, Option<Arc<ModelEntry>>) {
+        let evaluator: Arc<dyn BatchEvaluator> =
+            Arc::new(ExecutorBackend::new(Arc::clone(&executor), max_batch));
+        self.insert(ModelEntry {
+            name: name.to_string(),
+            evaluator,
+            executor: Some(executor),
+            exec_cfg: Some(exec_cfg),
+        })
+    }
+
+    /// Register an executor under `name` (replacing — and returning —
+    /// any previous model of that name: hot swap). `exec_cfg` records
+    /// the tuning the engine was built with, for introspection.
+    pub fn register(
+        &self,
+        name: &str,
+        executor: Arc<dyn Executor>,
+        exec_cfg: ExecConfig,
+        max_batch: usize,
+    ) -> Option<Arc<ModelEntry>> {
+        self.insert_executor(name, executor, exec_cfg, max_batch).1
+    }
+
+    /// Lower an adder graph into a [`BatchEngine`] (sharing the
+    /// process-wide worker pool) and register it.
+    pub fn register_graph(
+        &self,
+        name: &str,
+        graph: &AdderGraph,
+        exec_cfg: ExecConfig,
+        max_batch: usize,
+    ) -> Option<Arc<ModelEntry>> {
+        let engine: Arc<dyn Executor> = Arc::new(BatchEngine::with_config(graph, exec_cfg));
+        self.register(name, engine, exec_cfg, max_batch)
+    }
+
+    /// Register an opaque batch evaluator (the single-model `Server`
+    /// shim and non-exec backends such as the PJRT baseline use this).
+    pub fn register_evaluator(
+        &self,
+        name: &str,
+        evaluator: Arc<dyn BatchEvaluator>,
+    ) -> Option<Arc<ModelEntry>> {
+        self.insert(ModelEntry {
+            name: name.to_string(),
+            evaluator,
+            executor: None,
+            exec_cfg: None,
+        })
+        .1
+    }
+
+    /// Load a weight matrix from `path` — either a single 2-D `.npy`
+    /// file or a checkpoint directory holding one (a `weight.npy` entry,
+    /// or the directory's only 2-D array) — LCC-decompose it, and
+    /// register the lowered engine under `name`. This is the runtime
+    /// model-loading path the `serve` CLI uses.
+    pub fn load_checkpoint(
+        &self,
+        name: &str,
+        path: &Path,
+        lcc: &LccConfig,
+        exec_cfg: ExecConfig,
+        max_batch: usize,
+    ) -> Result<Arc<ModelEntry>> {
+        let w = load_weight_matrix(path)
+            .with_context(|| format!("model {name:?} from {}", path.display()))?;
+        let d = decompose(&w, lcc);
+        log::info!(
+            "model {name:?}: {}x{} weight -> LCC graph with {} adds",
+            w.rows(),
+            w.cols(),
+            d.additions()
+        );
+        let engine: Arc<dyn Executor> = Arc::new(BatchEngine::with_config(d.graph(), exec_cfg));
+        // single insert, no re-read: a concurrent remove/swap between a
+        // register and a lookup must not be able to panic this path
+        Ok(self.insert_executor(name, engine, exec_cfg, max_batch).0)
+    }
+
+    /// Remove (and return) a model. In-flight requests that already
+    /// resolved their entry keep executing on it; only new submits see
+    /// the removal.
+    pub fn remove(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.write().unwrap().remove(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.read().unwrap().contains_key(name)
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+}
+
+impl std::fmt::Debug for ModelRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRegistry").field("models", &self.names()).finish()
+    }
+}
+
+/// Read a 2-D weight matrix from a `.npy` file or a checkpoint dir.
+fn load_weight_matrix(path: &Path) -> Result<Matrix> {
+    let arr = if path.is_dir() {
+        let store = ParamStore::load(path)?;
+        if let Some(a) = store.get("weight") {
+            a.clone()
+        } else {
+            let mut two_d: Vec<&String> = store
+                .names()
+                .filter(|n| store.get(n).map(|a| a.shape.len() == 2).unwrap_or(false))
+                .collect();
+            match (two_d.pop(), two_d.is_empty()) {
+                (Some(only), true) => store.get(only).cloned().expect("present"),
+                (Some(_), false) => bail!(
+                    "checkpoint dir has several 2-D arrays and no \"weight\"; \
+                     name the served matrix weight.npy"
+                ),
+                (None, _) => bail!("checkpoint dir holds no 2-D array"),
+            }
+        }
+    } else {
+        read_npy(path)?
+    };
+    if arr.shape.len() != 2 {
+        bail!("served weight must be 2-D, got shape {:?}", arr.shape);
+    }
+    Ok(Matrix::from_vec(arr.shape[0], arr.shape[1], arr.data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Operand, OutputSpec};
+    use crate::nn::npy::NpyArray;
+    use crate::util::Rng;
+
+    fn sum_graph(inputs: usize) -> AdderGraph {
+        let mut g = AdderGraph::new(inputs);
+        let root = g.push_sum((0..inputs).map(Operand::input).collect()).unwrap();
+        g.set_outputs(vec![OutputSpec::Ref(root)]);
+        g
+    }
+
+    #[test]
+    fn register_get_remove_roundtrip() {
+        let r = ModelRegistry::new();
+        assert!(r.is_empty());
+        r.register_graph("a", &sum_graph(3), ExecConfig::serial(), 8);
+        r.register_graph("b", &sum_graph(2), ExecConfig::serial(), 8);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(r.contains("a") && !r.contains("c"));
+        let a = r.get("a").unwrap();
+        assert_eq!(a.input_dim(), Some(3));
+        assert_eq!(a.name(), "a");
+        assert_eq!(a.exec_config().unwrap().threads, 1);
+        let removed = r.remove("a").unwrap();
+        assert!(Arc::ptr_eq(&removed, &a));
+        assert!(r.get("a").is_none());
+        assert_eq!(r.len(), 1);
+        // the removed entry still executes (in-flight safety)
+        assert_eq!(removed.eval_batch(&[vec![1.0, 2.0, 3.0]]).unwrap(), vec![vec![6.0]]);
+    }
+
+    #[test]
+    fn register_replaces_and_returns_previous() {
+        let r = ModelRegistry::new();
+        assert!(r.register_graph("m", &sum_graph(2), ExecConfig::serial(), 8).is_none());
+        let old = r.get("m").unwrap();
+        let prev = r.register_graph("m", &sum_graph(4), ExecConfig::serial(), 8).unwrap();
+        assert!(Arc::ptr_eq(&prev, &old));
+        assert_eq!(r.get("m").unwrap().input_dim(), Some(4));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn entry_validates_arity_for_exec_models() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &sum_graph(3), ExecConfig::serial(), 8);
+        let e = r.get("m").unwrap();
+        assert!(e.eval_batch(&[vec![1.0]]).is_err(), "wrong arity must error, not panic");
+    }
+
+    #[test]
+    fn load_checkpoint_from_npy_and_dir() {
+        let mut rng = Rng::new(11);
+        let w = Matrix::randn(32, 8, 0.5, &mut rng);
+        let dir = std::env::temp_dir().join(format!("lccnn-reg-ckpt-{}", std::process::id()));
+        let mut store = ParamStore::new();
+        store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
+        store.save(&dir).unwrap();
+
+        let r = ModelRegistry::new();
+        // from the directory
+        let e = r
+            .load_checkpoint("ckpt", &dir, &LccConfig::fs(), ExecConfig::serial(), 16)
+            .unwrap();
+        assert_eq!(e.input_dim(), Some(8));
+        // from the bare .npy file
+        let e2 = r
+            .load_checkpoint(
+                "ckpt-file",
+                &dir.join("weight.npy"),
+                &LccConfig::fs(),
+                ExecConfig::serial(),
+                16,
+            )
+            .unwrap();
+        assert_eq!(e2.input_dim(), Some(8));
+
+        // the served model approximates W x at LCC fidelity
+        let x: Vec<f32> = rng.normal_vec(8, 1.0);
+        let want = w.matvec(&x);
+        let got = e.eval_batch(&[x.clone()]).unwrap().pop().unwrap();
+        let num: f64 = want.iter().zip(&got).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        let den: f64 = want.iter().map(|&a| (a as f64).powi(2)).sum();
+        assert!(num / den.max(1e-12) < 1e-2, "rel err {}", num / den);
+        // both registrations lower the same matrix: identical programs
+        let got2 = e2.eval_batch(&[x]).unwrap().pop().unwrap();
+        assert_eq!(got, got2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_checkpoint_rejects_bad_shapes() {
+        let dir = std::env::temp_dir().join(format!("lccnn-reg-bad-{}", std::process::id()));
+        let mut store = ParamStore::new();
+        store.insert("weight", NpyArray::f32(vec![4], vec![0.0; 4]));
+        store.save(&dir).unwrap();
+        let r = ModelRegistry::new();
+        assert!(r
+            .load_checkpoint("bad", &dir, &LccConfig::fs(), ExecConfig::serial(), 8)
+            .is_err());
+        assert!(!r.contains("bad"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,350 @@
+//! Model-tagged request routing with per-model batching.
+//!
+//! One router thread serves every model in a [`ModelRegistry`]: submits
+//! are tagged with the resolved [`ModelEntry`], drained into per-model
+//! queues, and served one batch per model in fair round-robin order —
+//! a model with a deep backlog cannot starve the others, because after
+//! each batch the cursor moves on. Batches are capped at the smaller of
+//! the server-wide `max_batch` and the model's own preference, and a
+//! request keeps its entry `Arc` from submit to response, so hot
+//! removal never drops an accepted request.
+
+use super::registry::ModelEntry;
+use crate::config::ServeConfig;
+use crate::metrics::Metrics;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What a request resolves to: the output row, or a string error (kept
+/// `String` so responses are `Send` and printable across the channel).
+pub type Response = Result<Vec<f32>, String>;
+
+struct RoutedRequest {
+    entry: Arc<ModelEntry>,
+    x: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Response>,
+}
+
+/// The routing/batching half of a multi-model server: owns the intake
+/// channel and the router thread. [`super::Server`] wraps it together
+/// with the registry and metrics.
+pub struct Router {
+    tx: Option<Sender<RoutedRequest>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Start the router thread. `metrics` receives both the global
+    /// (`requests`, `batch_size`, `latency_us`, `errors`) and the
+    /// per-model (`model.<name>.*`) series.
+    pub fn start(cfg: &ServeConfig, metrics: Arc<Metrics>) -> Self {
+        let (tx, rx) = channel::<RoutedRequest>();
+        let max_batch = cfg.max_batch.max(1);
+        let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let worker = std::thread::Builder::new()
+            .name("lccnn-serve-router".into())
+            .spawn(move || router_loop(rx, max_batch, timeout, metrics))
+            .expect("spawn router");
+        Router { tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Submit one request to an already-resolved model entry; returns
+    /// the receiver for its response.
+    pub fn submit(&self, entry: Arc<ModelEntry>, x: Vec<f32>) -> Receiver<Response> {
+        let (resp_tx, resp_rx) = channel();
+        let req = RoutedRequest { entry, x, enqueued: Instant::now(), resp: resp_tx };
+        self.tx.as_ref().expect("router alive").send(req).expect("router thread alive");
+        resp_rx
+    }
+
+    /// Stop accepting and join the router thread; every queued request
+    /// is served first (the thread drains all per-model queues before
+    /// exiting). Idempotent.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Pending work: per-model FIFO queues plus the round-robin order the
+/// router serves them in.
+#[derive(Default)]
+struct Pending {
+    queues: BTreeMap<String, VecDeque<RoutedRequest>>,
+    /// model names with a non-empty queue, in service order
+    rr: VecDeque<String>,
+}
+
+impl Pending {
+    /// Enqueue a request; returns true when its model's queue now holds
+    /// a full batch (given the server-wide `max_batch` cap), so the
+    /// idle batching window can dispatch early instead of waiting out
+    /// the timeout.
+    fn push(&mut self, req: RoutedRequest, max_batch: usize) -> bool {
+        let cap = max_batch.min(req.entry.max_batch()).max(1);
+        let name = req.entry.name().to_string();
+        let q = self.queues.entry(name.clone()).or_default();
+        if q.is_empty() {
+            self.rr.push_back(name);
+        }
+        q.push_back(req);
+        q.len() >= cap
+    }
+
+    fn is_empty(&self) -> bool {
+        self.rr.is_empty()
+    }
+
+    /// Take the next batch in round-robin order: up to `max_batch`
+    /// requests from the head of the next model's queue, all sharing
+    /// one entry `Arc` (a hot-swapped model's old and new engines are
+    /// never mixed in one batch). The model goes to the back of the
+    /// rotation if it still has work.
+    fn next_batch(&mut self, max_batch: usize) -> Option<Vec<RoutedRequest>> {
+        let name = self.rr.pop_front()?;
+        let q = self.queues.get_mut(&name).expect("rr names a queued model");
+        let entry = Arc::clone(&q.front().expect("queue non-empty").entry);
+        let cap = max_batch.min(entry.max_batch()).max(1);
+        let mut batch = Vec::with_capacity(cap.min(q.len()));
+        while batch.len() < cap
+            && q.front().map_or(false, |r| Arc::ptr_eq(&r.entry, &entry))
+        {
+            batch.push(q.pop_front().expect("checked front"));
+        }
+        if q.is_empty() {
+            self.queues.remove(&name);
+        } else {
+            self.rr.push_back(name);
+        }
+        Some(batch)
+    }
+}
+
+fn router_loop(
+    rx: Receiver<RoutedRequest>,
+    max_batch: usize,
+    timeout: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut pending = Pending::default();
+    let mut connected = true;
+    loop {
+        if pending.is_empty() {
+            if !connected {
+                return; // drained and disconnected: clean exit
+            }
+            // idle: block for the first request of the next cycle, then
+            // hold a batching window so a burst can coalesce — cut
+            // short the moment a model's queue holds a full batch
+            let full = match rx.recv() {
+                Ok(r) => pending.push(r, max_batch),
+                Err(_) => return,
+            };
+            if !full {
+                let deadline = Instant::now() + timeout;
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => {
+                            if pending.push(r, max_batch) {
+                                break;
+                            }
+                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            connected = false;
+                            break;
+                        }
+                    }
+                }
+            }
+        } else if connected {
+            // busy: absorb whatever has already arrived without waiting
+            // (backlog is the batching signal; no added latency)
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => {
+                        pending.push(r, max_batch);
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        connected = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(batch) = pending.next_batch(max_batch) {
+            serve_batch(batch, &metrics);
+        }
+    }
+}
+
+fn serve_batch(batch: Vec<RoutedRequest>, metrics: &Metrics) {
+    let entry = Arc::clone(&batch[0].entry);
+    let model = entry.name();
+    let n = batch.len() as u64;
+    metrics.incr("requests", n);
+    metrics.incr(&format!("model.{model}.requests"), n);
+    metrics.incr(&format!("model.{model}.batches"), 1);
+    metrics.observe("batch_size", batch.len() as f64);
+    metrics.observe(&format!("model.{model}.batch_size"), batch.len() as f64);
+    let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+    match entry.eval_batch(&xs) {
+        Ok(ys) => {
+            let latency_key = format!("model.{model}.latency_us");
+            for (req, y) in batch.into_iter().zip(ys) {
+                let us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+                metrics.observe("latency_us", us);
+                metrics.observe(&latency_key, us);
+                let _ = req.resp.send(Ok(y));
+            }
+        }
+        Err(e) => {
+            let msg = format!("model {model:?} backend error: {e:#}");
+            metrics.incr("errors", 1);
+            metrics.incr(&format!("model.{model}.errors"), 1);
+            for req in batch {
+                let _ = req.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecConfig;
+    use crate::graph::{AdderGraph, Operand, OutputSpec};
+    use crate::serve::ModelRegistry;
+
+    fn scale_graph(inputs: usize, shift: i32) -> AdderGraph {
+        // y = 2^shift * (x0 + x1 + ...): distinguishable per model
+        let mut g = AdderGraph::new(inputs);
+        let root = g.push_sum((0..inputs).map(Operand::input).collect()).unwrap();
+        g.set_outputs(vec![OutputSpec::Ref(root.scaled(shift, false))]);
+        g
+    }
+
+    #[test]
+    fn round_robin_interleaves_models_fairly() {
+        let r = ModelRegistry::new();
+        r.register_graph("a", &scale_graph(1, 0), ExecConfig::serial(), 4);
+        r.register_graph("b", &scale_graph(1, 1), ExecConfig::serial(), 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut router = Router::start(
+            &ServeConfig { max_batch: 4, batch_timeout_us: 20_000, ..Default::default() },
+            Arc::clone(&metrics),
+        );
+        let a = r.get("a").unwrap();
+        let b = r.get("b").unwrap();
+        // deep backlog on a, a single request on b: b must not wait for
+        // a's whole backlog (it is served after at most one a-batch)
+        let rx_a: Vec<_> = (0..12).map(|i| router.submit(Arc::clone(&a), vec![i as f32])).collect();
+        let rx_b = router.submit(Arc::clone(&b), vec![100.0]);
+        assert_eq!(rx_b.recv().unwrap().unwrap(), vec![200.0]);
+        for (i, rx) in rx_a.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
+        }
+        router.shutdown();
+        assert_eq!(metrics.counter("model.a.requests"), 12);
+        assert_eq!(metrics.counter("model.b.requests"), 1);
+        assert!(metrics.counter("model.a.batches") >= 3, "max_batch 4 over 12 requests");
+    }
+
+    #[test]
+    fn batches_cap_at_model_preference() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &scale_graph(1, 0), ExecConfig::serial(), 2);
+        let metrics = Arc::new(Metrics::new());
+        let mut router = Router::start(
+            &ServeConfig { max_batch: 64, batch_timeout_us: 20_000, ..Default::default() },
+            Arc::clone(&metrics),
+        );
+        let m = r.get("m").unwrap();
+        let rxs: Vec<_> = (0..6).map(|i| router.submit(Arc::clone(&m), vec![i as f32])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
+        }
+        router.shutdown();
+        let (_, mean, _, _) = metrics.summary("model.m.batch_size").unwrap();
+        assert!(mean <= 2.0 + 1e-9, "model max_batch=2 must cap batches, mean {mean}");
+    }
+
+    #[test]
+    fn hot_swap_never_mixes_engines_in_one_batch() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &scale_graph(1, 0), ExecConfig::serial(), 64);
+        let metrics = Arc::new(Metrics::new());
+        let mut router = Router::start(
+            &ServeConfig { max_batch: 64, batch_timeout_us: 50_000, ..Default::default() },
+            metrics,
+        );
+        let old = r.get("m").unwrap();
+        let rx_old: Vec<_> =
+            (0..3).map(|i| router.submit(Arc::clone(&old), vec![i as f32])).collect();
+        // swap while the old requests are still queued
+        r.register_graph("m", &scale_graph(1, 2), ExecConfig::serial(), 64);
+        let new = r.get("m").unwrap();
+        let rx_new: Vec<_> =
+            (0..3).map(|i| router.submit(Arc::clone(&new), vec![i as f32])).collect();
+        for (i, rx) in rx_old.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32], "old engine answers");
+        }
+        for (i, rx) in rx_new.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![4.0 * i as f32], "new engine answers");
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn full_batch_dispatches_before_the_window_expires() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &scale_graph(1, 0), ExecConfig::serial(), 4);
+        let mut router = Router::start(
+            // a deliberately huge window: only the full-batch early exit
+            // can serve these requests quickly
+            &ServeConfig { max_batch: 4, batch_timeout_us: 2_000_000, ..Default::default() },
+            Arc::new(Metrics::new()),
+        );
+        let m = r.get("m").unwrap();
+        let start = std::time::Instant::now();
+        let rxs: Vec<_> = (0..4).map(|i| router.submit(Arc::clone(&m), vec![i as f32])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
+        }
+        assert!(
+            start.elapsed() < Duration::from_millis(1500),
+            "full batch must dispatch early, waited {:?}",
+            start.elapsed()
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drains() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &scale_graph(2, 0), ExecConfig::serial(), 8);
+        let mut router = Router::start(&ServeConfig::default(), Arc::new(Metrics::new()));
+        let m = r.get("m").unwrap();
+        let rx = router.submit(m, vec![1.0, 2.0]);
+        router.shutdown();
+        router.shutdown();
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![3.0]);
+    }
+}

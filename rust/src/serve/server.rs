@@ -1,21 +1,23 @@
-//! Dynamic-batching request server.
+//! The serving front end: a [`ModelRegistry`] plus a [`Router`] behind
+//! one handle. Multi-model serving is the native shape —
+//! [`Server::start_registry`] — and the historical single-model API
+//! ([`Server::start`]) is a thin shim that registers its backend as the
+//! [`DEFAULT_MODEL`] and routes to it.
 
 use super::backend::BatchEvaluator;
+use super::registry::ModelRegistry;
+use super::router::{Response, Router};
 use crate::config::ServeConfig;
 use crate::metrics::Metrics;
 use anyhow::Result;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
-struct Request {
-    x: Vec<f32>,
-    enqueued: Instant,
-    resp: Sender<Result<Vec<f32>, String>>,
-}
+/// The model name the single-model shim registers its backend under.
+pub const DEFAULT_MODEL: &str = "default";
 
-/// Snapshot of serving statistics.
+/// Snapshot of serving statistics (global, or per model via
+/// [`Server::model_stats`]).
 #[derive(Clone, Debug)]
 pub struct ServerStats {
     pub requests: u64,
@@ -25,65 +27,92 @@ pub struct ServerStats {
     pub p99_latency_us: f64,
 }
 
-/// In-process inference server: submit() from any thread; a batcher
-/// thread groups requests (up to max_batch, waiting at most
-/// batch_timeout) and runs them on the backend.
+/// In-process inference server over a model registry: `submit_to(model,
+/// x)` from any thread; the router thread batches per model with fair
+/// round-robin draining and runs each batch on that model's engine.
+/// Models can be added/removed from [`Server::registry`] while serving.
 pub struct Server {
-    tx: Option<Sender<Request>>,
-    worker: Option<JoinHandle<()>>,
+    registry: Arc<ModelRegistry>,
+    router: Router,
     metrics: Arc<Metrics>,
     /// exec worker pool whose stats `metrics_text` publishes — the
-    /// process-wide one unless the backend's engine was built with a
-    /// private pool (see [`Server::with_pool_metrics`])
+    /// process-wide one unless overridden (see [`Server::with_pool_metrics`])
     exec_pool: Arc<crate::exec::WorkerPool>,
 }
 
 impl Server {
+    /// Single-model shim: registers `backend` as [`DEFAULT_MODEL`] in a
+    /// fresh registry and serves it. [`Server::submit`]/[`Server::infer`]
+    /// route to that model.
     pub fn start(backend: Arc<dyn BatchEvaluator>, cfg: ServeConfig) -> Self {
-        let (tx, rx) = channel::<Request>();
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_evaluator(DEFAULT_MODEL, backend);
+        Self::start_registry(registry, cfg)
+    }
+
+    /// Serve every model in `registry` (hot add/remove supported while
+    /// running).
+    pub fn start_registry(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
-        let m = Arc::clone(&metrics);
-        let max_batch = cfg.max_batch.min(backend.max_batch()).max(1);
-        let timeout = Duration::from_micros(cfg.batch_timeout_us);
-        let worker = std::thread::Builder::new()
-            .name("lccnn-serve-batcher".into())
-            .spawn(move || batcher_loop(rx, backend, max_batch, timeout, m))
-            .expect("spawn batcher");
-        Server {
-            tx: Some(tx),
-            worker: Some(worker),
-            metrics,
-            exec_pool: crate::exec::global_pool(),
-        }
+        let router = Router::start(&cfg, Arc::clone(&metrics));
+        Server { registry, router, metrics, exec_pool: crate::exec::global_pool() }
     }
 
     /// Report `pool`'s stats from [`Server::metrics_text`] instead of the
-    /// process-wide pool — for backends whose engine was built with an
-    /// engine-private pool (`BatchEngine::with_workers`), so the metrics
+    /// process-wide pool — for deployments whose engines were built with
+    /// a private pool (`BatchEngine::with_workers`), so the metrics
     /// reflect the pool actually dispatching this server's batches.
     pub fn with_pool_metrics(mut self, pool: Arc<crate::exec::WorkerPool>) -> Self {
         self.exec_pool = pool;
         self
     }
 
-    /// Submit one request; returns a receiver for the response.
-    pub fn submit(&self, x: Vec<f32>) -> Receiver<Result<Vec<f32>, String>> {
-        let (resp_tx, resp_rx) = channel();
-        let req = Request { x, enqueued: Instant::now(), resp: resp_tx };
-        self.tx.as_ref().expect("server alive").send(req).expect("batcher alive");
-        resp_rx
+    /// The registry this server routes over — hot add/remove models here.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
-    /// Blocking convenience call.
+    /// Submit one request to a named model; returns a receiver for the
+    /// response. An unknown model yields an immediate `Err` response
+    /// (never a panic or a hang): submits race hot removal by design.
+    pub fn submit_to(&self, model: &str, x: Vec<f32>) -> Receiver<Response> {
+        match self.registry.get(model) {
+            Some(entry) => self.router.submit(entry, x),
+            None => {
+                self.metrics.incr("rejected", 1);
+                let (tx, rx) = channel();
+                let _ = tx.send(Err(format!("unknown model {model:?}")));
+                rx
+            }
+        }
+    }
+
+    /// Submit one request to the [`DEFAULT_MODEL`] (single-model shim).
+    pub fn submit(&self, x: Vec<f32>) -> Receiver<Response> {
+        self.submit_to(DEFAULT_MODEL, x)
+    }
+
+    /// Blocking convenience call against a named model.
+    pub fn infer_model(&self, model: &str, x: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.submit_to(model, x).recv().map_err(|e| e.to_string())?
+    }
+
+    /// Blocking convenience call (single-model shim).
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>, String> {
-        self.submit(x).recv().map_err(|e| e.to_string())?
+        self.infer_model(DEFAULT_MODEL, x)
     }
 
-    pub fn stats(&self) -> ServerStats {
-        let (n, mean, _, _) = self.metrics.summary("batch_size").unwrap_or((0, 0.0, 0.0, 0.0));
-        let (_, _, p50, p99) = self.metrics.summary("latency_us").unwrap_or((0, 0.0, 0.0, 0.0));
+    fn stats_from(&self, counter_prefix: &str) -> ServerStats {
+        let (n, mean, _, _) = self
+            .metrics
+            .summary(&format!("{counter_prefix}batch_size"))
+            .unwrap_or((0, 0.0, 0.0, 0.0));
+        let (_, _, p50, p99) = self
+            .metrics
+            .summary(&format!("{counter_prefix}latency_us"))
+            .unwrap_or((0, 0.0, 0.0, 0.0));
         ServerStats {
-            requests: self.metrics.counter("requests"),
+            requests: self.metrics.counter(&format!("{counter_prefix}requests")),
             batches: n as u64,
             mean_batch_size: mean,
             p50_latency_us: p50,
@@ -91,83 +120,51 @@ impl Server {
         }
     }
 
-    /// Render the server's metrics registry as text, refreshed with the
-    /// exec worker pool's counters (`exec_pool.*`; the process-wide pool
-    /// unless overridden via [`Server::with_pool_metrics`]) — one blob
-    /// for logs and debugging. Exec-backed backends dispatch their
-    /// parallel work on that pool, so its task/busy counters belong next
-    /// to the serving latency histograms.
+    /// Aggregate statistics across every model.
+    pub fn stats(&self) -> ServerStats {
+        self.stats_from("")
+    }
+
+    /// Statistics for one model (zeros if it never served a request).
+    pub fn model_stats(&self, model: &str) -> ServerStats {
+        self.stats_from(&format!("model.{model}."))
+    }
+
+    /// Names of every model that has served at least one request in
+    /// this server's lifetime — including models since hot-removed from
+    /// the registry (their counters remain), which
+    /// [`ModelRegistry::names`] no longer lists.
+    pub fn models_seen(&self) -> Vec<String> {
+        self.metrics
+            .counters_with_prefix("model.")
+            .into_iter()
+            .filter_map(|(k, _)| {
+                k.strip_prefix("model.")?.strip_suffix(".requests").map(str::to_string)
+            })
+            .collect()
+    }
+
+    /// The server's metrics registry (global `requests`/`batch_size`/
+    /// `latency_us`/`errors` plus per-model `model.<name>.*` series).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Render the server's metrics registry as text — global and
+    /// per-model serving series, the current model count
+    /// (`serve.models`), and the exec worker pool's counters
+    /// (`exec_pool.*`; the process-wide pool unless overridden via
+    /// [`Server::with_pool_metrics`]) — one blob for logs and debugging.
     pub fn metrics_text(&self) -> String {
+        self.metrics.gauge("serve.models", self.registry.len() as f64);
         self.exec_pool.publish(&self.metrics);
         self.metrics.render()
     }
 
-    /// Stop the batcher and join (drains the queue first).
+    /// Stop the router and join (drains every model's queue first).
     pub fn shutdown(mut self) -> ServerStats {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.router.shutdown();
         self.stats()
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn batcher_loop(
-    rx: Receiver<Request>,
-    backend: Arc<dyn BatchEvaluator>,
-    max_batch: usize,
-    timeout: Duration,
-    metrics: Arc<Metrics>,
-) {
-    loop {
-        // block for the first request of a batch
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders gone
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + timeout;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        metrics.incr("requests", batch.len() as u64);
-        metrics.observe("batch_size", batch.len() as f64);
-        let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
-        match backend.eval_batch(&xs) {
-            Ok(ys) => {
-                for (req, y) in batch.into_iter().zip(ys) {
-                    metrics.observe(
-                        "latency_us",
-                        req.enqueued.elapsed().as_secs_f64() * 1e6,
-                    );
-                    let _ = req.resp.send(Ok(y));
-                }
-            }
-            Err(e) => {
-                let msg = format!("backend error: {e:#}");
-                metrics.incr("errors", 1);
-                for req in batch {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
-            }
-        }
     }
 }
 
@@ -201,7 +198,8 @@ impl<F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>> + Send> BatchEvaluator for M
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ServeConfig;
+    use crate::config::{ExecConfig, ServeConfig};
+    use crate::graph::{AdderGraph, Operand, OutputSpec};
 
     fn echo_backend() -> Arc<dyn BatchEvaluator> {
         Arc::new(MutexEvaluator::new(
@@ -209,6 +207,13 @@ mod tests {
             8,
             "echo",
         ))
+    }
+
+    fn scale_graph(shift: i32) -> AdderGraph {
+        let mut g = AdderGraph::new(2);
+        let n = g.push_add(Operand::input(0), Operand::input(1));
+        g.set_outputs(vec![OutputSpec::Ref(n.scaled(shift, false))]);
+        g
     }
 
     #[test]
@@ -280,5 +285,51 @@ mod tests {
         let _ = server.infer(vec![1.0]);
         let text = server.metrics_text();
         assert!(text.contains("exec_pool.tasks_run = 3"), "{text}");
+    }
+
+    #[test]
+    fn multi_model_routing_and_per_model_stats() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_graph("x1", &scale_graph(0), ExecConfig::serial(), 8);
+        registry.register_graph("x4", &scale_graph(2), ExecConfig::serial(), 8);
+        let server = Server::start_registry(Arc::clone(&registry), ServeConfig::default());
+        assert_eq!(server.infer_model("x1", vec![1.0, 2.0]).unwrap(), vec![3.0]);
+        assert_eq!(server.infer_model("x4", vec![1.0, 2.0]).unwrap(), vec![12.0]);
+        assert_eq!(server.infer_model("x4", vec![2.0, 2.0]).unwrap(), vec![16.0]);
+        assert_eq!(server.model_stats("x1").requests, 1);
+        assert_eq!(server.model_stats("x4").requests, 2);
+        assert_eq!(server.stats().requests, 3);
+        let text = server.metrics_text();
+        assert!(text.contains("model.x1.requests = 1"), "{text}");
+        assert!(text.contains("model.x4.requests = 2"), "{text}");
+        assert!(text.contains("serve.models"), "{text}");
+    }
+
+    #[test]
+    fn unknown_model_errors_immediately() {
+        let server = Server::start(echo_backend(), ServeConfig::default());
+        let err = server.infer_model("nope", vec![1.0]).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+        assert_eq!(server.metrics().counter("rejected"), 1);
+    }
+
+    #[test]
+    fn hot_add_and_remove_while_serving() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_graph("a", &scale_graph(0), ExecConfig::serial(), 8);
+        let server = Server::start_registry(Arc::clone(&registry), ServeConfig::default());
+        assert_eq!(server.infer_model("a", vec![1.0, 1.0]).unwrap(), vec![2.0]);
+        // hot add
+        registry.register_graph("b", &scale_graph(1), ExecConfig::serial(), 8);
+        assert_eq!(server.infer_model("b", vec![1.0, 1.0]).unwrap(), vec![4.0]);
+        // hot remove: new submits rejected, the other model unaffected
+        registry.remove("a");
+        assert!(server.infer_model("a", vec![1.0, 1.0]).is_err());
+        assert_eq!(server.infer_model("b", vec![2.0, 1.0]).unwrap(), vec![6.0]);
+        // the stats roster still remembers the removed model
+        assert_eq!(server.models_seen(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(registry.names(), vec!["b".to_string()]);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 3, "rejected submits never count as served");
     }
 }

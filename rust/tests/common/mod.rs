@@ -1,11 +1,24 @@
 //! Shared helpers for integration tests. Tests are skipped (not failed)
 //! when the AOT artifacts have not been built yet — run `make artifacts`.
 
+// not every test crate uses every helper
+#![allow(dead_code)]
+
 use lccnn::runtime::Runtime;
 use std::path::PathBuf;
 
 pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Checked-in test data (golden vectors and the like) under
+/// `rust/tests/common/`.
+pub fn test_data_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("common")
+        .join(name)
 }
 
 pub fn runtime_or_skip() -> Option<Runtime> {

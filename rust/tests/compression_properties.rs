@@ -3,6 +3,8 @@
 //! property harness — proptest is not in the offline vendor tree — with
 //! explicit seeds so failures are reproducible.)
 
+mod common;
+
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
 use lccnn::convert::{conv_forward_fk, conv_forward_pk, fk_matrices, pk_matrices};
 use lccnn::graph::{schedule, verify_against};
@@ -216,6 +218,106 @@ fn prop_fs_exploits_row_duplication() {
             "duplication raised cost: {cost_base} -> {cost_doubled}"
         );
     }
+}
+
+/// Random matrices through decompose/reconstruct stay within the
+/// configured error budget across the whole slicing-config space (every
+/// explicit width plus auto), for both algorithms. Slicing is the eq. 3
+/// lever; no width choice may break the fidelity contract.
+#[test]
+fn prop_lcc_error_bounded_across_slicing_configs() {
+    let mut rng = Rng::new(1000);
+    let fmt = FixedPointFormat::default_weights();
+    for (n, k, seed) in [(64usize, 16usize, 0u64), (96, 24, 1), (40, 12, 2)] {
+        let mut mrng = Rng::new(3000 + seed);
+        let w = Matrix::randn(n, k, 0.1 + 0.8 * mrng.f32(), &mut mrng);
+        let (_, wq) = quantize_matrix(&w, fmt);
+        let q_err = {
+            let mut d = wq.clone();
+            d.sub_assign(&w);
+            d.frobenius()
+        };
+        for width in [Some(1usize), Some(2), Some(4), Some(8), None] {
+            for base in [LccConfig::fp(), LccConfig::fs()] {
+                let mut cfg = base;
+                cfg.slice_width = width;
+                let dec = decompose(&w, &cfg);
+                let approx = dec.to_dense();
+                let mut diff = approx.clone();
+                diff.sub_assign(&w);
+                // the same budget form the fidelity property uses: the
+                // relative target or the quantization floor, with slack
+                let budget = (w.frobenius() * cfg.target_rel_err).max(q_err) * 3.0;
+                assert!(
+                    diff.frobenius() <= budget + 1e-6,
+                    "{n}x{k} width {width:?} {:?}: err {} > budget {}",
+                    cfg.algo,
+                    diff.frobenius(),
+                    budget
+                );
+                // the slicing cover must be exact and in column order
+                let mut covered = 0usize;
+                for s in &dec.slices {
+                    assert_eq!(s.col_start, covered, "slices must tile the columns");
+                    covered += s.width;
+                }
+                assert_eq!(covered, k);
+                if let Some(wd) = width {
+                    assert!(dec.slices.iter().all(|s| s.width <= wd));
+                }
+                // and the lowered graph must agree with its own dense form
+                let x: Vec<f32> = rng.normal_vec(k, 1.0);
+                let ya = dec.apply(&x);
+                let yd = approx.matvec(&x);
+                for (a, b) in ya.iter().zip(&yd) {
+                    assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+                }
+            }
+        }
+    }
+}
+
+/// Golden CSD vectors (checked in under `rust/tests/common/`): digit
+/// strings match the recorded non-adjacent form exactly, round-trip to
+/// the mantissa, and never have adjacent nonzeros.
+#[test]
+fn prop_csd_golden_vectors() {
+    let path = common::test_data_path("csd_golden.tsv");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut checked = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        // strip only \r: the zero-mantissa row is "0<TAB>" and a full
+        // trim would eat the tab separator
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (n_str, digits_str) = line
+            .split_once('\t')
+            .unwrap_or_else(|| panic!("line {}: expected mantissa<TAB>digits", lineno + 1));
+        let n: i64 = n_str.parse().unwrap();
+        let want: Vec<(i32, bool)> = digits_str
+            .split_whitespace()
+            .map(|t| {
+                let negative = match t.as_bytes()[0] {
+                    b'+' => false,
+                    b'-' => true,
+                    _ => panic!("line {}: bad digit {t:?}", lineno + 1),
+                };
+                (t[1..].parse::<i32>().unwrap(), negative)
+            })
+            .collect();
+        let got = csd_digits(n);
+        let got_pairs: Vec<(i32, bool)> = got.iter().map(|d| (d.shift, d.negative)).collect();
+        assert_eq!(got_pairs, want, "mantissa {n}: digits diverge from golden");
+        assert_eq!(csd_value(&got), n, "mantissa {n}: round-trip");
+        for w in got.windows(2) {
+            assert!(w[1].shift - w[0].shift >= 2, "mantissa {n}: adjacent nonzeros");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 40, "golden file truncated? only {checked} vectors");
 }
 
 /// The CSD baseline grows with precision (more fractional bits -> more

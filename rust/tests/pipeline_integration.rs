@@ -1,13 +1,190 @@
-//! Integration: the full Fig. 2 pipeline end to end at a small budget.
-//! This is the system-level correctness test — training through PJRT,
-//! pruning, affinity propagation, sharing retrain, LCC, VM-backed
-//! accuracy — all composing.
+//! Integration: the compression pipeline end to end.
+//!
+//! Two layers of coverage:
+//! * `compression_stack_e2e_*` — a shape matrix over the full
+//!   prune -> share -> LCC -> exec -> serve stack on synthetic weights
+//!   (no artifacts needed), asserting at every graph-executing stage
+//!   that results are **bit-identical** to the `NaiveExecutor` oracle —
+//!   through the engine, the single-model server shim, and the
+//!   multi-model registry server.
+//! * `fig2_pipeline_small_budget` — the trained Fig. 2 pipeline through
+//!   PJRT at a small budget (skips when the AOT artifacts are absent).
 
 mod common;
 
 use common::runtime_or_skip;
-use lccnn::config::MlpPipelineConfig;
+use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
+use lccnn::config::{ExecConfig, MlpPipelineConfig, ServeConfig};
+use lccnn::exec::{Executor, NaiveExecutor};
+use lccnn::lcc::LccConfig;
+use lccnn::nn::compressed::{CompressedMlp, Layer1};
 use lccnn::pipeline::run_mlp_pipeline;
+use lccnn::prune::compact_columns;
+use lccnn::serve::{CompressedMlpBackend, ModelRegistry, Server};
+use lccnn::share::SharedLayer;
+use lccnn::tensor::Matrix;
+use lccnn::util::Rng;
+use std::sync::Arc;
+
+/// Synthetic "post-regularization" weights: `groups` clusters of `per`
+/// near-identical columns plus one exactly-zero (pruned) column per
+/// group — so pruning, sharing and LCC all genuinely engage.
+fn grouped_pruned_weights(rows: usize, groups: usize, per: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let stride = per + 1;
+    let mut w = Matrix::zeros(rows, groups * stride);
+    for g in 0..groups {
+        let base = rng.normal_vec(rows, 0.8);
+        for j in 0..per {
+            for r in 0..rows {
+                *w.at_mut(r, g * stride + j) = base[r] + 0.005 * rng.normal_f32();
+            }
+        }
+        // column g*stride + per stays zero: pruned
+    }
+    w
+}
+
+/// One full pass of the stack for one shape; every graph execution is
+/// checked bit-exact against the oracle.
+fn run_stack_for_shape(rows: usize, groups: usize, per: usize, exec_cfg: ExecConfig, seed: u64) {
+    let w = grouped_pruned_weights(rows, groups, per, seed);
+    let cols = w.cols();
+    let mut rng = Rng::new(seed + 1000);
+
+    // --- stage 1: prune ---------------------------------------------------
+    let compact = compact_columns(&w, 1e-6);
+    assert_eq!(compact.kept.len(), groups * per, "pruned columns must compact away");
+    let x: Vec<f32> = rng.normal_vec(cols, 1.0);
+    let x_kept: Vec<f32> = compact.kept.iter().map(|&i| x[i]).collect();
+    let y_full = w.matvec(&x);
+    let y_pruned = compact.weights.matvec(&x_kept);
+    for (a, b) in y_full.iter().zip(&y_pruned) {
+        assert!((a - b).abs() < 1e-5, "pruning changed the product: {a} vs {b}");
+    }
+
+    // --- stage 2: share ---------------------------------------------------
+    let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+    assert!(
+        clustering.num_clusters() < groups * per,
+        "near-duplicate columns must share: {} clusters from {} columns",
+        clustering.num_clusters(),
+        groups * per
+    );
+    assert!(clustering.num_clusters() > 0);
+    let shared = SharedLayer::from_clustering(&compact.weights, &clustering);
+    let y_shared = shared.apply(&x_kept);
+    for (a, b) in y_shared.iter().zip(&y_pruned) {
+        assert!((a - b).abs() < 0.1 + 0.05 * b.abs(), "sharing strayed: {a} vs {b}");
+    }
+
+    // --- stage 3: LCC -----------------------------------------------------
+    let slcc = shared.with_lcc_exec(&LccConfig::fs(), exec_cfg);
+    let oracle = NaiveExecutor::new(slcc.graph().clone());
+    assert_eq!(oracle.num_inputs(), shared.num_clusters());
+
+    // --- stage 4: exec, bit-identical to the oracle ------------------------
+    let xs: Vec<Vec<f32>> = (0..17).map(|_| rng.normal_vec(cols, 1.0)).collect();
+    let xs_kept: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|x| compact.kept.iter().map(|&i| x[i]).collect())
+        .collect();
+    let batch = slcc.apply_batch(&xs_kept);
+    for (xk, y) in xs_kept.iter().zip(&batch) {
+        let sums = shared.segment_sums(xk);
+        assert_eq!(*y, oracle.execute_one(&sums), "engine != oracle ({rows}x{cols})");
+        assert_eq!(*y, slcc.apply(xk), "batch path != scalar path");
+    }
+
+    // --- stage 5a: serve through the single-model shim ---------------------
+    let b1: Vec<f32> = rng.normal_vec(rows, 0.1);
+    let w2 = Matrix::randn(4, rows, 0.3, &mut rng);
+    let b2: Vec<f32> = rng.normal_vec(4, 0.1);
+    let model = Arc::new(CompressedMlp {
+        kept: compact.kept.clone(),
+        layer1: Layer1::SharedLcc(slcc),
+        b1: b1.clone(),
+        w2: w2.clone(),
+        b2: b2.clone(),
+    });
+    // the oracle-composed reference: identical head math over the
+    // oracle-executed LCC program
+    let expect = |x: &[f32]| -> Vec<f32> {
+        let xk: Vec<f32> = compact.kept.iter().map(|&i| x[i]).collect();
+        let mut h = oracle.execute_one(&shared.segment_sums(&xk));
+        for (hv, &b) in h.iter_mut().zip(&b1) {
+            *hv = (*hv + b).max(0.0);
+        }
+        let mut out = w2.matvec(&h);
+        for (ov, &b) in out.iter_mut().zip(&b2) {
+            *ov += b;
+        }
+        out
+    };
+    let server = Server::start(
+        Arc::new(CompressedMlpBackend { model: Arc::clone(&model) }),
+        ServeConfig { max_batch: 8, batch_timeout_us: 200, ..Default::default() },
+    );
+    let rxs: Vec<_> = xs.iter().map(|x| server.submit(x.clone())).collect();
+    for (x, rx) in xs.iter().zip(rxs) {
+        let y = rx.recv().unwrap().unwrap();
+        assert_eq!(y, expect(x), "served response != oracle-composed forward");
+        assert_eq!(y, model.forward_one(x), "served response != direct forward");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, xs.len() as u64);
+}
+
+#[test]
+fn compression_stack_e2e_matrix_bit_identical_to_oracle() {
+    // three shapes x three engine tunings: serial, default pooled
+    // parallel, and a small-chunk configuration
+    run_stack_for_shape(16, 4, 4, ExecConfig::serial(), 1);
+    run_stack_for_shape(32, 6, 3, ExecConfig::default(), 2);
+    run_stack_for_shape(
+        24,
+        5,
+        5,
+        ExecConfig { chunk: 4, parallel_min_batch: 8, ..ExecConfig::default() },
+        3,
+    );
+}
+
+/// The same stack served through the multi-model registry: all three
+/// shapes resident in one server, every routed response bit-identical
+/// to that model's oracle.
+#[test]
+fn compression_stack_serves_through_registry_bit_identical() {
+    let registry = Arc::new(ModelRegistry::new());
+    let mut oracles = Vec::new();
+    for (i, (rows, groups, per)) in [(16usize, 4usize, 4usize), (32, 6, 3), (24, 5, 5)]
+        .into_iter()
+        .enumerate()
+    {
+        let w = grouped_pruned_weights(rows, groups, per, 40 + i as u64);
+        let compact = compact_columns(&w, 1e-6);
+        let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+        let shared = SharedLayer::from_clustering(&compact.weights, &clustering);
+        let slcc = shared.with_lcc_exec(&LccConfig::fs(), ExecConfig::serial());
+        let name = format!("shape-{i}");
+        registry.register_graph(&name, slcc.graph(), ExecConfig::serial(), 8);
+        oracles.push((name, NaiveExecutor::new(slcc.graph().clone())));
+    }
+    let server = Server::start_registry(Arc::clone(&registry), ServeConfig::default());
+    let mut rng = Rng::new(77);
+    for round in 0..5 {
+        for (name, oracle) in &oracles {
+            let x = rng.normal_vec(oracle.num_inputs(), 1.0);
+            let want = oracle.execute_one(&x);
+            let got = server.infer_model(name, x).expect("registry serves");
+            assert_eq!(got, want, "round {round} model {name}");
+        }
+    }
+    for (name, _) in &oracles {
+        assert_eq!(server.model_stats(name).requests, 5, "model {name}");
+    }
+    let _ = server.shutdown();
+}
 
 #[test]
 fn fig2_pipeline_small_budget() {

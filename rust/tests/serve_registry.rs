@@ -1,0 +1,257 @@
+//! Multi-model registry serving under concurrency: N models x M client
+//! threads hammering one router, asserting per-model outputs are
+//! bit-identical to dedicated single-model servers (and to the
+//! `NaiveExecutor` oracle), hot add/remove under load never dropping an
+//! accepted request, and shutdown draining every model's queue.
+
+use lccnn::config::{ExecConfig, ServeConfig};
+use lccnn::exec::{BatchEngine, Executor, NaiveExecutor};
+use lccnn::graph::{AdderGraph, Operand, OutputSpec};
+use lccnn::serve::{
+    BatchEvaluator, ExecutorBackend, ModelRegistry, MutexEvaluator, Server,
+};
+use lccnn::util::Rng;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Random shift-add DAG, same construction as the exec engine tests.
+fn ladder_graph(inputs: usize, nodes: usize, seed: u64) -> AdderGraph {
+    let mut rng = Rng::new(seed);
+    let mut g = AdderGraph::new(inputs);
+    let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+    for _ in 0..nodes {
+        let a = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+        let b = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+        refs.push(g.push_add(a, b));
+    }
+    let outs = (0..3)
+        .map(|_| OutputSpec::Ref(refs[rng.below(refs.len())]))
+        .collect();
+    g.set_outputs(outs);
+    g
+}
+
+/// The acceptance hammer: 4 models x 6 client threads. Every response
+/// from the shared multi-model server must be bit-identical to a
+/// dedicated single-model `Server` fed the same input, and to the
+/// oracle.
+#[test]
+fn hammer_bit_identical_to_dedicated_single_model_servers() {
+    const N_MODELS: usize = 4;
+    const N_CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 48;
+
+    let graphs: Vec<AdderGraph> =
+        (0..N_MODELS).map(|i| ladder_graph(4 + i, 40 + 10 * i, i as u64)).collect();
+    let oracles: Vec<NaiveExecutor> =
+        graphs.iter().map(|g| NaiveExecutor::new(g.clone())).collect();
+
+    let serve_cfg = ServeConfig { max_batch: 8, batch_timeout_us: 500, ..Default::default() };
+    let registry = Arc::new(ModelRegistry::new());
+    for (i, g) in graphs.iter().enumerate() {
+        registry.register_graph(&format!("m{i}"), g, ExecConfig::default(), 8);
+    }
+    let multi = Server::start_registry(Arc::clone(&registry), serve_cfg.clone());
+    let dedicated: Vec<Server> = graphs
+        .iter()
+        .map(|g| {
+            let engine: Arc<dyn Executor> =
+                Arc::new(BatchEngine::with_config(g, ExecConfig::default()));
+            Server::start(Arc::new(ExecutorBackend::new(engine, 8)), serve_cfg.clone())
+        })
+        .collect();
+
+    std::thread::scope(|scope| {
+        for t in 0..N_CLIENTS {
+            let multi = &multi;
+            let dedicated = &dedicated;
+            let oracles = &oracles;
+            scope.spawn(move || {
+                let mut rng = Rng::new(1000 + t as u64);
+                for k in 0..PER_CLIENT {
+                    let m = (t + k) % N_MODELS;
+                    let x = rng.normal_vec(oracles[m].num_inputs(), 1.0);
+                    let want = oracles[m].execute_one(&x);
+                    let got_multi =
+                        multi.infer_model(&format!("m{m}"), x.clone()).expect("multi serves");
+                    let got_single = dedicated[m].infer(x).expect("dedicated serves");
+                    assert_eq!(got_multi, want, "client {t} req {k} model m{m} vs oracle");
+                    assert_eq!(got_multi, got_single, "client {t} req {k} model m{m}");
+                }
+            });
+        }
+    });
+
+    // every request accounted to its model, none lost or misrouted
+    let total: u64 = (0..N_MODELS).map(|m| multi.model_stats(&format!("m{m}")).requests).sum();
+    assert_eq!(total, (N_CLIENTS * PER_CLIENT) as u64);
+    for m in 0..N_MODELS {
+        let s = multi.model_stats(&format!("m{m}"));
+        assert_eq!(s.requests, (N_CLIENTS * PER_CLIENT / N_MODELS) as u64, "model m{m}: {s:?}");
+    }
+    let stats = multi.shutdown();
+    assert_eq!(stats.requests, (N_CLIENTS * PER_CLIENT) as u64);
+}
+
+/// Hot add and hot remove while clients are hammering. The invariant:
+/// every submit gets exactly one response — an accepted request (entry
+/// resolved before removal) is served bit-identically, and a rejection
+/// can only ever happen after the removal actually started. The
+/// surviving model must be completely unaffected.
+#[test]
+fn hot_add_remove_under_load_never_drops_accepted_requests() {
+    let keep_g = ladder_graph(5, 50, 10);
+    let victim_g = ladder_graph(6, 60, 11);
+    let late_g = ladder_graph(4, 40, 12);
+    let keep_oracle = NaiveExecutor::new(keep_g.clone());
+    let victim_oracle = NaiveExecutor::new(victim_g.clone());
+    let late_oracle = NaiveExecutor::new(late_g.clone());
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_graph("keep", &keep_g, ExecConfig::default(), 8);
+    registry.register_graph("victim", &victim_g, ExecConfig::default(), 8);
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig { max_batch: 8, batch_timeout_us: 300, ..Default::default() },
+    );
+
+    let removed = AtomicBool::new(false);
+    let victim_served = AtomicUsize::new(0);
+    let victim_rejected = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let server = &server;
+            let removed = &removed;
+            let victim_served = &victim_served;
+            let victim_rejected = &victim_rejected;
+            let keep_oracle = &keep_oracle;
+            let victim_oracle = &victim_oracle;
+            scope.spawn(move || {
+                let mut rng = Rng::new(2000 + t as u64);
+                for k in 0..120 {
+                    // the surviving model must always answer, bit-identically
+                    let x = rng.normal_vec(keep_oracle.num_inputs(), 1.0);
+                    let want = keep_oracle.execute_one(&x);
+                    assert_eq!(server.infer_model("keep", x).expect("keep always serves"), want);
+
+                    // the victim races removal: Ok must be bit-identical,
+                    // Err implies the removal had already begun
+                    let x = rng.normal_vec(victim_oracle.num_inputs(), 1.0);
+                    let want = victim_oracle.execute_one(&x);
+                    match server.infer_model("victim", x) {
+                        Ok(y) => {
+                            assert_eq!(y, want, "client {t} req {k}: accepted but wrong");
+                            victim_served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            assert!(e.contains("unknown model"), "unexpected error: {e}");
+                            assert!(
+                                removed.load(Ordering::SeqCst),
+                                "client {t} req {k}: rejected before removal started"
+                            );
+                            victim_rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+
+        // mid-load: remove the victim, then hot add a brand-new model and
+        // serve it immediately
+        std::thread::sleep(Duration::from_millis(5));
+        removed.store(true, Ordering::SeqCst);
+        let entry = registry.remove("victim").expect("victim was registered");
+        assert_eq!(entry.name(), "victim");
+        registry.register_graph("late", &late_g, ExecConfig::default(), 8);
+        let mut rng = Rng::new(3000);
+        for _ in 0..30 {
+            let x = rng.normal_vec(late_oracle.num_inputs(), 1.0);
+            let want = late_oracle.execute_one(&x);
+            assert_eq!(server.infer_model("late", x).expect("hot-added model serves"), want);
+        }
+    });
+
+    // accounting: every victim submit is either served or rejected
+    assert_eq!(
+        victim_served.load(Ordering::Relaxed) + victim_rejected.load(Ordering::Relaxed),
+        4 * 120
+    );
+    assert_eq!(server.model_stats("keep").requests, 4 * 120);
+    assert_eq!(
+        server.model_stats("victim").requests,
+        victim_served.load(Ordering::Relaxed) as u64,
+        "served == accepted: removal dropped a request"
+    );
+    assert_eq!(server.model_stats("late").requests, 30);
+    assert_eq!(server.metrics().counter("rejected"), victim_rejected.load(Ordering::Relaxed) as u64);
+    let _ = server.shutdown();
+}
+
+/// Shutdown must drain every model's queue: requests already submitted
+/// to deliberately slow backends all complete across shutdown.
+#[test]
+fn shutdown_drains_all_models() {
+    fn slow_echo(scale: f32) -> Arc<dyn BatchEvaluator> {
+        Arc::new(MutexEvaluator::new(
+            move |xs: &[Vec<f32>]| {
+                std::thread::sleep(Duration::from_millis(1));
+                Ok(xs.iter().map(|x| vec![scale * x.iter().sum::<f32>()]).collect())
+            },
+            4,
+            "slow-echo",
+        ))
+    }
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_evaluator("a", slow_echo(1.0));
+    registry.register_evaluator("b", slow_echo(2.0));
+    registry.register_evaluator("c", slow_echo(3.0));
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig { max_batch: 4, batch_timeout_us: 100, ..Default::default() },
+    );
+    let names = ["a", "b", "c"];
+    let scales = [1.0f32, 2.0, 3.0];
+    let rxs: Vec<_> = (0..45)
+        .map(|i| (i, server.submit_to(names[i % 3], vec![i as f32, 1.0])))
+        .collect();
+    let metrics = Arc::clone(server.metrics());
+    let stats = server.shutdown(); // drains all three queues, then joins
+    for (i, rx) in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(y)) => assert_eq!(y, vec![scales[i % 3] * (i as f32 + 1.0)], "request {i}"),
+            Ok(Err(e)) => panic!("request {i}: drained shutdown must complete, got {e}"),
+            Err(e) => panic!("request {i} hung or was dropped across shutdown: {e}"),
+        }
+    }
+    assert_eq!(stats.requests, 45);
+    for n in names {
+        assert_eq!(metrics.counter(&format!("model.{n}.requests")), 15, "model {n}");
+    }
+}
+
+/// A failing model's errors stay confined to it.
+#[test]
+fn per_model_error_isolation() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_evaluator(
+        "good",
+        Arc::new(MutexEvaluator::new(
+            |xs: &[Vec<f32>]| Ok(xs.iter().map(|x| vec![x.iter().sum()]).collect()),
+            8,
+            "echo",
+        )),
+    );
+    registry.register_evaluator(
+        "bad",
+        Arc::new(MutexEvaluator::new(|_: &[Vec<f32>]| anyhow::bail!("kaput"), 8, "fail")),
+    );
+    let server = Server::start_registry(Arc::clone(&registry), ServeConfig::default());
+    let err = server.infer_model("bad", vec![1.0]).unwrap_err();
+    assert!(err.contains("kaput") && err.contains("bad"), "{err}");
+    assert_eq!(server.infer_model("good", vec![1.0, 2.0]).unwrap(), vec![3.0]);
+    assert_eq!(server.metrics().counter("model.bad.errors"), 1);
+    assert_eq!(server.metrics().counter("model.good.errors"), 0);
+    assert_eq!(server.metrics().counter("errors"), 1);
+    let _ = server.shutdown();
+}
