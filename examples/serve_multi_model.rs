@@ -5,15 +5,22 @@
 //!
 //!     cargo run --release --example serve_multi_model
 //!
-//! Each model is an LCC decomposition of a random weight matrix (no
-//! training needed for the demo). Every response is checked bit-exact
-//! against the `NaiveExecutor` oracle for that model's graph, so the
-//! example doubles as an end-to-end correctness run.
+//! Three models are LCC decompositions of random weight matrices (no
+//! training needed for the demo); a fourth arrives the deployment way —
+//! a checkpoint directory with a compression `recipe.toml`, loaded at
+//! runtime through `ModelRegistry::load_checkpoint_with_recipe`, so the
+//! served engine is pruned+shared+LCC'd per the recipe. Every response
+//! is checked bit-exact against the `NaiveExecutor` oracle for that
+//! model's graph, so the example doubles as an end-to-end correctness
+//! run.
 
 use anyhow::{bail, Result};
+use lccnn::compress::{demo_weights, Pipeline, Recipe};
 use lccnn::config::{ExecConfig, ServeConfig};
 use lccnn::exec::{Executor, NaiveExecutor};
 use lccnn::lcc::{decompose, LccConfig};
+use lccnn::nn::npy::NpyArray;
+use lccnn::nn::ParamStore;
 use lccnn::serve::{ModelRegistry, Server};
 use lccnn::tensor::Matrix;
 use lccnn::util::Rng;
@@ -45,6 +52,33 @@ fn main() -> Result<()> {
         registry.register_graph(&name, oracle.graph(), exec, 32);
         oracles.push((name, oracle));
     }
+
+    // the fourth model arrives as an artifact directory: checkpoint +
+    // recipe, loaded through the registry's recipe path (the engine is
+    // pruned+shared+LCC'd, not LCC-only)
+    let artifact_dir =
+        std::env::temp_dir().join(format!("lccnn-smm-artifact-{}", std::process::id()));
+    let recipe_w = demo_weights(64, 5, 4, 77);
+    let recipe = Recipe { exec: ExecConfig::serial(), ..Recipe::default() };
+    {
+        let mut store = ParamStore::new();
+        store.insert(
+            "weight",
+            NpyArray::f32(vec![recipe_w.rows(), recipe_w.cols()], recipe_w.data().to_vec()),
+        );
+        store.save(&artifact_dir)?;
+        recipe.save(&artifact_dir.join("recipe.toml"))?;
+    }
+    let entry = registry.load_checkpoint_with_recipe("recipe-mlp", &artifact_dir, None, 32)?;
+    println!(
+        "model \"recipe-mlp\": loaded via recipe.toml ({:?} inputs, pruned+shared+LCC)",
+        entry.input_dim()
+    );
+    // its oracle: the same recipe run directly, composed with the
+    // NaiveExecutor over the lowered graph
+    let recipe_model = Pipeline::from_recipe(&recipe)?.run(&recipe_w)?;
+    let recipe_oracle =
+        NaiveExecutor::new(recipe_model.lcc().expect("recipe ends in lcc").graph().clone());
 
     let cfg = ServeConfig { max_batch: 16, batch_timeout_us: 200, ..Default::default() };
     let server = Server::start_registry(Arc::clone(&registry), cfg);
@@ -80,6 +114,28 @@ fn main() -> Result<()> {
             });
         }
 
+        // hammer the recipe-loaded model from the main thread while the
+        // clients run: gather kept -> segment sums -> oracle must match
+        // the served response bit-exactly
+        let slcc = recipe_model.lcc().expect("lcc");
+        let mut rng = Rng::new(400);
+        for _ in 0..100 {
+            let x = rng.normal_vec(recipe_w.cols(), 1.0);
+            let xk: Vec<f32> = recipe_model.kept().iter().map(|&i| x[i]).collect();
+            let want = recipe_oracle.execute_one(&slcc.layer.segment_sums(&xk));
+            match server.infer_model("recipe-mlp", x) {
+                Ok(y) if y == want => {}
+                Ok(y) => {
+                    eprintln!("\"recipe-mlp\": engine {y:?} != oracle {want:?}");
+                    mismatches.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    eprintln!("\"recipe-mlp\": {e}");
+                    mismatches.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+
         // hot add + hot remove while the clients are running
         let (name, oracle) = demo_model("hotswap", 64, 16, 9);
         registry.register_graph(&name, oracle.graph(), ExecConfig::default(), 32);
@@ -102,15 +158,16 @@ fn main() -> Result<()> {
     });
 
     println!("\nper-model stats:");
-    for (name, _) in &oracles {
+    for name in oracles.iter().map(|(n, _)| n.as_str()).chain(["recipe-mlp"]) {
         let s = server.model_stats(name);
         println!(
-            "  {name:<8} {:>6} req  {:>5} batches  mean batch {:>5.1}  p50 {:>8.1} us  p99 {:>8.1} us",
+            "  {name:<10} {:>6} req  {:>5} batches  mean batch {:>5.1}  p50 {:>8.1} us  p99 {:>8.1} us",
             s.requests, s.batches, s.mean_batch_size, s.p50_latency_us, s.p99_latency_us
         );
     }
     println!("\n{}", server.metrics_text());
     let stats = server.shutdown();
+    std::fs::remove_dir_all(&artifact_dir).ok();
     let bad = mismatches.load(Ordering::Relaxed);
     if bad > 0 {
         bail!("{bad} responses were wrong or failed");
@@ -118,7 +175,7 @@ fn main() -> Result<()> {
     println!(
         "served {} requests across {} models; every response bit-identical to the oracle",
         stats.requests,
-        oracles.len() + 1
+        oracles.len() + 2
     );
     Ok(())
 }

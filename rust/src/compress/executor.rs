@@ -1,0 +1,202 @@
+//! The servable form of a compressed model: a [`crate::exec::Executor`]
+//! over the full pipeline artifact.
+//!
+//! Requests carry the *original* input dimension; the executor gathers
+//! the kept features (pruned inputs are simply never read — on the FPGA
+//! they are not wired), segment-sums shared clusters, and runs the LCC
+//! adder graph through the batch-major engine. Pre-LCC artifacts (dense
+//! or shared-only recipes) evaluate their dense product directly, so any
+//! recipe's result is servable through `serve::ModelRegistry`.
+
+use super::state::ModelState;
+use crate::exec::Executor;
+use crate::share::{SharedLayer, SharedLcc};
+use crate::tensor::Matrix;
+
+enum Repr {
+    Dense(Matrix),
+    Shared(SharedLayer),
+    Lcc {
+        slcc: SharedLcc,
+        /// degenerate one-column-per-cluster sharing: segment sums are
+        /// the identity, so inputs feed the engine directly (bit-
+        /// identical to serving the bare graph)
+        identity_sharing: bool,
+    },
+}
+
+/// The compressed model behind the [`Executor`] interface.
+pub struct PipelineExecutor {
+    input_dim: usize,
+    rows: usize,
+    /// None = identity (nothing pruned): skip the gather entirely
+    kept: Option<Vec<usize>>,
+    repr: Repr,
+}
+
+impl PipelineExecutor {
+    pub(crate) fn from_state(state: &ModelState) -> Self {
+        Self::from_state_owned(state.clone())
+    }
+
+    /// Build by moving the artifact's parts (no engine/matrix clones —
+    /// the runtime checkpoint-load path).
+    pub(crate) fn from_state_owned(state: ModelState) -> Self {
+        let (input_dim, rows, kept, dense, shared, lcc) = state.into_executor_parts();
+        let kept = (kept.len() != input_dim).then_some(kept);
+        let repr = if let Some(slcc) = lcc {
+            let identity_sharing =
+                slcc.layer.labels.iter().enumerate().all(|(i, &l)| i == l);
+            Repr::Lcc { slcc, identity_sharing }
+        } else if let Some(s) = shared {
+            Repr::Shared(s)
+        } else {
+            Repr::Dense(dense)
+        };
+        PipelineExecutor { input_dim, rows, kept, repr }
+    }
+
+    /// Additions of the represented program (segment sums included).
+    pub fn additions(&self) -> Option<usize> {
+        match &self.repr {
+            Repr::Lcc { slcc, .. } => Some(slcc.additions()),
+            _ => None,
+        }
+    }
+}
+
+impl Executor for PipelineExecutor {
+    fn num_inputs(&self) -> usize {
+        self.input_dim
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.rows
+    }
+
+    fn name(&self) -> &'static str {
+        "pipeline-exec"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        for x in xs {
+            assert_eq!(x.len(), self.input_dim, "sample has wrong input arity");
+        }
+        let gathered: Option<Vec<Vec<f32>>> = self.kept.as_ref().map(|kept| {
+            xs.iter().map(|x| kept.iter().map(|&i| x[i]).collect()).collect()
+        });
+        let inputs: &[Vec<f32>] = gathered.as_deref().unwrap_or(xs);
+        match &self.repr {
+            Repr::Dense(w) => {
+                ys.resize_with(xs.len(), Vec::new);
+                for (x, y) in inputs.iter().zip(ys.iter_mut()) {
+                    *y = w.matvec(x);
+                }
+            }
+            Repr::Shared(s) => {
+                ys.resize_with(xs.len(), Vec::new);
+                for (x, y) in inputs.iter().zip(ys.iter_mut()) {
+                    *y = s.apply(x);
+                }
+            }
+            Repr::Lcc { slcc, identity_sharing } => {
+                if *identity_sharing {
+                    slcc.engine().execute_batch_into(inputs, ys);
+                } else {
+                    let sums: Vec<Vec<f32>> =
+                        inputs.iter().map(|x| slcc.layer.segment_sums(x)).collect();
+                    slcc.engine().execute_batch_into(&sums, ys);
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for PipelineExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let repr = match &self.repr {
+            Repr::Dense(_) => "dense",
+            Repr::Shared(_) => "shared",
+            Repr::Lcc { .. } => "lcc",
+        };
+        f.debug_struct("PipelineExecutor")
+            .field("input_dim", &self.input_dim)
+            .field("rows", &self.rows)
+            .field("pruned", &self.kept.is_some())
+            .field("repr", &repr)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{demo_weights, Pipeline, Recipe};
+    use crate::config::ExecConfig;
+    use crate::exec::NaiveExecutor;
+    use crate::lcc::{decompose, LccConfig};
+    use crate::util::Rng;
+
+    fn serial_recipe() -> Recipe {
+        Recipe { exec: ExecConfig::serial(), ..Recipe::default() }
+    }
+
+    #[test]
+    fn full_recipe_matches_oracle_composition_bit_exact() {
+        let w = demo_weights(16, 3, 4, 0);
+        let model = Pipeline::from_recipe(&serial_recipe()).unwrap().run(&w).unwrap();
+        let exec = model.executor();
+        assert_eq!(exec.num_inputs(), w.cols());
+        assert_eq!(exec.num_outputs(), w.rows());
+        let slcc = model.lcc().unwrap();
+        let oracle = NaiveExecutor::new(slcc.graph().clone());
+        let mut rng = Rng::new(9);
+        let xs: Vec<Vec<f32>> = (0..13).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        let got = exec.execute_batch(&xs);
+        for (x, y) in xs.iter().zip(&got) {
+            let xk: Vec<f32> = model.kept().iter().map(|&i| x[i]).collect();
+            let want = oracle.execute_one(&slcc.layer.segment_sums(&xk));
+            assert_eq!(*y, want);
+        }
+    }
+
+    #[test]
+    fn lcc_only_recipe_bit_identical_to_bare_graph_engine() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(32, 8, 0.5, &mut rng);
+        let recipe = Recipe::lcc_only(&LccConfig::fs(), ExecConfig::serial());
+        let model = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+        let exec = model.executor();
+        // the legacy path: engine straight over decompose(w)
+        let d = decompose(&w, &LccConfig::fs());
+        let legacy = crate::exec::BatchEngine::with_config(d.graph(), ExecConfig::serial());
+        let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(8, 1.0)).collect();
+        assert_eq!(exec.execute_batch(&xs), legacy.execute_batch(&xs));
+    }
+
+    #[test]
+    fn dense_and_shared_recipes_are_servable() {
+        let w = demo_weights(12, 3, 3, 2);
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(w.cols(), 1.0);
+
+        let prune_only = Pipeline::builder().prune(1e-6).build().unwrap().run(&w).unwrap();
+        let e = prune_only.executor();
+        let xk: Vec<f32> = prune_only.kept().iter().map(|&i| x[i]).collect();
+        assert_eq!(e.execute_one(&x), prune_only.state().dense().matvec(&xk));
+        assert!(e.additions().is_none());
+
+        let shared = Pipeline::builder().prune(1e-6).share().build().unwrap().run(&w).unwrap();
+        let e = shared.executor();
+        let xk: Vec<f32> = shared.kept().iter().map(|&i| x[i]).collect();
+        assert_eq!(e.execute_one(&x), shared.state().shared().unwrap().apply(&xk));
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong input arity")]
+    fn wrong_arity_panics_like_the_engine() {
+        let w = demo_weights(8, 2, 2, 1);
+        let model = Pipeline::from_recipe(&serial_recipe()).unwrap().run(&w).unwrap();
+        let _ = model.executor().execute_one(&[1.0]);
+    }
+}

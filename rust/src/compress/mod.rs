@@ -1,0 +1,77 @@
+//! The unified compression pipeline: one recipe from raw weights to a
+//! served engine.
+//!
+//! The paper's contribution is a *composed* scheme — pruning, weight
+//! sharing, then linear computation coding — and this module makes that
+//! composition a first-class, declarative object instead of hand-wired
+//! glue (the shape Deep Compression's prune→quantize→encode flow and
+//! EIE's compressed-model-to-engine handoff standardized):
+//!
+//! * [`ModelState`] is the artifact a run transforms: the weight matrix
+//!   flowing through prune → share → quantize → LCC, with the kept-column
+//!   map, the shared layer and the lowered adder graph accumulating on it.
+//! * [`Stage`] is the transformation interface; [`PruneStage`],
+//!   [`ShareStage`], [`QuantizeStage`] and [`LccStage`] are the paper's
+//!   stages, and custom stages compose next to them.
+//! * [`Pipeline`] composes stages (builder or [`Recipe`]) and runs them,
+//!   emitting a [`CompressionReport`] — per-stage addition accounting,
+//!   approximation error and shapes — publishable through
+//!   [`crate::metrics::Metrics`].
+//! * [`Recipe`] is the serializable description (`[compress]` TOML +
+//!   `LCCNN_COMPRESS_*` env) that deterministically reproduces a run:
+//!   same recipe + same weights ⇒ the same report and a bit-identical
+//!   engine. `serve::ModelRegistry` loads checkpoints through it, and
+//!   the `compress` CLI subcommand lowers a checkpoint straight to an
+//!   exec-servable artifact directory (`weight.npy` + `recipe.toml` +
+//!   `report.tsv`).
+//! * [`PipelineExecutor`] is the servable result: a
+//!   [`crate::exec::Executor`] that gathers the kept input features,
+//!   segment-sums shared clusters and runs the LCC adder graph on the
+//!   batch-major engine — so served models are pruned+shared+LCC'd, not
+//!   LCC-only.
+//!
+//! ```
+//! use lccnn::compress::{demo_weights, Pipeline, Recipe};
+//!
+//! let w = demo_weights(16, 3, 4, 0);
+//! let model = Pipeline::from_recipe(&Recipe::default()).unwrap().run(&w).unwrap();
+//! assert!(model.report().final_additions() > 0);
+//! assert_eq!(model.report().stages.len(), 3); // prune, share, lcc
+//! ```
+
+mod executor;
+mod pipeline;
+mod recipe;
+mod report;
+mod stage;
+mod state;
+
+pub use executor::PipelineExecutor;
+pub use pipeline::{CompressedModel, Pipeline, PipelineBuilder};
+pub use recipe::{LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec};
+pub use report::{CompressionReport, StageReport};
+pub use stage::{LccStage, PruneStage, QuantizeStage, ShareStage, Stage};
+pub use state::ModelState;
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Synthetic "post-regularization" weights for demos and smokes:
+/// `groups` clusters of `per` near-identical columns plus one
+/// exactly-zero (pruned) column per group — so pruning, sharing and LCC
+/// all genuinely engage.
+pub fn demo_weights(rows: usize, groups: usize, per: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let stride = per + 1;
+    let mut w = Matrix::zeros(rows, groups * stride);
+    for g in 0..groups {
+        let base = rng.normal_vec(rows, 0.8);
+        for j in 0..per {
+            for r in 0..rows {
+                *w.at_mut(r, g * stride + j) = base[r] + 0.005 * rng.normal_f32();
+            }
+        }
+        // column g*stride + per stays zero: pruned
+    }
+    w
+}

@@ -1,0 +1,400 @@
+//! The pipeline: composed stages, validated ordering, one `run` from
+//! raw weights to a reported, servable artifact.
+
+use super::executor::PipelineExecutor;
+use super::recipe::{LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec};
+use super::report::CompressionReport;
+use super::stage::Stage;
+use super::state::ModelState;
+use crate::config::ExecConfig;
+use crate::graph::AdderGraph;
+use crate::lcc::LccConfig;
+use crate::metrics::Metrics;
+use crate::nn::compressed::Layer1;
+use crate::quant::{matrix_csd_adders, FixedPointFormat};
+use crate::share::SharedLcc;
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
+
+/// A stage as the pipeline holds it: serializable spec, or an opaque
+/// custom implementation.
+enum Composed {
+    Spec(StageSpec),
+    Custom(Box<dyn Stage>),
+}
+
+impl Composed {
+    fn name(&self) -> &'static str {
+        match self {
+            Composed::Spec(s) => s.kind(),
+            Composed::Custom(b) => b.name(),
+        }
+    }
+}
+
+/// A validated, runnable composition of compression stages.
+///
+/// Build one from a serializable [`Recipe`] (the deployment path) or
+/// with [`Pipeline::builder`] (the API path, which also accepts custom
+/// [`Stage`] implementations). Running a pipeline never mutates it, so
+/// one pipeline can compress many checkpoints.
+pub struct Pipeline {
+    stages: Vec<Composed>,
+    exec: ExecConfig,
+    /// addition-accounting format (the quantize stage's grid when
+    /// present, the paper's default weight format otherwise)
+    fmt: FixedPointFormat,
+}
+
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<&str> = self.stages.iter().map(Composed::name).collect();
+        f.debug_struct("Pipeline").field("stages", &names).field("exec", &self.exec).finish()
+    }
+}
+
+fn accounting_fmt(stages: &[Composed]) -> FixedPointFormat {
+    for c in stages {
+        if let Composed::Spec(StageSpec::Quantize(q)) = c {
+            return q.to_format();
+        }
+    }
+    FixedPointFormat::default_weights()
+}
+
+/// Ordering contract: at most one of each built-in stage, prune first
+/// when present, nothing after LCC. Custom stages may sit anywhere after
+/// prune and before LCC.
+fn validate(stages: &[Composed]) -> Result<()> {
+    let mut seen: Vec<&str> = Vec::new();
+    let mut saw_any = false;
+    let mut saw_lcc = false;
+    for c in stages {
+        if saw_lcc {
+            bail!("stage {:?} after lcc: lcc lowers the final program and must be last", c.name());
+        }
+        if let Composed::Spec(spec) = c {
+            let kind = c.name();
+            if seen.contains(&kind) {
+                bail!("duplicate {kind} stage");
+            }
+            seen.push(kind);
+            match spec {
+                StageSpec::Prune(_) => {
+                    if saw_any {
+                        bail!("prune must be the first stage");
+                    }
+                }
+                StageSpec::Lcc(_) => saw_lcc = true,
+                _ => {}
+            }
+        }
+        saw_any = true;
+    }
+    Ok(())
+}
+
+impl Pipeline {
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder { stages: Vec::new(), exec: ExecConfig::default() }
+    }
+
+    /// Instantiate (and validate) the pipeline a recipe describes.
+    pub fn from_recipe(recipe: &Recipe) -> Result<Self> {
+        let stages: Vec<Composed> =
+            recipe.stages.iter().cloned().map(Composed::Spec).collect();
+        validate(&stages)?;
+        let fmt = accounting_fmt(&stages);
+        Ok(Pipeline { stages, exec: recipe.exec, fmt })
+    }
+
+    /// The serializable recipe reproducing this pipeline — `None` when a
+    /// custom stage (not serializable) is composed in.
+    pub fn recipe(&self) -> Option<Recipe> {
+        let mut stages = Vec::with_capacity(self.stages.len());
+        for c in &self.stages {
+            match c {
+                Composed::Spec(s) => stages.push(s.clone()),
+                Composed::Custom(_) => return None,
+            }
+        }
+        Some(Recipe { stages, exec: self.exec })
+    }
+
+    pub fn exec_config(&self) -> ExecConfig {
+        self.exec
+    }
+
+    /// Compress a weight matrix end to end.
+    pub fn run(&self, w: &Matrix) -> Result<CompressedModel> {
+        self.run_state(ModelState::new(w))
+    }
+
+    /// Resume from an existing artifact state — how training-interleaved
+    /// coordinators (retraining between stages) hand a mid-pipeline
+    /// state to the remaining stages.
+    pub fn run_state(&self, mut state: ModelState) -> Result<CompressedModel> {
+        let baseline = matrix_csd_adders(state.original(), self.fmt);
+        let mut report = CompressionReport::new(state.rows(), state.input_dim(), baseline);
+        for c in &self.stages {
+            let result = match c {
+                Composed::Spec(spec) => spec.to_stage(self.exec).apply(&mut state),
+                Composed::Custom(stage) => stage.apply(&mut state),
+            };
+            result.with_context(|| format!("compress stage {:?}", c.name()))?;
+            report.push_stage(c.name(), &state, self.fmt);
+        }
+        Ok(CompressedModel { state, report, exec: self.exec })
+    }
+
+    /// [`Pipeline::run`], publishing the report into `metrics`
+    /// (`compress.*` series).
+    pub fn run_with_metrics(&self, w: &Matrix, metrics: &Metrics) -> Result<CompressedModel> {
+        let model = self.run(w)?;
+        model.report().publish(metrics);
+        Ok(model)
+    }
+}
+
+/// Builder composing stages in order; [`PipelineBuilder::build`]
+/// validates the composition.
+pub struct PipelineBuilder {
+    stages: Vec<Composed>,
+    exec: ExecConfig,
+}
+
+impl PipelineBuilder {
+    pub fn prune(self, eps: f32) -> Self {
+        self.spec(StageSpec::Prune(PruneSpec { eps }))
+    }
+
+    /// Weight sharing with default affinity-propagation parameters.
+    pub fn share(self) -> Self {
+        self.spec(StageSpec::Share(ShareSpec::default()))
+    }
+
+    pub fn share_spec(self, spec: ShareSpec) -> Self {
+        self.spec(StageSpec::Share(spec))
+    }
+
+    pub fn quantize(self, fmt: FixedPointFormat) -> Self {
+        self.spec(StageSpec::Quantize(QuantSpec { int_bits: fmt.int_bits, frac_bits: fmt.frac_bits }))
+    }
+
+    pub fn lcc(self, cfg: &LccConfig) -> Self {
+        self.spec(StageSpec::Lcc(LccSpec::from_config(cfg)))
+    }
+
+    pub fn lcc_spec(self, spec: LccSpec) -> Self {
+        self.spec(StageSpec::Lcc(spec))
+    }
+
+    pub fn spec(mut self, spec: StageSpec) -> Self {
+        self.stages.push(Composed::Spec(spec));
+        self
+    }
+
+    /// Compose a custom stage (the resulting pipeline has no
+    /// serializable recipe).
+    pub fn stage(mut self, stage: Box<dyn Stage>) -> Self {
+        self.stages.push(Composed::Custom(stage));
+        self
+    }
+
+    /// Engine tuning for the lowered graph (and anything a custom stage
+    /// reads from the pipeline).
+    pub fn exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    pub fn build(self) -> Result<Pipeline> {
+        validate(&self.stages)?;
+        let fmt = accounting_fmt(&self.stages);
+        Ok(Pipeline { stages: self.stages, exec: self.exec, fmt })
+    }
+}
+
+/// The result of a pipeline run: the final [`ModelState`] plus its
+/// [`CompressionReport`] — convertible into a [`Layer1`] (model
+/// construction) or a [`PipelineExecutor`] (serving).
+pub struct CompressedModel {
+    state: ModelState,
+    report: CompressionReport,
+    exec: ExecConfig,
+}
+
+impl CompressedModel {
+    pub fn report(&self) -> &CompressionReport {
+        &self.report
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    /// Original column index feeding each compact column.
+    pub fn kept(&self) -> &[usize] {
+        self.state.kept()
+    }
+
+    /// The shared+LCC composition, when an LCC stage ran.
+    pub fn lcc(&self) -> Option<&SharedLcc> {
+        self.state.lcc()
+    }
+
+    /// The lowered shift-add program, when an LCC stage ran.
+    pub fn graph(&self) -> Option<&AdderGraph> {
+        self.state.lcc().map(SharedLcc::graph)
+    }
+
+    pub fn exec_config(&self) -> ExecConfig {
+        self.exec
+    }
+
+    /// The layer-1 evaluation strategy (cloning).
+    pub fn layer1(&self) -> Layer1 {
+        self.state.to_layer1()
+    }
+
+    /// Consume into `(kept, Layer1)` without cloning the engine.
+    pub fn into_layer1(self) -> (Vec<usize>, Layer1) {
+        self.state.into_layer1()
+    }
+
+    /// A servable [`crate::exec::Executor`] over the artifact (cloning).
+    pub fn executor(&self) -> PipelineExecutor {
+        PipelineExecutor::from_state(&self.state)
+    }
+
+    /// Consume into the servable executor without cloning the engine
+    /// (the runtime checkpoint-load path).
+    pub fn into_executor(self) -> PipelineExecutor {
+        PipelineExecutor::from_state_owned(self.state)
+    }
+}
+
+impl std::fmt::Debug for CompressedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompressedModel")
+            .field("input_dim", &self.state.input_dim())
+            .field("rows", &self.state.rows())
+            .field("repr", &self.state.repr_name())
+            .field("final_additions", &self.report.final_additions())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::demo_weights;
+
+    #[test]
+    fn default_recipe_runs_all_three_stages() {
+        let w = demo_weights(16, 3, 4, 0);
+        let p = Pipeline::from_recipe(&Recipe::default()).unwrap();
+        let model = p.run(&w).unwrap();
+        let names: Vec<&str> = model.report().stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, vec!["prune", "share", "lcc"]);
+        assert!(model.graph().is_some());
+        assert_eq!(model.kept().len(), 12, "zero columns pruned away");
+        // additions decrease along the composed scheme
+        let adds: Vec<usize> = model.report().stages.iter().map(|s| s.additions).collect();
+        assert!(adds[1] < adds[0], "sharing {} !< dense {}", adds[1], adds[0]);
+        assert!(adds[2] < adds[1], "lcc {} !< sharing {}", adds[2], adds[1]);
+        assert!(model.report().final_ratio() > 1.0);
+    }
+
+    #[test]
+    fn builder_matches_recipe_pipeline() {
+        let w = demo_weights(16, 3, 4, 1);
+        let built = Pipeline::builder()
+            .prune(1e-6)
+            .share()
+            .lcc(&LccConfig::fs())
+            .exec(ExecConfig::serial())
+            .build()
+            .unwrap();
+        let recipe = built.recipe().expect("spec-only pipeline serializes");
+        let from_recipe = Pipeline::from_recipe(&recipe).unwrap();
+        let a = built.run(&w).unwrap();
+        let b = from_recipe.run(&w).unwrap();
+        assert_eq!(a.report(), b.report());
+    }
+
+    #[test]
+    fn invalid_orders_rejected() {
+        let share_then_prune = Recipe {
+            stages: vec![
+                StageSpec::Share(ShareSpec::default()),
+                StageSpec::Prune(PruneSpec::default()),
+            ],
+            exec: ExecConfig::serial(),
+        };
+        assert!(Pipeline::from_recipe(&share_then_prune).is_err());
+        let lcc_then_share = Recipe {
+            stages: vec![
+                StageSpec::Lcc(LccSpec::default()),
+                StageSpec::Share(ShareSpec::default()),
+            ],
+            exec: ExecConfig::serial(),
+        };
+        assert!(Pipeline::from_recipe(&lcc_then_share).is_err());
+        let twice = Recipe {
+            stages: vec![
+                StageSpec::Prune(PruneSpec::default()),
+                StageSpec::Prune(PruneSpec::default()),
+            ],
+            exec: ExecConfig::serial(),
+        };
+        assert!(Pipeline::from_recipe(&twice).is_err());
+    }
+
+    #[test]
+    fn empty_pipeline_is_identity() {
+        let w = demo_weights(8, 2, 2, 2);
+        let p = Pipeline::from_recipe(&Recipe { stages: vec![], exec: ExecConfig::serial() })
+            .unwrap();
+        let model = p.run(&w).unwrap();
+        assert!(model.report().stages.is_empty());
+        assert_eq!(model.state().dense(), &w);
+        assert_eq!(model.report().final_additions(), model.report().baseline_additions);
+    }
+
+    #[test]
+    fn custom_stage_composes_and_blocks_serialization() {
+        struct ScaleStage;
+        impl Stage for ScaleStage {
+            fn name(&self) -> &'static str {
+                "scale"
+            }
+            fn apply(&self, state: &mut ModelState) -> Result<()> {
+                // a no-op restructuring stand-in: states expose enough to
+                // verify the hook ran
+                assert!(state.active_columns() > 0);
+                Ok(())
+            }
+        }
+        let p = Pipeline::builder()
+            .prune(1e-6)
+            .stage(Box::new(ScaleStage))
+            .lcc(&LccConfig::fs())
+            .exec(ExecConfig::serial())
+            .build()
+            .unwrap();
+        assert!(p.recipe().is_none(), "custom stages are not serializable");
+        let model = p.run(&demo_weights(8, 2, 3, 3)).unwrap();
+        let names: Vec<&str> = model.report().stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, vec!["prune", "scale", "lcc"]);
+    }
+
+    #[test]
+    fn deterministic_rerun_reports_equal() {
+        let w = demo_weights(24, 4, 4, 5);
+        let p = Pipeline::from_recipe(&Recipe::default()).unwrap();
+        let a = p.run(&w).unwrap();
+        let b = p.run(&w).unwrap();
+        assert_eq!(a.report(), b.report());
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-run compression accounting.
+//!
+//! A [`CompressionReport`] records, after every stage, the quantities
+//! the paper tracks: additions (the cost metric), the compression ratio
+//! against the input matrix's CSD baseline, shapes (active columns,
+//! clusters) and the approximation error against the exact post-prune
+//! reference. Reports are deterministic — same recipe + same weights
+//! produce an equal report — and publishable into
+//! [`crate::metrics::Metrics`] as `compress.*` series.
+
+use super::state::ModelState;
+use crate::metrics::Metrics;
+use crate::quant::FixedPointFormat;
+use crate::report::Table;
+
+/// The artifact's accounting after one stage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageReport {
+    pub stage: String,
+    /// additions to evaluate the representation once
+    pub additions: usize,
+    /// baseline additions / stage additions
+    pub ratio: f64,
+    pub active_columns: usize,
+    /// clusters after sharing; 0 before
+    pub clusters: usize,
+    /// relative Frobenius error vs the exact post-prune reference
+    pub rel_err: f64,
+}
+
+/// Accounting for a whole pipeline run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressionReport {
+    pub input_rows: usize,
+    pub input_cols: usize,
+    /// CSD adders of the input matrix (the paper's dense baseline)
+    pub baseline_additions: usize,
+    pub stages: Vec<StageReport>,
+}
+
+impl CompressionReport {
+    pub(crate) fn new(input_rows: usize, input_cols: usize, baseline_additions: usize) -> Self {
+        CompressionReport { input_rows, input_cols, baseline_additions, stages: Vec::new() }
+    }
+
+    pub(crate) fn push_stage(&mut self, name: &str, state: &ModelState, fmt: FixedPointFormat) {
+        let additions = state.additions(fmt);
+        self.stages.push(StageReport {
+            stage: name.to_string(),
+            additions,
+            ratio: self.baseline_additions as f64 / additions.max(1) as f64,
+            active_columns: state.active_columns(),
+            clusters: state.clusters(),
+            rel_err: state.rel_err(),
+        });
+    }
+
+    /// Additions of the final representation (the baseline if no stage
+    /// ran).
+    pub fn final_additions(&self) -> usize {
+        self.stages.last().map(|s| s.additions).unwrap_or(self.baseline_additions)
+    }
+
+    /// Approximation error of the final representation.
+    pub fn final_rel_err(&self) -> f64 {
+        self.stages.last().map(|s| s.rel_err).unwrap_or(0.0)
+    }
+
+    /// Compression ratio of the final representation vs the baseline.
+    pub fn final_ratio(&self) -> f64 {
+        self.baseline_additions as f64 / self.final_additions().max(1) as f64
+    }
+
+    /// Render as an aligned table for the CLI.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "compression report ({}x{}, baseline {} CSD adds)",
+                self.input_rows, self.input_cols, self.baseline_additions
+            ),
+            &["stage", "additions", "ratio", "cols", "clusters", "rel err"],
+        );
+        for s in &self.stages {
+            t.add_row(vec![
+                s.stage.clone(),
+                s.additions.to_string(),
+                format!("{:.2}", s.ratio),
+                s.active_columns.to_string(),
+                if s.clusters > 0 { s.clusters.to_string() } else { "-".into() },
+                format!("{:.2e}", s.rel_err),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Tab-separated rows for artifact directories and sweeps.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("stage\tadditions\tratio\tcols\tclusters\trel_err\n");
+        out.push_str(&format!(
+            "baseline\t{}\t1\t{}\t0\t0\n",
+            self.baseline_additions, self.input_cols
+        ));
+        for s in &self.stages {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\n",
+                s.stage, s.additions, s.ratio, s.active_columns, s.clusters, s.rel_err
+            ));
+        }
+        out
+    }
+
+    /// Publish the accounting as `compress.*` metrics: one gauge set per
+    /// stage (`compress.<stage>.additions|ratio|rel_err|cols|clusters`),
+    /// the baseline, and a `compress.runs` counter.
+    pub fn publish(&self, metrics: &Metrics) {
+        metrics.incr("compress.runs", 1);
+        metrics.gauge("compress.baseline_additions", self.baseline_additions as f64);
+        metrics.gauge("compress.final_additions", self.final_additions() as f64);
+        metrics.gauge("compress.final_ratio", self.final_ratio());
+        for s in &self.stages {
+            let p = format!("compress.{}", s.stage);
+            metrics.gauge(&format!("{p}.additions"), s.additions as f64);
+            metrics.gauge(&format!("{p}.ratio"), s.ratio);
+            metrics.gauge(&format!("{p}.rel_err"), s.rel_err);
+            metrics.gauge(&format!("{p}.cols"), s.active_columns as f64);
+            metrics.gauge(&format!("{p}.clusters"), s.clusters as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CompressionReport {
+        CompressionReport {
+            input_rows: 8,
+            input_cols: 12,
+            baseline_additions: 1000,
+            stages: vec![
+                StageReport {
+                    stage: "prune".into(),
+                    additions: 500,
+                    ratio: 2.0,
+                    active_columns: 8,
+                    clusters: 0,
+                    rel_err: 0.0,
+                },
+                StageReport {
+                    stage: "lcc".into(),
+                    additions: 100,
+                    ratio: 10.0,
+                    active_columns: 8,
+                    clusters: 0,
+                    rel_err: 0.01,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn final_quantities() {
+        let r = sample();
+        assert_eq!(r.final_additions(), 100);
+        assert_eq!(r.final_rel_err(), 0.01);
+        assert!((r.final_ratio() - 10.0).abs() < 1e-12);
+        let empty = CompressionReport::new(4, 4, 77);
+        assert_eq!(empty.final_additions(), 77);
+        assert_eq!(empty.final_rel_err(), 0.0);
+    }
+
+    #[test]
+    fn render_and_tsv_contain_all_stages() {
+        let r = sample();
+        let text = r.render();
+        assert!(text.contains("prune") && text.contains("lcc"), "{text}");
+        let tsv = r.to_tsv();
+        assert_eq!(tsv.lines().count(), 4, "header + baseline + 2 stages:\n{tsv}");
+        assert!(tsv.starts_with("stage\t"));
+    }
+
+    #[test]
+    fn publish_exposes_gauges() {
+        let m = Metrics::new();
+        sample().publish(&m);
+        assert_eq!(m.counter("compress.runs"), 1);
+        assert_eq!(m.gauge_value("compress.lcc.additions"), Some(100.0));
+        assert_eq!(m.gauge_value("compress.final_ratio"), Some(10.0));
+        assert_eq!(m.gauge_value("compress.prune.rel_err"), Some(0.0));
+    }
+}

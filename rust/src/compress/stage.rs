@@ -1,0 +1,143 @@
+//! The stage interface and the paper's four built-in stages.
+//!
+//! A [`Stage`] transforms a [`ModelState`] in place; ordering contracts
+//! live on the state's mutators, so a stage cannot corrupt the artifact.
+//! [`super::Pipeline`] composes stages from [`StageSpec`]s (serializable)
+//! or from custom boxed implementations (not serializable, but fully
+//! composable — e.g. a re-scaling or permutation pass between prune and
+//! share).
+
+use super::recipe::StageSpec;
+use super::state::ModelState;
+use crate::cluster::affinity::AffinityParams;
+use crate::config::ExecConfig;
+use crate::lcc::LccConfig;
+use crate::quant::FixedPointFormat;
+use anyhow::Result;
+
+/// One transformation of the compression artifact.
+pub trait Stage: Send + Sync {
+    /// Short stage name for reports and errors.
+    fn name(&self) -> &'static str;
+
+    /// Apply the transformation.
+    fn apply(&self, state: &mut ModelState) -> Result<()>;
+}
+
+/// Drop near-zero columns and compact the matrix (paper Sec. III-B).
+#[derive(Clone, Copy, Debug)]
+pub struct PruneStage {
+    pub eps: f32,
+}
+
+impl Stage for PruneStage {
+    fn name(&self) -> &'static str {
+        "prune"
+    }
+
+    fn apply(&self, state: &mut ModelState) -> Result<()> {
+        state.apply_prune(self.eps)
+    }
+}
+
+/// Tie correlated columns to shared centroids (paper Sec. III-C).
+#[derive(Clone, Copy, Debug)]
+pub struct ShareStage {
+    pub params: AffinityParams,
+}
+
+impl Stage for ShareStage {
+    fn name(&self) -> &'static str {
+        "share"
+    }
+
+    fn apply(&self, state: &mut ModelState) -> Result<()> {
+        state.apply_share(&self.params)
+    }
+}
+
+/// Snap the live coefficients to a fixed-point grid (the CSD baseline's
+/// quantization, applied explicitly when LCC is not the final stage).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantizeStage {
+    pub fmt: FixedPointFormat,
+}
+
+impl Stage for QuantizeStage {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn apply(&self, state: &mut ModelState) -> Result<()> {
+        state.apply_quantize(self.fmt)
+    }
+}
+
+/// Decompose the live coefficients into a shift-add adder graph and
+/// lower it to the batch-major engine (paper Sec. III-A). Terminal.
+#[derive(Clone, Copy, Debug)]
+pub struct LccStage {
+    pub cfg: LccConfig,
+    pub exec: ExecConfig,
+}
+
+impl Stage for LccStage {
+    fn name(&self) -> &'static str {
+        "lcc"
+    }
+
+    fn apply(&self, state: &mut ModelState) -> Result<()> {
+        state.apply_lcc(&self.cfg, self.exec)
+    }
+}
+
+impl StageSpec {
+    /// Instantiate the stage a spec describes; `exec` is the pipeline's
+    /// engine tuning (only the LCC lowering consumes it).
+    pub fn to_stage(&self, exec: ExecConfig) -> Box<dyn Stage> {
+        match self {
+            StageSpec::Prune(p) => Box::new(PruneStage { eps: p.eps }),
+            StageSpec::Share(s) => Box::new(ShareStage { params: s.to_params() }),
+            StageSpec::Quantize(q) => Box::new(QuantizeStage { fmt: q.to_format() }),
+            StageSpec::Lcc(l) => Box::new(LccStage { cfg: l.to_config(), exec }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::demo_weights;
+    use crate::compress::recipe::{LccSpec, PruneSpec, QuantSpec, ShareSpec};
+
+    #[test]
+    fn specs_instantiate_matching_stages() {
+        let exec = ExecConfig::serial();
+        let names: Vec<&str> = [
+            StageSpec::Prune(PruneSpec::default()),
+            StageSpec::Share(ShareSpec::default()),
+            StageSpec::Quantize(QuantSpec::default()),
+            StageSpec::Lcc(LccSpec::default()),
+        ]
+        .iter()
+        .map(|s| s.to_stage(exec).name())
+        .collect();
+        assert_eq!(names, vec!["prune", "share", "quantize", "lcc"]);
+    }
+
+    #[test]
+    fn stages_drive_the_state() {
+        let w = demo_weights(12, 3, 3, 7);
+        let mut state = ModelState::new(&w);
+        StageSpec::Prune(PruneSpec::default())
+            .to_stage(ExecConfig::serial())
+            .apply(&mut state)
+            .unwrap();
+        assert_eq!(state.active_columns(), 9);
+        StageSpec::Lcc(LccSpec::default())
+            .to_stage(ExecConfig::serial())
+            .apply(&mut state)
+            .unwrap();
+        assert!(state.lcc().is_some());
+    }
+}

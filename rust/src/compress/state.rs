@@ -1,0 +1,344 @@
+//! The artifact a compression pipeline transforms.
+//!
+//! [`ModelState`] carries one weight matrix through the staged scheme:
+//! pruning compacts columns (recording the kept-column map), sharing
+//! replaces the dense matrix with a centroid layer, quantization snaps
+//! the live coefficients to a fixed-point grid, and LCC lowers the final
+//! coefficients to a shift-add adder graph behind a batch-major engine.
+//! Each mutator enforces its ordering contract, so a custom [`super::Stage`]
+//! composed into a pipeline cannot silently corrupt the artifact.
+
+use crate::cluster::affinity::{cluster_columns, AffinityParams};
+use crate::config::ExecConfig;
+use crate::lcc::LccConfig;
+use crate::nn::compressed::Layer1;
+use crate::prune::compact_columns;
+use crate::quant::{matrix_csd_adders, quantize_matrix, FixedPointFormat};
+use crate::share::{SharedLayer, SharedLcc};
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// The evolving compression artifact. Accessors expose every layer of
+/// the representation; the `apply_*` mutators are what the built-in
+/// stages (and any custom [`super::Stage`]) drive.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    /// the matrix the pipeline started from (served input dimension)
+    original: Matrix,
+    /// exact post-restructuring reference the approximation error is
+    /// measured against (the compacted dense matrix; quantization and
+    /// LCC distort *away* from this)
+    reference: Matrix,
+    /// original column index feeding each current compact column
+    kept: Vec<usize>,
+    /// current dense coefficients over the kept columns
+    dense: Matrix,
+    shared: Option<SharedLayer>,
+    lcc: Option<SharedLcc>,
+}
+
+impl ModelState {
+    pub fn new(w: &Matrix) -> Self {
+        ModelState {
+            original: w.clone(),
+            reference: w.clone(),
+            kept: (0..w.cols()).collect(),
+            dense: w.clone(),
+            shared: None,
+            lcc: None,
+        }
+    }
+
+    /// Resume from an externally built shared layer (e.g. the Fig. 2
+    /// coordinator's retrained weight-tying): `dense` is the compacted
+    /// post-retraining matrix the sharing approximates, `kept` its
+    /// original-column map.
+    pub fn from_shared(dense: Matrix, kept: Vec<usize>, shared: SharedLayer) -> Self {
+        assert_eq!(kept.len(), dense.cols(), "kept map must cover the dense columns");
+        assert_eq!(shared.num_inputs(), dense.cols(), "sharing must cover the dense columns");
+        ModelState {
+            original: dense.clone(),
+            reference: dense.clone(),
+            kept,
+            dense,
+            shared: Some(shared),
+            lcc: None,
+        }
+    }
+
+    // --- accessors ---------------------------------------------------------
+
+    /// Input dimension a served request must provide (pre-prune).
+    pub fn input_dim(&self) -> usize {
+        self.original.cols()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.original.rows()
+    }
+
+    pub fn original(&self) -> &Matrix {
+        &self.original
+    }
+
+    pub fn kept(&self) -> &[usize] {
+        &self.kept
+    }
+
+    pub fn dense(&self) -> &Matrix {
+        &self.dense
+    }
+
+    pub fn shared(&self) -> Option<&SharedLayer> {
+        self.shared.as_ref()
+    }
+
+    pub fn lcc(&self) -> Option<&SharedLcc> {
+        self.lcc.as_ref()
+    }
+
+    pub fn active_columns(&self) -> usize {
+        self.dense.cols()
+    }
+
+    /// Clusters after sharing; 0 before.
+    pub fn clusters(&self) -> usize {
+        self.shared.as_ref().map(SharedLayer::num_clusters).unwrap_or(0)
+    }
+
+    /// Short name of the current representation.
+    pub fn repr_name(&self) -> &'static str {
+        if self.lcc.is_some() {
+            "lcc"
+        } else if self.shared.is_some() {
+            "shared"
+        } else {
+            "dense"
+        }
+    }
+
+    // --- stage mutators ----------------------------------------------------
+
+    /// Drop columns with l2 norm ≤ `eps`, compacting the dense matrix
+    /// and composing the kept-column map. Must run before share/LCC.
+    pub fn apply_prune(&mut self, eps: f32) -> Result<()> {
+        if self.shared.is_some() || self.lcc.is_some() {
+            bail!("prune must run before share/lcc");
+        }
+        let compact = compact_columns(&self.dense, eps);
+        if compact.kept.is_empty() {
+            bail!("pruning at eps {eps} removed every column");
+        }
+        self.kept = compact.kept.iter().map(|&i| self.kept[i]).collect();
+        self.dense = compact.weights;
+        self.reference = self.dense.clone();
+        Ok(())
+    }
+
+    /// Cluster the kept columns with affinity propagation and tie them
+    /// to centroids. Must run before LCC, at most once.
+    pub fn apply_share(&mut self, params: &AffinityParams) -> Result<()> {
+        if self.lcc.is_some() {
+            bail!("share must run before lcc");
+        }
+        if self.shared.is_some() {
+            bail!("share already applied");
+        }
+        let clustering = cluster_columns(&self.dense, params);
+        self.shared = Some(SharedLayer::from_clustering(&self.dense, &clustering));
+        Ok(())
+    }
+
+    /// Snap the live coefficients (centroids if shared, the dense matrix
+    /// otherwise) to the fixed-point grid. Must run before LCC.
+    pub fn apply_quantize(&mut self, fmt: FixedPointFormat) -> Result<()> {
+        if self.lcc.is_some() {
+            bail!("quantize must run before lcc");
+        }
+        if let Some(s) = &mut self.shared {
+            let (_, deq) = quantize_matrix(&s.centroids, fmt);
+            s.centroids = deq;
+        } else {
+            let (_, deq) = quantize_matrix(&self.dense, fmt);
+            self.dense = deq;
+        }
+        Ok(())
+    }
+
+    /// Decompose the live coefficients with LCC and lower them to a
+    /// batch-major engine. Without a prior share stage the decomposition
+    /// runs over a degenerate one-column-per-cluster sharing whose
+    /// segment sums are the identity (the served executor skips them),
+    /// so it sees exactly the dense matrix. Terminal: nothing may follow.
+    pub fn apply_lcc(&mut self, cfg: &LccConfig, exec: ExecConfig) -> Result<()> {
+        if self.lcc.is_some() {
+            bail!("lcc already applied");
+        }
+        let shared = match &self.shared {
+            Some(s) => s.clone(),
+            None => SharedLayer {
+                centroids: self.dense.clone(),
+                labels: (0..self.dense.cols()).collect(),
+            },
+        };
+        self.lcc = Some(shared.with_lcc_exec(cfg, exec));
+        Ok(())
+    }
+
+    // --- derived quantities ------------------------------------------------
+
+    /// Dense reconstruction of the current representation over the kept
+    /// columns (what `y = W_kept x_kept` effectively multiplies by).
+    pub fn reconstruction(&self) -> Matrix {
+        if let Some(slcc) = &self.lcc {
+            let approx = slcc.decomposition.to_dense();
+            SharedLayer { centroids: approx, labels: slcc.layer.labels.clone() }.expand()
+        } else if let Some(s) = &self.shared {
+            s.expand()
+        } else {
+            self.dense.clone()
+        }
+    }
+
+    /// Relative Frobenius error of the reconstruction against the exact
+    /// post-prune reference.
+    pub fn rel_err(&self) -> f64 {
+        let recon = self.reconstruction();
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&a, &b) in recon.data().iter().zip(self.reference.data()) {
+            num += ((a - b) as f64).powi(2);
+            den += (b as f64).powi(2);
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        (num / den).sqrt()
+    }
+
+    /// Additions to evaluate the current representation once (the paper's
+    /// cost metric): CSD adders for dense, segment sums + centroid CSD
+    /// for shared, segment sums + graph nodes after LCC.
+    pub fn additions(&self, fmt: FixedPointFormat) -> usize {
+        if let Some(slcc) = &self.lcc {
+            slcc.additions()
+        } else if let Some(s) = &self.shared {
+            s.additions_with_csd(fmt)
+        } else {
+            matrix_csd_adders(&self.dense, fmt)
+        }
+    }
+
+    /// The compressed layer-1 evaluation strategy this state denotes
+    /// (cloning); pair with [`ModelState::kept`] for a
+    /// [`crate::nn::CompressedMlp`].
+    pub fn to_layer1(&self) -> Layer1 {
+        if let Some(slcc) = &self.lcc {
+            Layer1::SharedLcc(slcc.clone())
+        } else if let Some(s) = &self.shared {
+            Layer1::Shared(s.clone())
+        } else {
+            Layer1::Dense(self.dense.clone())
+        }
+    }
+
+    /// Decompose into the servable executor's parts without cloning:
+    /// `(input_dim, rows, kept, dense, shared, lcc)`.
+    pub(crate) fn into_executor_parts(
+        self,
+    ) -> (usize, usize, Vec<usize>, Matrix, Option<SharedLayer>, Option<SharedLcc>) {
+        let input_dim = self.original.cols();
+        let rows = self.original.rows();
+        let ModelState { kept, dense, shared, lcc, .. } = self;
+        (input_dim, rows, kept, dense, shared, lcc)
+    }
+
+    /// Consume the state into `(kept, Layer1)` without cloning the
+    /// engine.
+    pub fn into_layer1(self) -> (Vec<usize>, Layer1) {
+        let ModelState { kept, dense, shared, lcc, .. } = self;
+        let layer1 = if let Some(slcc) = lcc {
+            Layer1::SharedLcc(slcc)
+        } else if let Some(s) = shared {
+            Layer1::Shared(s)
+        } else {
+            Layer1::Dense(dense)
+        };
+        (kept, layer1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::demo_weights;
+
+    #[test]
+    fn prune_composes_the_kept_map() {
+        let w = demo_weights(8, 3, 2, 0); // 9 columns, every 3rd zero
+        let mut s = ModelState::new(&w);
+        assert_eq!(s.kept(), (0..9).collect::<Vec<_>>());
+        s.apply_prune(1e-6).unwrap();
+        assert_eq!(s.kept(), &[0, 1, 3, 4, 6, 7]);
+        assert_eq!(s.active_columns(), 6);
+        assert_eq!(s.rel_err(), 0.0, "pruning is exact over the kept columns");
+        // a second prune composes (nothing more to drop here)
+        s.apply_prune(1e-6).unwrap();
+        assert_eq!(s.kept(), &[0, 1, 3, 4, 6, 7]);
+    }
+
+    #[test]
+    fn ordering_contracts_enforced() {
+        let w = demo_weights(8, 3, 3, 1);
+        let mut s = ModelState::new(&w);
+        s.apply_share(&AffinityParams::default()).unwrap();
+        assert!(s.apply_prune(1e-6).is_err(), "prune after share");
+        assert!(s.apply_share(&AffinityParams::default()).is_err(), "share twice");
+        s.apply_lcc(&LccConfig::fs(), ExecConfig::serial()).unwrap();
+        assert!(s.apply_quantize(FixedPointFormat::default_weights()).is_err());
+        assert!(s.apply_lcc(&LccConfig::fs(), ExecConfig::serial()).is_err());
+    }
+
+    #[test]
+    fn quantize_snaps_to_grid() {
+        let w = demo_weights(8, 2, 3, 2);
+        let mut s = ModelState::new(&w);
+        let fmt = FixedPointFormat::default_weights();
+        s.apply_quantize(fmt).unwrap();
+        let step = fmt.step() as f32;
+        for &v in s.dense().data() {
+            let m = v / step;
+            assert!((m - m.round()).abs() < 1e-3, "{v} not on the grid");
+        }
+        assert!(s.rel_err() > 0.0 && s.rel_err() < 0.05);
+    }
+
+    #[test]
+    fn lcc_without_share_uses_identity_sharing() {
+        let w = demo_weights(16, 2, 3, 3);
+        let mut s = ModelState::new(&w);
+        s.apply_lcc(&LccConfig::fs(), ExecConfig::serial()).unwrap();
+        let slcc = s.lcc().unwrap();
+        assert_eq!(slcc.layer.num_clusters(), w.cols());
+        assert!(slcc.layer.labels.iter().enumerate().all(|(i, &l)| i == l));
+        assert_eq!(s.clusters(), 0, "no real sharing happened");
+        assert_eq!(s.repr_name(), "lcc");
+    }
+
+    #[test]
+    fn shared_then_lcc_matches_legacy_composition() {
+        let w = demo_weights(16, 3, 4, 4);
+        let compact = compact_columns(&w, 1e-6);
+        let mut s = ModelState::new(&w);
+        s.apply_prune(1e-6).unwrap();
+        s.apply_share(&AffinityParams::default()).unwrap();
+        s.apply_lcc(&LccConfig::fs(), ExecConfig::serial()).unwrap();
+
+        let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+        let legacy = SharedLayer::from_clustering(&compact.weights, &clustering)
+            .with_lcc_exec(&LccConfig::fs(), ExecConfig::serial());
+        let x: Vec<f32> = (0..compact.kept.len()).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert_eq!(s.lcc().unwrap().apply(&x), legacy.apply(&x));
+        assert_eq!(s.additions(FixedPointFormat::default_weights()), legacy.additions());
+    }
+}

@@ -143,12 +143,26 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub batch_timeout_us: u64,
     pub workers: usize,
+    /// per-model cap on in-flight requests (submit → response): submits
+    /// beyond it are load-shed with a typed error and a
+    /// `model.<name>.shed` counter. 0 disables shedding.
     pub queue_capacity: usize,
+    /// optional path to a compression recipe (`[compress]` TOML) applied
+    /// to every checkpoint the `serve` CLI loads; absent → per-checkpoint
+    /// discovery (artifact dirs carrying `recipe.toml`) with the legacy
+    /// LCC-only fallback
+    pub recipe: Option<String>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 32, batch_timeout_us: 200, workers: 1, queue_capacity: 1024 }
+        ServeConfig {
+            max_batch: 32,
+            batch_timeout_us: 200,
+            workers: 1,
+            queue_capacity: 1024,
+            recipe: None,
+        }
     }
 }
 
@@ -171,6 +185,9 @@ impl ServeConfig {
         if let Some(v) = read("queue_capacity") {
             c.queue_capacity = v;
         }
+        if let Some(v) = get(t, "serve", "recipe").and_then(TomlValue::as_str) {
+            c.recipe = Some(v.to_string());
+        }
         c
     }
 
@@ -190,7 +207,8 @@ impl ServeConfig {
     }
 
     /// Environment overrides: `LCCNN_SERVE_MAX_BATCH`,
-    /// `LCCNN_SERVE_BATCH_TIMEOUT_US`.
+    /// `LCCNN_SERVE_BATCH_TIMEOUT_US`, `LCCNN_SERVE_QUEUE_CAPACITY`,
+    /// `LCCNN_SERVE_RECIPE`.
     pub fn from_env() -> Self {
         fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
             std::env::var(name).ok().and_then(|v| v.parse().ok())
@@ -201,6 +219,14 @@ impl ServeConfig {
         }
         if let Some(v) = env_parse::<u64>("LCCNN_SERVE_BATCH_TIMEOUT_US") {
             c.batch_timeout_us = v;
+        }
+        if let Some(v) = env_parse::<usize>("LCCNN_SERVE_QUEUE_CAPACITY") {
+            c.queue_capacity = v;
+        }
+        if let Ok(v) = std::env::var("LCCNN_SERVE_RECIPE") {
+            if !v.is_empty() {
+                c.recipe = Some(v);
+            }
         }
         c
     }
@@ -350,16 +376,22 @@ impl ExecConfig {
         ExecConfig { threads: 1, ..ExecConfig::default() }
     }
 
-    /// Environment overrides, one per field: `LCCNN_EXEC_THREADS`,
-    /// `LCCNN_EXEC_CHUNK`, `LCCNN_EXEC_PARALLEL_MIN_BATCH`,
-    /// `LCCNN_EXEC_LEVEL_MIN_OPS`, `LCCNN_EXEC_POOL_MODE`
-    /// (`scoped`|`persistent`), `LCCNN_EXEC_POOL_SPIN_US`,
-    /// `LCCNN_EXEC_POOL_PARK_MS`.
+    /// Environment overrides over the defaults, one per field:
+    /// `LCCNN_EXEC_THREADS`, `LCCNN_EXEC_CHUNK`,
+    /// `LCCNN_EXEC_PARALLEL_MIN_BATCH`, `LCCNN_EXEC_LEVEL_MIN_OPS`,
+    /// `LCCNN_EXEC_POOL_MODE` (`scoped`|`persistent`),
+    /// `LCCNN_EXEC_POOL_SPIN_US`, `LCCNN_EXEC_POOL_PARK_MS`.
     pub fn from_env() -> Self {
+        Self::from_env_over(ExecConfig::default())
+    }
+
+    /// The same environment overrides layered over `base` — how a
+    /// recipe's `[exec]` section and the deployment environment compose
+    /// (file first, env on top).
+    pub fn from_env_over(mut c: ExecConfig) -> Self {
         fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
             std::env::var(name).ok().and_then(|v| v.parse().ok())
         }
-        let mut c = ExecConfig::default();
         if let Some(v) = env_parse::<usize>("LCCNN_EXEC_THREADS") {
             c.threads = v;
         }
@@ -386,9 +418,9 @@ impl ExecConfig {
     }
 
     /// Apply the overrides of one parsed TOML section onto `base`.
-    /// Shared by `[exec]` and the per-model `[serve.exec.<name>]`
-    /// sections of a multi-model serve config.
-    fn overrides(t: &Sections, section: &str, mut c: ExecConfig) -> ExecConfig {
+    /// Shared by `[exec]`, the per-model `[serve.exec.<name>]` sections
+    /// of a multi-model serve config, and compression recipes.
+    pub(crate) fn overrides(t: &Sections, section: &str, mut c: ExecConfig) -> ExecConfig {
         // negative values are nonsense here (0 already means "auto" for
         // threads): ignore them instead of letting `as usize` wrap
         let read = |key: &str| -> Option<usize> {
@@ -509,6 +541,32 @@ mod tests {
         let exec = resnet.exec.expect("per-model override");
         assert_eq!(exec.chunk, 16, "per-model key applied");
         assert_eq!(exec.threads, 2, "per-model override layers over [exec]");
+    }
+
+    #[test]
+    fn exec_from_env_over_keeps_base_when_env_unset() {
+        // no LCCNN_EXEC_* set in the test environment for these fields'
+        // uncommon values, so the base must survive untouched
+        let base = ExecConfig { chunk: 123, parallel_min_batch: 456, ..ExecConfig::default() };
+        let c = ExecConfig::from_env_over(base);
+        if std::env::var("LCCNN_EXEC_CHUNK").is_err() {
+            assert_eq!(c.chunk, 123);
+        }
+        if std::env::var("LCCNN_EXEC_PARALLEL_MIN_BATCH").is_err() {
+            assert_eq!(c.parallel_min_batch, 456);
+        }
+    }
+
+    #[test]
+    fn serve_toml_reads_queue_capacity_and_recipe() {
+        let dir = std::env::temp_dir().join(format!("lccnn-serve-shed-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("q.toml");
+        std::fs::write(&p, "[serve]\nqueue_capacity = 7\nrecipe = \"r.toml\"\n").unwrap();
+        let c = ServeConfig::from_toml(&p).unwrap();
+        assert_eq!(c.queue_capacity, 7);
+        assert_eq!(c.recipe.as_deref(), Some("r.toml"));
+        assert!(ServeConfig::default().recipe.is_none());
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub enum LccAlgorithm {
     FullySequential { max_terms_per_row: usize },
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct LccConfig {
     pub algo: LccAlgorithm,
     /// None = auto (≈ log2 rows, paper Sec. III-A)

@@ -25,6 +25,12 @@
 //! partial-kernel), an affinity propagation implementation, synthetic
 //! dataset generators, a PJRT runtime that executes the AOT-compiled JAX
 //! training/eval artifacts, and a pipeline coordinator + serving layer.
+//!
+//! The [`compress`] module ties the stages together as one recipe-driven
+//! pipeline: a serializable [`compress::Recipe`] deterministically
+//! reproduces a prune → share → quantize → LCC run, reports per-stage
+//! addition accounting, and lowers straight to an exec-servable
+//! artifact the multi-model registry can load.
 
 pub mod util;
 pub mod tensor;
@@ -40,6 +46,7 @@ pub mod nn;
 pub mod data;
 pub mod config;
 pub mod metrics;
+pub mod compress;
 pub mod runtime;
 pub mod train;
 pub mod pipeline;

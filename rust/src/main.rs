@@ -5,14 +5,22 @@
 //!   fig2    [--lambda F] [...]    run the Fig. 2 MLP pipeline for one λ
 //!   table1  [--steps N] [...]     run the Table-I residual-CNN pipeline
 //!   decompose --rows N --cols K   LCC vs CSD on a random matrix
+//!   compress [--recipe r.toml] [--checkpoint w.npy | --demo N] [--out dir]
+//!                                 recipe -> artifact -> served engine,
+//!                                 self-verified (nonzero exit on mismatch)
 //!   serve   [--model name=path]...  multi-model registry server driver
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
 //! form --name value and may repeat (`--model a=p1 --model b=p2`).
 
 use anyhow::{bail, Context, Result};
+use lccnn::compress::{demo_weights, CompressedModel, Pipeline, Recipe};
 use lccnn::config::{ExecConfig, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig};
+use lccnn::exec::{Executor, NaiveExecutor};
 use lccnn::lcc::{decompose, LccConfig};
+use lccnn::metrics::Metrics;
+use lccnn::nn::npy::NpyArray;
+use lccnn::nn::{load_weight_matrix, ParamStore};
 use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
 use lccnn::report::{percent, ratio, Table};
 use lccnn::runtime::Runtime;
@@ -20,7 +28,7 @@ use lccnn::serve::{ModelRegistry, Server};
 use lccnn::tensor::Matrix;
 use lccnn::util::{logger, Rng};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -171,6 +179,156 @@ fn cmd_decompose(flags: Flags) -> Result<()> {
     Ok(())
 }
 
+/// `compress`: run a compression recipe end to end — raw weights →
+/// pruned/shared/LCC'd artifact → exec-servable engine — with
+/// self-verification at both seams: executor outputs vs the
+/// `NaiveExecutor`-composed oracle, and a serve round-trip through the
+/// emitted artifact directory (whose `recipe.toml` must reproduce the
+/// exact engine). Nonzero exit on any mismatch — the CI smoke.
+fn cmd_compress(flags: Flags) -> Result<()> {
+    let base = match flags.get("recipe") {
+        Some(p) => Recipe::from_toml(Path::new(p))?,
+        None => Recipe::default(),
+    };
+    let recipe = Recipe::from_env_over(base);
+    let demo: usize = flag(&flags, "demo", 0)?;
+    let requests: usize = flag(&flags, "requests", 32)?.max(1);
+    let seed: u64 = flag(&flags, "seed", 0)?;
+
+    let mut jobs: Vec<(String, Matrix)> = Vec::new();
+    if let Some(ck) = flags.get("checkpoint") {
+        let path = Path::new(ck);
+        let name =
+            path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string();
+        jobs.push((name, load_weight_matrix(path)?));
+    }
+    for i in 0..demo {
+        let (rows, groups, per) = (24 + 8 * i, 4 + i, 4);
+        jobs.push((format!("demo-{i}"), demo_weights(rows, groups, per, seed + i as u64)));
+    }
+    if jobs.is_empty() {
+        bail!("nothing to compress: pass --checkpoint w.npy (file or dir) or --demo N");
+    }
+
+    let pipeline = Pipeline::from_recipe(&recipe)?;
+    let metrics = Metrics::new();
+    let mut failures = 0usize;
+    for (name, w) in &jobs {
+        println!("compressing {name:?} ({}x{})", w.rows(), w.cols());
+        let model = pipeline.run_with_metrics(w, &metrics)?;
+        println!("{}", model.report().render());
+        failures += verify_against_oracle(name, &model, requests, seed + 17);
+
+        let (dir, ephemeral) = match flags.get("out") {
+            Some(d) if jobs.len() == 1 => (PathBuf::from(d), false),
+            Some(d) => (Path::new(d).join(name), false),
+            None => (
+                std::env::temp_dir()
+                    .join(format!("lccnn-compress-{}-{name}", std::process::id())),
+                true,
+            ),
+        };
+        write_artifact(&dir, w, &recipe, &model)?;
+        println!("artifact: {}", dir.display());
+        failures += serve_roundtrip(name, &dir, &model, requests, seed + 23)?;
+        if ephemeral {
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    println!("{}", metrics.render());
+    if failures > 0 {
+        bail!("{failures} verification mismatches");
+    }
+    println!(
+        "compress: {} model(s) verified recipe -> artifact -> registry -> serve, bit-identical",
+        jobs.len()
+    );
+    Ok(())
+}
+
+/// Executor outputs vs the oracle-composed reference (gather kept →
+/// segment sums → `NaiveExecutor` over the LCC graph; dense math for
+/// pre-LCC recipes). Returns the mismatch count.
+fn verify_against_oracle(name: &str, model: &CompressedModel, n: usize, seed: u64) -> usize {
+    let exec = model.executor();
+    let oracle = model.lcc().map(|s| NaiveExecutor::new(s.graph().clone()));
+    let mut rng = Rng::new(seed);
+    let mut bad = 0;
+    for _ in 0..n {
+        let x = rng.normal_vec(exec.num_inputs(), 1.0);
+        let got = exec.execute_one(&x);
+        let xk: Vec<f32> = model.kept().iter().map(|&i| x[i]).collect();
+        let want = match (&oracle, model.lcc()) {
+            (Some(o), Some(slcc)) => o.execute_one(&slcc.layer.segment_sums(&xk)),
+            _ => match model.state().shared() {
+                Some(s) => s.apply(&xk),
+                None => model.state().dense().matvec(&xk),
+            },
+        };
+        if got != want {
+            eprintln!("{name:?}: executor {got:?} != oracle {want:?}");
+            bad += 1;
+        }
+    }
+    bad
+}
+
+/// Write the exec-servable artifact: the original weights, the recipe
+/// that reproduces the engine, and the per-stage report.
+fn write_artifact(dir: &Path, w: &Matrix, recipe: &Recipe, model: &CompressedModel) -> Result<()> {
+    let mut store = ParamStore::new();
+    store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
+    store.save(dir)?;
+    recipe.save(&dir.join("recipe.toml"))?;
+    std::fs::write(dir.join("report.tsv"), model.report().to_tsv())
+        .with_context(|| format!("write {}", dir.join("report.tsv").display()))?;
+    Ok(())
+}
+
+/// Load the artifact back through the registry (recipe discovery) and
+/// serve it, comparing every response bit-exact with the local executor.
+fn serve_roundtrip(
+    name: &str,
+    dir: &Path,
+    model: &CompressedModel,
+    n: usize,
+    seed: u64,
+) -> Result<usize> {
+    let registry = Arc::new(ModelRegistry::new());
+    let entry = registry.load_checkpoint_with_recipe(name, dir, None, 16)?;
+    let exec = model.executor();
+    anyhow::ensure!(
+        entry.input_dim() == Some(exec.num_inputs()),
+        "artifact reload changed the input dim: {:?} vs {}",
+        entry.input_dim(),
+        exec.num_inputs()
+    );
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig { max_batch: 8, batch_timeout_us: 200, ..Default::default() },
+    );
+    let mut rng = Rng::new(seed);
+    let mut bad = 0;
+    for _ in 0..n {
+        let x = rng.normal_vec(exec.num_inputs(), 1.0);
+        let want = exec.execute_one(&x);
+        match server.infer_model(name, x) {
+            Ok(y) if y == want => {}
+            Ok(y) => {
+                eprintln!("{name:?}: served {y:?} != local {want:?}");
+                bad += 1;
+            }
+            Err(e) => {
+                eprintln!("{name:?}: serve round-trip failed: {e}");
+                bad += 1;
+            }
+        }
+    }
+    let stats = server.shutdown();
+    println!("  round-trip served {} requests through the registry", stats.requests);
+    Ok(bad)
+}
+
 /// `serve`: stand up the multi-model registry server and drive it with
 /// synthetic traffic — the smoke/demo driver for a deployment.
 ///
@@ -178,7 +336,10 @@ fn cmd_decompose(flags: Flags) -> Result<()> {
 /// `--config file.toml` (`[serve]` + `[serve.models]` +
 /// `[serve.exec.<name>]`), repeatable `--model name=path` flags, and
 /// `--demo N` synthetic LCC models. Checkpoints are 2-D `.npy` weights
-/// (file or dir) LCC-decomposed at load.
+/// (file or dir) compressed at load through a recipe: `--recipe r.toml`
+/// (or `[serve] recipe` / `LCCNN_SERVE_RECIPE`) applies one recipe to
+/// every load; otherwise artifact dirs carrying `recipe.toml` use it
+/// and bare weights get the legacy LCC-only lowering.
 fn cmd_serve(flags: Flags) -> Result<()> {
     let mut serve_cfg = ServeConfig::from_env();
     let mut specs: Vec<ModelSpec> = lccnn::config::serve_models_from_env();
@@ -199,12 +360,26 @@ fn cmd_serve(flags: Flags) -> Result<()> {
 
     let base_exec = ExecConfig::from_env();
     let registry = Arc::new(ModelRegistry::new());
+    // compression recipe for checkpoint loads: --recipe flag > [serve]
+    // recipe key / LCCNN_SERVE_RECIPE > per-checkpoint discovery (artifact
+    // dirs carrying recipe.toml; LCC-only fallback for bare weights)
+    let recipe_path = flags.get("recipe").cloned().or_else(|| serve_cfg.recipe.clone());
+    let shared_recipe: Option<Recipe> = match &recipe_path {
+        Some(p) => Some(Recipe::from_env_over(Recipe::from_toml(Path::new(p))?)),
+        None => None,
+    };
     for spec in &specs {
-        let entry = registry.load_checkpoint(
+        let mut recipe = match &shared_recipe {
+            Some(r) => r.clone(),
+            None => Recipe::for_checkpoint(Path::new(&spec.path))?,
+        };
+        if let Some(e) = spec.exec {
+            recipe.exec = e; // per-model [serve.exec.<name>] wins
+        }
+        let entry = registry.load_checkpoint_with_recipe(
             &spec.name,
             Path::new(&spec.path),
-            &LccConfig::fs(),
-            spec.exec.unwrap_or(base_exec),
+            Some(&recipe),
             serve_cfg.max_batch,
         )?;
         println!("loaded {:?} from {} ({:?} inputs)", spec.name, spec.path, entry.input_dim());
@@ -304,7 +479,7 @@ fn main() -> Result<()> {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: lccnn <info|fig2|table1|decompose|serve> [--flag value ...]");
+            eprintln!("usage: lccnn <info|fig2|table1|decompose|compress|serve> [--flag value ...]");
             return Ok(());
         }
     };
@@ -313,6 +488,7 @@ fn main() -> Result<()> {
         "fig2" => cmd_fig2(parse_flags(&rest)?),
         "table1" => cmd_table1(parse_flags(&rest)?),
         "decompose" => cmd_decompose(parse_flags(&rest)?),
+        "compress" => cmd_compress(parse_flags(&rest)?),
         "serve" => cmd_serve(parse_flags(&rest)?),
         other => bail!("unknown command {other:?}"),
     }

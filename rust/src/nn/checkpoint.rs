@@ -3,7 +3,8 @@
 //! debugging).
 
 use super::npy::{read_npy, write_npy, NpyArray};
-use anyhow::{Context, Result};
+use crate::tensor::Matrix;
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -69,6 +70,38 @@ impl ParamStore {
         }
         Ok(store)
     }
+}
+
+/// Read a 2-D weight matrix from a `.npy` file or a checkpoint
+/// directory holding one (a `weight.npy` entry, or the directory's only
+/// 2-D array) — the interchange format runtime model loading and the
+/// `compress` CLI share.
+pub fn load_weight_matrix(path: &Path) -> Result<Matrix> {
+    let arr = if path.is_dir() {
+        let store = ParamStore::load(path)?;
+        if let Some(a) = store.get("weight") {
+            a.clone()
+        } else {
+            let mut two_d: Vec<&String> = store
+                .names()
+                .filter(|n| store.get(n).map(|a| a.shape.len() == 2).unwrap_or(false))
+                .collect();
+            match (two_d.pop(), two_d.is_empty()) {
+                (Some(only), true) => store.get(only).cloned().expect("present"),
+                (Some(_), false) => bail!(
+                    "checkpoint dir has several 2-D arrays and no \"weight\"; \
+                     name the served matrix weight.npy"
+                ),
+                (None, _) => bail!("checkpoint dir holds no 2-D array"),
+            }
+        }
+    } else {
+        read_npy(path)?
+    };
+    if arr.shape.len() != 2 {
+        bail!("served weight must be 2-D, got shape {:?}", arr.shape);
+    }
+    Ok(Matrix::from_vec(arr.shape[0], arr.shape[1], arr.data))
 }
 
 #[cfg(test)]

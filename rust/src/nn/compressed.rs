@@ -70,6 +70,19 @@ pub struct CompressedMlp {
 }
 
 impl CompressedMlp {
+    /// Build from a compression-pipeline artifact plus the head
+    /// parameters: the artifact's kept-column map and final
+    /// representation (dense / shared / shared+LCC) become layer 1.
+    pub fn from_compressed(
+        artifact: crate::compress::CompressedModel,
+        b1: Vec<f32>,
+        w2: Matrix,
+        b2: Vec<f32>,
+    ) -> Self {
+        let (kept, layer1) = artifact.into_layer1();
+        CompressedMlp { kept, layer1, b1, w2, b2 }
+    }
+
     pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
         let x_kept: Vec<f32> = self.kept.iter().map(|&i| x[i]).collect();
         let h = self.layer1.apply(&x_kept);
@@ -130,8 +143,11 @@ impl CompressedMlp {
 mod tests {
     use super::*;
     use crate::cluster::affinity::{cluster_columns, AffinityParams};
+    use crate::compress::Pipeline;
+    use crate::config::ExecConfig;
     use crate::lcc::LccConfig;
     use crate::prune::compact_columns;
+    use crate::share::SharedLayer;
     use crate::util::Rng;
 
     /// A weight matrix with pruned columns and duplicated column groups.
@@ -151,34 +167,66 @@ mod tests {
         w
     }
 
+    /// Model construction goes through the compression pipeline (the
+    /// `compress::Pipeline` API is how layer 1 is built now); engine
+    /// tuning reads `LCCNN_EXEC_*` so the CI exec matrix still steers
+    /// these tests.
     fn build(stage: usize) -> (CompressedMlp, Matrix) {
+        let rows = 16;
+        let w1 = synthetic_w1(rows);
+        let mut rng = Rng::new(9);
+        let w2 = Matrix::randn(4, rows, 0.3, &mut rng);
+        let mut b = Pipeline::builder().prune(1e-6);
+        if stage >= 1 {
+            b = b.share();
+        }
+        if stage >= 2 {
+            b = b.lcc(&LccConfig::fs());
+        }
+        let artifact = b
+            .exec(ExecConfig::from_env())
+            .build()
+            .expect("valid stage order")
+            .run(&w1)
+            .expect("pipeline runs");
+        (
+            CompressedMlp::from_compressed(artifact, vec![0.0; rows], w2, vec![0.0; 4]),
+            w1,
+        )
+    }
+
+    /// The pipeline-built model must be bit-identical to the historical
+    /// hand-wired construction at every stage.
+    #[test]
+    fn from_compressed_matches_legacy_hand_wiring() {
         let rows = 16;
         let w1 = synthetic_w1(rows);
         let compact = compact_columns(&w1, 1e-6);
         let mut rng = Rng::new(9);
         let w2 = Matrix::randn(4, rows, 0.3, &mut rng);
-        let layer1 = match stage {
-            0 => Layer1::Dense(compact.weights.clone()),
-            1 => {
-                let c = cluster_columns(&compact.weights, &AffinityParams::default());
-                Layer1::Shared(SharedLayer::from_clustering(&compact.weights, &c))
-            }
-            _ => {
-                let c = cluster_columns(&compact.weights, &AffinityParams::default());
-                let sl = SharedLayer::from_clustering(&compact.weights, &c);
-                Layer1::SharedLcc(sl.with_lcc(&LccConfig::fs()))
-            }
-        };
-        (
-            CompressedMlp {
-                kept: compact.kept,
+        let c = cluster_columns(&compact.weights, &AffinityParams::default());
+        let sl = SharedLayer::from_clustering(&compact.weights, &c);
+        let legacy_layers = [
+            Layer1::Dense(compact.weights.clone()),
+            Layer1::Shared(sl.clone()),
+            Layer1::SharedLcc(sl.with_lcc_exec(&LccConfig::fs(), ExecConfig::from_env())),
+        ];
+        let mut rng = Rng::new(33);
+        let xs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(20, 1.0)).collect();
+        for (stage, layer1) in legacy_layers.into_iter().enumerate() {
+            let legacy = CompressedMlp {
+                kept: compact.kept.clone(),
                 layer1,
                 b1: vec![0.0; rows],
-                w2,
+                w2: w2.clone(),
                 b2: vec![0.0; 4],
-            },
-            w1,
-        )
+            };
+            let (piped, _) = build(stage);
+            assert_eq!(piped.kept, legacy.kept, "stage {stage}");
+            for x in &xs {
+                assert_eq!(piped.forward_one(x), legacy.forward_one(x), "stage {stage}");
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,6 @@ pub mod mlp;
 pub mod npy;
 pub mod resnet;
 
-pub use checkpoint::ParamStore;
+pub use checkpoint::{load_weight_matrix, ParamStore};
 pub use compressed::{CompressedMlp, Layer1};
 pub use mlp::MlpParams;

@@ -4,7 +4,8 @@
 
 use crate::cluster::affinity::{cluster_columns, AffinityParams};
 use crate::cluster::Clustering;
-use crate::config::{LccAlgoConfig, MlpPipelineConfig};
+use crate::compress::{ModelState, Pipeline};
+use crate::config::{ExecConfig, LccAlgoConfig, MlpPipelineConfig};
 use crate::data::synth_mnist;
 use crate::lcc::{LccConfig, LccDecomposition};
 use crate::nn::compressed::{CompressedMlp, Layer1};
@@ -147,19 +148,24 @@ pub fn run_mlp_pipeline(rt: &Runtime, cfg: &MlpPipelineConfig) -> Result<MlpPipe
     });
 
     // --- stage 3: LCC decomposition of the centroid matrix ---------------
-    let shared_lcc = shared_layer.with_lcc(&lcc_config(cfg));
+    // the compress pipeline's resume path: hand it the retrained shared
+    // state and let the LCC stage lower + account it (engine tuning from
+    // the LCCNN_EXEC_* environment, as before)
+    let lcc_state =
+        ModelState::from_shared(shared_compact, compact.kept.clone(), shared_layer.clone());
+    let artifact = Pipeline::builder()
+        .lcc(&lcc_config(cfg))
+        .exec(ExecConfig::from_env())
+        .build()?
+        .run_state(lcc_state)?;
+    let shared_lcc = artifact.lcc().expect("lcc stage ran");
     let lcc_sqnr_db = shared_lcc.decomposition.sqnr_db(&shared_layer.centroids);
     let quant_sqnr_db = {
         let (_, deq) = crate::quant::quantize_matrix(&shared_layer.centroids, fmt);
         crate::util::stats::sqnr_db(shared_layer.centroids.data(), deq.data())
     };
-    let stage_c = CompressedMlp {
-        kept: compact.kept.clone(),
-        layer1: Layer1::SharedLcc(shared_lcc),
-        b1: shared_params.b1,
-        w2: shared_params.w2,
-        b2: shared_params.b2,
-    };
+    let stage_c =
+        CompressedMlp::from_compressed(artifact, shared_params.b1, shared_params.w2, shared_params.b2);
     let c_adds = stage_c.layer1_additions(fmt);
     stages.push(StageResult {
         stage: "reg+sharing+LCC".into(),

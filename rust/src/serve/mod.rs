@@ -9,7 +9,10 @@
 //!   `ExecConfig`; hot add/remove is safe under load.
 //! * [`Router`] tags every submit with its resolved model entry and
 //!   batches per model with fair round-robin draining (deep backlog on
-//!   one model cannot starve the rest).
+//!   one model cannot starve the rest). `ServeConfig::queue_capacity`
+//!   caps each model's in-flight requests: overload is load-shed with a
+//!   typed [`ServeError::Shed`] and a `model.<name>.shed` counter,
+//!   never by dropping an accepted request.
 //! * [`Server`] is the front end: `submit_to(model, x)` from any
 //!   thread; the historical single-model API (`Server::start` +
 //!   `submit`) is a thin shim that serves its backend as
@@ -29,5 +32,5 @@ mod server;
 
 pub use backend::{BatchEvaluator, CompressedMlpBackend, ExecutorBackend, PjrtMlpBackend};
 pub use registry::{ModelEntry, ModelRegistry};
-pub use router::{Response, Router};
+pub use router::{Response, Router, ServeError};
 pub use server::{MutexEvaluator, Server, ServerStats, DEFAULT_MODEL};

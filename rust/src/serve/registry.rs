@@ -5,23 +5,25 @@
 //! all sharing the process-wide persistent worker pool. The registry
 //! owns those engines behind names: models can be registered from an
 //! already-built [`Executor`], lowered from an [`AdderGraph`], or loaded
-//! from an `.npy` checkpoint at runtime (the weight matrix is LCC-
-//! decomposed on the spot), each with its own [`ExecConfig`] override.
+//! from an `.npy` checkpoint at runtime through a compression
+//! [`Recipe`] (pruned + shared + LCC'd per the recipe — artifact dirs
+//! carrying a `recipe.toml` reproduce their exact build), each with its
+//! own [`ExecConfig`] override.
 //! Hot add/remove is safe under load: every accepted request holds an
 //! `Arc<ModelEntry>`, so removing a model only stops *new* submits —
 //! in-flight batches keep their engine alive until they complete.
 
 use super::backend::{BatchEvaluator, ExecutorBackend};
+use crate::compress::{Pipeline, Recipe};
 use crate::config::ExecConfig;
 use crate::exec::{BatchEngine, Executor};
 use crate::graph::AdderGraph;
-use crate::lcc::{decompose, LccConfig};
-use crate::nn::npy::read_npy;
-use crate::nn::ParamStore;
-use crate::tensor::Matrix;
-use anyhow::{bail, Context, Result};
+use crate::lcc::LccConfig;
+use crate::nn::load_weight_matrix;
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::AtomicUsize;
 use std::sync::{Arc, RwLock};
 
 /// One served model: a named evaluator, plus the executor and engine
@@ -33,6 +35,9 @@ pub struct ModelEntry {
     evaluator: Arc<dyn BatchEvaluator>,
     executor: Option<Arc<dyn Executor>>,
     exec_cfg: Option<ExecConfig>,
+    /// in-flight requests (router submit → response sent); the router's
+    /// load shedding admits against this
+    pub(crate) queued: AtomicUsize,
 }
 
 impl ModelEntry {
@@ -65,6 +70,12 @@ impl ModelEntry {
     /// this and the server-wide `ServeConfig::max_batch`).
     pub fn max_batch(&self) -> usize {
         self.evaluator.max_batch().max(1)
+    }
+
+    /// In-flight requests currently admitted against this model
+    /// (router submit → response sent).
+    pub fn queued(&self) -> usize {
+        self.queued.load(std::sync::atomic::Ordering::SeqCst)
     }
 
     /// Evaluate one batch on this model.
@@ -135,6 +146,7 @@ impl ModelRegistry {
             evaluator,
             executor: Some(executor),
             exec_cfg: Some(exec_cfg),
+            queued: AtomicUsize::new(0),
         })
     }
 
@@ -176,15 +188,66 @@ impl ModelRegistry {
             evaluator,
             executor: None,
             exec_cfg: None,
+            queued: AtomicUsize::new(0),
         })
         .1
     }
 
     /// Load a weight matrix from `path` — either a single 2-D `.npy`
     /// file or a checkpoint directory holding one (a `weight.npy` entry,
-    /// or the directory's only 2-D array) — LCC-decompose it, and
-    /// register the lowered engine under `name`. This is the runtime
+    /// or the directory's only 2-D array) — run it through a compression
+    /// recipe, and register the lowered [`crate::compress::PipelineExecutor`]
+    /// under `name`. Served models are whatever the recipe says —
+    /// pruned + shared + LCC'd, not LCC-only. This is the runtime
     /// model-loading path the `serve` CLI uses.
+    ///
+    /// `recipe = None` discovers the recipe: an artifact directory
+    /// carrying a `recipe.toml` (what `lccnn compress --out` writes) is
+    /// loaded through it; anything else gets the legacy LCC-only load
+    /// with env-tuned engine settings.
+    pub fn load_checkpoint_with_recipe(
+        &self,
+        name: &str,
+        path: &Path,
+        recipe: Option<&Recipe>,
+        max_batch: usize,
+    ) -> Result<Arc<ModelEntry>> {
+        let w = load_weight_matrix(path)
+            .with_context(|| format!("model {name:?} from {}", path.display()))?;
+        let discovered;
+        let recipe = match recipe {
+            Some(r) => r,
+            None => {
+                discovered = Recipe::for_checkpoint(path)?;
+                &discovered
+            }
+        };
+        let model = Pipeline::from_recipe(recipe)?
+            .run(&w)
+            .with_context(|| format!("compressing model {name:?}"))?;
+        let report = model.report();
+        log::info!(
+            "model {name:?}: {}x{} weight -> [{}] -> {} adds ({:.2}x, rel err {:.2e})",
+            w.rows(),
+            w.cols(),
+            report.stages.iter().map(|s| s.stage.as_str()).collect::<Vec<_>>().join(" -> "),
+            report.final_additions(),
+            report.final_ratio(),
+            report.final_rel_err(),
+        );
+        let exec_cfg = recipe.exec;
+        let executor: Arc<dyn Executor> = Arc::new(model.into_executor());
+        // single insert, no re-read: a concurrent remove/swap between a
+        // register and a lookup must not be able to panic this path
+        Ok(self.insert_executor(name, executor, exec_cfg, max_batch).0)
+    }
+
+    /// Legacy LCC-only checkpoint load.
+    #[deprecated(
+        since = "0.3.0",
+        note = "registry loads are recipe-driven: use `load_checkpoint_with_recipe` \
+                (this shim wraps `Recipe::lcc_only`)"
+    )]
     pub fn load_checkpoint(
         &self,
         name: &str,
@@ -193,19 +256,12 @@ impl ModelRegistry {
         exec_cfg: ExecConfig,
         max_batch: usize,
     ) -> Result<Arc<ModelEntry>> {
-        let w = load_weight_matrix(path)
-            .with_context(|| format!("model {name:?} from {}", path.display()))?;
-        let d = decompose(&w, lcc);
-        log::info!(
-            "model {name:?}: {}x{} weight -> LCC graph with {} adds",
-            w.rows(),
-            w.cols(),
-            d.additions()
-        );
-        let engine: Arc<dyn Executor> = Arc::new(BatchEngine::with_config(d.graph(), exec_cfg));
-        // single insert, no re-read: a concurrent remove/swap between a
-        // register and a lookup must not be able to panic this path
-        Ok(self.insert_executor(name, engine, exec_cfg, max_batch).0)
+        self.load_checkpoint_with_recipe(
+            name,
+            path,
+            Some(&Recipe::lcc_only(lcc, exec_cfg)),
+            max_batch,
+        )
     }
 
     /// Remove (and return) a model. In-flight requests that already
@@ -243,40 +299,13 @@ impl std::fmt::Debug for ModelRegistry {
     }
 }
 
-/// Read a 2-D weight matrix from a `.npy` file or a checkpoint dir.
-fn load_weight_matrix(path: &Path) -> Result<Matrix> {
-    let arr = if path.is_dir() {
-        let store = ParamStore::load(path)?;
-        if let Some(a) = store.get("weight") {
-            a.clone()
-        } else {
-            let mut two_d: Vec<&String> = store
-                .names()
-                .filter(|n| store.get(n).map(|a| a.shape.len() == 2).unwrap_or(false))
-                .collect();
-            match (two_d.pop(), two_d.is_empty()) {
-                (Some(only), true) => store.get(only).cloned().expect("present"),
-                (Some(_), false) => bail!(
-                    "checkpoint dir has several 2-D arrays and no \"weight\"; \
-                     name the served matrix weight.npy"
-                ),
-                (None, _) => bail!("checkpoint dir holds no 2-D array"),
-            }
-        }
-    } else {
-        read_npy(path)?
-    };
-    if arr.shape.len() != 2 {
-        bail!("served weight must be 2-D, got shape {:?}", arr.shape);
-    }
-    Ok(Matrix::from_vec(arr.shape[0], arr.shape[1], arr.data))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::{Operand, OutputSpec};
     use crate::nn::npy::NpyArray;
+    use crate::nn::ParamStore;
+    use crate::tensor::Matrix;
     use crate::util::Rng;
 
     fn sum_graph(inputs: usize) -> AdderGraph {
@@ -326,6 +355,10 @@ mod tests {
         assert!(e.eval_batch(&[vec![1.0]]).is_err(), "wrong arity must error, not panic");
     }
 
+    fn lcc_serial() -> Recipe {
+        Recipe::lcc_only(&LccConfig::fs(), ExecConfig::serial())
+    }
+
     #[test]
     fn load_checkpoint_from_npy_and_dir() {
         let mut rng = Rng::new(11);
@@ -337,19 +370,11 @@ mod tests {
 
         let r = ModelRegistry::new();
         // from the directory
-        let e = r
-            .load_checkpoint("ckpt", &dir, &LccConfig::fs(), ExecConfig::serial(), 16)
-            .unwrap();
+        let e = r.load_checkpoint_with_recipe("ckpt", &dir, Some(&lcc_serial()), 16).unwrap();
         assert_eq!(e.input_dim(), Some(8));
         // from the bare .npy file
         let e2 = r
-            .load_checkpoint(
-                "ckpt-file",
-                &dir.join("weight.npy"),
-                &LccConfig::fs(),
-                ExecConfig::serial(),
-                16,
-            )
+            .load_checkpoint_with_recipe("ckpt-file", &dir.join("weight.npy"), Some(&lcc_serial()), 16)
             .unwrap();
         assert_eq!(e2.input_dim(), Some(8));
 
@@ -373,10 +398,56 @@ mod tests {
         store.insert("weight", NpyArray::f32(vec![4], vec![0.0; 4]));
         store.save(&dir).unwrap();
         let r = ModelRegistry::new();
-        assert!(r
-            .load_checkpoint("bad", &dir, &LccConfig::fs(), ExecConfig::serial(), 8)
-            .is_err());
+        assert!(r.load_checkpoint_with_recipe("bad", &dir, Some(&lcc_serial()), 8).is_err());
         assert!(!r.contains("bad"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The deprecated shim must behave exactly like the recipe it wraps.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_load_checkpoint_shim_is_recipe_equivalent() {
+        let mut rng = Rng::new(21);
+        let w = Matrix::randn(24, 6, 0.5, &mut rng);
+        let dir = std::env::temp_dir().join(format!("lccnn-reg-shim-{}", std::process::id()));
+        let mut store = ParamStore::new();
+        store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
+        store.save(&dir).unwrap();
+        let r = ModelRegistry::new();
+        let legacy =
+            r.load_checkpoint("legacy", &dir, &LccConfig::fs(), ExecConfig::serial(), 8).unwrap();
+        let recipe = r.load_checkpoint_with_recipe("recipe", &dir, Some(&lcc_serial()), 8).unwrap();
+        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(6, 1.0)).collect();
+        assert_eq!(
+            legacy.eval_batch(&xs).unwrap(),
+            recipe.eval_batch(&xs).unwrap(),
+            "shim and recipe path must serve bit-identically"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// An artifact directory with a `recipe.toml` is loaded through it:
+    /// the served model is pruned+shared+LCC'd, not LCC-only.
+    #[test]
+    fn artifact_dir_recipe_discovered_and_applied() {
+        let w = crate::compress::demo_weights(16, 3, 4, 31);
+        let dir = std::env::temp_dir().join(format!("lccnn-reg-artifact-{}", std::process::id()));
+        let mut store = ParamStore::new();
+        store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
+        store.save(&dir).unwrap();
+        let recipe = Recipe { exec: ExecConfig::serial(), ..Recipe::default() };
+        recipe.save(&dir.join("recipe.toml")).unwrap();
+
+        let r = ModelRegistry::new();
+        let e = r.load_checkpoint_with_recipe("art", &dir, None, 16).unwrap();
+        // requests still carry the original (pre-prune) input dimension
+        assert_eq!(e.input_dim(), Some(w.cols()));
+        // bit-identical to running the same recipe directly
+        let direct = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+        let exec = direct.executor();
+        let mut rng = Rng::new(32);
+        let xs: Vec<Vec<f32>> = (0..7).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        assert_eq!(e.eval_batch(&xs).unwrap(), crate::exec::Executor::execute_batch(&exec, &xs));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

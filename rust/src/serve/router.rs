@@ -8,55 +8,128 @@
 //! the server-wide `max_batch` and the model's own preference, and a
 //! request keeps its entry `Arc` from submit to response, so hot
 //! removal never drops an accepted request.
+//!
+//! Overload protection: `ServeConfig::queue_capacity` caps each model's
+//! in-flight requests (submit → response). A submit beyond the cap is
+//! load-shed immediately with [`ServeError::Shed`] and counted on the
+//! `model.<name>.shed` series — accepted requests are never dropped.
 
 use super::registry::ModelEntry;
 use crate::config::ServeConfig;
 use crate::metrics::Metrics;
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// What a request resolves to: the output row, or a string error (kept
-/// `String` so responses are `Send` and printable across the channel).
-pub type Response = Result<Vec<f32>, String>;
+/// Why a request did not produce an output row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// no model of that name is registered (or it was hot-removed)
+    UnknownModel { model: String },
+    /// the model's in-flight queue is at `ServeConfig::queue_capacity`;
+    /// the request was load-shed, not enqueued
+    Shed { model: String },
+    /// the model's backend failed evaluating the batch
+    Backend { model: String, message: String },
+    /// the server went away before responding
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownModel { model } => write!(f, "unknown model {model:?}"),
+            ServeError::Shed { model } => {
+                write!(f, "model {model:?} shed the request: queue at capacity")
+            }
+            ServeError::Backend { model, message } => {
+                write!(f, "model {model:?} backend error: {message}")
+            }
+            ServeError::Disconnected => write!(f, "server disconnected before responding"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a request resolves to: the output row, or a typed error.
+pub type Response = Result<Vec<f32>, ServeError>;
+
+/// RAII in-flight slot: decrements the model's queue depth when the
+/// request is dropped (response sent, or request discarded on any exit
+/// path), so admission accounting can never leak.
+struct QueueSlot(Arc<ModelEntry>);
+
+impl Drop for QueueSlot {
+    fn drop(&mut self) {
+        self.0.queued.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 struct RoutedRequest {
     entry: Arc<ModelEntry>,
     x: Vec<f32>,
     enqueued: Instant,
     resp: Sender<Response>,
+    /// present when admission control is on
+    _slot: Option<QueueSlot>,
 }
 
 /// The routing/batching half of a multi-model server: owns the intake
-/// channel and the router thread. [`super::Server`] wraps it together
-/// with the registry and metrics.
+/// channel, the router thread and the admission control. [`super::Server`]
+/// wraps it together with the registry and metrics.
 pub struct Router {
     tx: Option<Sender<RoutedRequest>>,
     worker: Option<JoinHandle<()>>,
+    queue_capacity: usize,
+    metrics: Arc<Metrics>,
 }
 
 impl Router {
-    /// Start the router thread. `metrics` receives both the global
-    /// (`requests`, `batch_size`, `latency_us`, `errors`) and the
+    /// Start the router thread. `metrics` receives the global
+    /// (`requests`, `batch_size`, `latency_us`, `errors`, `shed`) and
     /// per-model (`model.<name>.*`) series.
     pub fn start(cfg: &ServeConfig, metrics: Arc<Metrics>) -> Self {
         let (tx, rx) = channel::<RoutedRequest>();
         let max_batch = cfg.max_batch.max(1);
         let timeout = Duration::from_micros(cfg.batch_timeout_us);
+        let loop_metrics = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
             .name("lccnn-serve-router".into())
-            .spawn(move || router_loop(rx, max_batch, timeout, metrics))
+            .spawn(move || router_loop(rx, max_batch, timeout, loop_metrics))
             .expect("spawn router");
-        Router { tx: Some(tx), worker: Some(worker) }
+        Router { tx: Some(tx), worker: Some(worker), queue_capacity: cfg.queue_capacity, metrics }
     }
 
     /// Submit one request to an already-resolved model entry; returns
-    /// the receiver for its response.
+    /// the receiver for its response. When the model's in-flight queue
+    /// is at `ServeConfig::queue_capacity` the request is load-shed: the
+    /// receiver resolves immediately to [`ServeError::Shed`] and the
+    /// `shed` / `model.<name>.shed` counters tick.
     pub fn submit(&self, entry: Arc<ModelEntry>, x: Vec<f32>) -> Receiver<Response> {
         let (resp_tx, resp_rx) = channel();
-        let req = RoutedRequest { entry, x, enqueued: Instant::now(), resp: resp_tx };
+        let slot = if self.queue_capacity > 0 {
+            // admit-then-check: fetch_add returns the prior depth, so at
+            // most `queue_capacity` submits can ever be in flight — a
+            // losing racer undoes its increment and sheds
+            let prior = entry.queued.fetch_add(1, Ordering::SeqCst);
+            if prior >= self.queue_capacity {
+                entry.queued.fetch_sub(1, Ordering::SeqCst);
+                let model = entry.name().to_string();
+                self.metrics.incr("shed", 1);
+                self.metrics.incr(&format!("model.{model}.shed"), 1);
+                let _ = resp_tx.send(Err(ServeError::Shed { model }));
+                return resp_rx;
+            }
+            Some(QueueSlot(Arc::clone(&entry)))
+        } else {
+            None
+        };
+        let req =
+            RoutedRequest { entry, x, enqueued: Instant::now(), resp: resp_tx, _slot: slot };
         self.tx.as_ref().expect("router alive").send(req).expect("router thread alive");
         resp_rx
     }
@@ -216,11 +289,11 @@ fn serve_batch(batch: Vec<RoutedRequest>, metrics: &Metrics) {
             }
         }
         Err(e) => {
-            let msg = format!("model {model:?} backend error: {e:#}");
+            let err = ServeError::Backend { model: model.to_string(), message: format!("{e:#}") };
             metrics.incr("errors", 1);
             metrics.incr(&format!("model.{model}.errors"), 1);
             for req in batch {
-                let _ = req.resp.send(Err(msg.clone()));
+                let _ = req.resp.send(Err(err.clone()));
             }
         }
     }
@@ -333,6 +406,73 @@ mod tests {
             "full batch must dispatch early, waited {:?}",
             start.elapsed()
         );
+        router.shutdown();
+    }
+
+    #[test]
+    fn queue_capacity_sheds_with_typed_error_and_counter() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &scale_graph(1, 0), ExecConfig::serial(), 64);
+        let metrics = Arc::new(Metrics::new());
+        let mut router = Router::start(
+            // a long batching window holds submissions in flight so the
+            // cap is deterministically reachable from this thread
+            &ServeConfig {
+                max_batch: 64,
+                batch_timeout_us: 1_000_000,
+                queue_capacity: 3,
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let m = r.get("m").unwrap();
+        let rxs: Vec<_> = (0..8).map(|i| router.submit(Arc::clone(&m), vec![i as f32])).collect();
+        let mut served = 0;
+        let mut shed = 0;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv().unwrap() {
+                Ok(y) => {
+                    assert_eq!(y, vec![i as f32]);
+                    served += 1;
+                }
+                Err(ServeError::Shed { model }) => {
+                    assert_eq!(model, "m");
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(served + shed, 8);
+        assert!(served >= 3, "capacity admits up to 3 concurrently, served {served}");
+        assert!(shed >= 1, "overload must shed");
+        assert_eq!(metrics.counter("model.m.shed"), shed);
+        assert_eq!(metrics.counter("shed"), shed);
+        assert_eq!(metrics.counter("model.m.requests"), served);
+        router.shutdown();
+        assert_eq!(m.queued(), 0, "every slot released");
+    }
+
+    #[test]
+    fn zero_capacity_disables_shedding() {
+        let r = ModelRegistry::new();
+        r.register_graph("m", &scale_graph(1, 0), ExecConfig::serial(), 64);
+        let metrics = Arc::new(Metrics::new());
+        let mut router = Router::start(
+            &ServeConfig {
+                max_batch: 4,
+                batch_timeout_us: 100,
+                queue_capacity: 0,
+                ..Default::default()
+            },
+            Arc::clone(&metrics),
+        );
+        let m = r.get("m").unwrap();
+        let rxs: Vec<_> =
+            (0..64).map(|i| router.submit(Arc::clone(&m), vec![i as f32])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
+        }
+        assert_eq!(metrics.counter("shed"), 0);
         router.shutdown();
     }
 

@@ -6,7 +6,7 @@
 
 use super::backend::BatchEvaluator;
 use super::registry::ModelRegistry;
-use super::router::{Response, Router};
+use super::router::{Response, Router, ServeError};
 use crate::config::ServeConfig;
 use crate::metrics::Metrics;
 use anyhow::Result;
@@ -73,15 +73,17 @@ impl Server {
     }
 
     /// Submit one request to a named model; returns a receiver for the
-    /// response. An unknown model yields an immediate `Err` response
-    /// (never a panic or a hang): submits race hot removal by design.
+    /// response. An unknown model yields an immediate typed `Err`
+    /// response (never a panic or a hang): submits race hot removal by
+    /// design. A model at its `queue_capacity` sheds with
+    /// [`ServeError::Shed`].
     pub fn submit_to(&self, model: &str, x: Vec<f32>) -> Receiver<Response> {
         match self.registry.get(model) {
             Some(entry) => self.router.submit(entry, x),
             None => {
                 self.metrics.incr("rejected", 1);
                 let (tx, rx) = channel();
-                let _ = tx.send(Err(format!("unknown model {model:?}")));
+                let _ = tx.send(Err(ServeError::UnknownModel { model: model.to_string() }));
                 rx
             }
         }
@@ -92,9 +94,14 @@ impl Server {
         self.submit_to(DEFAULT_MODEL, x)
     }
 
-    /// Blocking convenience call against a named model.
+    /// Blocking convenience call against a named model (errors rendered
+    /// to `String`; use [`Server::submit_to`] for the typed
+    /// [`ServeError`]).
     pub fn infer_model(&self, model: &str, x: Vec<f32>) -> Result<Vec<f32>, String> {
-        self.submit_to(model, x).recv().map_err(|e| e.to_string())?
+        match self.submit_to(model, x).recv() {
+            Ok(resp) => resp.map_err(|e| e.to_string()),
+            Err(_) => Err(ServeError::Disconnected.to_string()),
+        }
     }
 
     /// Blocking convenience call (single-model shim).

@@ -75,10 +75,13 @@ impl SharedLayer {
     }
 
     /// Decompose the centroid matrix with LCC; returns the combined
-    /// shared+LCC representation. Engine tuning comes from the
-    /// `LCCNN_EXEC_*` environment (defaults when unset), so deployments
-    /// — and the CI exec matrix — steer every model-built engine without
-    /// code changes.
+    /// shared+LCC representation, with engine tuning from the
+    /// `LCCNN_EXEC_*` environment.
+    #[deprecated(
+        since = "0.3.0",
+        note = "compose stages with `crate::compress::Pipeline` (recipe-driven, reported), \
+                or call `with_lcc_exec` with explicit engine tuning"
+    )]
     pub fn with_lcc(&self, cfg: &LccConfig) -> SharedLcc {
         self.with_lcc_exec(cfg, ExecConfig::from_env())
     }
@@ -201,7 +204,7 @@ mod tests {
         let w = grouped_matrix(32, 4, 6, 3);
         let c = cluster_columns(&w, &AffinityParams::default());
         let sl = SharedLayer::from_clustering(&w, &c);
-        let slcc = sl.with_lcc(&LccConfig::fs());
+        let slcc = sl.with_lcc_exec(&LccConfig::fs(), ExecConfig::from_env());
         let mut rng = Rng::new(4);
         let x: Vec<f32> = rng.normal_vec(w.cols(), 1.0);
         let y_ref = sl.apply(&x);
@@ -233,8 +236,24 @@ mod tests {
         let c = cluster_columns(&w, &AffinityParams::default());
         let sl = SharedLayer::from_clustering(&w, &c);
         let fmt = FixedPointFormat::default_weights();
-        let slcc = sl.with_lcc(&LccConfig::fs());
+        let slcc = sl.with_lcc_exec(&LccConfig::fs(), ExecConfig::from_env());
         assert!(slcc.additions() < sl.additions_with_csd(fmt),
                 "{} !< {}", slcc.additions(), sl.additions_with_csd(fmt));
+    }
+
+    /// The deprecated env-reading shim must stay equivalent to the
+    /// explicit form it forwards to.
+    #[test]
+    #[allow(deprecated)]
+    fn with_lcc_shim_matches_with_lcc_exec() {
+        let w = grouped_matrix(16, 3, 4, 9);
+        let c = cluster_columns(&w, &AffinityParams::default());
+        let sl = SharedLayer::from_clustering(&w, &c);
+        let a = sl.with_lcc(&LccConfig::fs());
+        let b = sl.with_lcc_exec(&LccConfig::fs(), ExecConfig::from_env());
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = rng.normal_vec(w.cols(), 1.0);
+        assert_eq!(a.apply(&x), b.apply(&x));
+        assert_eq!(a.additions(), b.additions());
     }
 }

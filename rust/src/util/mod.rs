@@ -1,14 +1,14 @@
-//! First-party utilities: PRNG, thread pool, logger, statistics, timers.
+//! First-party utilities: PRNG, logger, statistics, timers.
 //!
 //! The offline vendor tree only carries the `xla` crate's dependency
-//! closure, so randomness, parallelism, logging and stats are implemented
-//! here instead of pulling `rand`/`rayon`/`env_logger`.
+//! closure, so randomness, logging and stats are implemented here
+//! instead of pulling `rand`/`env_logger`. (Parallelism lives in
+//! [`crate::exec::WorkerPool`] — the one pool implementation in the
+//! tree; the legacy `util::ThreadPool` was retired in its favor.)
 
 pub mod logger;
 pub mod rng;
 pub mod stats;
-pub mod threadpool;
 pub mod timer;
 
 pub use rng::Rng;
-pub use threadpool::ThreadPool;

@@ -1,0 +1,177 @@
+//! Integration: the `compress::Pipeline` API.
+//!
+//! * Recipe round trips: TOML serialization and `LCCNN_COMPRESS_*` env
+//!   layering reproduce the same recipe.
+//! * Equivalence: a recipe-driven run is **bit-identical** to the legacy
+//!   hand-wired prune → cluster → share → `with_lcc_exec` path on the
+//!   same 3-shape matrix `pipeline_integration` exercises.
+//! * Determinism: the same recipe re-run yields an equal
+//!   `CompressionReport` and bit-identical outputs — including through a
+//!   serialize → reload cycle and a registry artifact load.
+
+use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
+use lccnn::compress::{
+    demo_weights, Pipeline, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec,
+};
+use lccnn::config::{ExecConfig, LccAlgoConfig};
+use lccnn::exec::Executor;
+use lccnn::lcc::LccConfig;
+use lccnn::nn::npy::NpyArray;
+use lccnn::nn::ParamStore;
+use lccnn::prune::compact_columns;
+use lccnn::serve::ModelRegistry;
+use lccnn::share::SharedLayer;
+use lccnn::util::Rng;
+
+fn serial_default_recipe() -> Recipe {
+    Recipe { exec: ExecConfig::serial(), ..Recipe::default() }
+}
+
+/// The 3-shape matrix from `pipeline_integration`, recipe-driven vs the
+/// legacy hand-wired stage composition: outputs must be bit-identical at
+/// every stage depth, and the addition accounting must agree.
+#[test]
+fn recipe_bit_identical_to_legacy_stage_wiring_on_shape_matrix() {
+    for (i, (rows, groups, per)) in
+        [(16usize, 4usize, 4usize), (32, 6, 3), (24, 5, 5)].into_iter().enumerate()
+    {
+        let w = demo_weights(rows, groups, per, 60 + i as u64);
+
+        // legacy: hand-wired prune -> cluster -> share -> lcc
+        let compact = compact_columns(&w, 1e-6);
+        let clustering = cluster_columns(&compact.weights, &AffinityParams::default());
+        let shared = SharedLayer::from_clustering(&compact.weights, &clustering);
+        let legacy = shared.with_lcc_exec(&LccConfig::fs(), ExecConfig::serial());
+
+        // recipe-driven
+        let model =
+            Pipeline::from_recipe(&serial_default_recipe()).unwrap().run(&w).unwrap();
+        assert_eq!(model.kept(), &compact.kept[..], "shape {i}: kept maps agree");
+        let slcc = model.lcc().expect("lcc stage ran");
+        assert_eq!(slcc.additions(), legacy.additions(), "shape {i}: addition accounting");
+        assert_eq!(
+            model.state().shared().unwrap().num_clusters(),
+            shared.num_clusters(),
+            "shape {i}: same clustering"
+        );
+
+        // bit-identical on a batch, through both the Layer1 path and the
+        // full-input-dim executor
+        let mut rng = Rng::new(100 + i as u64);
+        let xs: Vec<Vec<f32>> = (0..11).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        let xs_kept: Vec<Vec<f32>> =
+            xs.iter().map(|x| compact.kept.iter().map(|&j| x[j]).collect()).collect();
+        assert_eq!(slcc.apply_batch(&xs_kept), legacy.apply_batch(&xs_kept), "shape {i}");
+        let exec = model.executor();
+        assert_eq!(exec.num_inputs(), w.cols(), "served input dim is pre-prune");
+        for (x, xk) in xs.iter().zip(&xs_kept) {
+            assert_eq!(exec.execute_one(x), legacy.apply(xk), "shape {i}: executor path");
+        }
+    }
+}
+
+/// Same recipe, run twice (and once through a TOML round trip): equal
+/// reports, bit-identical engines.
+#[test]
+fn deterministic_rerun_and_toml_round_trip() {
+    let w = demo_weights(24, 4, 4, 7);
+    let recipe = serial_default_recipe();
+    let a = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+    let b = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+    assert_eq!(a.report(), b.report(), "same recipe must reproduce the same report");
+
+    let reparsed = Recipe::from_toml_str(&recipe.to_toml_string()).unwrap();
+    assert_eq!(reparsed, recipe);
+    let c = Pipeline::from_recipe(&reparsed).unwrap().run(&w).unwrap();
+    assert_eq!(a.report(), c.report(), "TOML round trip must not perturb the run");
+
+    let mut rng = Rng::new(8);
+    let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+    let ya = a.executor().execute_batch(&xs);
+    assert_eq!(ya, b.executor().execute_batch(&xs));
+    assert_eq!(ya, c.executor().execute_batch(&xs));
+}
+
+/// `LCCNN_COMPRESS_*` env layering: stage reshaping and per-stage knobs.
+/// (One test mutates all compress env vars so parallel tests never race
+/// on them; no other suite reads `LCCNN_COMPRESS_*`.)
+#[test]
+fn env_overrides_layer_over_recipe() {
+    std::env::set_var("LCCNN_COMPRESS_STAGES", "prune,lcc");
+    std::env::set_var("LCCNN_COMPRESS_PRUNE_EPS", "0.001");
+    std::env::set_var("LCCNN_COMPRESS_LCC_ALGO", "fp");
+    std::env::set_var("LCCNN_COMPRESS_LCC_SLICE_WIDTH", "5");
+    std::env::set_var("LCCNN_COMPRESS_LCC_TARGET_REL_ERR", "0.03");
+    let r = Recipe::from_env_over(Recipe::default());
+    std::env::remove_var("LCCNN_COMPRESS_STAGES");
+    std::env::remove_var("LCCNN_COMPRESS_PRUNE_EPS");
+    std::env::remove_var("LCCNN_COMPRESS_LCC_ALGO");
+    std::env::remove_var("LCCNN_COMPRESS_LCC_SLICE_WIDTH");
+    std::env::remove_var("LCCNN_COMPRESS_LCC_TARGET_REL_ERR");
+
+    let kinds: Vec<&str> = r.stages.iter().map(StageSpec::kind).collect();
+    assert_eq!(kinds, vec!["prune", "lcc"], "share dropped by LCCNN_COMPRESS_STAGES");
+    match &r.stages[0] {
+        StageSpec::Prune(p) => assert!((p.eps - 0.001f32).abs() < 1e-9),
+        other => panic!("{other:?}"),
+    }
+    match &r.stages[1] {
+        StageSpec::Lcc(l) => {
+            assert_eq!(l.algo, LccAlgoConfig::Fp);
+            assert_eq!(l.slice_width, 5);
+            assert!((l.target_rel_err - 0.03).abs() < 1e-12);
+        }
+        other => panic!("{other:?}"),
+    }
+    // and the layered recipe still round-trips through TOML
+    assert_eq!(Recipe::from_toml_str(&r.to_toml_string()).unwrap(), r);
+}
+
+/// An artifact directory (weights + recipe.toml) loaded through the
+/// registry serves bit-identically to the directly built pipeline.
+#[test]
+fn registry_artifact_load_matches_direct_pipeline() {
+    let w = demo_weights(20, 4, 3, 11);
+    let recipe = serial_default_recipe();
+    let dir = std::env::temp_dir().join(format!("lccnn-cp-artifact-{}", std::process::id()));
+    let mut store = ParamStore::new();
+    store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
+    store.save(&dir).unwrap();
+    recipe.save(&dir.join("recipe.toml")).unwrap();
+
+    let registry = ModelRegistry::new();
+    let entry = registry.load_checkpoint_with_recipe("art", &dir, None, 8).unwrap();
+    let direct = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+    let exec = direct.executor();
+    assert_eq!(entry.input_dim(), Some(w.cols()));
+
+    let mut rng = Rng::new(12);
+    let xs: Vec<Vec<f32>> = (0..7).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+    assert_eq!(entry.eval_batch(&xs).unwrap(), exec.execute_batch(&xs));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Quantize composes between share and LCC, and the quantized recipe
+/// still round-trips + reproduces deterministically.
+#[test]
+fn quantized_recipe_runs_and_round_trips() {
+    let w = demo_weights(16, 3, 4, 13);
+    let recipe = Recipe {
+        stages: vec![
+            StageSpec::Prune(PruneSpec::default()),
+            StageSpec::Share(ShareSpec::default()),
+            StageSpec::Quantize(QuantSpec { int_bits: 2, frac_bits: 6 }),
+            StageSpec::Lcc(Default::default()),
+        ],
+        exec: ExecConfig::serial(),
+    };
+    assert_eq!(Recipe::from_toml_str(&recipe.to_toml_string()).unwrap(), recipe);
+    let p = Pipeline::from_recipe(&recipe).unwrap();
+    let a = p.run(&w).unwrap();
+    let b = p.run(&w).unwrap();
+    assert_eq!(a.report(), b.report());
+    let names: Vec<&str> = a.report().stages.iter().map(|s| s.stage.as_str()).collect();
+    assert_eq!(names, vec!["prune", "share", "quantize", "lcc"]);
+    // quantization distorts; the report must say so before LCC runs
+    assert!(a.report().stages[2].rel_err > 0.0);
+}

@@ -6,7 +6,8 @@
 //!   (no artifacts needed), asserting at every graph-executing stage
 //!   that results are **bit-identical** to the `NaiveExecutor` oracle —
 //!   through the engine, the single-model server shim, and the
-//!   multi-model registry server.
+//!   multi-model registry server — and that the recipe-driven
+//!   `compress::Pipeline` reproduces the hand-wired stack bit-exactly.
 //! * `fig2_pipeline_small_budget` — the trained Fig. 2 pipeline through
 //!   PJRT at a small budget (skips when the AOT artifacts are absent).
 
@@ -14,6 +15,7 @@ mod common;
 
 use common::runtime_or_skip;
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
+use lccnn::compress::{Pipeline, Recipe};
 use lccnn::config::{ExecConfig, MlpPipelineConfig, ServeConfig};
 use lccnn::exec::{Executor, NaiveExecutor};
 use lccnn::lcc::LccConfig;
@@ -94,6 +96,27 @@ fn run_stack_for_shape(rows: usize, groups: usize, per: usize, exec_cfg: ExecCon
         let sums = shared.segment_sums(xk);
         assert_eq!(*y, oracle.execute_one(&sums), "engine != oracle ({rows}x{cols})");
         assert_eq!(*y, slcc.apply(xk), "batch path != scalar path");
+    }
+
+    // --- stage 4b: the recipe-driven pipeline reproduces this exact stack --
+    let recipe = Recipe { exec: exec_cfg, ..Recipe::default() };
+    let artifact = Pipeline::from_recipe(&recipe)
+        .expect("default recipe is valid")
+        .run(&w)
+        .expect("pipeline runs");
+    assert_eq!(artifact.kept(), &compact.kept[..], "recipe pruning agrees");
+    assert_eq!(
+        artifact.lcc().expect("lcc stage ran").additions(),
+        slcc.additions(),
+        "recipe addition accounting agrees ({rows}x{cols})"
+    );
+    let pipe_exec = artifact.executor();
+    for (x, y) in xs.iter().zip(&batch) {
+        assert_eq!(
+            pipe_exec.execute_one(x),
+            *y,
+            "recipe-driven executor != legacy stack ({rows}x{cols})"
+        );
     }
 
     // --- stage 5a: serve through the single-model shim ---------------------

@@ -8,7 +8,7 @@ use lccnn::config::{ExecConfig, ServeConfig};
 use lccnn::exec::{BatchEngine, Executor, NaiveExecutor};
 use lccnn::graph::{AdderGraph, Operand, OutputSpec};
 use lccnn::serve::{
-    BatchEvaluator, ExecutorBackend, ModelRegistry, MutexEvaluator, Server,
+    BatchEvaluator, ExecutorBackend, ModelRegistry, MutexEvaluator, ServeError, Server,
 };
 use lccnn::util::Rng;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -228,6 +228,87 @@ fn shutdown_drains_all_models() {
     for n in names {
         assert_eq!(metrics.counter(&format!("model.{n}.requests")), 15, "model {n}");
     }
+}
+
+/// Overload hammer: a slow model behind a small `queue_capacity` is
+/// flooded from several threads. The invariants: every submit resolves
+/// (served correctly or shed with the typed error — never dropped, never
+/// hung), the shed counter matches the observed sheds exactly, only
+/// accepted requests are counted as served, and the overload must
+/// actually shed.
+#[test]
+fn overload_sheds_without_dropping_accepted_requests() {
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 40;
+    const CAPACITY: usize = 8;
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_evaluator(
+        "slow",
+        Arc::new(MutexEvaluator::new(
+            |xs: &[Vec<f32>]| {
+                std::thread::sleep(Duration::from_millis(2));
+                Ok(xs.iter().map(|x| vec![x.iter().sum::<f32>() + 1.0]).collect())
+            },
+            4,
+            "slow-echo",
+        )),
+    );
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            max_batch: 4,
+            batch_timeout_us: 100,
+            queue_capacity: CAPACITY,
+            ..Default::default()
+        },
+    );
+
+    let served = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let server = &server;
+            let served = &served;
+            let shed = &shed;
+            scope.spawn(move || {
+                // burst-submit the whole allotment first (outpacing the
+                // 2ms-per-batch backend, so the cap must engage), then
+                // collect every response
+                let rxs: Vec<_> = (0..PER_CLIENT)
+                    .map(|k| {
+                        let v = (t * PER_CLIENT + k) as f32;
+                        (v, server.submit_to("slow", vec![v, 1.0]))
+                    })
+                    .collect();
+                for (v, rx) in rxs {
+                    match rx.recv().expect("every submit resolves") {
+                        Ok(y) => {
+                            assert_eq!(y, vec![v + 2.0], "accepted request served wrong");
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ServeError::Shed { model }) => {
+                            assert_eq!(model, "slow");
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+            });
+        }
+    });
+
+    let served = served.load(Ordering::Relaxed) as u64;
+    let shed = shed.load(Ordering::Relaxed) as u64;
+    assert_eq!(served + shed, (CLIENTS * PER_CLIENT) as u64, "no request lost");
+    assert!(shed > 0, "burst of {} against capacity {CAPACITY} must shed", CLIENTS * PER_CLIENT);
+    assert!(served > 0, "admitted requests must be served");
+    assert_eq!(server.metrics().counter("model.slow.shed"), shed);
+    assert_eq!(server.metrics().counter("shed"), shed);
+    assert_eq!(server.metrics().counter("model.slow.requests"), served, "only accepted count");
+    let stats = server.shutdown(); // joins the router: every slot released
+    assert_eq!(stats.requests, served);
+    assert_eq!(registry.get("slow").unwrap().queued(), 0, "all slots released");
 }
 
 /// A failing model's errors stay confined to it.
