@@ -26,11 +26,7 @@ fn main() {
 
     // LCC finds the shared subexpression m(x1,x2) the paper points out:
     let d = decompose(&w, &LccConfig::fs());
-    println!(
-        "LCC (FS): {} additions, SQNR {:.1} dB",
-        d.additions(),
-        d.sqnr_db(&w)
-    );
+    println!("LCC (FS): {} additions, SQNR {:.1} dB", d.additions(), d.sqnr_db(&w));
     let y = d.apply(&[1.0, 1.0]);
     println!("W [1, 1] via shift-add VM = [{:.4}, {:.4}] (exact: [2.375, 4.75])", y[0], y[1]);
 

@@ -39,7 +39,10 @@ fn main() -> Result<()> {
     let train_data = synth_tiny::generate(cfg.train_examples, cfg.seed);
     let test_data = synth_tiny::generate(cfg.test_examples, cfg.seed + 1);
 
-    println!("training residual CNN ({} steps, lambda={}, FK grouping)...", cfg.train_steps, cfg.lambda);
+    println!(
+        "training residual CNN ({} steps, lambda={}, FK grouping)...",
+        cfg.train_steps, cfg.lambda
+    );
     let mut tr = ResnetTrainer::new(&rt, &init_params(cfg.seed), ConvGrouping::Fk)?;
     tr.lambda = cfg.lambda;
     let sched = LrSchedule { base: cfg.lr, every: 100, factor: 0.9 };
@@ -58,7 +61,13 @@ fn main() -> Result<()> {
     );
     for (name, side, stride) in conv_specs() {
         let arr = store.get(&name).unwrap();
-        let k = Tensor4::from_vec(arr.shape[0], arr.shape[1], arr.shape[2], arr.shape[3], arr.data.clone());
+        let k = Tensor4::from_vec(
+            arr.shape[0],
+            arr.shape[1],
+            arr.shape[2],
+            arr.shape[3],
+            arr.data.clone(),
+        );
         let mut csd_cost = |m: &lccnn::tensor::Matrix| matrix_csd_adders(m, fmt);
         let csd_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut csd_cost);
         let csd_pk = conv_layer_additions(&k, side, stride, ConvRepr::Pk, &mut csd_cost);

@@ -97,8 +97,10 @@ fn main() -> Result<()> {
             let server = Server::start(backend, ServeConfig::default());
             let thpt = drive(&server, n_requests, 2);
             let stats = server.shutdown();
-            println!("[dense-pjrt]     {:>8.0} req/s  p50 {:>7.1} us  p99 {:>7.1} us  mean batch {:.1}",
-                thpt, stats.p50_latency_us, stats.p99_latency_us, stats.mean_batch_size);
+            println!(
+                "[dense-pjrt]     {:>8.0} req/s  p50 {:>7.1} us  p99 {:>7.1} us  mean batch {:.1}",
+                thpt, stats.p50_latency_us, stats.p99_latency_us, stats.mean_batch_size
+            );
         }
         Err(e) => println!("[dense-pjrt] skipped (artifacts not built?): {e:#}"),
     }

@@ -1,19 +1,23 @@
 //! ABL-VM bench: adder-graph execution throughput across the engine
 //! family — naive interpreter, scalar plan (the old `CompiledGraph`
-//! path), batch-major engine (1 thread) and parallel engine — plus ASAP
-//! schedule stats (the FPGA parallelism proxy) on MLP-shaped
-//! decompositions. Record the resulting table in EXPERIMENTS.md §Perf.
+//! path), batch-major engine (1 thread), parallel engine and the sharded
+//! scatter/gather executor — plus ASAP schedule stats (the FPGA
+//! parallelism proxy) on MLP-shaped decompositions. Record the resulting
+//! table in EXPERIMENTS.md §Perf.
 //!
 //!     cargo bench --bench adder_vm
+//!
+//! CI smoke: `LCCNN_BENCH_QUICK=1` shrinks the batch/iteration counts;
+//! `LCCNN_BENCH_JSON=BENCH_exec.json` appends one JSON row per table row.
 #![allow(deprecated)]
 
 use lccnn::config::{ExecConfig, PoolMode};
-use lccnn::exec::{BatchEngine, Executor};
+use lccnn::exec::{BatchEngine, Executor, ShardedExecutor};
 use lccnn::graph::{schedule, CompiledGraph};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::report::Table;
 use lccnn::tensor::Matrix;
-use lccnn::util::{stats, timer, Rng};
+use lccnn::util::{bench, stats, timer, Rng};
 
 /// per-sample microseconds for a whole-batch closure
 fn per_sample_us(batch: usize, warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
@@ -23,16 +27,18 @@ fn per_sample_us(batch: usize, warmup: usize, iters: usize, mut f: impl FnMut())
 
 fn main() {
     let mut rng = Rng::new(0);
-    const BATCH: usize = 512;
+    let batch: usize = bench::pick(64, 512);
+    let (warmup, iters) = (bench::pick(1, 3), bench::pick(3, 30));
     let mut t = Table::new(
-        &format!("adder-graph execution, us/sample (batch {BATCH} for the engine columns)"),
+        &format!("adder-graph execution, us/sample (batch {batch} for the engine columns)"),
         &["matrix", "algo", "adds", "depth", "max width", "interp", "scalar plan",
-          "batch x1", "par scoped", "par pool", "pool speedup", "dense"],
+          "batch x1", "par scoped", "par pool", "pool speedup", "shard x2", "shard x4",
+          "dense"],
     );
     for &(n, k) in &[(300usize, 30usize), (300, 60), (64, 9), (192, 3)] {
         let w = Matrix::randn(n, k, 0.5, &mut rng);
-        let xs: Vec<Vec<f32>> = (0..BATCH).map(|_| rng.normal_vec(k, 1.0)).collect();
-        let dense_us = per_sample_us(BATCH, 3, 30, || {
+        let xs: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(k, 1.0)).collect();
+        let dense_us = per_sample_us(batch, warmup, iters, || {
             for x in &xs {
                 std::hint::black_box(w.matvec(std::hint::black_box(x)));
             }
@@ -42,7 +48,7 @@ fn main() {
             let g = d.graph();
             let s = schedule(g);
 
-            let interp_us = per_sample_us(BATCH, 3, 30, || {
+            let interp_us = per_sample_us(batch, warmup, iters, || {
                 for x in &xs {
                     std::hint::black_box(g.execute(std::hint::black_box(x)));
                 }
@@ -52,7 +58,7 @@ fn main() {
             let c = CompiledGraph::new(g);
             let mut scratch = Vec::new();
             let mut out = Vec::new();
-            let scalar_us = per_sample_us(BATCH, 3, 30, || {
+            let scalar_us = per_sample_us(batch, warmup, iters, || {
                 for x in &xs {
                     c.execute_into(std::hint::black_box(x), &mut scratch, &mut out);
                     std::hint::black_box(&out);
@@ -61,7 +67,7 @@ fn main() {
 
             let serial = BatchEngine::with_config(g, ExecConfig::serial());
             let mut ys = Vec::new();
-            let batch_us = per_sample_us(BATCH, 3, 30, || {
+            let batch_us = per_sample_us(batch, warmup, iters, || {
                 serial.execute_batch_into(std::hint::black_box(&xs), &mut ys);
                 std::hint::black_box(&ys);
             });
@@ -75,7 +81,7 @@ fn main() {
                     ..ExecConfig::default()
                 },
             );
-            let scoped_us = per_sample_us(BATCH, 3, 30, || {
+            let scoped_us = per_sample_us(batch, warmup, iters, || {
                 scoped.execute_batch_into(std::hint::black_box(&xs), &mut ys);
                 std::hint::black_box(&ys);
             });
@@ -89,10 +95,27 @@ fn main() {
                     ..ExecConfig::default()
                 },
             );
-            let pooled_us = per_sample_us(BATCH, 3, 30, || {
+            let pooled_us = per_sample_us(batch, warmup, iters, || {
                 pooled.execute_batch_into(std::hint::black_box(&xs), &mut ys);
                 std::hint::black_box(&ys);
             });
+
+            // sharded scatter/gather over the same program, serial inner
+            // engines: the delta vs `batch x1` is the sharding layer +
+            // cross-shard parallelism, not pool effects
+            let shard_us: Vec<f64> = [2usize, 4]
+                .iter()
+                .map(|&shards| {
+                    let engine = ShardedExecutor::from_graph(
+                        g,
+                        ExecConfig { shards, threads: 1, ..ExecConfig::default() },
+                    );
+                    per_sample_us(batch, warmup, iters, || {
+                        engine.execute_batch_into(std::hint::black_box(&xs), &mut ys);
+                        std::hint::black_box(&ys);
+                    })
+                })
+                .collect();
 
             t.add_row(vec![
                 format!("{n}x{k}"),
@@ -106,8 +129,27 @@ fn main() {
                 format!("{scoped_us:.2}"),
                 format!("{pooled_us:.2}"),
                 format!("{:.2}x", scoped_us / pooled_us.max(1e-9)),
+                format!("{:.2}", shard_us[0]),
+                format!("{:.2}", shard_us[1]),
                 format!("{dense_us:.2}"),
             ]);
+            bench::emit(
+                "adder_vm",
+                &[
+                    ("matrix", format!("{n}x{k}")),
+                    ("algo", name.to_string()),
+                    ("adds", g.additions().to_string()),
+                    ("batch", batch.to_string()),
+                    ("interp_us", format!("{interp_us:.4}")),
+                    ("scalar_us", format!("{scalar_us:.4}")),
+                    ("batch_x1_us", format!("{batch_us:.4}")),
+                    ("par_scoped_us", format!("{scoped_us:.4}")),
+                    ("par_pool_us", format!("{pooled_us:.4}")),
+                    ("shard2_us", format!("{:.4}", shard_us[0])),
+                    ("shard4_us", format!("{:.4}", shard_us[1])),
+                    ("dense_us", format!("{dense_us:.4}")),
+                ],
+            );
         }
     }
     println!("{}", t.render());
@@ -115,7 +157,10 @@ fn main() {
     println!("CompiledGraph path; batch x1 = exec::BatchEngine lane-major, one");
     println!("thread; par scoped = chunks across per-call scoped threads; par");
     println!("pool = same chunks on the persistent worker pool (pool speedup =");
-    println!("scoped/pool, the per-call spawn tax). depth = FPGA pipeline");
+    println!("scoped/pool, the per-call spawn tax). shard xN = ShardedExecutor:");
+    println!("the program split into N output-range sub-plans on serial inner");
+    println!("engines, scatter/gather on the pool — vs batch x1 this isolates");
+    println!("the sharding layer's cost/benefit. depth = FPGA pipeline");
     println!("latency in adder stages; max width = peak simultaneous adders.");
     println!("The addition count, not wall time, is the hardware cost model —");
     println!("the engine columns measure the *simulation/serving* hot path.");

@@ -1,10 +1,16 @@
 //! SRV bench: serving latency/throughput, compressed shift-add VM vs
-//! dense PJRT backend, across offered concurrency.
+//! dense PJRT backend, across offered concurrency — including
+//! sharded-vs-unsharded rows for the recipe-served `PipelineExecutor`.
 //!
 //!     cargo bench --bench serve_latency
+//!
+//! CI smoke: `LCCNN_BENCH_QUICK=1` shrinks the request count;
+//! `LCCNN_BENCH_JSON=BENCH_exec.json` appends one JSON row per table row.
 
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
-use lccnn::config::{ExecConfig, PoolMode, ServeConfig};
+use lccnn::compress::{Pipeline, Recipe};
+use lccnn::config::{ExecConfig, PoolMode, ServeConfig, ShardMode, ShardSpec};
+use lccnn::exec::Executor;
 use lccnn::lcc::LccConfig;
 use lccnn::nn::compressed::{CompressedMlp, Layer1};
 use lccnn::nn::mlp::MlpParams;
@@ -12,9 +18,11 @@ use lccnn::pipeline::mlp::synthetic_reg_weights;
 use lccnn::prune::compact_columns;
 use lccnn::report::Table;
 use lccnn::runtime::{HostTensor, PjrtService};
-use lccnn::serve::{BatchEvaluator, CompressedMlpBackend, MutexEvaluator, PjrtMlpBackend, Server};
+use lccnn::serve::{
+    BatchEvaluator, CompressedMlpBackend, ExecutorBackend, MutexEvaluator, PjrtMlpBackend, Server,
+};
 use lccnn::share::SharedLayer;
-use lccnn::util::Rng;
+use lccnn::util::{bench, Rng};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -43,7 +51,8 @@ fn serving_exec(mode: PoolMode) -> ExecConfig {
 }
 
 fn run(backend: Arc<dyn BatchEvaluator>, name: &str, burst: usize, n: usize, t: &mut Table) {
-    let server = Server::start(backend, ServeConfig { batch_timeout_us: 150, ..Default::default() });
+    let server =
+        Server::start(backend, ServeConfig { batch_timeout_us: 150, ..Default::default() });
     let mut rng = Rng::new(42);
     let start = Instant::now();
     let mut done = 0usize;
@@ -65,12 +74,23 @@ fn run(backend: Arc<dyn BatchEvaluator>, name: &str, burst: usize, n: usize, t: 
         format!("{:.0}", s.p99_latency_us),
         format!("{:.1}", s.mean_batch_size),
     ]);
+    bench::emit(
+        "serve_latency",
+        &[
+            ("backend", name.to_string()),
+            ("burst", burst.to_string()),
+            ("req_per_s", format!("{thpt:.1}")),
+            ("p50_us", format!("{:.1}", s.p50_latency_us)),
+            ("p99_us", format!("{:.1}", s.p99_latency_us)),
+            ("mean_batch", format!("{:.2}", s.mean_batch_size)),
+        ],
+    );
 }
 
 fn main() {
     lccnn::util::logger::init();
     let params = MlpParams::init(0);
-    let n = 3000;
+    let n = bench::pick(300, 3000);
     let mut t = Table::new(
         "serving: compressed VM vs dense PJRT under bursty load",
         &["backend", "burst", "req/s", "p50 us", "p99 us", "mean batch"],
@@ -82,6 +102,27 @@ fn main() {
     for burst in [1usize, 8, 32] {
         let model = Arc::new(compressed_model(&params, serving_exec(PoolMode::Scoped)));
         run(Arc::new(CompressedMlpBackend { model }), "compressed-exec/scoped", burst, n, &mut t);
+    }
+    // sharded vs unsharded serve of the same recipe artifact: the full
+    // PipelineExecutor (gather kept -> segment sums -> LCC engine), with
+    // the engine split across 1/2/4 output-range shards
+    for shards in [1usize, 2, 4] {
+        let mut recipe = Recipe { exec: serving_exec(PoolMode::Persistent), ..Recipe::default() };
+        if shards > 1 {
+            recipe.shard = Some(ShardSpec { shards, mode: ShardMode::Parallel });
+        }
+        let w1 = synthetic_reg_weights(0, 120);
+        let model =
+            Pipeline::from_recipe(&recipe).expect("valid recipe").run(&w1).expect("pipeline runs");
+        let exec: Arc<dyn Executor> = Arc::new(model.into_executor());
+        let name = if shards == 1 {
+            "pipeline-exec/unsharded".to_string()
+        } else {
+            format!("pipeline-exec/shard{shards}")
+        };
+        for burst in [1usize, 8, 32] {
+            run(Arc::new(ExecutorBackend::new(Arc::clone(&exec), 64)), &name, burst, n, &mut t);
+        }
     }
     // the pre-exec-engine behaviour (forward_one per sample) for comparison
     for burst in [1usize, 8, 32] {
@@ -116,5 +157,9 @@ fn main() {
     println!("dispatches on the persistent worker pool, /scoped spawns+joins");
     println!("threads per batch — their delta is the per-call spawn tax on");
     println!("the latency path. burst 1 rows are serial in both modes.");
+    println!("pipeline-exec rows serve the same recipe artifact unsharded vs");
+    println!("split across 2/4 output-range shards (sharded scatter/gather on");
+    println!("the worker pool) — the sharded-vs-unsharded serving comparison");
+    println!("for EXPERIMENTS.md §Sharding; outputs are bit-identical.");
     println!("worker pool after run: {:?}", lccnn::exec::global_pool().stats());
 }

@@ -48,11 +48,7 @@ fn median(mut v: Vec<f32>) -> f32 {
     }
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
-    if n % 2 == 1 {
-        v[n / 2]
-    } else {
-        0.5 * (v[n / 2 - 1] + v[n / 2])
-    }
+    if n % 2 == 1 { v[n / 2] } else { 0.5 * (v[n / 2 - 1] + v[n / 2]) }
 }
 
 /// Run affinity propagation on a (symmetric) similarity matrix.
@@ -146,8 +142,7 @@ pub fn affinity_propagation(s_in: &Matrix, p: &AffinityParams) -> Clustering {
             }
         }
         // exemplars: k with r(k,k) + a(k,k) > 0
-        let exemplars: Vec<usize> =
-            (0..n).filter(|&k| r.at(k, k) + a.at(k, k) > 0.0).collect();
+        let exemplars: Vec<usize> = (0..n).filter(|&k| r.at(k, k) + a.at(k, k) > 0.0).collect();
         if exemplars == last_exemplars && !exemplars.is_empty() {
             stable += 1;
             if stable >= p.convergence_iters {

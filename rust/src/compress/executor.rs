@@ -9,19 +9,44 @@
 //! recipe's result is servable through `serve::ModelRegistry`.
 
 use super::state::ModelState;
-use crate::exec::Executor;
-use crate::share::{SharedLayer, SharedLcc};
+use crate::config::{ExecConfig, ShardSpec};
+use crate::exec::{BatchEngine, Executor, ShardedExecutor};
+use crate::share::SharedLayer;
 use crate::tensor::Matrix;
+
+/// The engine serving an LCC artifact: the single unsharded engine, or
+/// the output-range-sharded wrapper over the same program when the
+/// recipe asks for it (`[compress.shard]` / `exec.shards`) — in which
+/// case the unsharded engine is not kept resident at all.
+enum LccEngine {
+    Single(BatchEngine),
+    Sharded(ShardedExecutor),
+}
+
+impl LccEngine {
+    fn as_executor(&self) -> &dyn Executor {
+        match self {
+            LccEngine::Single(e) => e,
+            LccEngine::Sharded(sh) => sh,
+        }
+    }
+}
 
 enum Repr {
     Dense(Matrix),
     Shared(SharedLayer),
     Lcc {
-        slcc: SharedLcc,
+        /// the sharing metadata (labels for segment sums); the engine
+        /// evaluates the LCC program over the cluster inputs
+        layer: SharedLayer,
+        /// total additions (segment sums + LCC program), precomputed so
+        /// the decomposition need not stay resident
+        additions: usize,
         /// degenerate one-column-per-cluster sharing: segment sums are
         /// the identity, so inputs feed the engine directly (bit-
         /// identical to serving the bare graph)
         identity_sharing: bool,
+        engine: LccEngine,
     },
 }
 
@@ -35,19 +60,33 @@ pub struct PipelineExecutor {
 }
 
 impl PipelineExecutor {
-    pub(crate) fn from_state(state: &ModelState) -> Self {
-        Self::from_state_owned(state.clone())
-    }
-
     /// Build by moving the artifact's parts (no engine/matrix clones —
-    /// the runtime checkpoint-load path).
-    pub(crate) fn from_state_owned(state: ModelState) -> Self {
+    /// the runtime checkpoint-load path). `shard` wraps the LCC engine
+    /// in an output-range [`ShardedExecutor`]; pre-LCC representations
+    /// (dense/shared) have no lowered program to partition and ignore it.
+    pub(crate) fn from_state_sharded(state: ModelState, shard: Option<ShardSpec>) -> Self {
         let (input_dim, rows, kept, dense, shared, lcc) = state.into_executor_parts();
         let kept = (kept.len() != input_dim).then_some(kept);
         let repr = if let Some(slcc) = lcc {
-            let identity_sharing =
-                slcc.layer.labels.iter().enumerate().all(|(i, &l)| i == l);
-            Repr::Lcc { slcc, identity_sharing }
+            let additions = slcc.additions();
+            let sharded = shard.filter(|s| s.shards > 1).map(|s| {
+                let cfg = ExecConfig {
+                    shards: s.shards,
+                    shard_mode: s.mode,
+                    ..*slcc.engine().config()
+                };
+                // reuse the already-lowered plan: no re-lowering of the graph
+                ShardedExecutor::from_plan(slcc.engine().plan(), cfg)
+            });
+            // once the shard engines exist, the unsharded engine (and
+            // the decomposition) are dropped with the rest of the SharedLcc
+            let (layer, _decomposition, single) = slcc.into_parts();
+            let identity_sharing = layer.labels.iter().enumerate().all(|(i, &l)| i == l);
+            let engine = match sharded {
+                Some(sh) => LccEngine::Sharded(sh),
+                None => LccEngine::Single(single),
+            };
+            Repr::Lcc { layer, additions, identity_sharing, engine }
         } else if let Some(s) = shared {
             Repr::Shared(s)
         } else {
@@ -59,8 +98,16 @@ impl PipelineExecutor {
     /// Additions of the represented program (segment sums included).
     pub fn additions(&self) -> Option<usize> {
         match &self.repr {
-            Repr::Lcc { slcc, .. } => Some(slcc.additions()),
+            Repr::Lcc { additions, .. } => Some(*additions),
             _ => None,
+        }
+    }
+
+    /// Shard count of the serving engine (1 = unsharded).
+    pub fn num_shards(&self) -> usize {
+        match &self.repr {
+            Repr::Lcc { engine: LccEngine::Sharded(sh), .. } => sh.num_shards(),
+            _ => 1,
         }
     }
 }
@@ -99,13 +146,14 @@ impl Executor for PipelineExecutor {
                     *y = s.apply(x);
                 }
             }
-            Repr::Lcc { slcc, identity_sharing } => {
+            Repr::Lcc { layer, identity_sharing, engine, .. } => {
+                let engine = engine.as_executor();
                 if *identity_sharing {
-                    slcc.engine().execute_batch_into(inputs, ys);
+                    engine.execute_batch_into(inputs, ys);
                 } else {
                     let sums: Vec<Vec<f32>> =
-                        inputs.iter().map(|x| slcc.layer.segment_sums(x)).collect();
-                    slcc.engine().execute_batch_into(&sums, ys);
+                        inputs.iter().map(|x| layer.segment_sums(x)).collect();
+                    engine.execute_batch_into(&sums, ys);
                 }
             }
         }
@@ -124,6 +172,7 @@ impl std::fmt::Debug for PipelineExecutor {
             .field("rows", &self.rows)
             .field("pruned", &self.kept.is_some())
             .field("repr", &repr)
+            .field("shards", &self.num_shards())
             .finish()
     }
 }
@@ -190,6 +239,34 @@ mod tests {
         let e = shared.executor();
         let xk: Vec<f32> = shared.kept().iter().map(|&i| x[i]).collect();
         assert_eq!(e.execute_one(&x), shared.state().shared().unwrap().apply(&xk));
+    }
+
+    #[test]
+    fn sharded_executor_matches_unsharded_and_oracle() {
+        use crate::config::{ShardMode, ShardSpec};
+        let w = demo_weights(18, 3, 4, 8);
+        let recipe = serial_recipe();
+        let model = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+        let plain = model.executor();
+        assert_eq!(plain.num_shards(), 1);
+        let mut rng = Rng::new(15);
+        let xs: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        let want = plain.execute_batch(&xs);
+        for mode in [ShardMode::Serial, ShardMode::Parallel] {
+            let sharded_recipe = Recipe {
+                shard: Some(ShardSpec { shards: 4, mode }),
+                ..recipe.clone()
+            };
+            let sharded = Pipeline::from_recipe(&sharded_recipe)
+                .unwrap()
+                .run(&w)
+                .unwrap()
+                .into_executor();
+            assert!(sharded.num_shards() > 1, "shard spec must engage");
+            assert_eq!(sharded.num_inputs(), w.cols());
+            assert_eq!(sharded.num_outputs(), w.rows());
+            assert_eq!(sharded.execute_batch(&xs), want, "mode {mode:?}");
+        }
     }
 
     #[test]

@@ -28,7 +28,9 @@
 //!   [`crate::exec::Executor`] that gathers the kept input features,
 //!   segment-sums shared clusters and runs the LCC adder graph on the
 //!   batch-major engine — so served models are pruned+shared+LCC'd, not
-//!   LCC-only.
+//!   LCC-only. A `[compress.shard]` recipe section (or `exec.shards`)
+//!   partitions the served engine across output-range shards
+//!   ([`crate::exec::ShardedExecutor`]), bit-identical to unsharded.
 //!
 //! ```
 //! use lccnn::compress::{demo_weights, Pipeline, Recipe};

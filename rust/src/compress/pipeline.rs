@@ -6,7 +6,7 @@ use super::recipe::{LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec}
 use super::report::CompressionReport;
 use super::stage::Stage;
 use super::state::ModelState;
-use crate::config::ExecConfig;
+use crate::config::{ExecConfig, ShardSpec};
 use crate::graph::AdderGraph;
 use crate::lcc::LccConfig;
 use crate::metrics::Metrics;
@@ -41,6 +41,9 @@ impl Composed {
 pub struct Pipeline {
     stages: Vec<Composed>,
     exec: ExecConfig,
+    /// serve-time sharding of the lowered engine (recipe
+    /// `[compress.shard]` or builder `.shard(..)`)
+    shard: Option<ShardSpec>,
     /// addition-accounting format (the quantize stage's grid when
     /// present, the paper's default weight format otherwise)
     fmt: FixedPointFormat,
@@ -96,16 +99,15 @@ fn validate(stages: &[Composed]) -> Result<()> {
 
 impl Pipeline {
     pub fn builder() -> PipelineBuilder {
-        PipelineBuilder { stages: Vec::new(), exec: ExecConfig::default() }
+        PipelineBuilder { stages: Vec::new(), exec: ExecConfig::default(), shard: None }
     }
 
     /// Instantiate (and validate) the pipeline a recipe describes.
     pub fn from_recipe(recipe: &Recipe) -> Result<Self> {
-        let stages: Vec<Composed> =
-            recipe.stages.iter().cloned().map(Composed::Spec).collect();
+        let stages: Vec<Composed> = recipe.stages.iter().cloned().map(Composed::Spec).collect();
         validate(&stages)?;
         let fmt = accounting_fmt(&stages);
-        Ok(Pipeline { stages, exec: recipe.exec, fmt })
+        Ok(Pipeline { stages, exec: recipe.exec, shard: recipe.shard, fmt })
     }
 
     /// The serializable recipe reproducing this pipeline — `None` when a
@@ -118,7 +120,7 @@ impl Pipeline {
                 Composed::Custom(_) => return None,
             }
         }
-        Some(Recipe { stages, exec: self.exec })
+        Some(Recipe { stages, exec: self.exec, shard: self.shard })
     }
 
     pub fn exec_config(&self) -> ExecConfig {
@@ -144,7 +146,7 @@ impl Pipeline {
             result.with_context(|| format!("compress stage {:?}", c.name()))?;
             report.push_stage(c.name(), &state, self.fmt);
         }
-        Ok(CompressedModel { state, report, exec: self.exec })
+        Ok(CompressedModel { state, report, exec: self.exec, shard: self.shard })
     }
 
     /// [`Pipeline::run`], publishing the report into `metrics`
@@ -161,6 +163,7 @@ impl Pipeline {
 pub struct PipelineBuilder {
     stages: Vec<Composed>,
     exec: ExecConfig,
+    shard: Option<ShardSpec>,
 }
 
 impl PipelineBuilder {
@@ -178,7 +181,10 @@ impl PipelineBuilder {
     }
 
     pub fn quantize(self, fmt: FixedPointFormat) -> Self {
-        self.spec(StageSpec::Quantize(QuantSpec { int_bits: fmt.int_bits, frac_bits: fmt.frac_bits }))
+        self.spec(StageSpec::Quantize(QuantSpec {
+            int_bits: fmt.int_bits,
+            frac_bits: fmt.frac_bits,
+        }))
     }
 
     pub fn lcc(self, cfg: &LccConfig) -> Self {
@@ -208,10 +214,17 @@ impl PipelineBuilder {
         self
     }
 
+    /// Shard the served engine by output ranges (`exec::ShardedExecutor`
+    /// over the lowered LCC program; bit-identical to unsharded).
+    pub fn shard(mut self, spec: ShardSpec) -> Self {
+        self.shard = Some(spec);
+        self
+    }
+
     pub fn build(self) -> Result<Pipeline> {
         validate(&self.stages)?;
         let fmt = accounting_fmt(&self.stages);
-        Ok(Pipeline { stages: self.stages, exec: self.exec, fmt })
+        Ok(Pipeline { stages: self.stages, exec: self.exec, shard: self.shard, fmt })
     }
 }
 
@@ -222,6 +235,7 @@ pub struct CompressedModel {
     state: ModelState,
     report: CompressionReport,
     exec: ExecConfig,
+    shard: Option<ShardSpec>,
 }
 
 impl CompressedModel {
@@ -252,6 +266,13 @@ impl CompressedModel {
         self.exec
     }
 
+    /// The effective serve-time sharding: the pipeline's explicit spec,
+    /// else the engine tuning's `shards` knob ([`ShardSpec::effective`]).
+    /// `None` = unsharded.
+    pub fn shard_spec(&self) -> Option<ShardSpec> {
+        ShardSpec::effective(self.shard, &self.exec)
+    }
+
     /// The layer-1 evaluation strategy (cloning).
     pub fn layer1(&self) -> Layer1 {
         self.state.to_layer1()
@@ -262,15 +283,17 @@ impl CompressedModel {
         self.state.into_layer1()
     }
 
-    /// A servable [`crate::exec::Executor`] over the artifact (cloning).
+    /// A servable [`crate::exec::Executor`] over the artifact (cloning),
+    /// sharded per the pipeline's shard spec.
     pub fn executor(&self) -> PipelineExecutor {
-        PipelineExecutor::from_state(&self.state)
+        PipelineExecutor::from_state_sharded(self.state.clone(), self.shard_spec())
     }
 
     /// Consume into the servable executor without cloning the engine
     /// (the runtime checkpoint-load path).
     pub fn into_executor(self) -> PipelineExecutor {
-        PipelineExecutor::from_state_owned(self.state)
+        let shard = self.shard_spec();
+        PipelineExecutor::from_state_sharded(self.state, shard)
     }
 }
 
@@ -331,6 +354,7 @@ mod tests {
                 StageSpec::Prune(PruneSpec::default()),
             ],
             exec: ExecConfig::serial(),
+            shard: None,
         };
         assert!(Pipeline::from_recipe(&share_then_prune).is_err());
         let lcc_then_share = Recipe {
@@ -339,6 +363,7 @@ mod tests {
                 StageSpec::Share(ShareSpec::default()),
             ],
             exec: ExecConfig::serial(),
+            shard: None,
         };
         assert!(Pipeline::from_recipe(&lcc_then_share).is_err());
         let twice = Recipe {
@@ -347,6 +372,7 @@ mod tests {
                 StageSpec::Prune(PruneSpec::default()),
             ],
             exec: ExecConfig::serial(),
+            shard: None,
         };
         assert!(Pipeline::from_recipe(&twice).is_err());
     }
@@ -354,8 +380,12 @@ mod tests {
     #[test]
     fn empty_pipeline_is_identity() {
         let w = demo_weights(8, 2, 2, 2);
-        let p = Pipeline::from_recipe(&Recipe { stages: vec![], exec: ExecConfig::serial() })
-            .unwrap();
+        let p = Pipeline::from_recipe(&Recipe {
+            stages: vec![],
+            exec: ExecConfig::serial(),
+            shard: None,
+        })
+        .unwrap();
         let model = p.run(&w).unwrap();
         assert!(model.report().stages.is_empty());
         assert_eq!(model.state().dense(), &w);
@@ -387,6 +417,28 @@ mod tests {
         let model = p.run(&demo_weights(8, 2, 3, 3)).unwrap();
         let names: Vec<&str> = model.report().stages.iter().map(|s| s.stage.as_str()).collect();
         assert_eq!(names, vec!["prune", "scale", "lcc"]);
+    }
+
+    #[test]
+    fn sharded_pipeline_executor_bit_identical_to_unsharded() {
+        use crate::config::{ShardMode, ShardSpec};
+        use crate::exec::Executor;
+        let w = demo_weights(20, 4, 3, 6);
+        let recipe = Recipe { exec: ExecConfig::serial(), ..Recipe::default() };
+        let plain = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+        let sharded_recipe = Recipe {
+            shard: Some(ShardSpec { shards: 3, mode: ShardMode::Serial }),
+            ..recipe.clone()
+        };
+        let sharded = Pipeline::from_recipe(&sharded_recipe).unwrap().run(&w).unwrap();
+        assert_eq!(plain.report(), sharded.report(), "sharding is a serve-time property");
+        assert!(plain.shard_spec().is_none());
+        assert_eq!(sharded.shard_spec().unwrap().shards, 3);
+        let mut rng = crate::util::Rng::new(14);
+        let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        let a = plain.executor().execute_batch(&xs);
+        let b = sharded.into_executor().execute_batch(&xs);
+        assert_eq!(a, b, "sharded artifact serve must be bit-identical");
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //! bit-identical engine.
 
 use crate::cluster::affinity::AffinityParams;
-use crate::config::{parse_toml, ExecConfig, LccAlgoConfig, PoolMode, TomlValue};
+use crate::config::{
+    parse_toml, ExecConfig, LccAlgoConfig, PoolMode, ShardMode, ShardSpec, TomlValue,
+};
 use crate::lcc::{LccAlgorithm, LccConfig};
 use crate::quant::FixedPointFormat;
 use anyhow::{bail, Context, Result};
@@ -194,11 +196,16 @@ impl StageSpec {
 }
 
 /// A complete, serializable compression recipe: ordered stages plus the
-/// engine tuning the lowered graph executes with.
+/// engine tuning the lowered graph executes with, and optionally how the
+/// served engine is sharded (`[compress.shard]`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Recipe {
     pub stages: Vec<StageSpec>,
     pub exec: ExecConfig,
+    /// serve-time sharding of the lowered engine: the artifact's LCC
+    /// program is partitioned by output ranges across per-shard engines
+    /// (`exec::ShardedExecutor`), bit-identical to the unsharded serve
+    pub shard: Option<ShardSpec>,
 }
 
 impl Default for Recipe {
@@ -211,6 +218,7 @@ impl Default for Recipe {
                 StageSpec::Lcc(LccSpec::default()),
             ],
             exec: ExecConfig::default(),
+            shard: None,
         }
     }
 }
@@ -219,7 +227,14 @@ impl Recipe {
     /// The historical registry behaviour: LCC the raw matrix, nothing
     /// else (what `ModelRegistry::load_checkpoint` did before recipes).
     pub fn lcc_only(cfg: &LccConfig, exec: ExecConfig) -> Self {
-        Recipe { stages: vec![StageSpec::Lcc(LccSpec::from_config(cfg))], exec }
+        Recipe { stages: vec![StageSpec::Lcc(LccSpec::from_config(cfg))], exec, shard: None }
+    }
+
+    /// The effective serve-time sharding: the explicit `[compress.shard]`
+    /// section when present, else the engine tuning's `shards` knob
+    /// ([`ShardSpec::effective`]). `None` = one unsharded engine.
+    pub fn shard_spec(&self) -> Option<ShardSpec> {
+        ShardSpec::effective(self.shard, &self.exec)
     }
 
     /// The recipe to use for a checkpoint path: an artifact directory
@@ -246,7 +261,9 @@ impl Recipe {
     /// when the key is absent, the `[compress.<stage>]` sections present
     /// are run in canonical order (prune, share, quantize, lcc), and a
     /// document with no compress sections at all gets the default
-    /// prune→share→lcc stack. Unset keys keep their defaults.
+    /// prune→share→lcc stack. A `[compress.shard]` section (keys
+    /// `shards`, `mode = "serial"|"parallel"`) shards the served engine.
+    /// Unset keys keep their defaults.
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let t = parse_toml(text)?;
         let exec = ExecConfig::overrides(&t, "exec", ExecConfig::default());
@@ -353,15 +370,27 @@ impl Recipe {
             };
             stages.push(spec);
         }
-        Ok(Recipe { stages, exec })
+        let shard = t.contains_key("compress.shard").then(|| {
+            let mut s = ShardSpec::default();
+            if let Some(v) = get(&t, "compress.shard", "shards").and_then(TomlValue::as_int) {
+                s.shards = v.max(1) as usize;
+            }
+            if let Some(v) = get(&t, "compress.shard", "mode")
+                .and_then(TomlValue::as_str)
+                .and_then(ShardMode::parse)
+            {
+                s.mode = v;
+            }
+            s
+        });
+        Ok(Recipe { stages, exec, shard })
     }
 
     /// Render the recipe as a TOML document that [`Recipe::from_toml_str`]
     /// parses back to an equal value.
     pub fn to_toml_string(&self) -> String {
         let mut s = String::from("# lccnn compression recipe (README §Compression pipeline)\n");
-        let kinds: Vec<String> =
-            self.stages.iter().map(|st| format!("{:?}", st.kind())).collect();
+        let kinds: Vec<String> = self.stages.iter().map(|st| format!("{:?}", st.kind())).collect();
         let _ = writeln!(s, "[compress]\nstages = [{}]", kinds.join(", "));
         for st in &self.stages {
             match st {
@@ -405,6 +434,14 @@ impl Recipe {
                 }
             }
         }
+        if let Some(sh) = &self.shard {
+            let _ = writeln!(
+                s,
+                "\n[compress.shard]\nshards = {}\nmode = \"{}\"",
+                sh.shards,
+                sh.mode.as_str()
+            );
+        }
         let e = &self.exec;
         let pool_mode = match e.pool_mode {
             PoolMode::Scoped => "scoped",
@@ -414,9 +451,15 @@ impl Recipe {
             s,
             "\n[exec]\nthreads = {}\nchunk = {}\nparallel_min_batch = {}\n\
              level_parallel_min_ops = {}\npool_mode = \"{pool_mode}\"\n\
-             pool_spin_us = {}\npool_park_ms = {}",
-            e.threads, e.chunk, e.parallel_min_batch, e.level_parallel_min_ops, e.pool_spin_us,
-            e.pool_park_ms
+             pool_spin_us = {}\npool_park_ms = {}\nshards = {}\nshard_mode = \"{}\"",
+            e.threads,
+            e.chunk,
+            e.parallel_min_batch,
+            e.level_parallel_min_ops,
+            e.pool_spin_us,
+            e.pool_park_ms,
+            e.shards,
+            e.shard_mode.as_str()
         );
         s
     }
@@ -550,6 +593,7 @@ mod tests {
                 StageSpec::Lcc(lcc),
             ],
             exec: ExecConfig { threads: 2, chunk: 16, ..ExecConfig::default() },
+            shard: Some(ShardSpec { shards: 3, mode: ShardMode::Serial }),
         };
         let back = Recipe::from_toml_str(&r.to_toml_string()).unwrap();
         assert_eq!(back, r, "\n{}", r.to_toml_string());
@@ -574,6 +618,39 @@ mod tests {
     #[test]
     fn unknown_stage_rejected() {
         assert!(Recipe::from_toml_str("[compress]\nstages = [\"nope\"]\n").is_err());
+    }
+
+    #[test]
+    fn shard_section_parses_and_round_trips() {
+        // bare section: the default 2-way parallel split
+        let r = Recipe::from_toml_str("[compress.shard]\n").unwrap();
+        assert_eq!(r.shard, Some(ShardSpec::default()));
+        assert_eq!(r.stages, Recipe::default().stages, "shard section is not a stage");
+        // explicit keys
+        let r = Recipe::from_toml_str("[compress.shard]\nshards = 4\nmode = \"serial\"\n")
+            .unwrap();
+        assert_eq!(r.shard, Some(ShardSpec { shards: 4, mode: ShardMode::Serial }));
+        assert_eq!(Recipe::from_toml_str(&r.to_toml_string()).unwrap(), r);
+        // no section: no sharding
+        assert!(Recipe::from_toml_str("").unwrap().shard.is_none());
+    }
+
+    #[test]
+    fn shard_spec_falls_back_to_exec_shards() {
+        let mut r = Recipe::default();
+        assert!(r.shard_spec().is_none(), "default recipe is unsharded");
+        r.exec.shards = 3;
+        r.exec.shard_mode = ShardMode::Serial;
+        assert_eq!(
+            r.shard_spec(),
+            Some(ShardSpec { shards: 3, mode: ShardMode::Serial }),
+            "env/TOML exec sharding applies to recipe-served artifacts"
+        );
+        r.shard = Some(ShardSpec { shards: 5, mode: ShardMode::Parallel });
+        assert_eq!(r.shard_spec().unwrap().shards, 5, "explicit section wins");
+        // exec shards round-trip through the [exec] section too
+        let text = r.to_toml_string();
+        assert_eq!(Recipe::from_toml_str(&text).unwrap(), r, "\n{text}");
     }
 
     #[test]

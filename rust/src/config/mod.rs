@@ -8,5 +8,5 @@ mod types;
 pub use toml::{parse_toml, TomlValue};
 pub use types::{
     serve_models_from_env, serve_models_from_toml, ExecConfig, LccAlgoConfig, MlpPipelineConfig,
-    ModelSpec, PoolMode, ResnetPipelineConfig, ServeConfig,
+    ModelSpec, PoolMode, ResnetPipelineConfig, ServeConfig, ShardMode, ShardSpec,
 };

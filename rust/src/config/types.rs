@@ -307,6 +307,67 @@ pub fn serve_models_from_env() -> Vec<ModelSpec> {
         .collect()
 }
 
+/// How a sharded executor drives its per-shard engines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardMode {
+    /// run shard engines one after another on the submitting thread
+    /// (deterministic scheduling; debugging and differential testing)
+    Serial,
+    /// run shard engines concurrently, dispatched per `pool_mode`
+    /// (persistent worker pool or per-call scoped threads)
+    #[default]
+    Parallel,
+}
+
+impl ShardMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Some(ShardMode::Serial),
+            "parallel" => Some(ShardMode::Parallel),
+            _ => None,
+        }
+    }
+
+    /// The TOML/env spelling of this mode.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardMode::Serial => "serial",
+            ShardMode::Parallel => "parallel",
+        }
+    }
+}
+
+/// Sharding of one plan across independent engines: how many shards and
+/// how to drive them. Used by `[compress.shard]` recipe sections and by
+/// `ExecConfig::{shards, shard_mode}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// number of output-range shards (values <= 1 mean unsharded; the
+    /// executor clamps to the output count so no shard is ever empty)
+    pub shards: usize,
+    pub mode: ShardMode,
+}
+
+impl Default for ShardSpec {
+    /// The minimal real split: 2 shards, driven in parallel — what a
+    /// bare `[compress.shard]` section with no keys means.
+    fn default() -> Self {
+        ShardSpec { shards: 2, mode: ShardMode::default() }
+    }
+}
+
+impl ShardSpec {
+    /// The one effective-sharding rule: an explicit spec when present,
+    /// else the engine tuning's `shards` knob promoted to a spec (so
+    /// `LCCNN_EXEC_SHARDS` / `[exec] shards` shard recipe-served
+    /// artifacts too). `None` = one unsharded engine.
+    pub fn effective(explicit: Option<ShardSpec>, exec: &ExecConfig) -> Option<ShardSpec> {
+        explicit.or_else(|| {
+            (exec.shards > 1).then(|| ShardSpec { shards: exec.shards, mode: exec.shard_mode })
+        })
+    }
+}
+
 /// How the exec engine dispatches its parallel kernels.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum PoolMode {
@@ -354,6 +415,12 @@ pub struct ExecConfig {
     /// parked pool workers re-check for work/shutdown at this interval
     /// (ms); bounds worst-case shutdown latency
     pub pool_park_ms: u64,
+    /// partition graph-built engines into this many output-range shards
+    /// (`exec::ShardedExecutor`); 0 or 1 = one unsharded engine
+    pub shards: usize,
+    /// how the shard engines are driven (serial for deterministic
+    /// debugging, parallel for throughput)
+    pub shard_mode: ShardMode,
 }
 
 impl Default for ExecConfig {
@@ -366,6 +433,8 @@ impl Default for ExecConfig {
             pool_mode: PoolMode::Persistent,
             pool_spin_us: 20,
             pool_park_ms: 100,
+            shards: 1,
+            shard_mode: ShardMode::Parallel,
         }
     }
 }
@@ -380,7 +449,8 @@ impl ExecConfig {
     /// `LCCNN_EXEC_THREADS`, `LCCNN_EXEC_CHUNK`,
     /// `LCCNN_EXEC_PARALLEL_MIN_BATCH`, `LCCNN_EXEC_LEVEL_MIN_OPS`,
     /// `LCCNN_EXEC_POOL_MODE` (`scoped`|`persistent`),
-    /// `LCCNN_EXEC_POOL_SPIN_US`, `LCCNN_EXEC_POOL_PARK_MS`.
+    /// `LCCNN_EXEC_POOL_SPIN_US`, `LCCNN_EXEC_POOL_PARK_MS`,
+    /// `LCCNN_EXEC_SHARDS`, `LCCNN_EXEC_SHARD_MODE` (`serial`|`parallel`).
     pub fn from_env() -> Self {
         Self::from_env_over(ExecConfig::default())
     }
@@ -404,7 +474,8 @@ impl ExecConfig {
         if let Some(v) = env_parse::<usize>("LCCNN_EXEC_LEVEL_MIN_OPS") {
             c.level_parallel_min_ops = v;
         }
-        if let Some(m) = std::env::var("LCCNN_EXEC_POOL_MODE").ok().as_deref().and_then(PoolMode::parse)
+        if let Some(m) =
+            std::env::var("LCCNN_EXEC_POOL_MODE").ok().as_deref().and_then(PoolMode::parse)
         {
             c.pool_mode = m;
         }
@@ -413,6 +484,14 @@ impl ExecConfig {
         }
         if let Some(v) = env_parse::<u64>("LCCNN_EXEC_POOL_PARK_MS") {
             c.pool_park_ms = v;
+        }
+        if let Some(v) = env_parse::<usize>("LCCNN_EXEC_SHARDS") {
+            c.shards = v.max(1);
+        }
+        if let Some(m) =
+            std::env::var("LCCNN_EXEC_SHARD_MODE").ok().as_deref().and_then(ShardMode::parse)
+        {
+            c.shard_mode = m;
         }
         c
     }
@@ -450,6 +529,14 @@ impl ExecConfig {
         }
         if let Some(v) = read("pool_park_ms") {
             c.pool_park_ms = v as u64;
+        }
+        if let Some(v) = read("shards") {
+            c.shards = v.max(1);
+        }
+        if let Some(v) =
+            get(t, section, "shard_mode").and_then(TomlValue::as_str).and_then(ShardMode::parse)
+        {
+            c.shard_mode = v;
         }
         c
     }
@@ -595,6 +682,28 @@ mod tests {
         assert!(ModelSpec::parse("no-equals").is_none());
         assert!(ModelSpec::parse("=path").is_none());
         assert!(ModelSpec::parse("name=").is_none());
+    }
+
+    #[test]
+    fn shard_mode_parse_and_toml_overrides() {
+        assert_eq!(ShardMode::parse("serial"), Some(ShardMode::Serial));
+        assert_eq!(ShardMode::parse("PARALLEL"), Some(ShardMode::Parallel));
+        assert_eq!(ShardMode::parse("nope"), None);
+        assert_eq!(ShardMode::Serial.as_str(), "serial");
+        assert_eq!(ExecConfig::default().shards, 1, "unsharded by default");
+        let spec = ShardSpec::default();
+        assert_eq!(spec.shards, 2);
+        assert_eq!(spec.mode, ShardMode::Parallel);
+        let dir = std::env::temp_dir().join(format!("lccnn-shard-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.toml");
+        std::fs::write(&p, "[exec]\nshards = 3\nshard_mode = \"serial\"\n").unwrap();
+        let c = ExecConfig::from_toml(&p).unwrap();
+        assert_eq!(c.shards, 3);
+        assert_eq!(c.shard_mode, ShardMode::Serial);
+        // shards = 0 is clamped to 1 (unsharded), not wrapped
+        std::fs::write(&p, "[exec]\nshards = 0\n").unwrap();
+        assert_eq!(ExecConfig::from_toml(&p).unwrap().shards, 1);
     }
 
     #[test]

@@ -137,8 +137,7 @@ impl Executor for BatchEngine {
             };
             match self.cfg.pool_mode {
                 PoolMode::Persistent => {
-                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
-                        Vec::with_capacity(workers);
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
                     for _ in 0..workers {
                         tasks.push(Box::new(&drain));
                     }

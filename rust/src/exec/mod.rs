@@ -29,6 +29,14 @@
 //!   is built with its own; `pool_mode = scoped` keeps the per-call
 //!   `std::thread::scope` path as a selectable fallback. Task panics are
 //!   isolated: the one batch fails, the pool survives.
+//! * [`ShardPlan`] / [`ShardedExecutor`] partition a plan by
+//!   output-column ranges into independent sub-plans served by per-shard
+//!   engines (`Arc<dyn Executor>` — local [`BatchEngine`]s today, remote
+//!   stubs tomorrow): a batch is scattered to every shard, executed
+//!   serially or concurrently (`ExecConfig::{shards, shard_mode}`), and
+//!   the column slices gathered back bit-identically to the unsharded
+//!   engine. [`engine_for_graph`] is the entry point that picks
+//!   sharded-vs-plain from the config.
 //! * [`Executor`] is the extension point future backends implement
 //!   (sharded engines, GPU/accelerator lowerings, remote execution). The
 //!   serving layer's `ExecutorBackend` serves any `Arc<dyn Executor>`.
@@ -45,12 +53,14 @@ mod engine;
 mod oracle;
 mod plan;
 mod pool;
+mod sharded;
 mod workers;
 
 pub use engine::BatchEngine;
 pub use oracle::NaiveExecutor;
 pub use plan::ExecPlan;
 pub use pool::BufferPool;
+pub use sharded::{engine_for_graph, even_ranges, ShardPlan, ShardedExecutor};
 pub use workers::{global_pool, PoolPanic, PoolStats, WorkerPool};
 
 /// A runtime for adder graphs: evaluates batches of input vectors to

@@ -133,6 +133,101 @@ impl ExecPlan {
         self.max_level_ops
     }
 
+    /// Extract the sub-plan computing the output slice `lo..hi` — the
+    /// per-shard lowering behind [`crate::exec::ShardPlan`].
+    ///
+    /// The sub-plan keeps the full input arity (a shard receives the
+    /// same scattered batch as every other shard) and exactly the ops
+    /// backward-reachable from the selected outputs, in the original
+    /// level-sorted order with their original ASAP levels — every kept
+    /// op evaluates the identical `ca*a + cb*b` expression on identical
+    /// operand values, so a shard's outputs are bit-identical to the
+    /// same outputs of the full plan.
+    pub fn extract_output_range(&self, lo: usize, hi: usize) -> ExecPlan {
+        assert!(lo <= hi && hi <= self.outs.len(), "output range {lo}..{hi} out of bounds");
+        let n = self.ia.len();
+        let base = self.num_inputs as u32;
+        // backward reachability: outputs first, then ops in reverse
+        // (operands always point at strictly earlier slots)
+        let mut needed = vec![false; n];
+        for o in &self.outs[lo..hi] {
+            if let OutOp::Scaled { idx, .. } = *o {
+                if idx >= base {
+                    needed[(idx - base) as usize] = true;
+                }
+            }
+        }
+        for j in (0..n).rev() {
+            if needed[j] {
+                for op in [self.ia[j], self.ib[j]] {
+                    if op >= base {
+                        needed[(op - base) as usize] = true;
+                    }
+                }
+            }
+        }
+        // compact the kept ops, preserving order (still level-sorted)
+        let mut remap = vec![u32::MAX; n];
+        let mut kept = 0u32;
+        for (j, r) in remap.iter_mut().enumerate() {
+            if needed[j] {
+                *r = kept;
+                kept += 1;
+            }
+        }
+        let map_idx = |idx: u32| -> u32 {
+            if idx < base { idx } else { base + remap[(idx - base) as usize] }
+        };
+        let mut ia = Vec::with_capacity(kept as usize);
+        let mut ca = Vec::with_capacity(kept as usize);
+        let mut ib = Vec::with_capacity(kept as usize);
+        let mut cb = Vec::with_capacity(kept as usize);
+        for j in 0..n {
+            if needed[j] {
+                ia.push(map_idx(self.ia[j]));
+                ca.push(self.ca[j]);
+                ib.push(map_idx(self.ib[j]));
+                cb.push(self.cb[j]);
+            }
+        }
+        // ops keep their original ASAP levels; count the kept ops per
+        // level and drop trailing empty levels (interior empties are
+        // fine: the eval loops skip zero-op levels)
+        let num_levels = self.level_starts.len() - 1;
+        let mut level_starts = vec![0u32; num_levels + 1];
+        for l in 1..=num_levels {
+            let (a, b) = (self.level_starts[l - 1] as usize, self.level_starts[l] as usize);
+            let in_level = (a..b).filter(|&j| needed[j]).count() as u32;
+            level_starts[l] = level_starts[l - 1] + in_level;
+        }
+        while level_starts.len() > 1
+            && level_starts[level_starts.len() - 1] == level_starts[level_starts.len() - 2]
+        {
+            level_starts.pop();
+        }
+        let max_level_ops = (1..level_starts.len())
+            .map(|l| (level_starts[l] - level_starts[l - 1]) as usize)
+            .max()
+            .unwrap_or(0);
+        let outs = self.outs[lo..hi]
+            .iter()
+            .map(|o| match *o {
+                OutOp::Zero => OutOp::Zero,
+                OutOp::Scaled { idx, c } => OutOp::Scaled { idx: map_idx(idx), c },
+            })
+            .collect();
+        ExecPlan {
+            num_inputs: self.num_inputs,
+            ia,
+            ca,
+            ib,
+            cb,
+            level_starts,
+            outs,
+            max_level_ops,
+        }
+    }
+
     /// Execute one sample with caller-provided buffers (the scalar path;
     /// `CompiledGraph` delegates here). `scratch` holds the value slots.
     pub fn execute_one_into(&self, x: &[f32], scratch: &mut Vec<f32>, out: &mut Vec<f32>) {
@@ -383,6 +478,45 @@ mod tests {
         let mut ys3: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
         plan.eval_lanes_level_parallel(&xs, &mut buf, &mut ys3, 3, 1, Some(&wp));
         assert_eq!(ys, ys3);
+    }
+
+    #[test]
+    fn extracted_output_range_bit_identical_to_full_plan() {
+        let mut rng = Rng::new(21);
+        for seed in 0..6 {
+            let g = random_graph(seed);
+            let plan = ExecPlan::new(&g);
+            let n = plan.num_outputs();
+            let x: Vec<f32> = rng.normal_vec(g.num_inputs(), 1.0);
+            let full = plan.execute_one(&x);
+            for (lo, hi) in [(0usize, n), (0, n / 2), (n / 2, n), (1.min(n), n)] {
+                let sub = plan.extract_output_range(lo, hi);
+                assert_eq!(sub.num_inputs(), plan.num_inputs(), "shards keep full arity");
+                assert_eq!(sub.num_outputs(), hi - lo);
+                assert!(sub.additions() <= plan.additions(), "never more ops than the whole");
+                assert_eq!(sub.execute_one(&x), full[lo..hi].to_vec(), "range {lo}..{hi}");
+                // operand indices still strictly precede their slots
+                for j in 0..sub.additions() {
+                    let dst = (sub.num_inputs() + j) as u32;
+                    assert!(sub.ia[j] < dst && sub.ib[j] < dst, "sub op {j} reads forward");
+                }
+                assert_eq!(
+                    *sub.level_starts.last().unwrap() as usize,
+                    sub.additions(),
+                    "levels cover every kept op"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn extracted_empty_range_is_a_no_output_plan() {
+        let g = random_graph(5);
+        let plan = ExecPlan::new(&g);
+        let sub = plan.extract_output_range(0, 0);
+        assert_eq!(sub.num_outputs(), 0);
+        assert_eq!(sub.additions(), 0, "nothing reachable from no outputs");
+        assert!(sub.execute_one(&vec![0.5; plan.num_inputs()]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,514 @@
+//! Sharded execution: partition one plan across independent engines.
+//!
+//! The paper's adder graphs parallelize the way EIE partitions its
+//! compressed matrices: disjoint output ranges are independent programs,
+//! so a matrix-vector engine scales by giving each processing element a
+//! slice of the rows. [`ShardPlan`] cuts an [`ExecPlan`] into per-shard
+//! sub-plans along output-column ranges (each keeps the full input arity
+//! and exactly the ops backward-reachable from its outputs), and
+//! [`ShardedExecutor`] is the [`Executor`] that scatters a batch to the
+//! per-shard engines, runs them (serially, or concurrently on the shared
+//! [`WorkerPool`] / scoped threads per `pool_mode`), and gathers the
+//! column slices back into batch-major rows — bit-identical to the
+//! unsharded engine, because every kept op evaluates the identical
+//! expression on identical operand values.
+//!
+//! Shard engines are held as `Arc<dyn Executor>`: today they are local
+//! [`BatchEngine`]s, but [`ShardedExecutor::from_executors`] accepts any
+//! executor per range — the seam where remote shards (a recipe shipped
+//! to another machine) plug in without touching the scatter/gather
+//! layer.
+
+use super::engine::BatchEngine;
+use super::plan::ExecPlan;
+use super::workers::{self, WorkerPool};
+use super::Executor;
+use crate::config::{ExecConfig, PoolMode, ShardMode};
+use crate::graph::AdderGraph;
+use anyhow::{bail, Result};
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+/// One batch of per-shard output rows.
+type ShardRows = Vec<Vec<f32>>;
+
+/// Contiguous output ranges splitting `n` outputs into `shards` parts as
+/// evenly as possible (the first `n % shards` ranges get one extra
+/// column). `shards` is clamped to `1..=n` so no range is empty; `n = 0`
+/// degenerates to a single empty range.
+pub fn even_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    let k = shards.clamp(1, n.max(1));
+    let (q, r) = (n / k, n % k);
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = q + usize::from(i < r);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// An [`ExecPlan`] partitioned by output-column ranges into independent
+/// sub-plans — the unit a shard ships as. Ops feeding more than one
+/// range are replicated into every shard that needs them (the price of
+/// independence; [`ShardPlan::total_additions`] exposes it).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    num_inputs: usize,
+    num_outputs: usize,
+    parts: Vec<(Range<usize>, ExecPlan)>,
+}
+
+impl ShardPlan {
+    /// Partition into `shards` even contiguous output ranges.
+    pub fn even(plan: &ExecPlan, shards: usize) -> Self {
+        Self::from_ranges(plan, even_ranges(plan.num_outputs(), shards))
+    }
+
+    /// Partition at explicit interior cut points (uneven splits): cuts
+    /// must be strictly increasing and inside `0..num_outputs`, giving
+    /// `cuts.len() + 1` non-empty ranges.
+    pub fn with_cuts(plan: &ExecPlan, cuts: &[usize]) -> Result<Self> {
+        let n = plan.num_outputs();
+        let mut bounds = Vec::with_capacity(cuts.len() + 2);
+        bounds.push(0);
+        for &c in cuts {
+            if c == 0 || c >= n {
+                bail!("cut {c} outside 1..{n}");
+            }
+            if *bounds.last().unwrap() >= c {
+                bail!("cuts must be strictly increasing, got {cuts:?}");
+            }
+            bounds.push(c);
+        }
+        bounds.push(n);
+        let ranges = bounds.windows(2).map(|w| w[0]..w[1]).collect();
+        Ok(Self::from_ranges(plan, ranges))
+    }
+
+    fn from_ranges(plan: &ExecPlan, ranges: Vec<Range<usize>>) -> Self {
+        let parts = ranges
+            .into_iter()
+            .map(|r| (r.clone(), plan.extract_output_range(r.start, r.end)))
+            .collect();
+        ShardPlan { num_inputs: plan.num_inputs(), num_outputs: plan.num_outputs(), parts }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.num_outputs
+    }
+
+    /// The output range each shard owns, in gather order.
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        self.parts.iter().map(|(r, _)| r.clone()).collect()
+    }
+
+    pub fn plans(&self) -> impl Iterator<Item = &ExecPlan> {
+        self.parts.iter().map(|(_, p)| p)
+    }
+
+    /// Sum of per-shard additions. At least the unsharded count; the
+    /// excess is the replication cost of cutting shared subexpressions.
+    pub fn total_additions(&self) -> usize {
+        self.parts.iter().map(|(_, p)| p.additions()).sum()
+    }
+}
+
+struct Shard {
+    range: Range<usize>,
+    engine: Arc<dyn Executor>,
+}
+
+/// Scatter/gather executor over per-shard engines.
+///
+/// `execute_batch_into` broadcasts the batch to every shard engine
+/// (sub-plans keep the full input arity, so the scatter is a broadcast),
+/// runs them per [`ShardMode`] — `Serial` on the calling thread,
+/// `Parallel` on the shared worker pool (`pool_mode = persistent`) or
+/// per-call scoped threads (`scoped`) — and gathers each shard's rows
+/// into its output-column slice of the batch-major result. Gather
+/// scratch is recycled, so steady-state sharded serving allocates no
+/// per-shard row buffers.
+pub struct ShardedExecutor {
+    shards: Vec<Shard>,
+    num_inputs: usize,
+    num_outputs: usize,
+    mode: ShardMode,
+    pool_mode: PoolMode,
+    workers: Arc<WorkerPool>,
+    scratch: Mutex<Vec<Vec<ShardRows>>>,
+}
+
+impl ShardedExecutor {
+    /// Shard a lowered plan into `cfg.shards` local [`BatchEngine`]s
+    /// (each built with `cfg`, shards reset to 1, sharing the
+    /// process-wide worker pool).
+    pub fn from_plan(plan: &ExecPlan, cfg: ExecConfig) -> Self {
+        Self::from_shard_plan(ShardPlan::even(plan, cfg.shards), cfg)
+    }
+
+    /// Lower a graph and shard it per `cfg.shards`.
+    pub fn from_graph(g: &AdderGraph, cfg: ExecConfig) -> Self {
+        Self::from_plan(&ExecPlan::new(g), cfg)
+    }
+
+    /// Wrap an already-partitioned [`ShardPlan`] in local engines.
+    pub fn from_shard_plan(sp: ShardPlan, cfg: ExecConfig) -> Self {
+        let engine_cfg = ExecConfig { shards: 1, ..cfg };
+        let ShardPlan { num_inputs, num_outputs, parts } = sp;
+        let shards = parts
+            .into_iter()
+            .map(|(range, plan)| {
+                let engine: Arc<dyn Executor> = Arc::new(BatchEngine::from_plan(plan, engine_cfg));
+                Shard { range, engine }
+            })
+            .collect();
+        ShardedExecutor {
+            shards,
+            num_inputs,
+            num_outputs,
+            mode: cfg.shard_mode,
+            pool_mode: cfg.pool_mode,
+            workers: workers::global_pool(),
+            scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Build from externally supplied engines — the remote-shard seam.
+    /// `parts` maps each output range to the executor computing it;
+    /// ranges must be contiguous ascending from 0, every engine must
+    /// accept `num_inputs` and produce exactly its range's width.
+    pub fn from_executors(
+        parts: Vec<(Range<usize>, Arc<dyn Executor>)>,
+        cfg: ExecConfig,
+    ) -> Result<Self> {
+        let Some((first, _)) = parts.first() else {
+            bail!("sharded executor needs at least one shard");
+        };
+        if first.start != 0 {
+            bail!("first shard must start at output 0, got {}", first.start);
+        }
+        let num_inputs = parts[0].1.num_inputs();
+        let mut next = 0;
+        for (range, engine) in &parts {
+            if range.start != next {
+                bail!("shard ranges must be contiguous: expected start {next}, got {range:?}");
+            }
+            if engine.num_outputs() != range.len() {
+                bail!(
+                    "shard {range:?}: engine {} produces {} outputs, range wants {}",
+                    engine.name(),
+                    engine.num_outputs(),
+                    range.len()
+                );
+            }
+            if engine.num_inputs() != num_inputs {
+                bail!(
+                    "shard {range:?}: engine {} wants {} inputs, shard 0 wants {num_inputs}",
+                    engine.name(),
+                    engine.num_inputs()
+                );
+            }
+            next = range.end;
+        }
+        let shards = parts.into_iter().map(|(range, engine)| Shard { range, engine }).collect();
+        Ok(ShardedExecutor {
+            shards,
+            num_inputs,
+            num_outputs: next,
+            mode: cfg.shard_mode,
+            pool_mode: cfg.pool_mode,
+            workers: workers::global_pool(),
+            scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn mode(&self) -> ShardMode {
+        self.mode
+    }
+
+    /// The output range each shard owns, in gather order.
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        self.shards.iter().map(|s| s.range.clone()).collect()
+    }
+
+    fn take_scratch(&self) -> Vec<ShardRows> {
+        let mut parts = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        parts.resize_with(self.shards.len(), Vec::new);
+        parts
+    }
+
+    fn put_scratch(&self, parts: Vec<ShardRows>) {
+        let mut cache = self.scratch.lock().unwrap();
+        if cache.len() < 64 {
+            cache.push(parts);
+        }
+    }
+}
+
+impl Executor for ShardedExecutor {
+    fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.num_outputs
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-exec"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        let b = xs.len();
+        ys.resize_with(b, Vec::new);
+        if b == 0 {
+            return;
+        }
+        if self.shards.len() == 1 {
+            // degenerate single shard: no scatter/gather layer needed
+            self.shards[0].engine.execute_batch_into(xs, ys);
+            return;
+        }
+        let mut parts = self.take_scratch();
+        if self.mode == ShardMode::Serial {
+            for (shard, out) in self.shards.iter().zip(parts.iter_mut()) {
+                shard.engine.execute_batch_into(xs, out);
+            }
+        } else {
+            match self.pool_mode {
+                PoolMode::Persistent => {
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(self.shards.len());
+                    for (shard, out) in self.shards.iter().zip(parts.iter_mut()) {
+                        tasks.push(Box::new(move || shard.engine.execute_batch_into(xs, out)));
+                    }
+                    if let Err(e) = self.workers.run_scoped(tasks) {
+                        panic!("sharded exec worker pool: {e}");
+                    }
+                }
+                PoolMode::Scoped => {
+                    std::thread::scope(|scope| {
+                        for (shard, out) in self.shards.iter().zip(parts.iter_mut()) {
+                            scope.spawn(move || shard.engine.execute_batch_into(xs, out));
+                        }
+                    });
+                }
+            }
+        }
+        // gather: each shard's rows land in its output-column slice. No
+        // zero-fill: the ranges tile 0..num_outputs exactly (validated
+        // at construction), so every position is overwritten below.
+        for y in ys.iter_mut() {
+            y.resize(self.num_outputs, 0.0);
+        }
+        for (shard, out) in self.shards.iter().zip(parts.iter()) {
+            // hard check: a short batch from a (possibly remote) shard
+            // engine must fail loudly, never serve stale/zero columns
+            assert_eq!(out.len(), b, "shard {:?} returned a short batch", shard.range);
+            for (y, row) in ys.iter_mut().zip(out) {
+                y[shard.range.clone()].copy_from_slice(row);
+            }
+        }
+        self.put_scratch(parts);
+    }
+}
+
+impl std::fmt::Debug for ShardedExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedExecutor")
+            .field("shards", &self.ranges())
+            .field("num_inputs", &self.num_inputs)
+            .field("num_outputs", &self.num_outputs)
+            .field("mode", &self.mode)
+            .finish()
+    }
+}
+
+/// The one graph-to-engine entry point that honors `cfg.shards`: a
+/// [`ShardedExecutor`] when sharding is requested and the graph has more
+/// than one output to split, a plain [`BatchEngine`] otherwise. The
+/// registry and CLI build their engines through this.
+pub fn engine_for_graph(g: &AdderGraph, cfg: ExecConfig) -> Arc<dyn Executor> {
+    if cfg.shards > 1 && g.num_outputs() > 1 {
+        Arc::new(ShardedExecutor::from_graph(g, cfg))
+    } else {
+        Arc::new(BatchEngine::with_config(g, cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NaiveExecutor;
+    use crate::graph::{Operand, OutputSpec};
+    use crate::util::Rng;
+
+    fn wide_graph(inputs: usize, nodes: usize, outputs: usize, seed: u64) -> AdderGraph {
+        let mut rng = Rng::new(seed);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..nodes {
+            let a = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+            let b = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..outputs)
+            .map(|_| {
+                if rng.f32() < 0.1 {
+                    OutputSpec::Zero
+                } else {
+                    OutputSpec::Ref(refs[rng.below(refs.len())].scaled(1, false))
+                }
+            })
+            .collect();
+        g.set_outputs(outs);
+        g
+    }
+
+    #[test]
+    fn even_ranges_cover_and_balance() {
+        assert_eq!(even_ranges(10, 3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(even_ranges(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        assert_eq!(even_ranges(3, 7), vec![0..1, 1..2, 2..3], "clamped to the output count");
+        assert_eq!(even_ranges(5, 1), vec![0..5]);
+        assert_eq!(even_ranges(0, 3), vec![0..0], "no outputs: one empty range");
+    }
+
+    #[test]
+    fn with_cuts_validates() {
+        let g = wide_graph(4, 20, 6, 0);
+        let plan = ExecPlan::new(&g);
+        let sp = ShardPlan::with_cuts(&plan, &[1, 4]).unwrap();
+        assert_eq!(sp.ranges(), vec![0..1, 1..4, 4..6]);
+        assert!(ShardPlan::with_cuts(&plan, &[0]).is_err(), "cut at 0");
+        assert!(ShardPlan::with_cuts(&plan, &[6]).is_err(), "cut at n");
+        assert!(ShardPlan::with_cuts(&plan, &[3, 3]).is_err(), "non-increasing");
+    }
+
+    #[test]
+    fn shard_plan_replicates_only_whats_needed() {
+        let g = wide_graph(6, 40, 8, 1);
+        let plan = ExecPlan::new(&g);
+        let sp = ShardPlan::even(&plan, 4);
+        assert_eq!(sp.num_shards(), 4);
+        assert_eq!(sp.num_inputs(), plan.num_inputs());
+        assert_eq!(sp.num_outputs(), plan.num_outputs());
+        let per_shard: usize = sp.plans().map(ExecPlan::additions).sum();
+        assert_eq!(sp.total_additions(), per_shard, "accounting sums the shard programs");
+        for p in sp.plans() {
+            assert!(p.additions() <= plan.additions(), "a shard is never the whole plus more");
+        }
+    }
+
+    #[test]
+    fn sharded_executor_bit_identical_across_modes() {
+        let mut rng = Rng::new(7);
+        let g = wide_graph(5, 60, 9, 2);
+        let oracle = NaiveExecutor::new(g.clone());
+        for &b in &[0usize, 1, 3, 17] {
+            let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let want = oracle.execute_batch(&xs);
+            for mode in [ShardMode::Serial, ShardMode::Parallel] {
+                for pool in [PoolMode::Scoped, PoolMode::Persistent] {
+                    for shards in [1usize, 2, 3, 7] {
+                        let cfg = ExecConfig {
+                            threads: 2,
+                            shards,
+                            shard_mode: mode,
+                            pool_mode: pool,
+                            ..ExecConfig::default()
+                        };
+                        let sharded = ShardedExecutor::from_graph(&g, cfg);
+                        assert_eq!(sharded.num_inputs(), g.num_inputs());
+                        assert_eq!(sharded.num_outputs(), g.num_outputs());
+                        let got = sharded.execute_batch(&xs);
+                        assert_eq!(got, want, "b {b} mode {mode:?} pool {pool:?} x{shards}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_reuses_gather_scratch() {
+        let g = wide_graph(4, 30, 6, 3);
+        let sharded = ShardedExecutor::from_graph(
+            &g,
+            ExecConfig { threads: 1, shards: 3, ..ExecConfig::default() },
+        );
+        let xs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; 4]).collect();
+        let mut ys = Vec::new();
+        sharded.execute_batch_into(&xs, &mut ys);
+        assert_eq!(sharded.scratch.lock().unwrap().len(), 1, "scratch must be recycled");
+        let first = ys.clone();
+        sharded.execute_batch_into(&xs, &mut ys);
+        assert_eq!(first, ys);
+        assert_eq!(sharded.scratch.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn from_executors_is_the_remote_seam() {
+        let g = wide_graph(4, 25, 5, 4);
+        let plan = ExecPlan::new(&g);
+        let oracle = NaiveExecutor::new(g.clone());
+        // hand-built shards over explicitly extracted sub-plans — the
+        // same call a remote worker would make on a shipped range
+        let parts: Vec<(Range<usize>, Arc<dyn Executor>)> = vec![
+            (
+                0..2,
+                Arc::new(BatchEngine::from_plan(
+                    plan.extract_output_range(0, 2),
+                    ExecConfig::serial(),
+                )),
+            ),
+            (
+                2..5,
+                Arc::new(BatchEngine::from_plan(
+                    plan.extract_output_range(2, 5),
+                    ExecConfig::serial(),
+                )),
+            ),
+        ];
+        let sharded = ShardedExecutor::from_executors(parts, ExecConfig::serial()).unwrap();
+        let mut rng = Rng::new(9);
+        let xs: Vec<Vec<f32>> = (0..7).map(|_| rng.normal_vec(4, 1.0)).collect();
+        assert_eq!(sharded.execute_batch(&xs), oracle.execute_batch(&xs));
+
+        // validation: gaps, wrong widths and empty part lists are rejected
+        let gap: Vec<(Range<usize>, Arc<dyn Executor>)> = vec![(
+            1..5,
+            Arc::new(BatchEngine::from_plan(
+                plan.extract_output_range(1, 5),
+                ExecConfig::serial(),
+            )),
+        )];
+        assert!(ShardedExecutor::from_executors(gap, ExecConfig::serial()).is_err());
+        assert!(ShardedExecutor::from_executors(Vec::new(), ExecConfig::serial()).is_err());
+    }
+
+    #[test]
+    fn engine_for_graph_honors_shards() {
+        let g = wide_graph(3, 15, 4, 5);
+        let plain = engine_for_graph(&g, ExecConfig::serial());
+        assert_eq!(plain.name(), "batch-engine");
+        let sharded = engine_for_graph(&g, ExecConfig { shards: 2, ..ExecConfig::serial() });
+        assert_eq!(sharded.name(), "sharded-exec");
+        let mut rng = Rng::new(11);
+        let xs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(3, 1.0)).collect();
+        assert_eq!(plain.execute_batch(&xs), sharded.execute_batch(&xs));
+    }
+}

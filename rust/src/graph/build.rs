@@ -161,7 +161,10 @@ mod tests {
 
     #[test]
     fn zero_rows_propagate_through_chain() {
-        let f0 = P2Factor { in_dim: 1, rows: vec![vec![], vec![Term { src: 0, shift: 0, negative: false }]] };
+        let f0 = P2Factor {
+            in_dim: 1,
+            rows: vec![vec![], vec![Term { src: 0, shift: 0, negative: false }]],
+        };
         let f1 = P2Factor {
             in_dim: 2,
             rows: vec![vec![

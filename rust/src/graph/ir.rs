@@ -38,11 +38,7 @@ impl Operand {
 
     pub fn coeff(&self) -> f32 {
         let m = (self.shift as f32).exp2();
-        if self.negative {
-            -m
-        } else {
-            m
-        }
+        if self.negative { -m } else { m }
     }
 }
 

@@ -116,10 +116,7 @@ impl LccDecomposition {
             .sum();
         let g = decomposition_to_graph(&self);
         let total = g.additions();
-        self.breakdown = AdditionBreakdown {
-            intra_slice: intra,
-            cross_slice: total - intra,
-        };
+        self.breakdown = AdditionBreakdown { intra_slice: intra, cross_slice: total - intra };
         self.graph = Some(g);
         self
     }

@@ -69,11 +69,7 @@ pub fn decompose_fp(w: &Matrix, p: &FpParams) -> Vec<P2Factor> {
                 pursue(w.row(i), &dict, p.terms_per_row, targets_sq[i], p.shift_range);
             let mut row_val = vec![0.0f32; k];
             for pk in &picks {
-                factor.rows[i].push(Term {
-                    src: pk.atom,
-                    shift: pk.shift,
-                    negative: pk.negative,
-                });
+                factor.rows[i].push(Term { src: pk.atom, shift: pk.shift, negative: pk.negative });
                 let c = (pk.shift as f32).exp2() * if pk.negative { -1.0 } else { 1.0 };
                 for (rv, &av) in row_val.iter_mut().zip(dict.atom(pk.atom)) {
                     *rv += c * av;
@@ -145,7 +141,12 @@ mod tests {
     fn respects_terms_per_row() {
         let mut rng = Rng::new(2);
         let w = Matrix::randn(32, 5, 1.0, &mut rng);
-        let p = FpParams { terms_per_row: 3, target_rel_err: 0.0, max_factors: 4, ..Default::default() };
+        let p = FpParams {
+            terms_per_row: 3,
+            target_rel_err: 0.0,
+            max_factors: 4,
+            ..Default::default()
+        };
         for f in decompose_fp(&w, &p) {
             assert!(f.rows.iter().all(|r| r.len() <= 3));
         }

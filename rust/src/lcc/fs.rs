@@ -70,8 +70,7 @@ pub fn decompose_fs(w: &Matrix, p: &FsParams) -> AdderGraph {
             partial = Some(match partial {
                 None => {
                     // first term: a pure scaled reference, no adder yet
-                    let val: Vec<f32> =
-                        dict.atom(pick.atom).iter().map(|&v| c * v).collect();
+                    let val: Vec<f32> = dict.atom(pick.atom).iter().map(|&v| c * v).collect();
                     (term_op, val)
                 }
                 Some((prev_op, prev_val)) => {
@@ -120,11 +119,7 @@ mod tests {
         // duplicate rows: the second copy must cost 0 extra additions
         let mut rng = Rng::new(1);
         let base = Matrix::randn(1, 6, 1.0, &mut rng);
-        let w = Matrix::from_vec(
-            2,
-            6,
-            [base.row(0), base.row(0)].concat(),
-        );
+        let w = Matrix::from_vec(2, 6, [base.row(0), base.row(0)].concat());
         let g = decompose_fs(&w, &FsParams::default());
         let single = decompose_fs(&base, &FsParams::default());
         assert_eq!(g.additions(), single.additions(), "duplicate row should be free");

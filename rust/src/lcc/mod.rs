@@ -23,5 +23,8 @@ pub mod fs;
 pub mod pursuit;
 pub mod slicing;
 
-pub use decompose::{decompose, AdditionBreakdown, LccAlgorithm, LccConfig, LccDecomposition, SliceDecomposition, SliceKind};
+pub use decompose::{
+    decompose, AdditionBreakdown, LccAlgorithm, LccConfig, LccDecomposition, SliceDecomposition,
+    SliceKind,
+};
 pub use factor::{chain_to_dense, P2Factor, Term};

@@ -6,16 +6,19 @@
 //!   table1  [--steps N] [...]     run the Table-I residual-CNN pipeline
 //!   decompose --rows N --cols K   LCC vs CSD on a random matrix
 //!   compress [--recipe r.toml] [--checkpoint w.npy | --demo N] [--out dir]
-//!                                 recipe -> artifact -> served engine,
+//!            [--shards N]         recipe -> artifact -> served engine,
 //!                                 self-verified (nonzero exit on mismatch)
-//!   serve   [--model name=path]...  multi-model registry server driver
+//!   serve   [--model name=path]... [--shards N]
+//!                                 multi-model registry server driver
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
 //! form --name value and may repeat (`--model a=p1 --model b=p2`).
 
 use anyhow::{bail, Context, Result};
 use lccnn::compress::{demo_weights, CompressedModel, Pipeline, Recipe};
-use lccnn::config::{ExecConfig, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig};
+use lccnn::config::{
+    ExecConfig, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig, ShardSpec,
+};
 use lccnn::exec::{Executor, NaiveExecutor};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::metrics::Metrics;
@@ -190,7 +193,14 @@ fn cmd_compress(flags: Flags) -> Result<()> {
         Some(p) => Recipe::from_toml(Path::new(p))?,
         None => Recipe::default(),
     };
-    let recipe = Recipe::from_env_over(base);
+    let mut recipe = Recipe::from_env_over(base);
+    // --shards N overrides the recipe's [compress.shard] section; the
+    // artifact's recipe.toml carries it, so the serve round-trip below
+    // reloads a *sharded* engine and verifies it bit-exact
+    let shards: usize = flag(&flags, "shards", 0)?;
+    if shards > 0 {
+        recipe.shard = Some(ShardSpec { shards, mode: recipe.exec.shard_mode });
+    }
     let demo: usize = flag(&flags, "demo", 0)?;
     let requests: usize = flag(&flags, "requests", 32)?.max(1);
     let seed: u64 = flag(&flags, "seed", 0)?;
@@ -198,8 +208,7 @@ fn cmd_compress(flags: Flags) -> Result<()> {
     let mut jobs: Vec<(String, Matrix)> = Vec::new();
     if let Some(ck) = flags.get("checkpoint") {
         let path = Path::new(ck);
-        let name =
-            path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string();
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string();
         jobs.push((name, load_weight_matrix(path)?));
     }
     for i in 0..demo {
@@ -210,6 +219,9 @@ fn cmd_compress(flags: Flags) -> Result<()> {
         bail!("nothing to compress: pass --checkpoint w.npy (file or dir) or --demo N");
     }
 
+    if let Some(s) = recipe.shard_spec() {
+        println!("serving engines sharded x{} ({})", s.shards, s.mode.as_str());
+    }
     let pipeline = Pipeline::from_recipe(&recipe)?;
     let metrics = Metrics::new();
     let mut failures = 0usize;
@@ -358,7 +370,13 @@ fn cmd_serve(flags: Flags) -> Result<()> {
     let clients: usize = flag(&flags, "client-threads", 4)?.max(1);
     let seed: u64 = flag(&flags, "seed", 0)?;
 
-    let base_exec = ExecConfig::from_env();
+    // --shards N shards every engine this process builds: demo/graph
+    // models via ExecConfig::shards, checkpoint loads via the recipe
+    let shards: usize = flag(&flags, "shards", 0)?;
+    let mut base_exec = ExecConfig::from_env();
+    if shards > 0 {
+        base_exec.shards = shards;
+    }
     let registry = Arc::new(ModelRegistry::new());
     // compression recipe for checkpoint loads: --recipe flag > [serve]
     // recipe key / LCCNN_SERVE_RECIPE > per-checkpoint discovery (artifact
@@ -376,13 +394,22 @@ fn cmd_serve(flags: Flags) -> Result<()> {
         if let Some(e) = spec.exec {
             recipe.exec = e; // per-model [serve.exec.<name>] wins
         }
+        if shards > 0 {
+            recipe.shard = Some(ShardSpec { shards, mode: recipe.exec.shard_mode });
+        }
         let entry = registry.load_checkpoint_with_recipe(
             &spec.name,
             Path::new(&spec.path),
             Some(&recipe),
             serve_cfg.max_batch,
         )?;
-        println!("loaded {:?} from {} ({:?} inputs)", spec.name, spec.path, entry.input_dim());
+        println!(
+            "loaded {:?} from {} ({:?} inputs, {} shard(s))",
+            spec.name,
+            spec.path,
+            entry.input_dim(),
+            recipe.shard_spec().map(|s| s.shards).unwrap_or(1)
+        );
     }
     let mut rng = Rng::new(seed);
     for i in 0..demo {
@@ -479,7 +506,9 @@ fn main() -> Result<()> {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: lccnn <info|fig2|table1|decompose|compress|serve> [--flag value ...]");
+            eprintln!(
+                "usage: lccnn <info|fig2|table1|decompose|compress|serve> [--flag value ...]"
+            );
             return Ok(());
         }
     };

@@ -80,12 +80,7 @@ impl Metrics {
     pub fn summary(&self, name: &str) -> Option<(usize, f64, f64, f64)> {
         let m = self.inner.lock().unwrap();
         let h = m.histograms.get(name)?;
-        Some((
-            h.len(),
-            stats::mean(h),
-            stats::percentile(h, 50.0),
-            stats::percentile(h, 99.0),
-        ))
+        Some((h.len(), stats::mean(h), stats::percentile(h, 50.0), stats::percentile(h, 99.0)))
     }
 
     /// Render every metric as aligned text.

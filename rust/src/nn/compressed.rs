@@ -189,10 +189,7 @@ mod tests {
             .expect("valid stage order")
             .run(&w1)
             .expect("pipeline runs");
-        (
-            CompressedMlp::from_compressed(artifact, vec![0.0; rows], w2, vec![0.0; 4]),
-            w1,
-        )
+        (CompressedMlp::from_compressed(artifact, vec![0.0; rows], w2, vec![0.0; 4]), w1)
     }
 
     /// The pipeline-built model must be bit-identical to the historical

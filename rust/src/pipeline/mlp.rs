@@ -124,7 +124,8 @@ pub fn run_mlp_pipeline(rt: &Runtime, cfg: &MlpPipelineConfig) -> Result<MlpPipe
     reg_tr.set_colmask(mask.clone());
     reg_tr.set_cluster_labels(artifact_labels(&clustering, &compact.kept, mask.len()));
     reg_tr.set_share_flag(true);
-    let retrain_sched = LrSchedule { base: cfg.lr * 0.2, every: cfg.lr_decay_every, factor: cfg.lr_decay };
+    let retrain_sched =
+        LrSchedule { base: cfg.lr * 0.2, every: cfg.lr_decay_every, factor: cfg.lr_decay };
     reg_tr.train(&train_data, cfg.share_retrain_steps, retrain_sched, 20, cfg.seed + 22)?;
     let shared_params = reg_tr.params();
     let shared_compact = shared_params.w1.select_cols(&compact.kept);
@@ -164,8 +165,12 @@ pub fn run_mlp_pipeline(rt: &Runtime, cfg: &MlpPipelineConfig) -> Result<MlpPipe
         let (_, deq) = crate::quant::quantize_matrix(&shared_layer.centroids, fmt);
         crate::util::stats::sqnr_db(shared_layer.centroids.data(), deq.data())
     };
-    let stage_c =
-        CompressedMlp::from_compressed(artifact, shared_params.b1, shared_params.w2, shared_params.b2);
+    let stage_c = CompressedMlp::from_compressed(
+        artifact,
+        shared_params.b1,
+        shared_params.w2,
+        shared_params.b2,
+    );
     let c_adds = stage_c.layer1_additions(fmt);
     stages.push(StageResult {
         stage: "reg+sharing+LCC".into(),

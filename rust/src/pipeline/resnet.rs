@@ -175,7 +175,12 @@ pub fn lcc_approx_store(store: &ParamStore, repr: ConvRepr, cfg: &LccConfig) -> 
 }
 
 /// Evaluate a parameter store through the `resnet_eval` artifact.
-pub fn evaluate_store(rt: &Runtime, store: &ParamStore, data: &Dataset, limit: usize) -> Result<f64> {
+pub fn evaluate_store(
+    rt: &Runtime,
+    store: &ParamStore,
+    data: &Dataset,
+    limit: usize,
+) -> Result<f64> {
     let exe = rt.get("resnet_eval")?;
     let specs = param_specs();
     let b = exe.spec.inputs[specs.len()].dims[0];
@@ -209,7 +214,10 @@ fn lcc_cfg(base: LccConfig, target_rel_err: f64) -> LccConfig {
 }
 
 /// Run the full Table-I pipeline.
-pub fn run_resnet_pipeline(rt: &Runtime, cfg: &ResnetPipelineConfig) -> Result<ResnetPipelineOutput> {
+pub fn run_resnet_pipeline(
+    rt: &Runtime,
+    cfg: &ResnetPipelineConfig,
+) -> Result<ResnetPipelineOutput> {
     let fmt = FixedPointFormat::default_weights();
     let sched = LrSchedule { base: cfg.lr, every: 100, factor: 0.9 };
     let train_data = synth_tiny::generate(cfg.train_examples, cfg.seed);
@@ -217,7 +225,8 @@ pub fn run_resnet_pipeline(rt: &Runtime, cfg: &ResnetPipelineConfig) -> Result<R
 
     // baseline: unregularized, FK representation at CSD cost
     log::info!("[resnet] baseline training ({} steps)", cfg.train_steps);
-    let mut base_tr = ResnetTrainer::new(rt, &crate::nn::resnet::init_params(cfg.seed + 5), ConvGrouping::Fk)?;
+    let mut base_tr =
+        ResnetTrainer::new(rt, &crate::nn::resnet::init_params(cfg.seed + 5), ConvGrouping::Fk)?;
     let baseline_curve = base_tr.train(&train_data, cfg.train_steps, sched, 20, cfg.seed + 6)?;
     let (_, baseline_accuracy) = base_tr.evaluate(&test_data)?;
     let base_store = base_tr.params_store();
@@ -232,7 +241,8 @@ pub fn run_resnet_pipeline(rt: &Runtime, cfg: &ResnetPipelineConfig) -> Result<R
 
     for grouping in [ConvGrouping::Fk, ConvGrouping::Pk] {
         log::info!("[resnet] regularized training ({grouping:?}, lambda={})", cfg.lambda);
-        let mut tr = ResnetTrainer::new(rt, &crate::nn::resnet::init_params(cfg.seed + 7), grouping)?;
+        let mut tr =
+            ResnetTrainer::new(rt, &crate::nn::resnet::init_params(cfg.seed + 7), grouping)?;
         tr.lambda = match grouping {
             ConvGrouping::Fk => cfg.lambda,
             ConvGrouping::Pk => cfg.lambda * cfg.lambda_pk_scale,
@@ -241,8 +251,7 @@ pub fn run_resnet_pipeline(rt: &Runtime, cfg: &ResnetPipelineConfig) -> Result<R
         let (_, reg_acc) = tr.evaluate(&test_data)?;
         let store = tr.params_store();
 
-        let reg_adds =
-            network_additions(&store, grouping, fmt, &mut |m| matrix_csd_adders(m, fmt));
+        let reg_adds = network_additions(&store, grouping, fmt, &mut |m| matrix_csd_adders(m, fmt));
         rows[0].1.push(TableCell {
             additions: reg_adds,
             ratio: baseline_additions as f64 / reg_adds.max(1) as f64,

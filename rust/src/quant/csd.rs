@@ -42,11 +42,7 @@ pub fn csd_value(digits: &[CsdDigit]) -> i64 {
         .iter()
         .map(|d| {
             let v = 1i64 << d.shift;
-            if d.negative {
-                -v
-            } else {
-                v
-            }
+            if d.negative { -v } else { v }
         })
         .sum()
 }

@@ -10,5 +10,7 @@
 mod csd;
 mod fixed;
 
-pub use csd::{csd_digits, csd_nonzero_digits, csd_value, matrix_csd_adders, row_csd_adders, CsdDigit};
+pub use csd::{
+    csd_digits, csd_nonzero_digits, csd_value, matrix_csd_adders, row_csd_adders, CsdDigit,
+};
 pub use fixed::{quantize_matrix, quantize_value, FixedPointFormat};

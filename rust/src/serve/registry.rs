@@ -16,7 +16,7 @@
 use super::backend::{BatchEvaluator, ExecutorBackend};
 use crate::compress::{Pipeline, Recipe};
 use crate::config::ExecConfig;
-use crate::exec::{BatchEngine, Executor};
+use crate::exec::Executor;
 use crate::graph::AdderGraph;
 use crate::lcc::LccConfig;
 use crate::nn::load_weight_matrix;
@@ -163,8 +163,10 @@ impl ModelRegistry {
         self.insert_executor(name, executor, exec_cfg, max_batch).1
     }
 
-    /// Lower an adder graph into a [`BatchEngine`] (sharing the
-    /// process-wide worker pool) and register it.
+    /// Lower an adder graph into an engine (sharing the process-wide
+    /// worker pool) and register it. `exec_cfg.shards > 1` partitions
+    /// the graph across an output-range [`crate::exec::ShardedExecutor`];
+    /// otherwise a single [`crate::exec::BatchEngine`] serves it.
     pub fn register_graph(
         &self,
         name: &str,
@@ -172,7 +174,7 @@ impl ModelRegistry {
         exec_cfg: ExecConfig,
         max_batch: usize,
     ) -> Option<Arc<ModelEntry>> {
-        let engine: Arc<dyn Executor> = Arc::new(BatchEngine::with_config(graph, exec_cfg));
+        let engine = crate::exec::engine_for_graph(graph, exec_cfg);
         self.register(name, engine, exec_cfg, max_batch)
     }
 
@@ -227,13 +229,14 @@ impl ModelRegistry {
             .with_context(|| format!("compressing model {name:?}"))?;
         let report = model.report();
         log::info!(
-            "model {name:?}: {}x{} weight -> [{}] -> {} adds ({:.2}x, rel err {:.2e})",
+            "model {name:?}: {}x{} weight -> [{}] -> {} adds ({:.2}x, rel err {:.2e}, {} shard(s))",
             w.rows(),
             w.cols(),
             report.stages.iter().map(|s| s.stage.as_str()).collect::<Vec<_>>().join(" -> "),
             report.final_additions(),
             report.final_ratio(),
             report.final_rel_err(),
+            model.shard_spec().map(|s| s.shards).unwrap_or(1),
         );
         let exec_cfg = recipe.exec;
         let executor: Arc<dyn Executor> = Arc::new(model.into_executor());
@@ -348,6 +351,30 @@ mod tests {
     }
 
     #[test]
+    fn register_graph_shards_when_configured() {
+        // several outputs so sharding actually engages
+        let mut g = AdderGraph::new(4);
+        let a = g.push_add(Operand::input(0), Operand::input(1));
+        let b = g.push_add(Operand::input(2), Operand::input(3));
+        let c = g.push_add(a, b);
+        g.set_outputs(vec![OutputSpec::Ref(a), OutputSpec::Ref(b), OutputSpec::Ref(c)]);
+        let r = ModelRegistry::new();
+        r.register_graph("plain", &g, ExecConfig::serial(), 8);
+        r.register_graph("sharded", &g, ExecConfig { shards: 2, ..ExecConfig::serial() }, 8);
+        let plain = r.get("plain").unwrap();
+        let sharded = r.get("sharded").unwrap();
+        assert_eq!(plain.executor().unwrap().name(), "batch-engine");
+        assert_eq!(sharded.executor().unwrap().name(), "sharded-exec");
+        assert_eq!(sharded.input_dim(), Some(4));
+        let xs = vec![vec![1.0, 2.0, 3.0, 4.0], vec![-1.0, 0.5, 2.0, -3.0]];
+        assert_eq!(
+            plain.eval_batch(&xs).unwrap(),
+            sharded.eval_batch(&xs).unwrap(),
+            "sharded registration serves bit-identically"
+        );
+    }
+
+    #[test]
     fn entry_validates_arity_for_exec_models() {
         let r = ModelRegistry::new();
         r.register_graph("m", &sum_graph(3), ExecConfig::serial(), 8);
@@ -374,7 +401,12 @@ mod tests {
         assert_eq!(e.input_dim(), Some(8));
         // from the bare .npy file
         let e2 = r
-            .load_checkpoint_with_recipe("ckpt-file", &dir.join("weight.npy"), Some(&lcc_serial()), 16)
+            .load_checkpoint_with_recipe(
+                "ckpt-file",
+                &dir.join("weight.npy"),
+                Some(&lcc_serial()),
+                16,
+            )
             .unwrap();
         assert_eq!(e2.input_dim(), Some(8));
 

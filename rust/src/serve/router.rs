@@ -128,8 +128,7 @@ impl Router {
         } else {
             None
         };
-        let req =
-            RoutedRequest { entry, x, enqueued: Instant::now(), resp: resp_tx, _slot: slot };
+        let req = RoutedRequest { entry, x, enqueued: Instant::now(), resp: resp_tx, _slot: slot };
         self.tx.as_ref().expect("router alive").send(req).expect("router thread alive");
         resp_rx
     }
@@ -467,8 +466,7 @@ mod tests {
             Arc::clone(&metrics),
         );
         let m = r.get("m").unwrap();
-        let rxs: Vec<_> =
-            (0..64).map(|i| router.submit(Arc::clone(&m), vec![i as f32])).collect();
+        let rxs: Vec<_> = (0..64).map(|i| router.submit(Arc::clone(&m), vec![i as f32])).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             assert_eq!(rx.recv().unwrap().unwrap(), vec![i as f32]);
         }

@@ -128,6 +128,14 @@ impl SharedLcc {
         &self.engine
     }
 
+    /// Decompose into `(layer, decomposition, engine)` without cloning —
+    /// for consumers that replace the engine (e.g. a sharded one) and
+    /// must not keep the unsharded engine resident.
+    pub fn into_parts(self) -> (SharedLayer, LccDecomposition, BatchEngine) {
+        let SharedLcc { layer, decomposition, engine } = self;
+        (layer, decomposition, engine)
+    }
+
     /// The LCC program over the centroid inputs.
     pub fn graph(&self) -> &AdderGraph {
         self.decomposition.graph()
@@ -183,19 +191,13 @@ mod tests {
 
     #[test]
     fn segment_additions_formula() {
-        let sl = SharedLayer {
-            centroids: Matrix::zeros(4, 3),
-            labels: vec![0, 1, 2, 0, 1, 0],
-        };
+        let sl = SharedLayer { centroids: Matrix::zeros(4, 3), labels: vec![0, 1, 2, 0, 1, 0] };
         assert_eq!(sl.segment_additions(), 3);
     }
 
     #[test]
     fn segment_sums_known() {
-        let sl = SharedLayer {
-            centroids: Matrix::zeros(1, 2),
-            labels: vec![0, 1, 0],
-        };
+        let sl = SharedLayer { centroids: Matrix::zeros(1, 2), labels: vec![0, 1, 0] };
         assert_eq!(sl.segment_sums(&[1.0, 10.0, 2.0]), vec![3.0, 10.0]);
     }
 

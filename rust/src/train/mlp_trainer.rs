@@ -163,8 +163,7 @@ impl MlpTrainer {
     pub fn set_w1(&mut self, w1: &Matrix) {
         assert_eq!((w1.rows(), w1.cols()), (HIDDEN, INPUT));
         self.state[0] = lit_f32(&[HIDDEN, INPUT], w1.data()).expect("w1 literal");
-        self.state[4] =
-            lit_f32(&[HIDDEN, INPUT], &vec![0.0; HIDDEN * INPUT]).expect("m1 literal");
+        self.state[4] = lit_f32(&[HIDDEN, INPUT], &vec![0.0; HIDDEN * INPUT]).expect("m1 literal");
     }
 
     /// (mean loss, accuracy) over the largest multiple of the eval batch.

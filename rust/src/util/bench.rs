@@ -1,0 +1,111 @@
+//! Bench-harness plumbing shared by the `harness = false` benches:
+//! CI quick mode and machine-readable result emission.
+//!
+//! * `LCCNN_BENCH_QUICK=1` shrinks iteration counts so the CI
+//!   `bench-smoke` job finishes in seconds while still producing real
+//!   numbers for every row.
+//! * `LCCNN_BENCH_JSON=path` appends one JSON object per recorded row
+//!   (JSON Lines) — the `BENCH_exec.json` workflow artifact the
+//!   EXPERIMENTS.md §Perf tables are filled from.
+
+use std::fmt::Write as _;
+use std::fs::OpenOptions;
+use std::io::Write as _;
+
+/// True when `LCCNN_BENCH_QUICK` is set to anything but `0`/empty:
+/// benches should cut warmups/iterations to smoke-test scale.
+pub fn quick() -> bool {
+    std::env::var("LCCNN_BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// `a` in quick mode, `b` otherwise — `bench::pick(3, 30)` reads as
+/// "3 iters on CI, 30 for real measurements".
+pub fn pick<T>(a: T, b: T) -> T {
+    if quick() { a } else { b }
+}
+
+/// Append one result row to the `LCCNN_BENCH_JSON` file (no-op when the
+/// variable is unset). `fields` values that parse as finite JSON numbers
+/// are emitted bare; everything else is emitted as a JSON string.
+pub fn emit(bench: &str, fields: &[(&str, String)]) {
+    let Ok(path) = std::env::var("LCCNN_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    let mut line = String::new();
+    let _ = write!(line, "{{\"bench\":\"{}\"", escape(bench));
+    for (k, v) in fields {
+        let is_number = v.parse::<f64>().map(|f| f.is_finite()).unwrap_or(false);
+        if is_number {
+            let _ = write!(line, ",\"{}\":{v}", escape(k));
+        } else {
+            let _ = write!(line, ",\"{}\":\"{}\"", escape(k), escape(v));
+        }
+    }
+    line.push_str("}\n");
+    let opened = OpenOptions::new().create(true).append(true).open(&path);
+    match opened {
+        Ok(mut f) => {
+            if let Err(e) = f.write_all(line.as_bytes()) {
+                log::warn!("bench json append to {path:?} failed: {e}");
+            }
+        }
+        Err(e) => log::warn!("bench json open {path:?} failed: {e}"),
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_follows_quick_flag() {
+        // the env flag is process-global; only assert the unset default
+        if std::env::var("LCCNN_BENCH_QUICK").is_err() {
+            assert!(!quick());
+            assert_eq!(pick(3, 30), 30);
+        }
+    }
+
+    #[test]
+    fn emit_appends_json_lines() {
+        let path = std::env::temp_dir()
+            .join(format!("lccnn-bench-json-{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        // emit() reads the env var itself; point it at the temp file
+        std::env::set_var("LCCNN_BENCH_JSON", &path);
+        emit("t", &[("us", "1.25".to_string()), ("name", "x\"y".to_string())]);
+        emit("t", &[("n", "7".to_string())]);
+        std::env::remove_var("LCCNN_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], "{\"bench\":\"t\",\"us\":1.25,\"name\":\"x\\\"y\"}");
+        assert_eq!(lines[1], "{\"bench\":\"t\",\"n\":7}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,4 +1,5 @@
-//! First-party utilities: PRNG, logger, statistics, timers.
+//! First-party utilities: PRNG, logger, statistics, timers, bench
+//! harness plumbing (quick mode + JSON result rows).
 //!
 //! The offline vendor tree only carries the `xla` crate's dependency
 //! closure, so randomness, logging and stats are implemented here
@@ -6,6 +7,7 @@
 //! [`crate::exec::WorkerPool`] — the one pool implementation in the
 //! tree; the legacy `util::ThreadPool` was retired in its favor.)
 
+pub mod bench;
 pub mod logger;
 pub mod rng;
 pub mod stats;

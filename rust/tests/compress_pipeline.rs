@@ -10,10 +10,8 @@
 //!   serialize → reload cycle and a registry artifact load.
 
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
-use lccnn::compress::{
-    demo_weights, Pipeline, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec,
-};
-use lccnn::config::{ExecConfig, LccAlgoConfig};
+use lccnn::compress::{demo_weights, Pipeline, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec};
+use lccnn::config::{ExecConfig, LccAlgoConfig, ShardMode, ShardSpec};
 use lccnn::exec::Executor;
 use lccnn::lcc::LccConfig;
 use lccnn::nn::npy::NpyArray;
@@ -44,8 +42,7 @@ fn recipe_bit_identical_to_legacy_stage_wiring_on_shape_matrix() {
         let legacy = shared.with_lcc_exec(&LccConfig::fs(), ExecConfig::serial());
 
         // recipe-driven
-        let model =
-            Pipeline::from_recipe(&serial_default_recipe()).unwrap().run(&w).unwrap();
+        let model = Pipeline::from_recipe(&serial_default_recipe()).unwrap().run(&w).unwrap();
         assert_eq!(model.kept(), &compact.kept[..], "shape {i}: kept maps agree");
         let slcc = model.lcc().expect("lcc stage ran");
         assert_eq!(slcc.additions(), legacy.additions(), "shape {i}: addition accounting");
@@ -151,6 +148,53 @@ fn registry_artifact_load_matches_direct_pipeline() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The acceptance round-trip for sharded artifacts: a recipe carrying
+/// `[compress.shard]` goes TOML -> artifact dir -> registry reload ->
+/// served shards, bit-identical to the unsharded serve of the same
+/// weights at every step.
+#[test]
+fn sharded_recipe_round_trips_through_artifact_and_registry() {
+    let w = demo_weights(22, 4, 4, 17);
+    let plain_recipe = serial_default_recipe();
+    let sharded_recipe = Recipe {
+        shard: Some(ShardSpec { shards: 3, mode: ShardMode::Parallel }),
+        ..plain_recipe.clone()
+    };
+    // TOML round trip keeps the shard section
+    let text = sharded_recipe.to_toml_string();
+    let reparsed = Recipe::from_toml_str(&text).unwrap();
+    assert_eq!(reparsed, sharded_recipe, "\n{text}");
+    assert_eq!(reparsed.shard_spec().unwrap().shards, 3);
+
+    // artifact dir: weights + the sharded recipe.toml
+    let dir = std::env::temp_dir().join(format!("lccnn-cp-shard-{}", std::process::id()));
+    let mut store = ParamStore::new();
+    store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
+    store.save(&dir).unwrap();
+    sharded_recipe.save(&dir.join("recipe.toml")).unwrap();
+
+    // registry discovery loads the sharded engine; a second registry
+    // load with the plain recipe is the unsharded reference
+    let registry = ModelRegistry::new();
+    let sharded_entry = registry.load_checkpoint_with_recipe("sharded", &dir, None, 8).unwrap();
+    let plain_entry =
+        registry.load_checkpoint_with_recipe("plain", &dir, Some(&plain_recipe), 8).unwrap();
+    assert_eq!(sharded_entry.input_dim(), Some(w.cols()));
+
+    let direct = Pipeline::from_recipe(&plain_recipe).unwrap().run(&w).unwrap();
+    let exec = direct.executor();
+    let mut rng = Rng::new(18);
+    let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+    let want = exec.execute_batch(&xs);
+    assert_eq!(plain_entry.eval_batch(&xs).unwrap(), want, "unsharded reference");
+    assert_eq!(
+        sharded_entry.eval_batch(&xs).unwrap(),
+        want,
+        "served shards must be bit-identical to the unsharded engine"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Quantize composes between share and LCC, and the quantized recipe
 /// still round-trips + reproduces deterministically.
 #[test]
@@ -164,6 +208,7 @@ fn quantized_recipe_runs_and_round_trips() {
             StageSpec::Lcc(Default::default()),
         ],
         exec: ExecConfig::serial(),
+        shard: None,
     };
     assert_eq!(Recipe::from_toml_str(&recipe.to_toml_string()).unwrap(), recipe);
     let p = Pipeline::from_recipe(&recipe).unwrap();

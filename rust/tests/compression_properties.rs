@@ -174,9 +174,7 @@ fn prop_conv_reformulations_equal_direct() {
         let co = 1 + rng.below(4);
         let kh = [1, 3][rng.below(2)];
         let stride = 1 + rng.below(2);
-        let input = Tensor4::from_vec(
-            1, h, w_sp, ci, rng.normal_vec(h * w_sp * ci, 1.0),
-        );
+        let input = Tensor4::from_vec(1, h, w_sp, ci, rng.normal_vec(h * w_sp * ci, 1.0));
         let kernel = Tensor4::from_vec(kh, kh, ci, co, rng.normal_vec(kh * kh * ci * co, 1.0));
         let params = Conv2dParams { stride, padding: Padding::Same };
         let want = conv2d(&input, &kernel, params);

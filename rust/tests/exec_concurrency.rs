@@ -99,8 +99,7 @@ fn pool_survives_a_panicking_task() {
     let mut rng = Rng::new(9);
     // sample 5 has the wrong arity: the input-length assert fires inside
     // a pooled task (batch 16 ≥ parallel_min_batch 8 → chunk dispatch)
-    let mut bad: Vec<Vec<f32>> =
-        (0..16).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+    let mut bad: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
     bad[5] = vec![1.0];
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         engine.execute_batch(&bad)
@@ -111,8 +110,7 @@ fn pool_survives_a_panicking_task() {
     // the pool survives: same engine, same pool, good batches still match
     // the oracle and no replacement threads were spawned
     let oracle = NaiveExecutor::new(g.clone());
-    let good: Vec<Vec<f32>> =
-        (0..16).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+    let good: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
     for _ in 0..5 {
         assert_eq!(engine.execute_batch(&good), oracle.execute_batch(&good));
     }
@@ -132,10 +130,7 @@ fn clean_shutdown_joins_all_workers() {
     pool.shutdown();
     let s = pool.stats();
     assert!(s.threads_spawned >= 1);
-    assert_eq!(
-        s.threads_joined, s.threads_spawned,
-        "leaked worker threads after shutdown: {s:?}"
-    );
+    assert_eq!(s.threads_joined, s.threads_spawned, "leaked worker threads after shutdown: {s:?}");
     // graceful: the engine still answers (tasks run inline on the caller)
     assert_eq!(engine.execute_batch(&xs), want);
     let s2 = pool.stats();
@@ -157,8 +152,7 @@ fn scoped_and_persistent_modes_agree_on_a_shared_engine() {
     ));
     let mut rng = Rng::new(21);
     for b in [0usize, 1, 7, 32, 65] {
-        let xs: Vec<Vec<f32>> =
-            (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+        let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
         assert_eq!(
             scoped.execute_batch(&xs),
             persistent.execute_batch(&xs),

@@ -8,8 +8,8 @@
 //! float-reassociation budget) guards the invariant even if a future
 //! kernel rewrite introduces a different-but-legal summation order.
 
-use lccnn::config::{ExecConfig, PoolMode};
-use lccnn::exec::{BatchEngine, Executor, NaiveExecutor};
+use lccnn::config::{ExecConfig, PoolMode, ShardMode};
+use lccnn::exec::{BatchEngine, ExecPlan, Executor, NaiveExecutor, ShardPlan, ShardedExecutor};
 use lccnn::graph::{AdderGraph, Operand, OutputSpec};
 use lccnn::util::Rng;
 
@@ -78,8 +78,7 @@ fn prop_engine_bit_identical_to_oracle() {
         let g = random_graph(&mut rng);
         let oracle = NaiveExecutor::new(g.clone());
         for &b in &[0usize, 1, 2, 7, 33, 65] {
-            let xs: Vec<Vec<f32>> =
-                (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
             let want = oracle.execute_batch(&xs);
             for (name, cfg) in engine_configs() {
                 let engine = BatchEngine::with_config(&g, cfg);
@@ -153,13 +152,64 @@ fn prop_degenerate_shapes_bit_identical_to_oracle() {
         g.set_outputs(outs);
         let oracle = NaiveExecutor::new(g.clone());
         for &b in &[0usize, 1, 2, 8, 9] {
-            let xs: Vec<Vec<f32>> =
-                (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
             let want = oracle.execute_batch(&xs);
             for (name, cfg) in engine_configs() {
                 let engine = BatchEngine::with_config(&g, cfg);
                 let got = engine.execute_batch(&xs);
                 assert_eq!(got, want, "nodes {nodes} engine {name} batch {b}");
+            }
+        }
+    }
+}
+
+/// Shard sweep: shards 1/2/3/7 x both shard modes x both pool modes,
+/// plus uneven explicit cuts, on random graphs and random batches — the
+/// sharded scatter/gather layer must stay bit-identical to both the
+/// unsharded engine and the `NaiveExecutor` oracle.
+#[test]
+fn prop_sharded_execution_bit_identical_to_oracle_and_unsharded() {
+    let mut rng = Rng::new(0x54A2D);
+    for trial in 0..12 {
+        let g = random_graph(&mut rng);
+        let oracle = NaiveExecutor::new(g.clone());
+        let plan = ExecPlan::new(&g);
+        let unsharded = BatchEngine::with_config(&g, ExecConfig::serial());
+        for &b in &[0usize, 1, 5, 33] {
+            let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let want = oracle.execute_batch(&xs);
+            assert_eq!(unsharded.execute_batch(&xs), want, "trial {trial} unsharded b {b}");
+            for mode in [ShardMode::Serial, ShardMode::Parallel] {
+                for pool in [PoolMode::Scoped, PoolMode::Persistent] {
+                    for shards in [1usize, 2, 3, 7] {
+                        let cfg = ExecConfig {
+                            threads: 2,
+                            shards,
+                            shard_mode: mode,
+                            pool_mode: pool,
+                            ..ExecConfig::default()
+                        };
+                        let sharded = ShardedExecutor::from_graph(&g, cfg);
+                        assert_eq!(
+                            sharded.execute_batch(&xs),
+                            want,
+                            "trial {trial} b {b} x{shards} {mode:?}/{pool:?}"
+                        );
+                    }
+                }
+            }
+            // uneven column splits via explicit interior cuts
+            let n = g.num_outputs();
+            if n >= 3 {
+                for cuts in [vec![1], vec![1, n - 1], vec![n / 2]] {
+                    let sp = ShardPlan::with_cuts(&plan, &cuts).expect("valid cuts");
+                    let sharded = ShardedExecutor::from_shard_plan(sp, ExecConfig::serial());
+                    assert_eq!(
+                        sharded.execute_batch(&xs),
+                        want,
+                        "trial {trial} b {b} cuts {cuts:?}"
+                    );
+                }
             }
         }
     }

@@ -67,10 +67,7 @@ fn prox_artifact_matches_rust_prox() {
     let w = Matrix::randn(784, 300, 0.1, &mut rng);
     let thresh = 0.3f32;
     let outs = exe
-        .run(&[
-            HostTensor::F32(vec![784, 300], w.data().to_vec()),
-            HostTensor::scalar_f32(thresh),
-        ])
+        .run(&[HostTensor::F32(vec![784, 300], w.data().to_vec()), HostTensor::scalar_f32(thresh)])
         .expect("run");
     let got = outs[0].as_f32().unwrap();
     let want = prox_group_lasso_rows(&w, thresh);

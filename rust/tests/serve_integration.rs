@@ -28,10 +28,7 @@ fn dense_as_compressed(params: &MlpParams) -> CompressedMlp {
 fn vm_backend_serves_correct_logits() {
     let params = MlpParams::init(0);
     let model = Arc::new(dense_as_compressed(&params));
-    let server = Server::start(
-        Arc::new(CompressedMlpBackend { model }),
-        ServeConfig::default(),
-    );
+    let server = Server::start(Arc::new(CompressedMlpBackend { model }), ServeConfig::default());
     let mut rng = Rng::new(1);
     let x: Vec<f32> = rng.normal_vec(784, 1.0);
     let y = server.infer(x.clone()).unwrap();

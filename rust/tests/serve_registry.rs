@@ -35,7 +35,9 @@ fn ladder_graph(inputs: usize, nodes: usize, seed: u64) -> AdderGraph {
 /// The acceptance hammer: 4 models x 6 client threads. Every response
 /// from the shared multi-model server must be bit-identical to a
 /// dedicated single-model `Server` fed the same input, and to the
-/// oracle.
+/// oracle. The registry's engines are sharded (model `mN` runs on N+1
+/// output-range shards; the dedicated servers stay unsharded), so the
+/// hammer also pins sharded == unsharded under concurrent load.
 #[test]
 fn hammer_bit_identical_to_dedicated_single_model_servers() {
     const N_MODELS: usize = 4;
@@ -50,7 +52,8 @@ fn hammer_bit_identical_to_dedicated_single_model_servers() {
     let serve_cfg = ServeConfig { max_batch: 8, batch_timeout_us: 500, ..Default::default() };
     let registry = Arc::new(ModelRegistry::new());
     for (i, g) in graphs.iter().enumerate() {
-        registry.register_graph(&format!("m{i}"), g, ExecConfig::default(), 8);
+        let cfg = ExecConfig { shards: i + 1, ..ExecConfig::default() };
+        registry.register_graph(&format!("m{i}"), g, cfg, 8);
     }
     let multi = Server::start_registry(Arc::clone(&registry), serve_cfg.clone());
     let dedicated: Vec<Server> = graphs
@@ -184,7 +187,10 @@ fn hot_add_remove_under_load_never_drops_accepted_requests() {
         "served == accepted: removal dropped a request"
     );
     assert_eq!(server.model_stats("late").requests, 30);
-    assert_eq!(server.metrics().counter("rejected"), victim_rejected.load(Ordering::Relaxed) as u64);
+    assert_eq!(
+        server.metrics().counter("rejected"),
+        victim_rejected.load(Ordering::Relaxed) as u64
+    );
     let _ = server.shutdown();
 }
 
