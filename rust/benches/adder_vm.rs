@@ -1,9 +1,9 @@
 //! ABL-VM bench: adder-graph execution throughput across the engine
 //! family — naive interpreter, scalar plan (the old `CompiledGraph`
-//! path), batch-major engine (1 thread), parallel engine and the sharded
-//! scatter/gather executor — plus ASAP schedule stats (the FPGA
-//! parallelism proxy) on MLP-shaped decompositions. Record the resulting
-//! table in EXPERIMENTS.md §Perf.
+//! path), per-op vs run-grouped float dispatch, the fixed-point integer
+//! engine, parallel engine and the sharded scatter/gather executor —
+//! plus ASAP schedule stats (the FPGA parallelism proxy) on MLP-shaped
+//! decompositions. Record the resulting table in EXPERIMENTS.md §Perf.
 //!
 //!     cargo bench --bench adder_vm
 //!
@@ -12,7 +12,7 @@
 #![allow(deprecated)]
 
 use lccnn::config::{ExecConfig, PoolMode};
-use lccnn::exec::{BatchEngine, Executor, ShardedExecutor};
+use lccnn::exec::{BatchEngine, ExecPlan, Executor, FixedEngine, ShardedExecutor};
 use lccnn::graph::{schedule, CompiledGraph};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::report::Table;
@@ -32,8 +32,8 @@ fn main() {
     let mut t = Table::new(
         &format!("adder-graph execution, us/sample (batch {batch} for the engine columns)"),
         &["matrix", "algo", "adds", "depth", "max width", "interp", "scalar plan",
-          "batch x1", "par scoped", "par pool", "pool speedup", "shard x2", "shard x4",
-          "dense"],
+          "per-op x1", "batch x1", "fixed x1", "par scoped", "par pool", "pool speedup",
+          "shard x2", "shard x4", "dense"],
     );
     for &(n, k) in &[(300usize, 30usize), (300, 60), (64, 9), (192, 3)] {
         let w = Matrix::randn(n, k, 0.5, &mut rng);
@@ -65,10 +65,29 @@ fn main() {
                 }
             });
 
+            // pre-specialization float dispatch: one coefficient load and
+            // inner loop per op — the baseline the run grouping replaces
+            let plan = ExecPlan::new(g);
+            let mut lanes = Vec::new();
+            let mut per_op_ys: Vec<Vec<f32>> = vec![Vec::new(); batch];
+            let per_op_us = per_sample_us(batch, warmup, iters, || {
+                plan.eval_lanes_per_op(std::hint::black_box(&xs), &mut lanes, &mut per_op_ys);
+                std::hint::black_box(&per_op_ys);
+            });
+
             let serial = BatchEngine::with_config(g, ExecConfig::serial());
             let mut ys = Vec::new();
             let batch_us = per_sample_us(batch, warmup, iters, || {
                 serial.execute_batch_into(std::hint::black_box(&xs), &mut ys);
+                std::hint::black_box(&ys);
+            });
+
+            // fixed-point shift-add datapath, same run-grouped dispatch:
+            // integer shifts/adds instead of float multiply-accumulate
+            let fixed = FixedEngine::with_config(g, ExecConfig::serial())
+                .expect("LCC graphs are power-of-two scaled and must lower");
+            let fixed_us = per_sample_us(batch, warmup, iters, || {
+                fixed.execute_batch_into(std::hint::black_box(&xs), &mut ys);
                 std::hint::black_box(&ys);
             });
 
@@ -125,7 +144,9 @@ fn main() {
                 s.max_width.to_string(),
                 format!("{interp_us:.2}"),
                 format!("{scalar_us:.2}"),
+                format!("{per_op_us:.2}"),
                 format!("{batch_us:.2}"),
+                format!("{fixed_us:.2}"),
                 format!("{scoped_us:.2}"),
                 format!("{pooled_us:.2}"),
                 format!("{:.2}x", scoped_us / pooled_us.max(1e-9)),
@@ -142,7 +163,9 @@ fn main() {
                     ("batch", batch.to_string()),
                     ("interp_us", format!("{interp_us:.4}")),
                     ("scalar_us", format!("{scalar_us:.4}")),
+                    ("per_op_us", format!("{per_op_us:.4}")),
                     ("batch_x1_us", format!("{batch_us:.4}")),
+                    ("fixed_x1_us", format!("{fixed_us:.4}")),
                     ("par_scoped_us", format!("{scoped_us:.4}")),
                     ("par_pool_us", format!("{pooled_us:.4}")),
                     ("shard2_us", format!("{:.4}", shard_us[0])),
@@ -154,8 +177,11 @@ fn main() {
     }
     println!("{}", t.render());
     println!("interp = per-sample graph interpreter (oracle); scalar plan = seed");
-    println!("CompiledGraph path; batch x1 = exec::BatchEngine lane-major, one");
-    println!("thread; par scoped = chunks across per-call scoped threads; par");
+    println!("CompiledGraph path; per-op x1 = lane-major float without run");
+    println!("grouping (one coefficient dispatch per op); batch x1 = the same");
+    println!("lanes with run-grouped dispatch (exec::BatchEngine, one thread);");
+    println!("fixed x1 = exec::FixedEngine integer shift-add lanes, run-grouped,");
+    println!("one thread; par scoped = chunks across per-call scoped threads; par");
     println!("pool = same chunks on the persistent worker pool (pool speedup =");
     println!("scoped/pool, the per-call spawn tax). shard xN = ShardedExecutor:");
     println!("the program split into N output-range sub-plans on serial inner");

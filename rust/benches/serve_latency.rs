@@ -1,6 +1,7 @@
 //! SRV bench: serving latency/throughput, compressed shift-add VM vs
 //! dense PJRT backend, across offered concurrency — including
-//! sharded-vs-unsharded rows for the recipe-served `PipelineExecutor`.
+//! sharded-vs-unsharded and float-vs-fixed rows for the recipe-served
+//! `PipelineExecutor`.
 //!
 //!     cargo bench --bench serve_latency
 //!
@@ -9,7 +10,7 @@
 
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
 use lccnn::compress::{Pipeline, Recipe};
-use lccnn::config::{ExecConfig, PoolMode, ServeConfig, ShardMode, ShardSpec};
+use lccnn::config::{ExecConfig, ExecMode, PoolMode, ServeConfig, ShardMode, ShardSpec};
 use lccnn::exec::Executor;
 use lccnn::lcc::LccConfig;
 use lccnn::nn::compressed::{CompressedMlp, Layer1};
@@ -124,6 +125,24 @@ fn main() {
             run(Arc::new(ExecutorBackend::new(Arc::clone(&exec), 64)), &name, burst, n, &mut t);
         }
     }
+    // the same recipe artifact served on the fixed-point shift-add
+    // engine: float-vs-fixed latency on the identical lowered program
+    {
+        let exec = ExecConfig { exec_mode: ExecMode::Fixed, ..serving_exec(PoolMode::Persistent) };
+        let recipe = Recipe { exec, ..Recipe::default() };
+        let w1 = synthetic_reg_weights(0, 120);
+        let px = Pipeline::from_recipe(&recipe)
+            .expect("valid recipe")
+            .run(&w1)
+            .expect("pipeline runs")
+            .into_executor();
+        assert!(px.is_fixed(), "fixed lowering fell back to float");
+        let exec: Arc<dyn Executor> = Arc::new(px);
+        for burst in [1usize, 8, 32] {
+            let backend = Arc::new(ExecutorBackend::new(Arc::clone(&exec), 64));
+            run(backend, "pipeline-exec/fixed", burst, n, &mut t);
+        }
+    }
     // the pre-exec-engine behaviour (forward_one per sample) for comparison
     for burst in [1usize, 8, 32] {
         let model = Arc::new(compressed_model(&params, ExecConfig::default()));
@@ -161,5 +180,8 @@ fn main() {
     println!("split across 2/4 output-range shards (sharded scatter/gather on");
     println!("the worker pool) — the sharded-vs-unsharded serving comparison");
     println!("for EXPERIMENTS.md §Sharding; outputs are bit-identical.");
+    println!("pipeline-exec/fixed serves the same artifact on the integer");
+    println!("shift-add datapath (exec_mode = fixed) — the float-vs-fixed");
+    println!("latency comparison for EXPERIMENTS.md §Perf.");
     println!("worker pool after run: {:?}", lccnn::exec::global_pool().stats());
 }

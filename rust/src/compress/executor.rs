@@ -9,17 +9,20 @@
 //! recipe's result is servable through `serve::ModelRegistry`.
 
 use super::state::ModelState;
-use crate::config::{ExecConfig, ShardSpec};
-use crate::exec::{BatchEngine, Executor, ShardedExecutor};
+use crate::config::{ExecConfig, ExecMode, ShardSpec};
+use crate::exec::{BatchEngine, Executor, FixedEngine, FixedPlan, ShardedExecutor};
 use crate::share::SharedLayer;
 use crate::tensor::Matrix;
 
-/// The engine serving an LCC artifact: the single unsharded engine, or
-/// the output-range-sharded wrapper over the same program when the
-/// recipe asks for it (`[compress.shard]` / `exec.shards`) — in which
-/// case the unsharded engine is not kept resident at all.
+/// The engine serving an LCC artifact: the single unsharded engine
+/// (float, or the fixed-point datapath when the recipe's
+/// `exec_mode = fixed`), or the output-range-sharded wrapper over the
+/// same program when the recipe asks for it (`[compress.shard]` /
+/// `exec.shards`) — in which case the unsharded engine is not kept
+/// resident at all.
 enum LccEngine {
     Single(BatchEngine),
+    Fixed(FixedEngine),
     Sharded(ShardedExecutor),
 }
 
@@ -27,6 +30,7 @@ impl LccEngine {
     fn as_executor(&self) -> &dyn Executor {
         match self {
             LccEngine::Single(e) => e,
+            LccEngine::Fixed(e) => e,
             LccEngine::Sharded(sh) => sh,
         }
     }
@@ -46,6 +50,10 @@ enum Repr {
         /// the identity, so inputs feed the engine directly (bit-
         /// identical to serving the bare graph)
         identity_sharing: bool,
+        /// analytic |served − exact| bound of the engine's datapath:
+        /// 0 for the float engines (bit-identical to the oracle), the
+        /// lowered plan's max output bound in fixed mode
+        err_bound: f64,
         engine: LccEngine,
     },
 }
@@ -69,24 +77,49 @@ impl PipelineExecutor {
         let kept = (kept.len() != input_dim).then_some(kept);
         let repr = if let Some(slcc) = lcc {
             let additions = slcc.additions();
+            let cfg = *slcc.engine().config();
             let sharded = shard.filter(|s| s.shards > 1).map(|s| {
-                let cfg = ExecConfig {
-                    shards: s.shards,
-                    shard_mode: s.mode,
-                    ..*slcc.engine().config()
-                };
-                // reuse the already-lowered plan: no re-lowering of the graph
+                let cfg = ExecConfig { shards: s.shards, shard_mode: s.mode, ..cfg };
+                // reuse the already-lowered plan: no re-lowering of the
+                // graph (shard engines pick float/fixed per exec_mode)
                 ShardedExecutor::from_plan(slcc.engine().plan(), cfg)
             });
+            // unsharded fixed mode: re-lower the already-lowered plan
+            // onto the integer datapath (a non-shift-add plan falls
+            // back to the float engine with a warning — serving must
+            // not fail on a representable-but-unlowerable artifact)
+            let fixed = if sharded.is_none() && cfg.exec_mode == ExecMode::Fixed {
+                match FixedEngine::from_plan(slcc.engine().plan(), cfg) {
+                    Ok(e) => Some(e),
+                    Err(e) => {
+                        log::warn!("fixed lowering failed, serving float engine instead: {e}");
+                        None
+                    }
+                }
+            } else {
+                None
+            };
+            // the shard sub-plans evaluate the identical expressions, so
+            // the unsharded plan's bound covers the sharded engine too
+            let err_bound = match &fixed {
+                Some(fx) => fx.max_error_bound(),
+                None if cfg.exec_mode == ExecMode::Fixed => {
+                    FixedPlan::lower(slcc.engine().plan(), &cfg)
+                        .map(|p| p.max_error_bound())
+                        .unwrap_or(0.0)
+                }
+                None => 0.0,
+            };
             // once the shard engines exist, the unsharded engine (and
             // the decomposition) are dropped with the rest of the SharedLcc
             let (layer, _decomposition, single) = slcc.into_parts();
             let identity_sharing = layer.labels.iter().enumerate().all(|(i, &l)| i == l);
-            let engine = match sharded {
-                Some(sh) => LccEngine::Sharded(sh),
-                None => LccEngine::Single(single),
+            let engine = match (sharded, fixed) {
+                (Some(sh), _) => LccEngine::Sharded(sh),
+                (None, Some(fx)) => LccEngine::Fixed(fx),
+                (None, None) => LccEngine::Single(single),
             };
-            Repr::Lcc { layer, additions, identity_sharing, engine }
+            Repr::Lcc { layer, additions, identity_sharing, err_bound, engine }
         } else if let Some(s) = shared {
             Repr::Shared(s)
         } else {
@@ -109,6 +142,23 @@ impl PipelineExecutor {
             Repr::Lcc { engine: LccEngine::Sharded(sh), .. } => sh.num_shards(),
             _ => 1,
         }
+    }
+
+    /// Analytic |served − exact| bound of the engine's datapath per
+    /// output: 0.0 when serving float engines (bit-identical to the
+    /// oracle), the lowered fixed plan's worst output bound when the
+    /// recipe selected `exec_mode = fixed`. Differential verification
+    /// (the `compress` CLI's oracle check) keys its tolerance off this.
+    pub fn max_error_bound(&self) -> f64 {
+        match &self.repr {
+            Repr::Lcc { err_bound, .. } => *err_bound,
+            _ => 0.0,
+        }
+    }
+
+    /// True when the LCC program is served by the fixed-point datapath.
+    pub fn is_fixed(&self) -> bool {
+        matches!(&self.repr, Repr::Lcc { engine: LccEngine::Fixed(_), .. })
     }
 }
 
@@ -267,6 +317,47 @@ mod tests {
             assert_eq!(sharded.num_outputs(), w.rows());
             assert_eq!(sharded.execute_batch(&xs), want, "mode {mode:?}");
         }
+    }
+
+    #[test]
+    fn fixed_mode_recipe_serves_within_error_bound() {
+        use crate::config::{ShardMode, ShardSpec};
+        let w = demo_weights(16, 3, 4, 0);
+        let float_exec = Pipeline::from_recipe(&serial_recipe()).unwrap().run(&w).unwrap();
+        let fixed_recipe = Recipe {
+            exec: ExecConfig { exec_mode: ExecMode::Fixed, ..ExecConfig::serial() },
+            ..Recipe::default()
+        };
+        let model = Pipeline::from_recipe(&fixed_recipe).unwrap().run(&w).unwrap();
+        let exec = model.executor();
+        assert!(exec.is_fixed(), "fixed recipe must serve the fixed datapath");
+        let bound = exec.max_error_bound();
+        assert!(bound > 0.0, "fixed mode must report a nonzero bound");
+        assert_eq!(float_exec.executor().max_error_bound(), 0.0, "float serving is exact");
+
+        let mut rng = Rng::new(33);
+        let xs: Vec<Vec<f32>> = (0..11).map(|_| rng.normal_vec(w.cols(), 1.0)).collect();
+        let want = float_exec.executor().execute_batch(&xs);
+        let got = exec.execute_batch(&xs);
+        for (ws, gs) in want.iter().zip(&got) {
+            for (wv, gv) in ws.iter().zip(gs) {
+                let tol = bound + 1e-4 * (1.0 + wv.abs() as f64);
+                assert!(((wv - gv).abs() as f64) <= tol, "fixed {gv} vs float {wv} > {bound}");
+            }
+        }
+
+        // sharded fixed serving: same integers, bit-identical gather
+        let sharded = Pipeline::from_recipe(&Recipe {
+            shard: Some(ShardSpec { shards: 3, mode: ShardMode::Serial }),
+            ..fixed_recipe
+        })
+        .unwrap()
+        .run(&w)
+        .unwrap()
+        .into_executor();
+        assert!(sharded.num_shards() > 1);
+        assert_eq!(sharded.max_error_bound(), bound, "bound survives sharding");
+        assert_eq!(sharded.execute_batch(&xs), got, "sharded fixed ≡ unsharded fixed");
     }
 
     #[test]

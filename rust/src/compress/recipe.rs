@@ -451,7 +451,9 @@ impl Recipe {
             s,
             "\n[exec]\nthreads = {}\nchunk = {}\nparallel_min_batch = {}\n\
              level_parallel_min_ops = {}\npool_mode = \"{pool_mode}\"\n\
-             pool_spin_us = {}\npool_park_ms = {}\nshards = {}\nshard_mode = \"{}\"",
+             pool_spin_us = {}\npool_park_ms = {}\nshards = {}\nshard_mode = \"{}\"\n\
+             exec_mode = \"{}\"\nfixed_frac_bits = {}\nfixed_acc_bits = {}\n\
+             fixed_saturation = \"{}\"",
             e.threads,
             e.chunk,
             e.parallel_min_batch,
@@ -459,7 +461,11 @@ impl Recipe {
             e.pool_spin_us,
             e.pool_park_ms,
             e.shards,
-            e.shard_mode.as_str()
+            e.shard_mode.as_str(),
+            e.exec_mode.as_str(),
+            e.fixed_frac_bits,
+            e.fixed_acc.bits(),
+            e.fixed_sat.as_str()
         );
         s
     }
@@ -597,6 +603,26 @@ mod tests {
         };
         let back = Recipe::from_toml_str(&r.to_toml_string()).unwrap();
         assert_eq!(back, r, "\n{}", r.to_toml_string());
+    }
+
+    #[test]
+    fn toml_round_trip_fixed_exec_mode() {
+        use crate::config::{AccWidth, ExecMode, Saturation};
+        let r = Recipe {
+            exec: ExecConfig {
+                exec_mode: ExecMode::Fixed,
+                fixed_frac_bits: 14,
+                fixed_acc: AccWidth::W32,
+                fixed_sat: Saturation::Wrap,
+                ..ExecConfig::default()
+            },
+            ..Recipe::default()
+        };
+        let text = r.to_toml_string();
+        let back = Recipe::from_toml_str(&text).unwrap();
+        assert_eq!(back, r, "\n{text}");
+        assert_eq!(back.exec.exec_mode, ExecMode::Fixed);
+        assert_eq!(back.exec.fixed_acc, AccWidth::W32);
     }
 
     #[test]

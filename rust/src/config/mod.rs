@@ -7,6 +7,7 @@ mod types;
 
 pub use toml::{parse_toml, TomlValue};
 pub use types::{
-    serve_models_from_env, serve_models_from_toml, ExecConfig, LccAlgoConfig, MlpPipelineConfig,
-    ModelSpec, PoolMode, ResnetPipelineConfig, ServeConfig, ShardMode, ShardSpec,
+    serve_models_from_env, serve_models_from_toml, AccWidth, ExecConfig, ExecMode, LccAlgoConfig,
+    MlpPipelineConfig, ModelSpec, PoolMode, ResnetPipelineConfig, Saturation, ServeConfig,
+    ShardMode, ShardSpec,
 };

@@ -391,6 +391,96 @@ impl PoolMode {
     }
 }
 
+/// Arithmetic mode of the execution engine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// f32 lane kernels (`exec::BatchEngine`): coefficients applied as
+    /// float multiplies; bit-identical to the `NaiveExecutor` oracle
+    #[default]
+    Float,
+    /// integer lane kernels (`exec::FixedEngine`): inputs quantized to
+    /// fixed-point mantissas, every ±2^k coefficient applied as an
+    /// arithmetic shift — the hardware-faithful adder datapath
+    Fixed,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "float" | "f32" => Some(ExecMode::Float),
+            "fixed" | "int" | "integer" => Some(ExecMode::Fixed),
+            _ => None,
+        }
+    }
+
+    /// The TOML/env spelling of this mode.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Float => "float",
+            ExecMode::Fixed => "fixed",
+        }
+    }
+}
+
+/// Accumulator width of the fixed-point datapath.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AccWidth {
+    /// 32-bit accumulators: the narrow-datapath model (FPGA DSP-ish);
+    /// overflow is governed by the saturation policy
+    W32,
+    /// 64-bit accumulators: overflow is practically unreachable for
+    /// sane formats and graph depths
+    #[default]
+    W64,
+}
+
+impl AccWidth {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "32" | "i32" => Some(AccWidth::W32),
+            "64" | "i64" => Some(AccWidth::W64),
+            _ => None,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            AccWidth::W32 => 32,
+            AccWidth::W64 => 64,
+        }
+    }
+}
+
+/// What the fixed-point datapath does on accumulator overflow.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Saturation {
+    /// clamp to the accumulator range (the usual DSP behaviour; keeps
+    /// the analytic error bound meaningful up to the clamp point)
+    #[default]
+    Saturate,
+    /// two's-complement wraparound (the cheapest hardware; a faithful
+    /// model of an unguarded adder chain)
+    Wrap,
+}
+
+impl Saturation {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "saturate" | "sat" => Some(Saturation::Saturate),
+            "wrap" => Some(Saturation::Wrap),
+            _ => None,
+        }
+    }
+
+    /// The TOML/env spelling of this policy.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Saturation::Saturate => "saturate",
+            Saturation::Wrap => "wrap",
+        }
+    }
+}
+
 /// Tuning for the adder-graph execution engine (`crate::exec`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ExecConfig {
@@ -421,6 +511,16 @@ pub struct ExecConfig {
     /// how the shard engines are driven (serial for deterministic
     /// debugging, parallel for throughput)
     pub shard_mode: ShardMode,
+    /// arithmetic mode: float lane kernels (default) or the
+    /// fixed-point shift-add datapath (`exec::FixedEngine`)
+    pub exec_mode: ExecMode,
+    /// fractional bits of the fixed-point activation grid (value =
+    /// mantissa · 2^-frac); only read in fixed mode
+    pub fixed_frac_bits: u32,
+    /// accumulator width of the fixed datapath; only read in fixed mode
+    pub fixed_acc: AccWidth,
+    /// overflow policy of the fixed datapath; only read in fixed mode
+    pub fixed_sat: Saturation,
 }
 
 impl Default for ExecConfig {
@@ -435,6 +535,10 @@ impl Default for ExecConfig {
             pool_park_ms: 100,
             shards: 1,
             shard_mode: ShardMode::Parallel,
+            exec_mode: ExecMode::Float,
+            fixed_frac_bits: 12,
+            fixed_acc: AccWidth::W64,
+            fixed_sat: Saturation::Saturate,
         }
     }
 }
@@ -450,7 +554,10 @@ impl ExecConfig {
     /// `LCCNN_EXEC_PARALLEL_MIN_BATCH`, `LCCNN_EXEC_LEVEL_MIN_OPS`,
     /// `LCCNN_EXEC_POOL_MODE` (`scoped`|`persistent`),
     /// `LCCNN_EXEC_POOL_SPIN_US`, `LCCNN_EXEC_POOL_PARK_MS`,
-    /// `LCCNN_EXEC_SHARDS`, `LCCNN_EXEC_SHARD_MODE` (`serial`|`parallel`).
+    /// `LCCNN_EXEC_SHARDS`, `LCCNN_EXEC_SHARD_MODE` (`serial`|`parallel`),
+    /// `LCCNN_EXEC_MODE` (`float`|`fixed`),
+    /// `LCCNN_EXEC_FIXED_FRAC_BITS`, `LCCNN_EXEC_FIXED_ACC_BITS`
+    /// (`32`|`64`), `LCCNN_EXEC_FIXED_SATURATION` (`saturate`|`wrap`).
     pub fn from_env() -> Self {
         Self::from_env_over(ExecConfig::default())
     }
@@ -492,6 +599,27 @@ impl ExecConfig {
             std::env::var("LCCNN_EXEC_SHARD_MODE").ok().as_deref().and_then(ShardMode::parse)
         {
             c.shard_mode = m;
+        }
+        if let Some(m) = std::env::var("LCCNN_EXEC_MODE").ok().as_deref().and_then(ExecMode::parse)
+        {
+            c.exec_mode = m;
+        }
+        if let Some(v) = env_parse::<u32>("LCCNN_EXEC_FIXED_FRAC_BITS") {
+            c.fixed_frac_bits = v.min(30);
+        }
+        if let Some(a) = std::env::var("LCCNN_EXEC_FIXED_ACC_BITS")
+            .ok()
+            .as_deref()
+            .and_then(AccWidth::parse)
+        {
+            c.fixed_acc = a;
+        }
+        if let Some(s) = std::env::var("LCCNN_EXEC_FIXED_SATURATION")
+            .ok()
+            .as_deref()
+            .and_then(Saturation::parse)
+        {
+            c.fixed_sat = s;
         }
         c
     }
@@ -537,6 +665,26 @@ impl ExecConfig {
             get(t, section, "shard_mode").and_then(TomlValue::as_str).and_then(ShardMode::parse)
         {
             c.shard_mode = v;
+        }
+        if let Some(v) =
+            get(t, section, "exec_mode").and_then(TomlValue::as_str).and_then(ExecMode::parse)
+        {
+            c.exec_mode = v;
+        }
+        if let Some(v) = read("fixed_frac_bits") {
+            c.fixed_frac_bits = (v as u32).min(30);
+        }
+        if let Some(v) = get(t, section, "fixed_acc_bits")
+            .and_then(TomlValue::as_int)
+            .and_then(|v| AccWidth::parse(&v.to_string()))
+        {
+            c.fixed_acc = v;
+        }
+        if let Some(v) = get(t, section, "fixed_saturation")
+            .and_then(TomlValue::as_str)
+            .and_then(Saturation::parse)
+        {
+            c.fixed_sat = v;
         }
         c
     }
@@ -704,6 +852,44 @@ mod tests {
         // shards = 0 is clamped to 1 (unsharded), not wrapped
         std::fs::write(&p, "[exec]\nshards = 0\n").unwrap();
         assert_eq!(ExecConfig::from_toml(&p).unwrap().shards, 1);
+    }
+
+    #[test]
+    fn exec_mode_parse_and_toml_overrides() {
+        assert_eq!(ExecMode::parse("float"), Some(ExecMode::Float));
+        assert_eq!(ExecMode::parse("FIXED"), Some(ExecMode::Fixed));
+        assert_eq!(ExecMode::parse("int"), Some(ExecMode::Fixed));
+        assert_eq!(ExecMode::parse("nope"), None);
+        assert_eq!(ExecMode::Fixed.as_str(), "fixed");
+        assert_eq!(AccWidth::parse("32"), Some(AccWidth::W32));
+        assert_eq!(AccWidth::parse("i64"), Some(AccWidth::W64));
+        assert_eq!(AccWidth::parse("16"), None);
+        assert_eq!(AccWidth::W32.bits(), 32);
+        assert_eq!(Saturation::parse("wrap"), Some(Saturation::Wrap));
+        assert_eq!(Saturation::parse("SAT"), Some(Saturation::Saturate));
+        assert_eq!(Saturation::parse("nope"), None);
+        assert_eq!(Saturation::Wrap.as_str(), "wrap");
+        let d = ExecConfig::default();
+        assert_eq!(d.exec_mode, ExecMode::Float, "float engine by default");
+        assert_eq!(d.fixed_acc, AccWidth::W64);
+        assert_eq!(d.fixed_sat, Saturation::Saturate);
+        let dir = std::env::temp_dir().join(format!("lccnn-mode-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.toml");
+        std::fs::write(
+            &p,
+            "[exec]\nexec_mode = \"fixed\"\nfixed_frac_bits = 10\n\
+             fixed_acc_bits = 32\nfixed_saturation = \"wrap\"\n",
+        )
+        .unwrap();
+        let c = ExecConfig::from_toml(&p).unwrap();
+        assert_eq!(c.exec_mode, ExecMode::Fixed);
+        assert_eq!(c.fixed_frac_bits, 10);
+        assert_eq!(c.fixed_acc, AccWidth::W32);
+        assert_eq!(c.fixed_sat, Saturation::Wrap);
+        // absurd frac widths are clamped, not taken literally
+        std::fs::write(&p, "[exec]\nfixed_frac_bits = 99\n").unwrap();
+        assert_eq!(ExecConfig::from_toml(&p).unwrap().fixed_frac_bits, 30);
     }
 
     #[test]

@@ -1,0 +1,824 @@
+//! Fixed-point CSD shift-add execution — the hardware-faithful mode.
+//!
+//! The float engines simulate an adder datapath with multiplies: every
+//! `±2^k` coefficient becomes an `exp2` float factor. This module lowers
+//! an [`ExecPlan`] the rest of the way to what the paper's hardware
+//! actually does: activations quantized to integer mantissas on a
+//! `2^-frac_bits` grid, every coefficient recovered as a
+//! `(shift, negate)` pair from its CSD digit form, and each adder node
+//! evaluated as two arithmetic shifts plus one integer add — no
+//! multiplier anywhere in the datapath.
+//!
+//! Semantics are deliberately faithful rather than convenient:
+//!
+//! - right shifts **truncate** (arithmetic shift, round toward −∞), the
+//!   way a wired shifter does — not round-to-nearest;
+//! - the accumulator has a configured width (`AccWidth`) and overflow
+//!   policy (`Saturation`): saturate like a guarded DSP slice, or wrap
+//!   like a bare two's-complement adder;
+//! - results are **deterministic**: integer lanes are independent, so
+//!   outputs are bit-stable across batch sizes, chunk widths, thread
+//!   counts and sharding — unlike float, where reassociation would show.
+//!
+//! The price is quantization error. Lowering computes an analytic
+//! per-output bound (`FixedPlan::error_bounds`): inputs contribute half
+//! a grid step (round-to-nearest), every truncating right shift adds at
+//! most one step, and each op scales its operands' bounds by `2^shift`.
+//! The bound assumes the accumulator never saturates;
+//! [`FixedPlan::max_mantissa_bound`] gives the matching worst-case
+//! magnitude check.
+
+use super::plan::{ExecPlan, OutOp};
+use super::workers::{self, WorkerPool};
+use super::Executor;
+use crate::config::{AccWidth, ExecConfig, PoolMode, Saturation};
+use crate::graph::AdderGraph;
+use crate::quant::csd_digits;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// Recover the `(shift, negate)` pair of a `±2^k` coefficient from its
+/// CSD digit form: scale to an integer mantissa and require exactly one
+/// nonzero CSD digit. Exact for `|k| <= 31` (every f32 `±2^k` scales to
+/// an exactly-representable integer); anything else — zero, non-finite,
+/// multi-digit (not a power of two), or out-of-range shifts — returns
+/// `None`, marking the plan as not purely shift-add.
+pub fn po2_shift_negate(c: f32) -> Option<(i32, bool)> {
+    const SCALE: i32 = 31;
+    if !c.is_finite() {
+        return None;
+    }
+    let scaled = (c as f64) * (SCALE as f64).exp2();
+    if scaled != scaled.trunc() || scaled.abs() >= (63f64).exp2() {
+        return None;
+    }
+    match csd_digits(scaled as i64).as_slice() {
+        [d] => Some((d.shift - SCALE, d.negative)),
+        _ => None,
+    }
+}
+
+/// Output resolution over the integer value slots.
+#[derive(Clone, Copy, Debug)]
+enum FixedOut {
+    Zero,
+    Scaled { idx: u32, shift: i32, negate: bool },
+}
+
+/// Integer lowering of an [`ExecPlan`]: the same slot layout and
+/// homogeneous runs, with every coefficient replaced by its
+/// `(shift, negate)` pair and the format/datapath parameters baked in.
+#[derive(Clone, Debug)]
+pub struct FixedPlan {
+    num_inputs: usize,
+    ia: Vec<u32>,
+    ib: Vec<u32>,
+    sa: Vec<i32>,
+    na: Vec<bool>,
+    sb: Vec<i32>,
+    nb: Vec<bool>,
+    /// run boundaries, copied from the source plan (coefficient pairs
+    /// and shift/negate pairs are in bijection, so the runs coincide)
+    runs: Vec<u32>,
+    outs: Vec<FixedOut>,
+    frac_bits: u32,
+    acc: AccWidth,
+    sat: Saturation,
+    /// analytic per-output `|fixed − exact|` bound (valid while the
+    /// accumulator does not saturate)
+    err: Vec<f64>,
+}
+
+impl FixedPlan {
+    /// Lower a float plan onto the fixed datapath described by `cfg`
+    /// (`fixed_frac_bits`, `fixed_acc`, `fixed_sat`). Fails if any
+    /// coefficient is not `±2^k` with `|k| <= 31` — impossible for
+    /// plans lowered from an [`AdderGraph`] with sane shifts, but the
+    /// check is what makes the "pure shift-add" claim load-bearing.
+    pub fn lower(plan: &ExecPlan, cfg: &ExecConfig) -> Result<Self> {
+        let (ia, ib) = plan.op_indices();
+        let (ca, cb) = plan.op_coeffs();
+        let n = ca.len();
+        let num_inputs = plan.num_inputs();
+        let frac_bits = cfg.fixed_frac_bits.min(30);
+        let step = (-(frac_bits as f64)).exp2();
+
+        let lower_coeff = |c: f32, what: &str, j: usize| -> Result<(i32, bool)> {
+            match po2_shift_negate(c) {
+                Some(p) => Ok(p),
+                None => bail!(
+                    "{what} {j}: coefficient {c} is not ±2^k with |k| <= 31; \
+                     the fixed datapath executes pure shift-add plans only"
+                ),
+            }
+        };
+        // per-slot error bound recursion, consumed below for the outputs
+        let mut eps = vec![0.5 * step; num_inputs];
+        eps.reserve(n);
+        // scaling by 2^s multiplies the incoming bound; a truncating
+        // right shift adds at most one grid step on top
+        let scale_eps = |e: f64, s: i32| -> f64 {
+            let scaled = e * (s as f64).exp2();
+            if s < 0 { scaled + step } else { scaled }
+        };
+
+        let mut sa = Vec::with_capacity(n);
+        let mut na = Vec::with_capacity(n);
+        let mut sb = Vec::with_capacity(n);
+        let mut nb = Vec::with_capacity(n);
+        for j in 0..n {
+            let (s_a, n_a) = lower_coeff(ca[j], "op", j)?;
+            let (s_b, n_b) = lower_coeff(cb[j], "op", j)?;
+            sa.push(s_a);
+            na.push(n_a);
+            sb.push(s_b);
+            nb.push(n_b);
+            let e = scale_eps(eps[ia[j] as usize], s_a) + scale_eps(eps[ib[j] as usize], s_b);
+            eps.push(e);
+        }
+
+        let mut outs = Vec::with_capacity(plan.num_outputs());
+        let mut err = Vec::with_capacity(plan.num_outputs());
+        for (k, o) in plan.out_ops().iter().enumerate() {
+            match *o {
+                OutOp::Zero => {
+                    outs.push(FixedOut::Zero);
+                    err.push(0.0);
+                }
+                OutOp::Scaled { idx, c } => {
+                    let (s, neg) = lower_coeff(c, "output", k)?;
+                    outs.push(FixedOut::Scaled { idx, shift: s, negate: neg });
+                    err.push(scale_eps(eps[idx as usize], s));
+                }
+            }
+        }
+
+        Ok(FixedPlan {
+            num_inputs,
+            ia: ia.to_vec(),
+            ib: ib.to_vec(),
+            sa,
+            na,
+            sb,
+            nb,
+            runs: plan.run_bounds().to_vec(),
+            outs,
+            frac_bits,
+            acc: cfg.fixed_acc,
+            sat: cfg.fixed_sat,
+            err,
+        })
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outs.len()
+    }
+
+    /// Op count — unchanged by the lowering.
+    pub fn additions(&self) -> usize {
+        self.ia.len()
+    }
+
+    pub fn frac_bits(&self) -> u32 {
+        self.frac_bits
+    }
+
+    /// The activation grid step `2^-frac_bits`.
+    pub fn step(&self) -> f64 {
+        (-(self.frac_bits as f64)).exp2()
+    }
+
+    /// Analytic `|fixed − exact|` bound per output, valid while no
+    /// accumulator saturation occurs (see
+    /// [`FixedPlan::max_mantissa_bound`]).
+    pub fn error_bounds(&self) -> &[f64] {
+        &self.err
+    }
+
+    /// The largest per-output error bound — the single-number tolerance
+    /// for differential verification against a float oracle.
+    pub fn max_error_bound(&self) -> f64 {
+        self.err.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Worst-case |mantissa| over every value slot and output, assuming
+    /// every input magnitude is at most `max_abs_input`. When this stays
+    /// below the accumulator range the datapath cannot saturate and
+    /// [`FixedPlan::error_bounds`] is exact arithmetic, not heuristics.
+    pub fn max_mantissa_bound(&self, max_abs_input: f64) -> f64 {
+        let scale = (self.frac_bits as f64).exp2();
+        let m0 = max_abs_input.abs() * scale + 0.5;
+        let mut mag = vec![m0; self.num_inputs];
+        mag.reserve(self.ia.len());
+        let shift_mag = |m: f64, s: i32| m * (s as f64).exp2();
+        let mut worst = m0;
+        for j in 0..self.ia.len() {
+            let m = shift_mag(mag[self.ia[j] as usize], self.sa[j])
+                + shift_mag(mag[self.ib[j] as usize], self.sb[j]);
+            worst = worst.max(m);
+            mag.push(m);
+        }
+        for o in &self.outs {
+            if let FixedOut::Scaled { idx, shift, .. } = *o {
+                worst = worst.max(shift_mag(mag[idx as usize], shift));
+            }
+        }
+        worst
+    }
+
+    /// Batch-major integer evaluation of one chunk: quantize inputs to
+    /// mantissa lanes, run the shift-add program once per homogeneous
+    /// run, dequantize the outputs. Lane results do not depend on
+    /// `width`, which is what makes every chunking/sharding of the fixed
+    /// engine bit-stable.
+    pub(crate) fn eval_lanes(&self, xs: &[Vec<f32>], buf: &mut Vec<i64>, ys: &mut [Vec<f32>]) {
+        match (self.acc, self.sat) {
+            (AccWidth::W64, Saturation::Saturate) => self.eval_lanes_p::<Sat64>(xs, buf, ys),
+            (AccWidth::W64, Saturation::Wrap) => self.eval_lanes_p::<Wrap64>(xs, buf, ys),
+            (AccWidth::W32, Saturation::Saturate) => self.eval_lanes_p::<Sat32>(xs, buf, ys),
+            (AccWidth::W32, Saturation::Wrap) => self.eval_lanes_p::<Wrap32>(xs, buf, ys),
+        }
+    }
+
+    fn eval_lanes_p<P: AccPolicy>(&self, xs: &[Vec<f32>], buf: &mut Vec<i64>, ys: &mut [Vec<f32>]) {
+        let width = xs.len();
+        debug_assert_eq!(ys.len(), width);
+        if width == 0 {
+            return;
+        }
+        let needed = (self.num_inputs + self.ia.len()) * width;
+        if buf.len() < needed {
+            buf.resize(needed, 0);
+        }
+        // round-to-nearest onto the activation grid (the only rounding
+        // in the datapath; everything after is shifts and adds)
+        let scale = (self.frac_bits as f64).exp2();
+        for (s, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.num_inputs, "input length mismatch");
+            for (i, &v) in x.iter().enumerate() {
+                buf[i * width + s] = P::clamp_in((v as f64 * scale).round() as i64);
+            }
+        }
+        for r in 1..self.runs.len() {
+            let (j0, j1) = (self.runs[r - 1] as usize, self.runs[r] as usize);
+            let dst_start = (self.num_inputs + j0) * width;
+            let (src, dst) = buf.split_at_mut(dst_start);
+            self.run_kernel::<P>(src, &mut dst[..(j1 - j0) * width], j0, width);
+        }
+        let step = self.step();
+        for (s, y) in ys.iter_mut().enumerate() {
+            y.clear();
+            y.reserve(self.outs.len());
+            for o in &self.outs {
+                y.push(match *o {
+                    FixedOut::Zero => 0.0,
+                    FixedOut::Scaled { idx, shift, negate } => {
+                        let mut m = P::shift(buf[idx as usize * width + s], shift);
+                        if negate {
+                            m = P::neg(m);
+                        }
+                        (m as f64 * step) as f32
+                    }
+                });
+            }
+        }
+    }
+
+    /// One homogeneous run: the `(shift, negate)` quartet is loaded once
+    /// and constant through the whole span, so the inner lane loop is
+    /// two shifts, up to two negations, and one add per sample.
+    fn run_kernel<P: AccPolicy>(&self, src: &[i64], dst: &mut [i64], j0: usize, width: usize) {
+        let (sa, na, sb, nb) = (self.sa[j0], self.na[j0], self.sb[j0], self.nb[j0]);
+        for (k, d) in dst.chunks_mut(width).enumerate() {
+            let j = j0 + k;
+            let a = &src[self.ia[j] as usize * width..][..width];
+            let b = &src[self.ib[j] as usize * width..][..width];
+            for s in 0..width {
+                // shift first, then negate: the truncation of a right
+                // shift lands before the sign flip, matching the error
+                // model (|truncation| <= one step either way)
+                let mut x = P::shift(a[s], sa);
+                if na {
+                    x = P::neg(x);
+                }
+                let mut y = P::shift(b[s], sb);
+                if nb {
+                    y = P::neg(y);
+                }
+                d[s] = P::add(x, y);
+            }
+        }
+    }
+}
+
+/// The accumulator datapath: how mantissas scale, negate, and add at a
+/// given width/overflow policy. Monomorphized per variant so the inner
+/// loops carry no runtime policy branches.
+trait AccPolicy: Copy + Send + Sync + 'static {
+    /// Apply `±2^s` as a shift: left per the overflow policy, right
+    /// always a truncating arithmetic shift.
+    fn shift(m: i64, s: i32) -> i64;
+    fn neg(m: i64) -> i64;
+    fn add(a: i64, b: i64) -> i64;
+    /// Bring a freshly quantized input into the accumulator range.
+    fn clamp_in(m: i64) -> i64;
+}
+
+/// Saturating left shift against `[lo, hi]`; never overflows because the
+/// limit comparison happens pre-shift.
+#[inline]
+fn sat_shl(m: i64, s: u32, lo: i64, hi: i64) -> i64 {
+    if m == 0 {
+        0
+    } else if m > (hi >> s) {
+        hi
+    } else if m < (lo >> s) {
+        lo
+    } else {
+        m << s
+    }
+}
+
+const MIN32: i64 = i32::MIN as i64;
+const MAX32: i64 = i32::MAX as i64;
+
+#[derive(Clone, Copy)]
+struct Sat64;
+impl AccPolicy for Sat64 {
+    #[inline]
+    fn shift(m: i64, s: i32) -> i64 {
+        if s >= 0 { sat_shl(m, s as u32, i64::MIN, i64::MAX) } else { m >> (-s) }
+    }
+    #[inline]
+    fn neg(m: i64) -> i64 {
+        m.saturating_neg()
+    }
+    #[inline]
+    fn add(a: i64, b: i64) -> i64 {
+        a.saturating_add(b)
+    }
+    #[inline]
+    fn clamp_in(m: i64) -> i64 {
+        m
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Wrap64;
+impl AccPolicy for Wrap64 {
+    #[inline]
+    fn shift(m: i64, s: i32) -> i64 {
+        if s >= 0 { m.wrapping_shl(s as u32) } else { m >> (-s) }
+    }
+    #[inline]
+    fn neg(m: i64) -> i64 {
+        m.wrapping_neg()
+    }
+    #[inline]
+    fn add(a: i64, b: i64) -> i64 {
+        a.wrapping_add(b)
+    }
+    #[inline]
+    fn clamp_in(m: i64) -> i64 {
+        m
+    }
+}
+
+/// 32-bit lanes carried in i64 storage: every result is brought back
+/// into the i32 range, so intermediate sums (range at most 2^33) never
+/// overflow the carrier.
+#[derive(Clone, Copy)]
+struct Sat32;
+impl AccPolicy for Sat32 {
+    #[inline]
+    fn shift(m: i64, s: i32) -> i64 {
+        if s >= 0 { sat_shl(m, s as u32, MIN32, MAX32) } else { m >> (-s) }
+    }
+    #[inline]
+    fn neg(m: i64) -> i64 {
+        (-m).clamp(MIN32, MAX32)
+    }
+    #[inline]
+    fn add(a: i64, b: i64) -> i64 {
+        (a + b).clamp(MIN32, MAX32)
+    }
+    #[inline]
+    fn clamp_in(m: i64) -> i64 {
+        m.clamp(MIN32, MAX32)
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Wrap32;
+impl AccPolicy for Wrap32 {
+    #[inline]
+    fn shift(m: i64, s: i32) -> i64 {
+        if s >= 0 { ((m as i32).wrapping_shl(s as u32)) as i64 } else { m >> (-s) }
+    }
+    #[inline]
+    fn neg(m: i64) -> i64 {
+        ((m as i32).wrapping_neg()) as i64
+    }
+    #[inline]
+    fn add(a: i64, b: i64) -> i64 {
+        ((a as i32).wrapping_add(b as i32)) as i64
+    }
+    #[inline]
+    fn clamp_in(m: i64) -> i64 {
+        (m as i32) as i64
+    }
+}
+
+/// Upper bound on cached lane buffers — mirrors `exec::BufferPool`.
+const MAX_CACHED: usize = 1024;
+
+/// Thread-safe free list of i64 lane buffers (the integer twin of
+/// [`super::BufferPool`]; contents are unspecified between uses).
+#[derive(Debug, Default)]
+struct LanePool {
+    free: Mutex<Vec<Vec<i64>>>,
+}
+
+impl LanePool {
+    fn take(&self) -> Vec<i64> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, buf: Vec<i64>) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < MAX_CACHED {
+            free.push(buf);
+        }
+    }
+}
+
+/// The fixed-point twin of [`super::BatchEngine`]: chunked, pooled,
+/// optionally chunk-parallel execution of a [`FixedPlan`], exposed as an
+/// [`Executor`] so it drops into sharding, the registry, the pipeline
+/// executor and the serve CLI unchanged.
+///
+/// Chunk parallelism follows the same job-list dispatch as the float
+/// engine (persistent pool or scoped threads per `cfg.pool_mode`).
+/// Level parallelism is intentionally absent: the integer lanes are
+/// bit-stable under any chunking, so there is no observable scheduling
+/// freedom to exploit, and the wide-graph small-batch case is served by
+/// sharding.
+#[derive(Debug)]
+pub struct FixedEngine {
+    plan: FixedPlan,
+    cfg: ExecConfig,
+    pool: LanePool,
+    workers: Arc<WorkerPool>,
+}
+
+impl Clone for FixedEngine {
+    fn clone(&self) -> Self {
+        // buffer pool is a cache, not state; worker pool is shared
+        FixedEngine {
+            plan: self.plan.clone(),
+            cfg: self.cfg,
+            pool: LanePool::default(),
+            workers: Arc::clone(&self.workers),
+        }
+    }
+}
+
+impl FixedEngine {
+    /// Lower and wrap a graph (fails only on non-shift-add coefficients,
+    /// which an [`AdderGraph`] cannot produce for sane shift ranges).
+    pub fn with_config(g: &AdderGraph, cfg: ExecConfig) -> Result<Self> {
+        Self::from_plan(&ExecPlan::new(g), cfg)
+    }
+
+    pub fn from_plan(plan: &ExecPlan, cfg: ExecConfig) -> Result<Self> {
+        Self::from_plan_with_workers(plan, cfg, workers::global_pool())
+    }
+
+    pub fn from_plan_with_workers(
+        plan: &ExecPlan,
+        cfg: ExecConfig,
+        workers: Arc<WorkerPool>,
+    ) -> Result<Self> {
+        Ok(FixedEngine {
+            plan: FixedPlan::lower(plan, &cfg)?,
+            cfg,
+            pool: LanePool::default(),
+            workers,
+        })
+    }
+
+    pub fn fixed_plan(&self) -> &FixedPlan {
+        &self.plan
+    }
+
+    pub fn config(&self) -> &ExecConfig {
+        &self.cfg
+    }
+
+    /// Per-output error bound of the lowered datapath
+    /// ([`FixedPlan::error_bounds`]).
+    pub fn error_bounds(&self) -> &[f64] {
+        self.plan.error_bounds()
+    }
+
+    pub fn max_error_bound(&self) -> f64 {
+        self.plan.max_error_bound()
+    }
+}
+
+impl Executor for FixedEngine {
+    fn num_inputs(&self) -> usize {
+        self.plan.num_inputs()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.plan.num_outputs()
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed-engine"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        let b = xs.len();
+        ys.resize_with(b, Vec::new);
+        if b == 0 {
+            return;
+        }
+        let chunk = self.cfg.chunk.max(1);
+        let threads = workers::resolve_threads(self.cfg.threads);
+        let n_chunks = b.div_ceil(chunk);
+        if threads > 1 && n_chunks > 1 && b >= self.cfg.parallel_min_batch {
+            let jobs: Mutex<Vec<(&[Vec<f32>], &mut [Vec<f32>])>> =
+                Mutex::new(xs.chunks(chunk).zip(ys.chunks_mut(chunk)).collect());
+            let n_workers = threads.min(n_chunks);
+            let drain = || {
+                let mut buf = self.pool.take();
+                loop {
+                    let job = jobs.lock().unwrap().pop();
+                    match job {
+                        Some((xc, yc)) => self.plan.eval_lanes(xc, &mut buf, yc),
+                        None => break,
+                    }
+                }
+                self.pool.put(buf);
+            };
+            match self.cfg.pool_mode {
+                PoolMode::Persistent => {
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(n_workers);
+                    for _ in 0..n_workers {
+                        tasks.push(Box::new(&drain));
+                    }
+                    if let Err(e) = self.workers.run_scoped(tasks) {
+                        panic!("exec worker pool: {e}");
+                    }
+                }
+                PoolMode::Scoped => {
+                    std::thread::scope(|scope| {
+                        for _ in 0..n_workers {
+                            scope.spawn(&drain);
+                        }
+                    });
+                }
+            }
+        } else {
+            let mut buf = self.pool.take();
+            for (xc, yc) in xs.chunks(chunk).zip(ys.chunks_mut(chunk)) {
+                self.plan.eval_lanes(xc, &mut buf, yc);
+            }
+            self.pool.put(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::NaiveExecutor;
+    use crate::graph::{Operand, OutputSpec};
+    use crate::util::Rng;
+
+    #[test]
+    fn po2_recovery_golden() {
+        assert_eq!(po2_shift_negate(1.0), Some((0, false)));
+        assert_eq!(po2_shift_negate(-1.0), Some((0, true)));
+        assert_eq!(po2_shift_negate(8.0), Some((3, false)));
+        assert_eq!(po2_shift_negate(-0.25), Some((-2, true)));
+        assert_eq!(po2_shift_negate((31f32).exp2()), Some((31, false)));
+        assert_eq!(po2_shift_negate((-31f32).exp2()), Some((-31, false)));
+        assert_eq!(po2_shift_negate(0.0), None, "zero has no digit");
+        assert_eq!(po2_shift_negate(3.0), None, "two CSD digits");
+        assert_eq!(po2_shift_negate(0.75), None);
+        assert_eq!(po2_shift_negate(f32::INFINITY), None);
+        assert_eq!(po2_shift_negate(f32::NAN), None);
+        assert_eq!(po2_shift_negate((40f32).exp2()), None, "out of datapath range");
+    }
+
+    #[test]
+    fn po2_recovery_round_trips_operand_coeffs() {
+        for shift in -31..=31 {
+            for negative in [false, true] {
+                let op = Operand::input(0).scaled(shift, negative);
+                assert_eq!(po2_shift_negate(op.coeff()), Some((shift, negative)), "2^{shift}");
+            }
+        }
+    }
+
+    fn small_exact_graph() -> AdderGraph {
+        // nonnegative shifts and tiny magnitudes: exactly representable
+        // in both f32 arithmetic and the fixed grid
+        let mut g = AdderGraph::new(3);
+        let a = g.push_add(Operand::input(0).scaled(1, false), Operand::input(1));
+        let b = g.push_add(a, Operand::input(2).scaled(2, true));
+        let c = g.push_add(a.scaled(0, true), b.scaled(1, false));
+        g.set_outputs(vec![
+            OutputSpec::Ref(c),
+            OutputSpec::Zero,
+            OutputSpec::Ref(b.scaled(2, false)),
+        ]);
+        g
+    }
+
+    #[test]
+    fn bit_exact_on_exactly_representable_plans() {
+        let g = small_exact_graph();
+        let oracle = NaiveExecutor::new(g.clone());
+        let cfg = ExecConfig { threads: 1, ..ExecConfig::default() };
+        let engine = FixedEngine::with_config(&g, cfg).unwrap();
+        // inputs on the 2^-12 grid, small enough that the float oracle
+        // computes exact arithmetic too
+        let step = engine.fixed_plan().step() as f32;
+        let xs: Vec<Vec<f32>> = (0..9)
+            .map(|s| {
+                (0..3)
+                    .map(|i| ((s * 3 + i) as f32 - 13.0) * step * 128.0)
+                    .collect()
+            })
+            .collect();
+        let want = oracle.execute_batch(&xs);
+        let got = engine.execute_batch(&xs);
+        assert_eq!(got, want, "no rounding anywhere: results must be bit-exact");
+    }
+
+    fn random_graph(rng: &mut Rng) -> AdderGraph {
+        let inputs = 1 + rng.below(6);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..rng.below(40) {
+            let a = refs[rng.below(refs.len())].scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+            let b = refs[rng.below(refs.len())].scaled(rng.below(7) as i32 - 3, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..1 + rng.below(5))
+            .map(|_| {
+                if rng.f32() < 0.15 {
+                    OutputSpec::Zero
+                } else {
+                    let r = refs[rng.below(refs.len())];
+                    OutputSpec::Ref(r.scaled(rng.below(3) as i32 - 1, rng.f32() < 0.5))
+                }
+            })
+            .collect();
+        g.set_outputs(outs);
+        g
+    }
+
+    #[test]
+    fn error_bound_holds_against_float_oracle() {
+        let mut rng = Rng::new(0xF1C5ED);
+        let mut checked = 0usize;
+        for _ in 0..30 {
+            let g = random_graph(&mut rng);
+            let oracle = NaiveExecutor::new(g.clone());
+            let engine =
+                FixedEngine::with_config(&g, ExecConfig { threads: 1, ..ExecConfig::default() })
+                    .unwrap();
+            // skip the rare pathological draw whose worst-case mantissa
+            // could saturate (the bound's stated precondition)
+            if engine.fixed_plan().max_mantissa_bound(4.0) >= 0.25 * i64::MAX as f64 {
+                continue;
+            }
+            let xs: Vec<Vec<f32>> = (0..7)
+                .map(|_| (0..g.num_inputs()).map(|_| rng.f32() * 8.0 - 4.0).collect())
+                .collect();
+            let want = oracle.execute_batch(&xs);
+            let got = engine.execute_batch(&xs);
+            let bounds = engine.error_bounds();
+            for (ws, gs) in want.iter().zip(&got) {
+                for ((w, g), &e) in ws.iter().zip(gs).zip(bounds) {
+                    // slack covers the float oracle's own f32 rounding
+                    let tol = e + 1e-4 * (1.0 + w.abs() as f64);
+                    assert!(
+                        ((w - g).abs() as f64) <= tol,
+                        "fixed {g} vs float {w}: |diff| > bound {e}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 100, "sweep too small: {checked}");
+    }
+
+    #[test]
+    fn results_bit_stable_across_chunks_threads_and_batches() {
+        let mut rng = Rng::new(0xDE7);
+        let g = random_graph(&mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..33).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+        let base = FixedEngine::with_config(
+            &g,
+            ExecConfig { threads: 1, chunk: 64, ..ExecConfig::default() },
+        )
+        .unwrap();
+        let want = base.execute_batch(&xs);
+        for cfg in [
+            ExecConfig { threads: 1, chunk: 1, ..ExecConfig::default() },
+            ExecConfig { threads: 1, chunk: 5, ..ExecConfig::default() },
+            ExecConfig { threads: 4, chunk: 4, parallel_min_batch: 2, ..ExecConfig::default() },
+            ExecConfig {
+                threads: 4,
+                chunk: 4,
+                parallel_min_batch: 2,
+                pool_mode: PoolMode::Scoped,
+                ..ExecConfig::default()
+            },
+        ] {
+            let engine = FixedEngine::with_config(&g, cfg).unwrap();
+            assert_eq!(engine.execute_batch(&xs), want, "cfg {cfg:?}");
+            // single-sample slices agree with the batch rows: integer
+            // lanes are width-invariant
+            assert_eq!(engine.execute_one(&xs[0]), want[0]);
+        }
+    }
+
+    #[test]
+    fn saturation_policies_differ_and_saturate_is_clamped() {
+        // one op summing x << 20 twice: at frac 12 the mantissa is
+        // x · 2^33, overflowing a 32-bit accumulator for x beyond ~0.25
+        let mut g = AdderGraph::new(1);
+        let big = Operand::input(0).scaled(20, false);
+        let n = g.push_add(big, big);
+        g.set_outputs(vec![OutputSpec::Ref(n)]);
+        let base = ExecConfig { threads: 1, fixed_acc: AccWidth::W32, ..ExecConfig::default() };
+        let sat = FixedEngine::with_config(&g, base).unwrap();
+        let wrap = FixedEngine::with_config(
+            &g,
+            ExecConfig { fixed_sat: Saturation::Wrap, ..base },
+        )
+        .unwrap();
+        let x = vec![vec![3.0f32]];
+        let ys = sat.execute_batch(&x);
+        let yw = wrap.execute_batch(&x);
+        let ceiling = i32::MAX as f64 * sat.fixed_plan().step();
+        assert!((ys[0][0] as f64 - ceiling).abs() < 1.0, "saturate clamps to the acc ceiling");
+        assert!(ys[0][0] != yw[0][0], "wrap must differ once the accumulator overflows");
+        // within range the two policies agree exactly
+        let small = vec![vec![1e-4f32]];
+        assert_eq!(sat.execute_batch(&small), wrap.execute_batch(&small));
+    }
+
+    #[test]
+    fn error_bounds_scale_with_frac_bits() {
+        let mut rng = Rng::new(0xBB);
+        // redraw until some output carries a nonzero bound (an all-Zero
+        // output draw would make the ratio below 0/0)
+        let g = loop {
+            let g = random_graph(&mut rng);
+            let probe =
+                FixedEngine::with_config(&g, ExecConfig::default()).unwrap();
+            if probe.max_error_bound() > 0.0 {
+                break g;
+            }
+        };
+        let coarse = FixedEngine::with_config(
+            &g,
+            ExecConfig { fixed_frac_bits: 8, ..ExecConfig::default() },
+        )
+        .unwrap();
+        let fine = FixedEngine::with_config(
+            &g,
+            ExecConfig { fixed_frac_bits: 16, ..ExecConfig::default() },
+        )
+        .unwrap();
+        assert!(fine.max_error_bound() < coarse.max_error_bound());
+        // halving the step halves every term of the recursion exactly
+        let ratio = coarse.max_error_bound() / fine.max_error_bound();
+        assert!((ratio - 256.0).abs() < 1e-6, "bound must scale linearly with the step: {ratio}");
+    }
+
+    #[test]
+    fn empty_and_zero_shapes() {
+        let mut g = AdderGraph::new(2);
+        g.set_outputs(vec![OutputSpec::Zero, OutputSpec::Ref(Operand::input(1))]);
+        let engine = FixedEngine::with_config(&g, ExecConfig::serial()).unwrap();
+        assert_eq!(engine.execute_batch(&[]), Vec::<Vec<f32>>::new());
+        let y = engine.execute_batch(&[vec![4.0, 5.0]]);
+        assert_eq!(y, vec![vec![0.0, 5.0]]);
+        assert_eq!(engine.error_bounds()[0], 0.0, "zero outputs are exact");
+    }
+}

@@ -37,6 +37,20 @@
 //!   the column slices gathered back bit-identically to the unsharded
 //!   engine. [`engine_for_graph`] is the entry point that picks
 //!   sharded-vs-plain from the config.
+//! * [`FixedEngine`] is the hardware-faithful integer mode
+//!   (`exec_mode = fixed`): [`FixedPlan`] lowers an [`ExecPlan`] the
+//!   rest of the way to the paper's datapath — activations quantized to
+//!   integer mantissas, every `±2^k` coefficient recovered as a
+//!   `(shift, negate)` pair from its CSD digit form
+//!   ([`po2_shift_negate`]), and each node evaluated as two arithmetic
+//!   shifts plus one integer add. Accumulator width and overflow policy
+//!   are configurable; lowering computes an analytic per-output error
+//!   bound, and integer lanes make results bit-stable across chunking,
+//!   threading and sharding.
+//! * Plan specialization: `ExecPlan` sorts the ops of each ASAP level by
+//!   their `(shift, negate)` signature and records homogeneous *runs*,
+//!   so both engines dispatch a specialized kernel once per run over a
+//!   contiguous SoA slice instead of branching per op.
 //! * [`Executor`] is the extension point future backends implement
 //!   (sharded engines, GPU/accelerator lowerings, remote execution). The
 //!   serving layer's `ExecutorBackend` serves any `Arc<dyn Executor>`.
@@ -44,12 +58,16 @@
 //!   the reference oracle for equivalence tests
 //!   (`rust/tests/exec_equivalence.rs`).
 //!
-//! Numerics: the engine evaluates exactly the same `mul, mul, add`
+//! Numerics: the float engine evaluates exactly the same `mul, mul, add`
 //! expression per node as the interpreter, in topological order, so
 //! outputs are bit-identical to the oracle (no FMA contraction, no
-//! reassociation). Tuning lives in [`crate::config::ExecConfig`].
+//! reassociation; the run-specialized add/sub kernels are IEEE-identical
+//! rewrites). The fixed engine instead matches the float oracle within
+//! [`FixedPlan::error_bounds`]. Tuning lives in
+//! [`crate::config::ExecConfig`].
 
 mod engine;
+mod fixed;
 mod oracle;
 mod plan;
 mod pool;
@@ -57,6 +75,7 @@ mod sharded;
 mod workers;
 
 pub use engine::BatchEngine;
+pub use fixed::{po2_shift_negate, FixedEngine, FixedPlan};
 pub use oracle::NaiveExecutor;
 pub use plan::ExecPlan;
 pub use pool::BufferPool;

@@ -6,7 +6,7 @@ use crate::graph::{schedule, AdderGraph, NodeRef, OutputSpec, Schedule};
 
 /// Output resolution: zero row or a scaled read of a value slot.
 #[derive(Clone, Copy, Debug, PartialEq)]
-enum OutOp {
+pub(crate) enum OutOp {
     Zero,
     Scaled { idx: u32, c: f32 },
 }
@@ -14,11 +14,16 @@ enum OutOp {
 /// Executable lowering of an [`AdderGraph`].
 ///
 /// Value slots are numbered `0..num_inputs` for the graph inputs followed
-/// by one slot per op in **ASAP-level order** (stable within a level), so
-/// the ops of level *l* write the contiguous slot range
-/// `num_inputs + level_range(l)`. That contiguity is what lets the batch
-/// engine split a level's lanes across threads with safe disjoint
-/// borrows. Operand indices always point at strictly earlier slots.
+/// by one slot per op in **ASAP-level order**, so the ops of level *l*
+/// write the contiguous slot range `num_inputs + level_range(l)`. That
+/// contiguity is what lets the batch engine split a level's lanes across
+/// threads with safe disjoint borrows. Within a level, ops are further
+/// sorted by coefficient signature `(shift_a, neg_a, shift_b, neg_b)`
+/// (stable), grouping same-shape ops into contiguous **runs**: the lane
+/// kernels load the coefficient pair and pick a specialized inner loop
+/// once per run instead of once per op. Reordering within a level is
+/// sound — operands always live in strictly earlier levels — and leaves
+/// every per-node expression (hence every output) bit-identical.
 #[derive(Clone, Debug)]
 pub struct ExecPlan {
     num_inputs: usize,
@@ -28,8 +33,31 @@ pub struct ExecPlan {
     cb: Vec<f32>,
     /// ops of ASAP level `l` (1-based) occupy `level_starts[l-1]..level_starts[l]`
     level_starts: Vec<u32>,
+    /// maximal same-coefficient spans within levels: run `r` is
+    /// `runs[r]..runs[r+1]`, uniform `(ca, cb)`, never crossing a level
+    /// boundary — the dispatch unit of the run-grouped kernels
+    runs: Vec<u32>,
     outs: Vec<OutOp>,
     max_level_ops: usize,
+}
+
+/// Run boundaries: a new run at every level start and wherever the
+/// coefficient pair changes within a level.
+fn compute_runs(ca: &[f32], cb: &[f32], level_starts: &[u32]) -> Vec<u32> {
+    let n = ca.len();
+    let mut runs = vec![0u32];
+    for l in 1..level_starts.len() {
+        let (lo, hi) = (level_starts[l - 1] as usize, level_starts[l] as usize);
+        for j in lo..hi {
+            if j > 0 && (j == lo || ca[j] != ca[j - 1] || cb[j] != cb[j - 1]) {
+                runs.push(j as u32);
+            }
+        }
+    }
+    if n > 0 {
+        runs.push(n as u32);
+    }
+    runs
 }
 
 impl ExecPlan {
@@ -44,9 +72,14 @@ impl ExecPlan {
         assert_eq!(s.levels.len(), n, "schedule does not match graph");
         let num_levels = s.levels.iter().copied().max().unwrap_or(0);
 
-        // stable sort by ASAP level: contiguous levels, original order kept
+        // stable sort by ASAP level, then by operand signature within the
+        // level: contiguous levels, and same-shape ops adjacent so the
+        // kernels dispatch once per run (original order kept within ties)
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by_key(|&i| s.levels[i]);
+        order.sort_by_key(|&i| {
+            let nd = g.nodes()[i];
+            (s.levels[i], nd.a.shift, nd.a.negative, nd.b.shift, nd.b.negative)
+        });
         let mut perm = vec![0u32; n];
         for (new, &orig) in order.iter().enumerate() {
             perm[orig] = new as u32;
@@ -93,6 +126,7 @@ impl ExecPlan {
             })
             .collect();
 
+        let runs = compute_runs(&ca, &cb, &level_starts);
         ExecPlan {
             num_inputs: g.num_inputs(),
             ia,
@@ -100,6 +134,7 @@ impl ExecPlan {
             ib,
             cb,
             level_starts,
+            runs,
             outs,
             max_level_ops,
         }
@@ -131,6 +166,34 @@ impl ExecPlan {
     /// Widest level — the available intra-batch op parallelism.
     pub fn max_level_ops(&self) -> usize {
         self.max_level_ops
+    }
+
+    /// Homogeneous dispatch runs (uniform coefficient pair within one
+    /// ASAP level). Always `<= additions()`; the gap is what the
+    /// run-grouped kernels amortize away.
+    pub fn num_runs(&self) -> usize {
+        self.runs.len().saturating_sub(1)
+    }
+
+    /// Raw operand slot indices `(ia, ib)` — for alternate lowerings
+    /// (the fixed-point plan) that mirror this plan's slot layout.
+    pub(crate) fn op_indices(&self) -> (&[u32], &[u32]) {
+        (&self.ia, &self.ib)
+    }
+
+    /// Raw operand coefficients `(ca, cb)`, level-and-signature sorted.
+    pub(crate) fn op_coeffs(&self) -> (&[f32], &[f32]) {
+        (&self.ca, &self.cb)
+    }
+
+    /// Run boundaries (see [`ExecPlan::num_runs`]).
+    pub(crate) fn run_bounds(&self) -> &[u32] {
+        &self.runs
+    }
+
+    /// Output resolutions over this plan's value slots.
+    pub(crate) fn out_ops(&self) -> &[OutOp] {
+        &self.outs
     }
 
     /// Extract the sub-plan computing the output slice `lo..hi` — the
@@ -216,6 +279,9 @@ impl ExecPlan {
                 OutOp::Scaled { idx, c } => OutOp::Scaled { idx: map_idx(idx), c },
             })
             .collect();
+        // kept ops stay (level, signature)-sorted, so run boundaries
+        // recompute to maximal homogeneous spans again
+        let runs = compute_runs(&ca, &cb, &level_starts);
         ExecPlan {
             num_inputs: self.num_inputs,
             ia,
@@ -223,6 +289,7 @@ impl ExecPlan {
             ib,
             cb,
             level_starts,
+            runs,
             outs,
             max_level_ops,
         }
@@ -286,11 +353,33 @@ impl ExecPlan {
         }
     }
 
-    /// Batch-major evaluation of one chunk of samples. `ys.len()` must
-    /// equal `xs.len()`; `buf` is the reusable lane buffer.
+    /// Batch-major evaluation of one chunk of samples, dispatched once
+    /// per homogeneous run. `ys.len()` must equal `xs.len()`; `buf` is
+    /// the reusable lane buffer.
     pub(crate) fn eval_lanes(&self, xs: &[Vec<f32>], buf: &mut Vec<f32>, ys: &mut [Vec<f32>]) {
         let width = xs.len();
         debug_assert_eq!(ys.len(), width);
+        if width == 0 {
+            return;
+        }
+        self.fill_input_lanes(xs, buf);
+        for r in 1..self.runs.len() {
+            let (j0, j1) = (self.runs[r - 1] as usize, self.runs[r] as usize);
+            let dst_start = (self.num_inputs + j0) * width;
+            let (src, dst) = buf.split_at_mut(dst_start);
+            self.eval_run(src, &mut dst[..(j1 - j0) * width], j0, width);
+        }
+        self.read_output_lanes(buf, width, ys);
+    }
+
+    /// Per-op reference dispatch (one coefficient load and loop per op,
+    /// no run grouping) — the pre-specialization kernel, kept public so
+    /// benches can measure the run-grouping win and tests can diff the
+    /// two paths. Bit-identical to [`ExecPlan::eval_lanes`] wrapped by
+    /// the engines.
+    pub fn eval_lanes_per_op(&self, xs: &[Vec<f32>], buf: &mut Vec<f32>, ys: &mut [Vec<f32>]) {
+        let width = xs.len();
+        assert_eq!(ys.len(), width, "output batch length mismatch");
         if width == 0 {
             return;
         }
@@ -307,6 +396,46 @@ impl ExecPlan {
             }
         }
         self.read_output_lanes(buf, width, ys);
+    }
+
+    /// Evaluate one homogeneous run (ops `j0..j0 + dst.len()/width`,
+    /// uniform `(ca, cb)`) into `dst`. The coefficient pair is inspected
+    /// once per run: the ±1 shapes drop their multiplies entirely
+    /// (`-1.0 * x` and `x + (-y)` are exact in IEEE float, so every
+    /// specialization stays bit-identical to the `mul, mul, add` form).
+    fn eval_run(&self, src: &[f32], dst: &mut [f32], j0: usize, width: usize) {
+        let (ca, cb) = (self.ca[j0], self.cb[j0]);
+        if ca == 1.0 && cb == 1.0 {
+            self.run_loop(src, dst, j0, width, |a, b| a + b);
+        } else if ca == 1.0 && cb == -1.0 {
+            self.run_loop(src, dst, j0, width, |a, b| a - b);
+        } else if ca == -1.0 && cb == 1.0 {
+            self.run_loop(src, dst, j0, width, |a, b| b - a);
+        } else if ca == -1.0 && cb == -1.0 {
+            self.run_loop(src, dst, j0, width, |a, b| -a - b);
+        } else {
+            self.run_loop(src, dst, j0, width, move |a, b| ca * a + cb * b);
+        }
+    }
+
+    /// The shared run inner loop, monomorphized per kernel shape.
+    #[inline]
+    fn run_loop<F: Fn(f32, f32) -> f32>(
+        &self,
+        src: &[f32],
+        dst: &mut [f32],
+        j0: usize,
+        width: usize,
+        f: F,
+    ) {
+        for (k, d) in dst.chunks_mut(width).enumerate() {
+            let j = j0 + k;
+            let a = &src[self.ia[j] as usize * width..][..width];
+            let b = &src[self.ib[j] as usize * width..][..width];
+            for s in 0..width {
+                d[s] = f(a[s], b[s]);
+            }
+        }
     }
 
     /// Like [`ExecPlan::eval_lanes`], but splits the ops of each wide
@@ -478,6 +607,66 @@ mod tests {
         let mut ys3: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
         plan.eval_lanes_level_parallel(&xs, &mut buf, &mut ys3, 3, 1, Some(&wp));
         assert_eq!(ys, ys3);
+    }
+
+    #[test]
+    fn runs_are_homogeneous_level_aligned_and_cover_all_ops() {
+        for seed in 0..8 {
+            let g = random_graph(seed);
+            let plan = ExecPlan::new(&g);
+            let runs = &plan.runs;
+            assert!(plan.num_runs() <= plan.additions());
+            assert_eq!(runs.first().copied().unwrap_or(0), 0);
+            assert_eq!(*runs.last().unwrap() as usize, plan.additions());
+            for r in 1..runs.len() {
+                let (j0, j1) = (runs[r - 1] as usize, runs[r] as usize);
+                assert!(j0 < j1, "empty run {r}");
+                for j in j0..j1 {
+                    assert_eq!(plan.ca[j], plan.ca[j0], "run {r} mixes ca");
+                    assert_eq!(plan.cb[j], plan.cb[j0], "run {r} mixes cb");
+                }
+                // a run never crosses a level boundary
+                let level = plan.level_starts.partition_point(|&s| (s as usize) <= j0);
+                assert!(
+                    j1 <= plan.level_starts[level] as usize,
+                    "run {r} ({j0}..{j1}) crosses level boundary {}",
+                    plan.level_starts[level]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn same_signature_ops_coalesce_into_few_runs() {
+        // one wide level of identical (a+b)-shaped ops must collapse
+        // into a single dispatch run
+        let mut g = AdderGraph::new(4);
+        for i in 0..32 {
+            let a = Operand::input(i % 4);
+            let b = Operand::input((i + 1) % 4);
+            g.push_add(a, b);
+        }
+        g.set_outputs(vec![OutputSpec::Ref(Operand::node(31))]);
+        let plan = ExecPlan::new(&g);
+        assert_eq!(plan.additions(), 32);
+        assert_eq!(plan.num_runs(), 1, "uniform signature must be one run");
+    }
+
+    #[test]
+    fn per_op_dispatch_bit_identical_to_run_grouped() {
+        let mut rng = Rng::new(31);
+        for seed in 0..6 {
+            let g = random_graph(seed);
+            let plan = ExecPlan::new(&g);
+            let xs: Vec<Vec<f32>> =
+                (0..7).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let mut buf = Vec::new();
+            let mut ys: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
+            plan.eval_lanes(&xs, &mut buf, &mut ys);
+            let mut ys_ref: Vec<Vec<f32>> = vec![Vec::new(); xs.len()];
+            plan.eval_lanes_per_op(&xs, &mut buf, &mut ys_ref);
+            assert_eq!(ys, ys_ref, "seed {seed}");
+        }
     }
 
     #[test]

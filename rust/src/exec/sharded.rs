@@ -20,10 +20,11 @@
 //! layer.
 
 use super::engine::BatchEngine;
+use super::fixed::FixedEngine;
 use super::plan::ExecPlan;
 use super::workers::{self, WorkerPool};
 use super::Executor;
-use crate::config::{ExecConfig, PoolMode, ShardMode};
+use crate::config::{ExecConfig, ExecMode, PoolMode, ShardMode};
 use crate::graph::AdderGraph;
 use anyhow::{bail, Result};
 use std::ops::Range;
@@ -161,16 +162,16 @@ impl ShardedExecutor {
         Self::from_plan(&ExecPlan::new(g), cfg)
     }
 
-    /// Wrap an already-partitioned [`ShardPlan`] in local engines.
+    /// Wrap an already-partitioned [`ShardPlan`] in local engines
+    /// (float or fixed per `cfg.exec_mode`; each sub-plan lowers
+    /// independently, so sharded-fixed stays bit-identical to
+    /// unsharded-fixed — the integer lanes leave no scheduling freedom).
     pub fn from_shard_plan(sp: ShardPlan, cfg: ExecConfig) -> Self {
         let engine_cfg = ExecConfig { shards: 1, ..cfg };
         let ShardPlan { num_inputs, num_outputs, parts } = sp;
         let shards = parts
             .into_iter()
-            .map(|(range, plan)| {
-                let engine: Arc<dyn Executor> = Arc::new(BatchEngine::from_plan(plan, engine_cfg));
-                Shard { range, engine }
-            })
+            .map(|(range, plan)| Shard { range, engine: engine_for_plan(plan, engine_cfg) })
             .collect();
         ShardedExecutor {
             shards,
@@ -338,15 +339,30 @@ impl std::fmt::Debug for ShardedExecutor {
     }
 }
 
-/// The one graph-to-engine entry point that honors `cfg.shards`: a
-/// [`ShardedExecutor`] when sharding is requested and the graph has more
-/// than one output to split, a plain [`BatchEngine`] otherwise. The
-/// registry and CLI build their engines through this.
+/// Build the executor for one lowered plan per `cfg.exec_mode`. The
+/// construction seams calling this are infallible, so a plan the fixed
+/// datapath rejects (non-`±2^k` coefficients, out-of-range shifts) falls
+/// back to the float engine with a warning instead of failing the build.
+pub(crate) fn engine_for_plan(plan: ExecPlan, cfg: ExecConfig) -> Arc<dyn Executor> {
+    if cfg.exec_mode == ExecMode::Fixed {
+        match FixedEngine::from_plan(&plan, cfg) {
+            Ok(e) => return Arc::new(e),
+            Err(e) => log::warn!("fixed lowering failed, serving float engine instead: {e}"),
+        }
+    }
+    Arc::new(BatchEngine::from_plan(plan, cfg))
+}
+
+/// The one graph-to-engine entry point that honors `cfg.shards` and
+/// `cfg.exec_mode`: a [`ShardedExecutor`] when sharding is requested and
+/// the graph has more than one output to split, otherwise a plain
+/// [`BatchEngine`] or [`FixedEngine`] per mode. The registry and CLI
+/// build their engines through this.
 pub fn engine_for_graph(g: &AdderGraph, cfg: ExecConfig) -> Arc<dyn Executor> {
     if cfg.shards > 1 && g.num_outputs() > 1 {
         Arc::new(ShardedExecutor::from_graph(g, cfg))
     } else {
-        Arc::new(BatchEngine::with_config(g, cfg))
+        engine_for_plan(ExecPlan::new(g), cfg)
     }
 }
 
@@ -498,6 +514,27 @@ mod tests {
         )];
         assert!(ShardedExecutor::from_executors(gap, ExecConfig::serial()).is_err());
         assert!(ShardedExecutor::from_executors(Vec::new(), ExecConfig::serial()).is_err());
+    }
+
+    #[test]
+    fn fixed_mode_sharded_bit_identical_to_unsharded_fixed() {
+        let g = wide_graph(5, 40, 8, 6);
+        let fixed_cfg =
+            ExecConfig { threads: 2, exec_mode: ExecMode::Fixed, ..ExecConfig::default() };
+        let unsharded = engine_for_graph(&g, fixed_cfg);
+        assert_eq!(unsharded.name(), "fixed-engine", "exec_mode must pick the fixed datapath");
+        let mut rng = Rng::new(21);
+        let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(5, 1.0)).collect();
+        let want = unsharded.execute_batch(&xs);
+        for mode in [ShardMode::Serial, ShardMode::Parallel] {
+            for shards in [2usize, 3, 7] {
+                let cfg = ExecConfig { shards, shard_mode: mode, ..fixed_cfg };
+                let sharded = engine_for_graph(&g, cfg);
+                assert_eq!(sharded.name(), "sharded-exec");
+                // integer lanes: sharding must not perturb a single bit
+                assert_eq!(sharded.execute_batch(&xs), want, "mode {mode:?} x{shards}");
+            }
+        }
     }
 
     #[test]

@@ -6,9 +6,12 @@
 //!   table1  [--steps N] [...]     run the Table-I residual-CNN pipeline
 //!   decompose --rows N --cols K   LCC vs CSD on a random matrix
 //!   compress [--recipe r.toml] [--checkpoint w.npy | --demo N] [--out dir]
-//!            [--shards N]         recipe -> artifact -> served engine,
-//!                                 self-verified (nonzero exit on mismatch)
-//!   serve   [--model name=path]... [--shards N]
+//!            [--shards N] [--exec-mode float|fixed]
+//!                                 recipe -> artifact -> served engine,
+//!                                 self-verified (nonzero exit on mismatch;
+//!                                 fixed mode verifies within the lowered
+//!                                 plan's analytic error bound)
+//!   serve   [--model name=path]... [--shards N] [--exec-mode float|fixed]
 //!                                 multi-model registry server driver
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
@@ -17,7 +20,8 @@
 use anyhow::{bail, Context, Result};
 use lccnn::compress::{demo_weights, CompressedModel, Pipeline, Recipe};
 use lccnn::config::{
-    ExecConfig, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig, ShardSpec,
+    ExecConfig, ExecMode, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig,
+    ShardSpec,
 };
 use lccnn::exec::{Executor, NaiveExecutor};
 use lccnn::lcc::{decompose, LccConfig};
@@ -201,6 +205,10 @@ fn cmd_compress(flags: Flags) -> Result<()> {
     if shards > 0 {
         recipe.shard = Some(ShardSpec { shards, mode: recipe.exec.shard_mode });
     }
+    if let Some(m) = flags.get("exec-mode") {
+        recipe.exec.exec_mode =
+            ExecMode::parse(m).with_context(|| format!("--exec-mode {m:?} (use float|fixed)"))?;
+    }
     let demo: usize = flag(&flags, "demo", 0)?;
     let requests: usize = flag(&flags, "requests", 32)?.max(1);
     let seed: u64 = flag(&flags, "seed", 0)?;
@@ -221,6 +229,14 @@ fn cmd_compress(flags: Flags) -> Result<()> {
 
     if let Some(s) = recipe.shard_spec() {
         println!("serving engines sharded x{} ({})", s.shards, s.mode.as_str());
+    }
+    if recipe.exec.exec_mode == ExecMode::Fixed {
+        println!(
+            "exec mode: fixed shift-add (frac_bits {}, {}-bit {} accumulator)",
+            recipe.exec.fixed_frac_bits,
+            recipe.exec.fixed_acc.bits(),
+            recipe.exec.fixed_sat.as_str()
+        );
     }
     let pipeline = Pipeline::from_recipe(&recipe)?;
     let metrics = Metrics::new();
@@ -252,17 +268,26 @@ fn cmd_compress(flags: Flags) -> Result<()> {
         bail!("{failures} verification mismatches");
     }
     println!(
-        "compress: {} model(s) verified recipe -> artifact -> registry -> serve, bit-identical",
-        jobs.len()
+        "compress: {} model(s) verified recipe -> artifact -> registry -> serve, {}",
+        jobs.len(),
+        if recipe.exec.exec_mode == ExecMode::Fixed {
+            "within the fixed-point error bound (serve round-trip bit-identical)"
+        } else {
+            "bit-identical"
+        }
     );
     Ok(())
 }
 
 /// Executor outputs vs the oracle-composed reference (gather kept →
 /// segment sums → `NaiveExecutor` over the LCC graph; dense math for
-/// pre-LCC recipes). Returns the mismatch count.
+/// pre-LCC recipes). Float engines must match bit-exact; the fixed
+/// datapath is held to its lowered plan's analytic error bound (plus
+/// slack for the float oracle's own rounding). Returns the mismatch
+/// count.
 fn verify_against_oracle(name: &str, model: &CompressedModel, n: usize, seed: u64) -> usize {
     let exec = model.executor();
+    let bound = exec.max_error_bound();
     let oracle = model.lcc().map(|s| NaiveExecutor::new(s.graph().clone()));
     let mut rng = Rng::new(seed);
     let mut bad = 0;
@@ -277,8 +302,16 @@ fn verify_against_oracle(name: &str, model: &CompressedModel, n: usize, seed: u6
                 None => model.state().dense().matvec(&xk),
             },
         };
-        if got != want {
-            eprintln!("{name:?}: executor {got:?} != oracle {want:?}");
+        let ok = if bound == 0.0 {
+            got == want
+        } else {
+            got.len() == want.len()
+                && got.iter().zip(&want).all(|(g, w)| {
+                    ((g - w).abs() as f64) <= bound + 1e-4 * (1.0 + w.abs() as f64)
+                })
+        };
+        if !ok {
+            eprintln!("{name:?}: executor {got:?} != oracle {want:?} (bound {bound:e})");
             bad += 1;
         }
     }
@@ -377,6 +410,17 @@ fn cmd_serve(flags: Flags) -> Result<()> {
     if shards > 0 {
         base_exec.shards = shards;
     }
+    // --exec-mode overrides env/recipe for every engine this process
+    // builds (demo/graph models via base_exec, checkpoints via recipe)
+    let exec_mode: Option<ExecMode> = match flags.get("exec-mode") {
+        Some(m) => Some(
+            ExecMode::parse(m).with_context(|| format!("--exec-mode {m:?} (use float|fixed)"))?,
+        ),
+        None => None,
+    };
+    if let Some(m) = exec_mode {
+        base_exec.exec_mode = m;
+    }
     let registry = Arc::new(ModelRegistry::new());
     // compression recipe for checkpoint loads: --recipe flag > [serve]
     // recipe key / LCCNN_SERVE_RECIPE > per-checkpoint discovery (artifact
@@ -396,6 +440,9 @@ fn cmd_serve(flags: Flags) -> Result<()> {
         }
         if shards > 0 {
             recipe.shard = Some(ShardSpec { shards, mode: recipe.exec.shard_mode });
+        }
+        if let Some(m) = exec_mode {
+            recipe.exec.exec_mode = m;
         }
         let entry = registry.load_checkpoint_with_recipe(
             &spec.name,

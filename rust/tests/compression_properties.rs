@@ -6,7 +6,9 @@
 mod common;
 
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
+use lccnn::config::ExecConfig;
 use lccnn::convert::{conv_forward_fk, conv_forward_pk, fk_matrices, pk_matrices};
+use lccnn::exec::{po2_shift_negate, Executor, FixedEngine};
 use lccnn::graph::{schedule, verify_against};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::prune::{compact_columns, prox_group_lasso_rows};
@@ -315,7 +317,105 @@ fn prop_csd_golden_vectors() {
         }
         checked += 1;
     }
-    assert!(checked >= 40, "golden file truncated? only {checked} vectors");
+    assert!(checked >= 55, "golden file truncated? only {checked} vectors");
+}
+
+/// The fixed datapath's coefficient lowering agrees with the golden CSD
+/// vectors: every f32-exact mantissa whose non-adjacent form is a single
+/// digit lowers to exactly that `(shift, negate)` pair, and every exact
+/// multi-digit (or zero) mantissa is rejected. Negative shifts are
+/// covered by the reciprocal powers of two down to the 2^-31 floor.
+#[test]
+fn prop_po2_lowering_matches_csd_golden() {
+    let path = common::test_data_path("csd_golden.tsv");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut singles = 0usize;
+    let mut rejected = 0usize;
+    for line in text.lines() {
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let n: i64 = line.split_once('\t').expect("mantissa<TAB>digits").0.parse().unwrap();
+        let c = n as f32;
+        if c as i64 != n {
+            continue; // not f32-exact: the cast may round onto a different mantissa
+        }
+        let digits = csd_digits(n);
+        match digits.as_slice() {
+            [d] if d.shift <= 31 => {
+                assert_eq!(
+                    po2_shift_negate(c),
+                    Some((d.shift, d.negative)),
+                    "mantissa {n}: lowering diverges from golden digit"
+                );
+                singles += 1;
+            }
+            [_] => {}
+            _ => {
+                assert_eq!(po2_shift_negate(c), None, "mantissa {n}: must not lower to one shift");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(singles >= 12, "golden file lost its power-of-two rows? only {singles}");
+    assert!(rejected >= 10, "golden file lost its multi-digit rows? only {rejected}");
+    for k in 1..=31i32 {
+        let c = (-k as f32).exp2();
+        assert_eq!(po2_shift_negate(c), Some((-k, false)), "2^-{k}");
+        assert_eq!(po2_shift_negate(-c), Some((-k, true)), "-2^-{k}");
+    }
+}
+
+/// The fixed engine's analytic error bound holds on real decomposed
+/// graphs across the whole slicing-config space (widths 1/2/4/8 and
+/// auto, both algorithms): integer shift-add execution of every lowered
+/// program stays within `FixedPlan::error_bounds` of the float oracle,
+/// modulo the float oracle's own rounding slack.
+#[test]
+fn prop_fixed_engine_error_bound_across_slicing_configs() {
+    let mut rng = Rng::new(1100);
+    for (n, k, seed) in [(48usize, 12usize, 0u64), (64, 16, 1)] {
+        let mut mrng = Rng::new(4200 + seed);
+        let w = Matrix::randn(n, k, 0.1 + 0.8 * mrng.f32(), &mut mrng);
+        let mut checked = 0usize;
+        for width in [Some(1usize), Some(2), Some(4), Some(8), None] {
+            for base in [LccConfig::fp(), LccConfig::fs()] {
+                let mut cfg = base;
+                cfg.slice_width = width;
+                let dec = decompose(&w, &cfg);
+                let engine = FixedEngine::with_config(dec.graph(), ExecConfig::serial())
+                    .unwrap_or_else(|e| {
+                        panic!("{n}x{k} width {width:?} {:?}: lowering failed: {e}", cfg.algo)
+                    });
+                // the analytic bound presumes the accumulator never
+                // saturates; decomposed graphs stay far from that edge
+                let headroom = engine.fixed_plan().max_mantissa_bound(8.0);
+                assert!(
+                    headroom < 0.25 * i64::MAX as f64,
+                    "{n}x{k} width {width:?}: unexpectedly near saturation ({headroom:e})"
+                );
+                let bounds = engine.error_bounds();
+                for _ in 0..3 {
+                    let x: Vec<f32> = rng.normal_vec(k, 1.0);
+                    let yf = dec.apply(&x);
+                    let yx = engine.execute_one(&x);
+                    assert_eq!(yx.len(), yf.len());
+                    for (o, (a, b)) in yx.iter().zip(&yf).enumerate() {
+                        let tol = bounds[o] + 1e-3 * (1.0 + b.abs() as f64);
+                        assert!(
+                            ((a - b).abs() as f64) <= tol,
+                            "{n}x{k} width {width:?} {:?} out {o}: |{a} - {b}| > {tol:e}",
+                            cfg.algo
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 100, "sweep too thin: {checked}");
+    }
 }
 
 /// The CSD baseline grows with precision (more fractional bits -> more

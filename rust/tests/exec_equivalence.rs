@@ -8,8 +8,11 @@
 //! float-reassociation budget) guards the invariant even if a future
 //! kernel rewrite introduces a different-but-legal summation order.
 
-use lccnn::config::{ExecConfig, PoolMode, ShardMode};
-use lccnn::exec::{BatchEngine, ExecPlan, Executor, NaiveExecutor, ShardPlan, ShardedExecutor};
+use lccnn::config::{ExecConfig, ExecMode, PoolMode, ShardMode};
+use lccnn::exec::{
+    engine_for_graph, BatchEngine, ExecPlan, Executor, FixedEngine, NaiveExecutor, ShardPlan,
+    ShardedExecutor,
+};
 use lccnn::graph::{AdderGraph, Operand, OutputSpec};
 use lccnn::util::Rng;
 
@@ -211,6 +214,156 @@ fn prop_sharded_execution_bit_identical_to_oracle_and_unsharded() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Fixed-datapath differential sweep on the same random-graph surface:
+/// every engine config must land within the lowered plan's analytic
+/// error bound of the float oracle (plus slack for the oracle's own f32
+/// rounding), and all configs must agree **bit-exactly** with each other
+/// — integer lanes leave no scheduling freedom. Trials whose worst-case
+/// mantissa could saturate the accumulator are skipped: saturation is
+/// the bound's stated precondition.
+#[test]
+fn prop_fixed_engine_within_error_bound_on_all_shapes() {
+    let mut rng = Rng::new(0xF17ED);
+    let mut checked = 0usize;
+    for trial in 0..20 {
+        let g = random_graph(&mut rng);
+        let oracle = NaiveExecutor::new(g.clone());
+        let probe =
+            FixedEngine::with_config(&g, ExecConfig::serial()).expect("±2^k plans always lower");
+        if probe.fixed_plan().max_mantissa_bound(8.0) >= 0.25 * i64::MAX as f64 {
+            continue;
+        }
+        let bounds = probe.error_bounds().to_vec();
+        for &b in &[0usize, 1, 2, 7, 33] {
+            let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let want = oracle.execute_batch(&xs);
+            let reference = probe.execute_batch(&xs);
+            for (ws, gs) in want.iter().zip(&reference) {
+                for ((w, g), &e) in ws.iter().zip(gs).zip(&bounds) {
+                    let tol = e + 1e-4 * (1.0 + w.abs() as f64);
+                    assert!(
+                        ((w - g).abs() as f64) <= tol,
+                        "trial {trial} b {b}: fixed {g} vs float {w}, bound {e}"
+                    );
+                    checked += 1;
+                }
+            }
+            for (name, cfg) in engine_configs() {
+                let engine = FixedEngine::with_config(
+                    &g,
+                    ExecConfig { exec_mode: ExecMode::Fixed, ..cfg },
+                )
+                .unwrap();
+                assert_eq!(
+                    engine.execute_batch(&xs),
+                    reference,
+                    "trial {trial} {name} b {b}: fixed results must be bit-stable"
+                );
+            }
+        }
+    }
+    assert!(checked > 100, "sweep degenerated: only {checked} values checked");
+}
+
+/// Sharded fixed execution: shards 1/2/3/7 × both shard modes × both
+/// pool modes, plus uneven explicit cuts — all bit-identical to the
+/// unsharded fixed engine (and therefore within the same error bound of
+/// the oracle).
+#[test]
+fn prop_fixed_sharded_bit_identical_to_unsharded_fixed() {
+    let mut rng = Rng::new(0x54F12D);
+    for trial in 0..8 {
+        let g = random_graph(&mut rng);
+        let plan = ExecPlan::new(&g);
+        let unsharded =
+            FixedEngine::with_config(&g, ExecConfig::serial()).expect("±2^k plans always lower");
+        for &b in &[0usize, 1, 5, 33] {
+            let xs: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(g.num_inputs(), 1.0)).collect();
+            let want = unsharded.execute_batch(&xs);
+            for mode in [ShardMode::Serial, ShardMode::Parallel] {
+                for pool in [PoolMode::Scoped, PoolMode::Persistent] {
+                    for shards in [1usize, 2, 3, 7] {
+                        let cfg = ExecConfig {
+                            threads: 2,
+                            shards,
+                            shard_mode: mode,
+                            pool_mode: pool,
+                            exec_mode: ExecMode::Fixed,
+                            ..ExecConfig::default()
+                        };
+                        let sharded = engine_for_graph(&g, cfg);
+                        assert_eq!(
+                            sharded.execute_batch(&xs),
+                            want,
+                            "trial {trial} b {b} x{shards} {mode:?}/{pool:?}"
+                        );
+                    }
+                }
+            }
+            let n = g.num_outputs();
+            if n >= 3 {
+                for cuts in [vec![1], vec![1, n - 1], vec![n / 2]] {
+                    let sp = ShardPlan::with_cuts(&plan, &cuts).expect("valid cuts");
+                    let cfg =
+                        ExecConfig { exec_mode: ExecMode::Fixed, ..ExecConfig::serial() };
+                    let sharded = ShardedExecutor::from_shard_plan(sp, cfg);
+                    assert_eq!(
+                        sharded.execute_batch(&xs),
+                        want,
+                        "trial {trial} b {b} cuts {cuts:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Exactly-representable plans (nonnegative shifts, inputs on the
+/// activation grid, magnitudes small enough that f32 arithmetic is
+/// exact): the fixed engine must agree with the float oracle bit for
+/// bit, across every engine config.
+#[test]
+fn prop_fixed_bit_exact_on_representable_plans() {
+    let mut rng = Rng::new(0xB17E);
+    for trial in 0..10 {
+        // growth-capped generator: <= 6 nodes, shifts in {0, 1}, input
+        // mantissas <= 2^6, so every intermediate mantissa stays below
+        // 2^6 * 4^7 = 2^20 < 2^24 — all float arithmetic is exact
+        let inputs = 2 + rng.below(5);
+        let mut g = AdderGraph::new(inputs);
+        let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+        for _ in 0..rng.below(7) {
+            let a = refs[rng.below(refs.len())].scaled(rng.below(2) as i32, rng.f32() < 0.5);
+            let b = refs[rng.below(refs.len())].scaled(rng.below(2) as i32, rng.f32() < 0.5);
+            refs.push(g.push_add(a, b));
+        }
+        let outs = (0..2 + rng.below(3))
+            .map(|_| {
+                OutputSpec::Ref(
+                    refs[rng.below(refs.len())].scaled(rng.below(2) as i32, rng.f32() < 0.5),
+                )
+            })
+            .collect();
+        g.set_outputs(outs);
+        let oracle = NaiveExecutor::new(g.clone());
+        let probe = FixedEngine::with_config(&g, ExecConfig::serial()).unwrap();
+        let step = probe.fixed_plan().step() as f32;
+        assert!(
+            probe.fixed_plan().max_mantissa_bound(64.0 * step as f64) < (24f64).exp2(),
+            "trial {trial}: generator must keep all mantissas f32-exact"
+        );
+        // inputs are exact multiples of the activation grid step
+        let xs: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..inputs).map(|_| (rng.below(129) as f32 - 64.0) * step).collect())
+            .collect();
+        let want = oracle.execute_batch(&xs);
+        for (name, cfg) in engine_configs() {
+            let engine = FixedEngine::with_config(&g, cfg).unwrap();
+            assert_eq!(engine.execute_batch(&xs), want, "trial {trial} {name}");
         }
     }
 }
