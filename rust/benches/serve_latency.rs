@@ -11,8 +11,9 @@
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
 use lccnn::compress::{Pipeline, Recipe};
 use lccnn::config::{ExecConfig, ExecMode, PoolMode, ServeConfig, ShardMode, ShardSpec};
-use lccnn::exec::Executor;
+use lccnn::exec::{even_ranges, remote_sharded_executor, Executor, RemoteOptions, ShardWorker};
 use lccnn::lcc::LccConfig;
+use lccnn::metrics::Metrics;
 use lccnn::nn::compressed::{CompressedMlp, Layer1};
 use lccnn::nn::mlp::MlpParams;
 use lccnn::pipeline::mlp::synthetic_reg_weights;
@@ -143,6 +144,39 @@ fn main() {
             run(backend, "pipeline-exec/fixed", burst, n, &mut t);
         }
     }
+    // the same artifact split across two in-process shard-worker TCP
+    // servers on loopback, gathered by RemoteExecutors — the wire tax
+    // of distributed serving vs the in-process sharded rows above
+    {
+        let recipe = Recipe { exec: serving_exec(PoolMode::Persistent), ..Recipe::default() };
+        let w1 = synthetic_reg_weights(0, 120);
+        let model =
+            Pipeline::from_recipe(&recipe).expect("valid recipe").run(&w1).expect("pipeline runs");
+        let cuts = even_ranges(w1.rows(), 2);
+        let workers: Vec<ShardWorker> = cuts
+            .iter()
+            .map(|r| {
+                let e = model.range_executor(r.clone()).expect("range executor");
+                ShardWorker::spawn(Arc::new(e), r.clone(), ExecMode::Float, "127.0.0.1:0")
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+        let remote = remote_sharded_executor(
+            &addrs,
+            RemoteOptions::default(),
+            serving_exec(PoolMode::Persistent),
+            Arc::new(Metrics::new()),
+        )
+        .expect("connect remote shards");
+        let exec: Arc<dyn Executor> = Arc::new(remote);
+        for burst in [1usize, 8, 32] {
+            let backend = Arc::new(ExecutorBackend::new(Arc::clone(&exec), 64));
+            run(backend, "pipeline-exec/remote2", burst, n, &mut t);
+        }
+        drop(exec);
+        drop(workers);
+    }
     // the pre-exec-engine behaviour (forward_one per sample) for comparison
     for burst in [1usize, 8, 32] {
         let model = Arc::new(compressed_model(&params, ExecConfig::default()));
@@ -183,5 +217,9 @@ fn main() {
     println!("pipeline-exec/fixed serves the same artifact on the integer");
     println!("shift-add datapath (exec_mode = fixed) — the float-vs-fixed");
     println!("latency comparison for EXPERIMENTS.md §Perf.");
+    println!("pipeline-exec/remote2 serves the artifact split across two");
+    println!("shard-worker TCP servers on loopback (bit-identical gather) —");
+    println!("the wire tax vs pipeline-exec/shard2 for EXPERIMENTS.md");
+    println!("§Remote-shards.");
     println!("worker pool after run: {:?}", lccnn::exec::global_pool().stats());
 }

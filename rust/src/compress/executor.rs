@@ -13,17 +13,22 @@ use crate::config::{ExecConfig, ExecMode, ShardSpec};
 use crate::exec::{BatchEngine, Executor, FixedEngine, FixedPlan, ShardedExecutor};
 use crate::share::SharedLayer;
 use crate::tensor::Matrix;
+use anyhow::{bail, ensure, Result};
+use std::ops::Range;
+use std::sync::Arc;
 
 /// The engine serving an LCC artifact: the single unsharded engine
 /// (float, or the fixed-point datapath when the recipe's
-/// `exec_mode = fixed`), or the output-range-sharded wrapper over the
+/// `exec_mode = fixed`), the output-range-sharded wrapper over the
 /// same program when the recipe asks for it (`[compress.shard]` /
 /// `exec.shards`) — in which case the unsharded engine is not kept
-/// resident at all.
+/// resident at all — or a mode-dispatched engine over a range-cut
+/// plan (the remote `shard-worker` serving path).
 enum LccEngine {
     Single(BatchEngine),
     Fixed(FixedEngine),
     Sharded(ShardedExecutor),
+    Dyn(Arc<dyn Executor>),
 }
 
 impl LccEngine {
@@ -32,6 +37,7 @@ impl LccEngine {
             LccEngine::Single(e) => e,
             LccEngine::Fixed(e) => e,
             LccEngine::Sharded(sh) => sh,
+            LccEngine::Dyn(e) => e.as_ref(),
         }
     }
 }
@@ -126,6 +132,42 @@ impl PipelineExecutor {
             Repr::Dense(dense)
         };
         PipelineExecutor { input_dim, rows, kept, repr }
+    }
+
+    /// Build an executor restricted to the output rows in `range` —
+    /// the remote `shard-worker` serving path. Requests still carry
+    /// the full original input dimension (the kept-feature gather and
+    /// segment sums are input-side and identical on every shard); only
+    /// the LCC program is cut down to the range via
+    /// [`crate::exec::ExecPlan::extract_output_range`], so a gather
+    /// over range executors is bit-identical to the unsharded engine
+    /// in both float and fixed modes.
+    pub(crate) fn from_state_range(state: ModelState, range: Range<usize>) -> Result<Self> {
+        let (input_dim, rows, kept, _dense, _shared, lcc) = state.into_executor_parts();
+        ensure!(
+            range.start < range.end && range.end <= rows,
+            "output range {}..{} out of 0..{rows}",
+            range.start,
+            range.end
+        );
+        let Some(slcc) = lcc else {
+            bail!("range-restricted serving needs an LCC artifact (recipe has no lcc step)");
+        };
+        let kept = (kept.len() != input_dim).then_some(kept);
+        // never re-shard the cut plan: the remote gather is the shard layer
+        let cfg = ExecConfig { shards: 1, ..*slcc.engine().config() };
+        let sub = slcc.engine().plan().extract_output_range(range.start, range.end);
+        let additions = sub.additions();
+        let err_bound = if cfg.exec_mode == ExecMode::Fixed {
+            FixedPlan::lower(&sub, &cfg).map(|p| p.max_error_bound()).unwrap_or(0.0)
+        } else {
+            0.0
+        };
+        let engine = LccEngine::Dyn(crate::exec::engine_for_plan(sub, cfg));
+        let (layer, _decomposition, _single) = slcc.into_parts();
+        let identity_sharing = layer.labels.iter().enumerate().all(|(i, &l)| i == l);
+        let repr = Repr::Lcc { layer, additions, identity_sharing, err_bound, engine };
+        Ok(PipelineExecutor { input_dim, rows: range.len(), kept, repr })
     }
 
     /// Additions of the represented program (segment sums included).

@@ -295,6 +295,15 @@ impl CompressedModel {
         let shard = self.shard_spec();
         PipelineExecutor::from_state_sharded(self.state, shard)
     }
+
+    /// A servable executor restricted to the output rows in `range` —
+    /// what one remote `shard-worker` serves. Requires an LCC artifact
+    /// (the program is cut per output range); requests carry the full
+    /// original input dimension, and a gather over range executors is
+    /// bit-identical to [`CompressedModel::executor`].
+    pub fn range_executor(&self, range: std::ops::Range<usize>) -> Result<PipelineExecutor> {
+        PipelineExecutor::from_state_range(self.state.clone(), range)
+    }
 }
 
 impl std::fmt::Debug for CompressedModel {

@@ -8,6 +8,6 @@ mod types;
 pub use toml::{parse_toml, TomlValue};
 pub use types::{
     serve_models_from_env, serve_models_from_toml, AccWidth, ExecConfig, ExecMode, LccAlgoConfig,
-    MlpPipelineConfig, ModelSpec, PoolMode, ResnetPipelineConfig, Saturation, ServeConfig,
-    ShardMode, ShardSpec,
+    MlpPipelineConfig, ModelSpec, PoolMode, RemoteConfig, ResnetPipelineConfig, Saturation,
+    ServeConfig, ShardMode, ShardSpec,
 };

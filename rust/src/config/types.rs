@@ -152,6 +152,13 @@ pub struct ServeConfig {
     /// discovery (artifact dirs carrying `recipe.toml`) with the legacy
     /// LCC-only fallback
     pub recipe: Option<String>,
+    /// remote shard-worker addresses (`host:port`) gathered behind one
+    /// served model: `[serve] remote_shards = ["h:p", ...]` in TOML,
+    /// `LCCNN_SERVE_REMOTE_SHARDS` as a comma list, or repeatable
+    /// `--remote-shard` CLI flags (merged after config/env)
+    pub remote_shards: Vec<String>,
+    /// transport tuning for those shards
+    pub remote: RemoteConfig,
 }
 
 impl Default for ServeConfig {
@@ -162,6 +169,8 @@ impl Default for ServeConfig {
             workers: 1,
             queue_capacity: 1024,
             recipe: None,
+            remote_shards: Vec::new(),
+            remote: RemoteConfig::default(),
         }
     }
 }
@@ -188,6 +197,11 @@ impl ServeConfig {
         if let Some(v) = get(t, "serve", "recipe").and_then(TomlValue::as_str) {
             c.recipe = Some(v.to_string());
         }
+        if let Some(TomlValue::Array(items)) = get(t, "serve", "remote_shards") {
+            c.remote_shards =
+                items.iter().filter_map(|v| v.as_str().map(str::to_string)).collect();
+        }
+        c.remote = RemoteConfig::overrides(t, c.remote);
         c
     }
 
@@ -208,7 +222,8 @@ impl ServeConfig {
 
     /// Environment overrides: `LCCNN_SERVE_MAX_BATCH`,
     /// `LCCNN_SERVE_BATCH_TIMEOUT_US`, `LCCNN_SERVE_QUEUE_CAPACITY`,
-    /// `LCCNN_SERVE_RECIPE`.
+    /// `LCCNN_SERVE_RECIPE`, `LCCNN_SERVE_REMOTE_SHARDS` (comma list),
+    /// plus the `LCCNN_REMOTE_*` transport knobs ([`RemoteConfig`]).
     pub fn from_env() -> Self {
         fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
             std::env::var(name).ok().and_then(|v| v.parse().ok())
@@ -227,6 +242,81 @@ impl ServeConfig {
             if !v.is_empty() {
                 c.recipe = Some(v);
             }
+        }
+        if let Ok(v) = std::env::var("LCCNN_SERVE_REMOTE_SHARDS") {
+            let addrs: Vec<String> =
+                v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+            if !addrs.is_empty() {
+                c.remote_shards = addrs;
+            }
+        }
+        c.remote = RemoteConfig::from_env_over(c.remote);
+        c
+    }
+}
+
+/// Remote shard transport tuning (`[serve.remote]` in TOML,
+/// `LCCNN_REMOTE_*` in the environment). Consumed by
+/// `exec::remote::RemoteOptions::from_config`; the knobs bound how long
+/// a dead shard can hold a batch before it sheds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RemoteConfig {
+    /// TCP dial budget per attempt, in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Per-response read budget (also the write budget), in milliseconds.
+    pub read_timeout_ms: u64,
+    /// Additional attempts after a transport failure (reconnect+resend).
+    pub retries: u32,
+    /// Base backoff before retry `k` is `backoff_ms << (k-1)` ms.
+    pub backoff_ms: u64,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig { connect_timeout_ms: 1000, read_timeout_ms: 5000, retries: 2, backoff_ms: 50 }
+    }
+}
+
+impl RemoteConfig {
+    fn overrides(t: &Sections, mut c: RemoteConfig) -> RemoteConfig {
+        let read = |key: &str| -> Option<u64> {
+            get(t, "serve.remote", key)
+                .and_then(TomlValue::as_int)
+                .and_then(|v| u64::try_from(v).ok())
+        };
+        if let Some(v) = read("connect_timeout_ms") {
+            c.connect_timeout_ms = v.max(1);
+        }
+        if let Some(v) = read("read_timeout_ms") {
+            c.read_timeout_ms = v.max(1);
+        }
+        if let Some(v) = read("retries") {
+            c.retries = v.min(16) as u32;
+        }
+        if let Some(v) = read("backoff_ms") {
+            c.backoff_ms = v;
+        }
+        c
+    }
+
+    /// Environment overrides: `LCCNN_REMOTE_CONNECT_TIMEOUT_MS`,
+    /// `LCCNN_REMOTE_READ_TIMEOUT_MS`, `LCCNN_REMOTE_RETRIES`,
+    /// `LCCNN_REMOTE_BACKOFF_MS`.
+    pub fn from_env_over(mut c: RemoteConfig) -> RemoteConfig {
+        fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_REMOTE_CONNECT_TIMEOUT_MS") {
+            c.connect_timeout_ms = v.max(1);
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_REMOTE_READ_TIMEOUT_MS") {
+            c.read_timeout_ms = v.max(1);
+        }
+        if let Some(v) = env_parse::<u32>("LCCNN_REMOTE_RETRIES") {
+            c.retries = v.min(16);
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_REMOTE_BACKOFF_MS") {
+            c.backoff_ms = v;
         }
         c
     }
@@ -802,6 +892,31 @@ mod tests {
         assert_eq!(c.queue_capacity, 7);
         assert_eq!(c.recipe.as_deref(), Some("r.toml"));
         assert!(ServeConfig::default().recipe.is_none());
+    }
+
+    #[test]
+    fn serve_toml_reads_remote_shards_and_transport() {
+        let dir = std::env::temp_dir().join(format!("lccnn-serve-remote-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("remote.toml");
+        std::fs::write(
+            &p,
+            "[serve]\nremote_shards = [\"10.0.0.1:7411\", \"10.0.0.2:7411\"]\n\
+             [serve.remote]\nconnect_timeout_ms = 250\nread_timeout_ms = 900\n\
+             retries = 1\nbackoff_ms = 20\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&p).unwrap();
+        assert_eq!(c.remote_shards, vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
+        let want = RemoteConfig {
+            connect_timeout_ms: 250,
+            read_timeout_ms: 900,
+            retries: 1,
+            backoff_ms: 20,
+        };
+        assert_eq!(c.remote, want);
+        assert!(ServeConfig::default().remote_shards.is_empty());
+        assert_eq!(ServeConfig::default().remote, RemoteConfig::default());
     }
 
     #[test]

@@ -51,6 +51,13 @@
 //!   their `(shift, negate)` signature and records homogeneous *runs*,
 //!   so both engines dispatch a specialized kernel once per run over a
 //!   contiguous SoA slice instead of branching per op.
+//! * [`RemoteExecutor`] / [`ShardWorker`] (`exec::remote`) carry a shard
+//!   across a process boundary: a hand-rolled length-prefixed binary
+//!   protocol over std TCP, bounded timeouts + retry with backoff on the
+//!   client, and typed [`ExecError`]s so a dead shard *sheds* the batch
+//!   (`shard.<i>.dead` metric) instead of hanging it.
+//!   [`remote_sharded_executor`] gathers a list of `host:port` workers
+//!   behind a [`ShardedExecutor`] interchangeably with local engines.
 //! * [`Executor`] is the extension point future backends implement
 //!   (sharded engines, GPU/accelerator lowerings, remote execution). The
 //!   serving layer's `ExecutorBackend` serves any `Arc<dyn Executor>`.
@@ -71,6 +78,7 @@ mod fixed;
 mod oracle;
 mod plan;
 mod pool;
+pub mod remote;
 mod sharded;
 mod workers;
 
@@ -79,8 +87,44 @@ pub use fixed::{po2_shift_negate, FixedEngine, FixedPlan};
 pub use oracle::NaiveExecutor;
 pub use plan::ExecPlan;
 pub use pool::BufferPool;
+pub use remote::{remote_sharded_executor, RemoteExecutor, RemoteOptions, ShardWorker};
 pub use sharded::{engine_for_graph, even_ranges, ShardPlan, ShardedExecutor};
 pub use workers::{global_pool, PoolPanic, PoolStats, WorkerPool};
+
+pub(crate) use sharded::engine_for_plan;
+
+/// Typed execution failure, introduced for backends that can fail at
+/// runtime (today: remote shards). Local engines are infallible — their
+/// contract violations are bugs and still panic.
+///
+/// The vendored `anyhow` is string-backed (no downcast), so failover
+/// decisions must flow through this enum, not through `anyhow::Error`:
+/// [`Executor::try_execute_batch_into`] and the serving layer's
+/// `try_eval_batch` keep the type all the way to the router, where
+/// `Unavailable` becomes a `ServeError::Shed` and `Failed` a
+/// `ServeError::Backend`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecError {
+    /// The backend cannot serve right now (dead/unreachable shard).
+    /// Callers should shed the request, not fail the model.
+    Unavailable { shard: String, message: String },
+    /// The batch was rejected or the engine failed; retrying the same
+    /// request cannot help.
+    Failed { message: String },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Unavailable { shard, message } => {
+                write!(f, "shard {shard} unavailable: {message}")
+            }
+            ExecError::Failed { message } => write!(f, "execution failed: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
 
 /// A runtime for adder graphs: evaluates batches of input vectors to
 /// batches of output vectors. Implementations must be shareable across
@@ -101,6 +145,21 @@ pub trait Executor: Send + Sync {
     /// ([`NaiveExecutor`]) allocates per sample. Panics if a sample has
     /// the wrong input length.
     fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>);
+
+    /// Fallible variant of [`Executor::execute_batch_into`] for backends
+    /// that can legitimately fail at runtime (remote shards). The
+    /// default forwards to the infallible path — local engines never
+    /// return `Err`; [`RemoteExecutor`] and [`ShardedExecutor`]
+    /// override this to surface typed [`ExecError`]s instead of
+    /// panicking, so the serving layer can shed and fail over.
+    fn try_execute_batch_into(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &mut Vec<Vec<f32>>,
+    ) -> Result<(), ExecError> {
+        self.execute_batch_into(xs, ys);
+        Ok(())
+    }
 
     /// Allocating convenience wrapper around [`Executor::execute_batch_into`].
     fn execute_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {

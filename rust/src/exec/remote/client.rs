@@ -1,0 +1,318 @@
+//! [`RemoteExecutor`]: the gather side of a remote shard. One value of
+//! this type owns one TCP connection to one `shard-worker` process and
+//! implements [`Executor`] over it, so
+//! [`crate::exec::ShardedExecutor::from_executors`] can mix local
+//! engines and remote shards interchangeably.
+//!
+//! Failure policy — a down shard must *shed, never hang*:
+//! * every dial is bounded by `connect_timeout`, every response read by
+//!   `read_timeout` (writes by `write_timeout`);
+//! * a transport failure drops the connection and retries up to
+//!   `retries` more times with exponential backoff (reconnecting and
+//!   resending the batch — requests are idempotent pure functions);
+//! * when every attempt fails the shard enters a `cooldown` window in
+//!   which calls fail immediately (no re-dial), and the caller gets a
+//!   typed [`ExecError::Unavailable`] either way;
+//! * a typed error *frame* from the worker (bad request, engine
+//!   failure) is not retried — it surfaces as [`ExecError::Failed`].
+
+use super::protocol::{self, Frame, Kind, Lanes, ProtocolError, ShardInfo, MAX_FRAME};
+use crate::config::RemoteConfig;
+use crate::exec::{ExecError, Executor};
+use crate::metrics::Metrics;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Transport tuning for one remote shard connection.
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteOptions {
+    /// TCP dial budget per attempt.
+    pub connect_timeout: Duration,
+    /// Per-response read budget.
+    pub read_timeout: Duration,
+    /// Per-request write budget.
+    pub write_timeout: Duration,
+    /// Additional attempts after the first transport failure.
+    pub retries: u32,
+    /// Backoff before retry `k` is `backoff << (k - 1)`.
+    pub backoff: Duration,
+    /// After all retries fail, calls shed immediately (no re-dial) for
+    /// this long.
+    pub cooldown: Duration,
+    /// Per-frame payload cap (clamped to [`protocol::MAX_FRAME`]).
+    pub max_frame: u32,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            connect_timeout: Duration::from_millis(1000),
+            read_timeout: Duration::from_millis(5000),
+            write_timeout: Duration::from_millis(5000),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+            cooldown: Duration::from_millis(250),
+            max_frame: MAX_FRAME,
+        }
+    }
+}
+
+impl RemoteOptions {
+    /// Options from the deployment config (`[serve.remote]` TOML and
+    /// `LCCNN_REMOTE_*` env — see [`RemoteConfig`]).
+    pub fn from_config(c: &RemoteConfig) -> Self {
+        RemoteOptions {
+            connect_timeout: Duration::from_millis(c.connect_timeout_ms.max(1)),
+            read_timeout: Duration::from_millis(c.read_timeout_ms.max(1)),
+            write_timeout: Duration::from_millis(c.read_timeout_ms.max(1)),
+            retries: c.retries,
+            backoff: Duration::from_millis(c.backoff_ms),
+            ..RemoteOptions::default()
+        }
+    }
+}
+
+struct ConnState {
+    stream: Option<TcpStream>,
+    dead_until: Option<Instant>,
+}
+
+/// An [`Executor`] served by a remote `shard-worker` over TCP.
+pub struct RemoteExecutor {
+    addr: String,
+    opts: RemoteOptions,
+    info: ShardInfo,
+    next_id: AtomicU64,
+    conn: Mutex<ConnState>,
+    metrics: Option<Arc<Metrics>>,
+    metric_prefix: String,
+}
+
+impl std::fmt::Debug for RemoteExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RemoteExecutor")
+            .field("addr", &self.addr)
+            .field("range", &self.range())
+            .finish()
+    }
+}
+
+impl RemoteExecutor {
+    /// Dial `addr` and handshake: the worker reports its input arity,
+    /// output count and owned output-column range. Bounded — the dial
+    /// by `connect_timeout`, the handshake by `read_timeout` — and the
+    /// failure is typed, never a hang.
+    pub fn connect(addr: &str, opts: RemoteOptions) -> Result<Self, ExecError> {
+        let (stream, info) = dial(addr, &opts).map_err(|e| ExecError::Unavailable {
+            shard: addr.to_string(),
+            message: e.to_string(),
+        })?;
+        Ok(RemoteExecutor {
+            addr: addr.to_string(),
+            opts,
+            info,
+            next_id: AtomicU64::new(1),
+            conn: Mutex::new(ConnState { stream: Some(stream), dead_until: None }),
+            metrics: None,
+            metric_prefix: String::new(),
+        })
+    }
+
+    /// Count `<prefix>retries` on `metrics` (e.g. `shard.0.` for the
+    /// gather path's per-shard series).
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>, prefix: &str) -> Self {
+        self.metrics = Some(metrics);
+        self.metric_prefix = prefix.to_string();
+        self
+    }
+
+    /// The worker address this executor is bound to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The output-column range of the full model the worker owns.
+    pub fn range(&self) -> Range<usize> {
+        self.info.range_start as usize..self.info.range_end as usize
+    }
+
+    fn bump(&self, series: &str) {
+        if let Some(m) = &self.metrics {
+            m.incr(&format!("{}{series}", self.metric_prefix), 1);
+        }
+    }
+}
+
+fn io_str(what: &str, addr: &str, e: std::io::Error) -> ProtocolError {
+    ProtocolError::Io(format!("{what} {addr}: {e}"))
+}
+
+fn dial(addr: &str, opts: &RemoteOptions) -> Result<(TcpStream, ShardInfo), ProtocolError> {
+    let sockets: Vec<SocketAddr> =
+        addr.to_socket_addrs().map_err(|e| io_str("resolve", addr, e))?.collect();
+    let first = sockets
+        .first()
+        .ok_or_else(|| ProtocolError::Io(format!("resolve {addr}: no addresses")))?;
+    let mut stream = TcpStream::connect_timeout(first, opts.connect_timeout)
+        .map_err(|e| io_str("connect", addr, e))?;
+    stream.set_read_timeout(Some(opts.read_timeout)).map_err(|e| io_str("configure", addr, e))?;
+    stream.set_write_timeout(Some(opts.write_timeout)).map_err(|e| io_str("configure", addr, e))?;
+    stream.set_nodelay(true).ok();
+    protocol::write_frame(&mut stream, Kind::Hello, Lanes::None, 0, &[])?;
+    let resp = protocol::read_frame(&mut stream, opts.max_frame)?;
+    match resp.kind {
+        Kind::HelloOk => Ok((stream, protocol::decode_shard_info(&resp.payload)?)),
+        Kind::Err => {
+            let (code, message) = protocol::decode_error(&resp.payload)?;
+            Err(ProtocolError::Remote { code, message })
+        }
+        k => Err(ProtocolError::BadPayload(format!("unexpected {k:?} reply to hello"))),
+    }
+}
+
+/// One attempt's failure: retriable transport trouble vs a worker's
+/// typed error frame (final — retrying an error frame cannot help).
+enum Attempt {
+    Retriable(ProtocolError),
+    Fatal(ExecError),
+}
+
+fn exec_once(
+    stream: &mut TcpStream,
+    req_id: u64,
+    payload: &[u8],
+    max_frame: u32,
+) -> Result<Vec<Vec<f32>>, Attempt> {
+    protocol::write_frame(stream, Kind::Exec, Lanes::F32, req_id, payload)
+        .map_err(Attempt::Retriable)?;
+    let resp: Frame = protocol::read_frame(stream, max_frame).map_err(Attempt::Retriable)?;
+    if resp.req_id != req_id {
+        let msg = format!("response for request {} to request {req_id}", resp.req_id);
+        return Err(Attempt::Retriable(ProtocolError::BadPayload(msg)));
+    }
+    match resp.kind {
+        Kind::ExecOk => match resp.lanes {
+            Lanes::F32 => protocol::decode_rows_f32(&resp.payload).map_err(Attempt::Retriable),
+            lanes => {
+                let message = format!("exec-ok with unsupported {lanes:?} lanes");
+                Err(Attempt::Fatal(ExecError::Failed { message }))
+            }
+        },
+        Kind::Err => {
+            let (code, message) =
+                protocol::decode_error(&resp.payload).map_err(Attempt::Retriable)?;
+            let message = format!("remote error {code}: {message}");
+            Err(Attempt::Fatal(ExecError::Failed { message }))
+        }
+        k => {
+            let msg = format!("unexpected {k:?} reply to exec");
+            Err(Attempt::Retriable(ProtocolError::BadPayload(msg)))
+        }
+    }
+}
+
+impl Executor for RemoteExecutor {
+    fn num_inputs(&self) -> usize {
+        self.info.num_inputs as usize
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.info.num_outputs as usize
+    }
+
+    fn name(&self) -> &'static str {
+        "remote-shard"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        if let Err(e) = self.try_execute_batch_into(xs, ys) {
+            panic!("remote shard {}: {e}", self.addr);
+        }
+    }
+
+    fn try_execute_batch_into(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &mut Vec<Vec<f32>>,
+    ) -> Result<(), ExecError> {
+        if xs.is_empty() {
+            ys.clear();
+            return Ok(());
+        }
+        for (i, x) in xs.iter().enumerate() {
+            if x.len() != self.info.num_inputs as usize {
+                let message = format!(
+                    "request {i}: {} inputs, shard {} wants {}",
+                    x.len(),
+                    self.addr,
+                    self.info.num_inputs
+                );
+                return Err(ExecError::Failed { message });
+            }
+        }
+        let payload = protocol::encode_rows_f32(xs).map_err(|e| ExecError::Failed {
+            message: format!("encode batch for {}: {e}", self.addr),
+        })?;
+        let mut state = self.conn.lock().expect("remote conn lock");
+        if let Some(t) = state.dead_until {
+            if Instant::now() < t {
+                let message = "shard in dead cooldown after exhausted retries".to_string();
+                return Err(ExecError::Unavailable { shard: self.addr.clone(), message });
+            }
+            state.dead_until = None;
+        }
+        let mut last = String::from("no attempt made");
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                self.bump("retries");
+                std::thread::sleep(self.opts.backoff * (1 << (attempt - 1).min(8)));
+            }
+            if state.stream.is_none() {
+                match dial(&self.addr, &self.opts) {
+                    Ok((s, info)) => {
+                        if (info.num_inputs, info.num_outputs)
+                            != (self.info.num_inputs, self.info.num_outputs)
+                        {
+                            let message =
+                                format!("shard {} changed shape across reconnect", self.addr);
+                            return Err(ExecError::Failed { message });
+                        }
+                        state.stream = Some(s);
+                    }
+                    Err(e) => {
+                        last = e.to_string();
+                        continue;
+                    }
+                }
+            }
+            let stream = state.stream.as_mut().expect("stream connected above");
+            let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            match exec_once(stream, req_id, &payload, self.opts.max_frame) {
+                Ok(rows) => {
+                    let w = self.info.num_outputs as usize;
+                    if rows.len() != xs.len() || rows.iter().any(|r| r.len() != w) {
+                        state.stream = None;
+                        last = format!("shard {} returned a malformed batch", self.addr);
+                        continue;
+                    }
+                    *ys = rows;
+                    return Ok(());
+                }
+                Err(Attempt::Fatal(e)) => return Err(e),
+                Err(Attempt::Retriable(e)) => {
+                    state.stream = None;
+                    last = e.to_string();
+                }
+            }
+        }
+        // Exhausted: enter the cooldown window so a hot serving loop
+        // sheds instantly instead of paying the full timeout per batch.
+        // (`shard.<i>.dead` is counted once per shed batch by the
+        // gather path, not here.)
+        state.dead_until = Some(Instant::now() + self.opts.cooldown);
+        Err(ExecError::Unavailable { shard: self.addr.clone(), message: last })
+    }
+}

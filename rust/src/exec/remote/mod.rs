@@ -1,0 +1,67 @@
+//! Remote shard execution: the paper's adder sub-graphs scattered
+//! across *processes* instead of threads.
+//!
+//! PR 5 built [`crate::exec::ShardedExecutor::from_executors`] as the
+//! remote-shard seam — any `(output range, Arc<dyn Executor>)` list
+//! gathers into one executor. This module supplies the executors that
+//! cross a process boundary:
+//!
+//! * [`protocol`] — the hand-rolled length-prefixed binary framing
+//!   (std TCP, no tokio; versioned header, request ids, `f32`/`i32`
+//!   lane payloads, typed error frames, hard frame-size cap).
+//! * [`RemoteExecutor`] — the client: one connection to one worker,
+//!   bounded timeouts, retry-with-backoff, dead-shard cooldown.
+//! * [`ShardWorker`] — the server: serves any local [`Executor`] as
+//!   one output-column range (the `shard-worker` CLI subcommand wraps
+//!   this around an artifact dir's range-restricted engine).
+//! * [`remote_sharded_executor`] — connect a list of `host:port`
+//!   workers, discover each shard's range from its handshake, and
+//!   gather them behind a [`ShardedExecutor`] with per-shard
+//!   `shard.<i>.dead` / `shard.<i>.retries` metrics.
+//!
+//! Bit-identicality: the wire carries `f32` lanes for both
+//! `exec_mode = float|fixed` and an `f32` round-trips losslessly, so a
+//! remote gather is bit-identical to the same shards executed
+//! in-process — `rust/tests/remote_shards.rs` pins this against the
+//! local `ShardedExecutor` and the `NaiveExecutor` oracle.
+
+mod client;
+pub mod protocol;
+mod worker;
+
+pub use client::{RemoteExecutor, RemoteOptions};
+pub use worker::ShardWorker;
+
+use crate::config::ExecConfig;
+use crate::exec::{Executor, ShardedExecutor};
+use crate::metrics::Metrics;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Connect to every worker address, learn each shard's output range
+/// from its handshake, and gather them behind one [`ShardedExecutor`].
+/// Shards are ordered by range start (the address list's order does
+/// not matter), indexed metric series (`shard.<i>.retries` from the
+/// clients, `shard.<i>.dead` from the gather path) land on `metrics`.
+pub fn remote_sharded_executor(
+    addrs: &[String],
+    opts: RemoteOptions,
+    cfg: ExecConfig,
+    metrics: Arc<Metrics>,
+) -> anyhow::Result<ShardedExecutor> {
+    anyhow::ensure!(!addrs.is_empty(), "no remote shard addresses given");
+    let mut clients = Vec::with_capacity(addrs.len());
+    for addr in addrs {
+        clients.push(RemoteExecutor::connect(addr, opts)?);
+    }
+    clients.sort_by_key(|c| c.range().start);
+    let parts: Vec<(Range<usize>, Arc<dyn Executor>)> = clients
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let c = c.with_metrics(Arc::clone(&metrics), &format!("shard.{i}."));
+            (c.range(), Arc::new(c) as Arc<dyn Executor>)
+        })
+        .collect();
+    Ok(ShardedExecutor::from_executors(parts, cfg)?.with_metrics(metrics))
+}

@@ -1,0 +1,509 @@
+//! The remote-shard wire protocol: hand-rolled length-prefixed frames
+//! over a byte stream. The tree is offline-vendored (no tokio, no
+//! serde), so the framing is explicit little-endian structs:
+//!
+//! ```text
+//! header (20 bytes, LE): magic "LCCR" | version u16 | kind u8 | lanes u8
+//!                        | req_id u64 | payload_len u32
+//! ```
+//!
+//! Kinds: `Hello`/`HelloOk` handshake (the worker reports its input
+//! arity, output count, owned output-column range and exec mode),
+//! `Exec`/`ExecOk` batch round-trips, and a typed `Err` frame
+//! (`u16` code + UTF-8 message). Batch payloads are `rows u32 | width
+//! u32 | rows×width` lane values — `f32` lanes on the wire for both
+//! `exec_mode = float|fixed` (an `f32` round-trips losslessly, so
+//! remote results stay bit-identical to local execution), with `i32`
+//! lanes reserved for raw fixed-mantissa transport.
+//!
+//! Robustness contract: every decoder returns a typed
+//! [`ProtocolError`] — never a panic — and the payload length is
+//! checked against [`MAX_FRAME`] *before* any allocation, so a hostile
+//! or corrupt length prefix cannot drive unbounded memory growth.
+
+use std::io::{Read, Write};
+
+/// Frame magic, `b"LCCR"` read little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"LCCR");
+/// Protocol version spoken by this build; mismatches are rejected.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Hard cap on a payload: a corrupt length prefix must bound, not
+/// drive, the allocation it implies.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Error-frame code: the request itself was malformed (bad arity,
+/// undecodable batch). Not retriable.
+pub const ERR_BAD_REQUEST: u16 = 1;
+/// Error-frame code: the worker's engine failed. Not retriable.
+pub const ERR_EXEC: u16 = 2;
+/// Error-frame code: the stream desynchronized (garbage frame); the
+/// worker closes the connection after sending this.
+pub const ERR_PROTOCOL: u16 = 3;
+
+/// Frame kind tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// client → worker: request the shard's shape.
+    Hello = 1,
+    /// worker → client: [`ShardInfo`] payload.
+    HelloOk = 2,
+    /// client → worker: one batch of input rows.
+    Exec = 3,
+    /// worker → client: the batch's output rows.
+    ExecOk = 4,
+    /// worker → client: typed failure (`u16` code + message).
+    Err = 5,
+}
+
+impl Kind {
+    fn parse(v: u8) -> Option<Kind> {
+        match v {
+            1 => Some(Kind::Hello),
+            2 => Some(Kind::HelloOk),
+            3 => Some(Kind::Exec),
+            4 => Some(Kind::ExecOk),
+            5 => Some(Kind::Err),
+            _ => None,
+        }
+    }
+}
+
+/// Lane dtype tag for batch payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lanes {
+    /// No lane payload (handshake and error frames).
+    None = 0,
+    /// Little-endian `f32` values.
+    F32 = 1,
+    /// Little-endian `i32` values (raw fixed-point mantissas).
+    I32 = 2,
+}
+
+impl Lanes {
+    fn parse(v: u8) -> Option<Lanes> {
+        match v {
+            0 => Some(Lanes::None),
+            1 => Some(Lanes::F32),
+            2 => Some(Lanes::I32),
+            _ => None,
+        }
+    }
+}
+
+/// Typed failure of the wire layer. Every decode path lands here —
+/// never a panic, never an unbounded allocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The stream does not start with [`MAGIC`].
+    BadMagic(u32),
+    /// The peer speaks a different [`VERSION`].
+    UnsupportedVersion(u16),
+    /// Unknown [`Kind`] tag.
+    UnknownKind(u8),
+    /// Unknown [`Lanes`] tag.
+    UnknownLanes(u8),
+    /// The length prefix exceeds the configured cap.
+    FrameTooLarge { len: u32, max: u32 },
+    /// The stream ended mid-frame (also: clean EOF between frames).
+    Truncated,
+    /// A read or write hit the socket timeout.
+    TimedOut,
+    /// The frame parsed but its payload is inconsistent.
+    BadPayload(String),
+    /// The peer answered with a typed error frame.
+    Remote { code: u16, message: String },
+    /// Any other transport failure.
+    Io(String),
+}
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            ProtocolError::UnsupportedVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            ProtocolError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtocolError::UnknownLanes(l) => write!(f, "unknown lane dtype {l}"),
+            ProtocolError::FrameTooLarge { len, max } => {
+                write!(f, "frame payload of {len} bytes exceeds the {max}-byte cap")
+            }
+            ProtocolError::Truncated => write!(f, "stream ended mid-frame"),
+            ProtocolError::TimedOut => write!(f, "socket timed out"),
+            ProtocolError::BadPayload(msg) => write!(f, "bad payload: {msg}"),
+            ProtocolError::Remote { code, message } => write!(f, "remote error {code}: {message}"),
+            ProtocolError::Io(msg) => write!(f, "transport: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+fn io_err(e: std::io::Error) -> ProtocolError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::UnexpectedEof => ProtocolError::Truncated,
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => ProtocolError::TimedOut,
+        _ => ProtocolError::Io(e.to_string()),
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: Kind,
+    pub lanes: Lanes,
+    pub req_id: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: Kind,
+    lanes: Lanes,
+    req_id: u64,
+    payload: &[u8],
+) -> Result<(), ProtocolError> {
+    if payload.len() > MAX_FRAME as usize {
+        let len = payload.len().min(u32::MAX as usize) as u32;
+        return Err(ProtocolError::FrameTooLarge { len, max: MAX_FRAME });
+    }
+    let len = payload.len() as u32;
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    hdr[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    hdr[6] = kind as u8;
+    hdr[7] = lanes as u8;
+    hdr[8..16].copy_from_slice(&req_id.to_le_bytes());
+    hdr[16..20].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&hdr).map_err(io_err)?;
+    w.write_all(payload).map_err(io_err)?;
+    w.flush().map_err(io_err)
+}
+
+/// Read one frame. `max_frame` (clamped to [`MAX_FRAME`]) bounds the
+/// payload allocation; the check runs before any buffer is created.
+pub fn read_frame(r: &mut impl Read, max_frame: u32) -> Result<Frame, ProtocolError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).map_err(io_err)?;
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().expect("4-byte slice"));
+    if magic != MAGIC {
+        return Err(ProtocolError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(hdr[4..6].try_into().expect("2-byte slice"));
+    if version != VERSION {
+        return Err(ProtocolError::UnsupportedVersion(version));
+    }
+    let kind = Kind::parse(hdr[6]).ok_or(ProtocolError::UnknownKind(hdr[6]))?;
+    let lanes = Lanes::parse(hdr[7]).ok_or(ProtocolError::UnknownLanes(hdr[7]))?;
+    let req_id = u64::from_le_bytes(hdr[8..16].try_into().expect("8-byte slice"));
+    let len = u32::from_le_bytes(hdr[16..20].try_into().expect("4-byte slice"));
+    let cap = max_frame.min(MAX_FRAME);
+    if len > cap {
+        return Err(ProtocolError::FrameTooLarge { len, max: cap });
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(io_err)?;
+    Ok(Frame { kind, lanes, req_id, payload })
+}
+
+/// The shard shape a worker reports in its `HelloOk` payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// Input arity every request row must match.
+    pub num_inputs: u32,
+    /// Rows produced per sample — the width of the owned range.
+    pub num_outputs: u32,
+    /// First output column of the full model this shard owns.
+    pub range_start: u32,
+    /// One past the last owned output column.
+    pub range_end: u32,
+    /// 0 = float, 1 = fixed (informational; the wire carries `f32`
+    /// lanes either way).
+    pub mode: u8,
+}
+
+/// Encode a [`ShardInfo`] as a `HelloOk` payload (17 bytes).
+pub fn encode_shard_info(info: &ShardInfo) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17);
+    out.extend_from_slice(&info.num_inputs.to_le_bytes());
+    out.extend_from_slice(&info.num_outputs.to_le_bytes());
+    out.extend_from_slice(&info.range_start.to_le_bytes());
+    out.extend_from_slice(&info.range_end.to_le_bytes());
+    out.push(info.mode);
+    out
+}
+
+/// Decode a `HelloOk` payload.
+pub fn decode_shard_info(p: &[u8]) -> Result<ShardInfo, ProtocolError> {
+    if p.len() != 17 {
+        return Err(ProtocolError::BadPayload(format!("shard info is 17 bytes, got {}", p.len())));
+    }
+    let u = |i: usize| u32::from_le_bytes(p[i..i + 4].try_into().expect("4-byte slice"));
+    let info = ShardInfo {
+        num_inputs: u(0),
+        num_outputs: u(4),
+        range_start: u(8),
+        range_end: u(12),
+        mode: p[16],
+    };
+    if info.range_start >= info.range_end || info.range_end - info.range_start != info.num_outputs {
+        return Err(ProtocolError::BadPayload(format!(
+            "range {}..{} disagrees with {} outputs",
+            info.range_start, info.range_end, info.num_outputs
+        )));
+    }
+    Ok(info)
+}
+
+fn check_batch_size(rows: usize, width: usize) -> Result<(), ProtocolError> {
+    let bytes = 8u64 + rows as u64 * width as u64 * 4;
+    if bytes > MAX_FRAME as u64 {
+        let len = bytes.min(u32::MAX as u64) as u32;
+        return Err(ProtocolError::FrameTooLarge { len, max: MAX_FRAME });
+    }
+    Ok(())
+}
+
+fn decode_batch_dims(p: &[u8]) -> Result<(usize, usize), ProtocolError> {
+    if p.len() < 8 {
+        let msg = format!("batch payload of {} bytes has no dims", p.len());
+        return Err(ProtocolError::BadPayload(msg));
+    }
+    let rows = u32::from_le_bytes(p[0..4].try_into().expect("4-byte slice")) as usize;
+    let width = u32::from_le_bytes(p[4..8].try_into().expect("4-byte slice")) as usize;
+    // The expected size is computed in u64 and compared against the
+    // (already frame-capped) payload length before any row allocation,
+    // so a hostile rows×width claim cannot allocate anything.
+    let expect = 8u64 + rows as u64 * width as u64 * 4;
+    if expect != p.len() as u64 {
+        return Err(ProtocolError::BadPayload(format!(
+            "batch claims {rows}x{width} ({expect} bytes), payload is {}",
+            p.len()
+        )));
+    }
+    Ok((rows, width))
+}
+
+/// Encode a rectangular batch of `f32` rows (`rows u32 | width u32 |
+/// values`). Ragged batches are rejected.
+pub fn encode_rows_f32(rows: &[Vec<f32>]) -> Result<Vec<u8>, ProtocolError> {
+    let width = rows.first().map(Vec::len).unwrap_or(0);
+    check_batch_size(rows.len(), width)?;
+    let mut out = Vec::with_capacity(8 + rows.len() * width * 4);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(width as u32).to_le_bytes());
+    for row in rows {
+        if row.len() != width {
+            return Err(ProtocolError::BadPayload(format!(
+                "ragged batch: row of {} values in a width-{width} batch",
+                row.len()
+            )));
+        }
+        for v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a batch of `f32` rows.
+pub fn decode_rows_f32(p: &[u8]) -> Result<Vec<Vec<f32>>, ProtocolError> {
+    let (rows, width) = decode_batch_dims(p)?;
+    let mut out = Vec::with_capacity(rows);
+    let mut off = 8;
+    for _ in 0..rows {
+        let mut row = Vec::with_capacity(width);
+        for _ in 0..width {
+            row.push(f32::from_le_bytes(p[off..off + 4].try_into().expect("4-byte slice")));
+            off += 4;
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Encode a rectangular batch of `i32` rows (raw fixed mantissas).
+pub fn encode_rows_i32(rows: &[Vec<i32>]) -> Result<Vec<u8>, ProtocolError> {
+    let width = rows.first().map(Vec::len).unwrap_or(0);
+    check_batch_size(rows.len(), width)?;
+    let mut out = Vec::with_capacity(8 + rows.len() * width * 4);
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(width as u32).to_le_bytes());
+    for row in rows {
+        if row.len() != width {
+            return Err(ProtocolError::BadPayload(format!(
+                "ragged batch: row of {} values in a width-{width} batch",
+                row.len()
+            )));
+        }
+        for v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a batch of `i32` rows.
+pub fn decode_rows_i32(p: &[u8]) -> Result<Vec<Vec<i32>>, ProtocolError> {
+    let (rows, width) = decode_batch_dims(p)?;
+    let mut out = Vec::with_capacity(rows);
+    let mut off = 8;
+    for _ in 0..rows {
+        let mut row = Vec::with_capacity(width);
+        for _ in 0..width {
+            row.push(i32::from_le_bytes(p[off..off + 4].try_into().expect("4-byte slice")));
+            off += 4;
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Encode an `Err`-frame payload (`code u16 | UTF-8 message`).
+pub fn encode_error(code: u16, message: &str) -> Vec<u8> {
+    let msg = message.as_bytes();
+    let take = msg.len().min(MAX_FRAME as usize - 2);
+    let mut out = Vec::with_capacity(2 + take);
+    out.extend_from_slice(&code.to_le_bytes());
+    out.extend_from_slice(&msg[..take]);
+    out
+}
+
+/// Decode an `Err`-frame payload.
+pub fn decode_error(p: &[u8]) -> Result<(u16, String), ProtocolError> {
+    if p.len() < 2 {
+        let msg = format!("error payload of {} bytes has no code", p.len());
+        return Err(ProtocolError::BadPayload(msg));
+    }
+    let code = u16::from_le_bytes(p[0..2].try_into().expect("2-byte slice"));
+    Ok((code, String::from_utf8_lossy(&p[2..]).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::io::Cursor;
+
+    fn frame_bytes(kind: Kind, lanes: Lanes, req_id: u64, payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, lanes, req_id, payload).unwrap();
+        buf
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let bytes = frame_bytes(Kind::Exec, Lanes::F32, 42, b"payload");
+        let f = read_frame(&mut Cursor::new(&bytes), MAX_FRAME).unwrap();
+        assert_eq!(f.kind, Kind::Exec);
+        assert_eq!(f.lanes, Lanes::F32);
+        assert_eq!(f.req_id, 42);
+        assert_eq!(f.payload, b"payload");
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors() {
+        let bytes = frame_bytes(Kind::Exec, Lanes::F32, 7, &[1, 2, 3, 4]);
+        for cut in 0..bytes.len() {
+            let err = read_frame(&mut Cursor::new(&bytes[..cut]), MAX_FRAME).unwrap_err();
+            assert_eq!(err, ProtocolError::Truncated, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_kind_lanes_are_rejected() {
+        let parse = |bytes: &[u8]| read_frame(&mut Cursor::new(bytes), MAX_FRAME).unwrap_err();
+        let good = frame_bytes(Kind::Hello, Lanes::None, 0, &[]);
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(parse(&bad), ProtocolError::BadMagic(_)));
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert_eq!(parse(&bad), ProtocolError::UnsupportedVersion(9));
+        let mut bad = good.clone();
+        bad[6] = 200;
+        assert_eq!(parse(&bad), ProtocolError::UnknownKind(200));
+        let mut bad = good;
+        bad[7] = 77;
+        assert_eq!(parse(&bad), ProtocolError::UnknownLanes(77));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        // A frame whose header claims a multi-GB payload: the reader
+        // must reject on the prefix alone (nothing past the header
+        // exists to read, and no buffer may be sized from the claim).
+        let mut bytes = frame_bytes(Kind::Exec, Lanes::F32, 1, &[]);
+        bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&bytes), MAX_FRAME).unwrap_err();
+        assert_eq!(err, ProtocolError::FrameTooLarge { len: u32::MAX, max: MAX_FRAME });
+        // A caller-chosen tighter cap also holds.
+        let mut bytes = frame_bytes(Kind::Exec, Lanes::F32, 1, &[0u8; 64]);
+        bytes[16..20].copy_from_slice(&64u32.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&bytes), 16).unwrap_err();
+        assert_eq!(err, ProtocolError::FrameTooLarge { len: 64, max: 16 });
+    }
+
+    #[test]
+    fn random_bytes_never_panic_the_reader() {
+        let mut rng = Rng::new(0xF00D);
+        for round in 0..2000 {
+            let len = rng.below(64);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            // Typed error or (vanishingly unlikely) a parsed frame —
+            // but never a panic and never an oversized allocation.
+            let _ = read_frame(&mut Cursor::new(&bytes), MAX_FRAME);
+            let _ = decode_shard_info(&bytes);
+            let _ = decode_rows_f32(&bytes);
+            let _ = decode_rows_i32(&bytes);
+            let _ = decode_error(&bytes);
+            let _ = round;
+        }
+    }
+
+    #[test]
+    fn f32_batch_round_trips() {
+        let rows = vec![vec![1.0f32, -2.5, 3.25], vec![0.0, f32::MIN_POSITIVE, -0.0]];
+        let decoded = decode_rows_f32(&encode_rows_f32(&rows).unwrap()).unwrap();
+        assert_eq!(decoded.len(), rows.len());
+        for (d, r) in decoded.iter().zip(&rows) {
+            for (a, b) in d.iter().zip(r) {
+                assert_eq!(a.to_bits(), b.to_bits(), "lossless to the bit");
+            }
+        }
+        let empty = decode_rows_f32(&encode_rows_f32(&[]).unwrap()).unwrap();
+        assert!(empty.is_empty(), "empty batch round-trips");
+    }
+
+    #[test]
+    fn i32_batch_round_trips() {
+        let rows = vec![vec![i32::MIN, -1, 0, 1, i32::MAX]];
+        assert_eq!(decode_rows_i32(&encode_rows_i32(&rows).unwrap()).unwrap(), rows);
+    }
+
+    #[test]
+    fn ragged_and_lying_batches_are_rejected() {
+        let ragged = vec![vec![1.0f32, 2.0], vec![3.0]];
+        assert!(matches!(encode_rows_f32(&ragged), Err(ProtocolError::BadPayload(_))));
+        let mut lying = encode_rows_f32(&[vec![1.0f32, 2.0]]).unwrap();
+        lying[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_rows_f32(&lying), Err(ProtocolError::BadPayload(_))));
+    }
+
+    #[test]
+    fn shard_info_and_error_payloads_round_trip() {
+        let info =
+            ShardInfo { num_inputs: 784, num_outputs: 5, range_start: 10, range_end: 15, mode: 1 };
+        assert_eq!(decode_shard_info(&encode_shard_info(&info)).unwrap(), info);
+        let mut bad = info;
+        bad.range_end = 14;
+        assert!(decode_shard_info(&encode_shard_info(&bad)).is_err(), "range/width disagreement");
+        let (code, msg) = decode_error(&encode_error(ERR_EXEC, "boom")).unwrap();
+        assert_eq!((code, msg.as_str()), (ERR_EXEC, "boom"));
+        assert!(decode_error(&[1]).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! [`ShardWorker`]: the serve side of a remote shard. It binds a TCP
+//! listener and answers the wire protocol over any local
+//! [`Executor`] — in production the range-restricted engine a
+//! `shard-worker` process builds from an artifact dir, in tests any
+//! in-process engine on an ephemeral port.
+//!
+//! The worker is defensive by construction: every connection runs in
+//! its own thread, garbage frames get a best-effort typed error frame
+//! and a close (a desynchronized stream cannot be re-synced), engine
+//! failures become error frames, and nothing a client sends can panic
+//! the process or allocate past [`protocol::MAX_FRAME`]. A slow-loris
+//! peer that trickles partial frames is bounded by the per-read socket
+//! timeout: the worker keeps polling its stop flag and the stalled
+//! connection never blocks the accept loop or other clients.
+
+use super::protocol::{self, Frame, Kind, Lanes, ProtocolError, ShardInfo};
+use crate::config::ExecMode;
+use crate::exec::Executor;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A running shard server; dropping (or [`ShardWorker::stop`]) shuts
+/// it down and joins every thread.
+pub struct ShardWorker {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    /// Bind `bind` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// `engine` as the shard owning output columns `range` of the full
+    /// model. `mode` is reported to clients in the handshake.
+    pub fn spawn(
+        engine: Arc<dyn Executor>,
+        range: Range<usize>,
+        mode: ExecMode,
+        bind: &str,
+    ) -> anyhow::Result<ShardWorker> {
+        anyhow::ensure!(
+            engine.num_outputs() == range.len(),
+            "engine serves {} outputs, range {range:?} spans {}",
+            engine.num_outputs(),
+            range.len()
+        );
+        let listener =
+            TcpListener::bind(bind).map_err(|e| anyhow::anyhow!("bind shard worker {bind}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("lccnn-shard-accept".into())
+            .spawn(move || accept_loop(listener, engine, range, mode, flag))?;
+        Ok(ShardWorker { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every connection and join the threads.
+    /// After this returns the port is closed: in-flight client requests
+    /// fail with a transport error — the failover path under test.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<dyn Executor>,
+    range: Range<usize>,
+    mode: ExecMode,
+    stop: Arc<AtomicBool>,
+) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let engine = Arc::clone(&engine);
+                let range = range.clone();
+                let flag = Arc::clone(&stop);
+                let spawned = std::thread::Builder::new()
+                    .name("lccnn-shard-conn".into())
+                    .spawn(move || handle_conn(stream, engine, range, mode, flag));
+                match spawned {
+                    Ok(h) => handlers.push(h),
+                    Err(e) => log::warn!("shard worker: spawn connection handler: {e}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("shard worker accept: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+        handlers.retain(|h| !h.is_finished());
+    }
+    // Close the listening socket before joining handlers, so the port
+    // is provably dead by the time `stop()` returns.
+    drop(listener);
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    engine: Arc<dyn Executor>,
+    range: Range<usize>,
+    mode: ExecMode,
+    stop: Arc<AtomicBool>,
+) {
+    stream.set_nodelay(true).ok();
+    // Short read timeout: the loop wakes to poll the stop flag, and a
+    // slow-loris peer can stall only its own connection, never a join.
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    while !stop.load(Ordering::SeqCst) {
+        let frame = match protocol::read_frame(&mut stream, protocol::MAX_FRAME) {
+            Ok(f) => f,
+            Err(ProtocolError::TimedOut) => continue,
+            Err(ProtocolError::Truncated) => return,
+            Err(e) => {
+                // Garbage on the wire: answer typed, then close — after
+                // a framing error the stream cannot be re-synced.
+                let payload = protocol::encode_error(protocol::ERR_PROTOCOL, &e.to_string());
+                let _ = protocol::write_frame(&mut stream, Kind::Err, Lanes::None, 0, &payload);
+                return;
+            }
+        };
+        let (kind, lanes, payload, close_after) = match frame.kind {
+            Kind::Hello => {
+                let info = ShardInfo {
+                    num_inputs: engine.num_inputs() as u32,
+                    num_outputs: engine.num_outputs() as u32,
+                    range_start: range.start as u32,
+                    range_end: range.end as u32,
+                    mode: match mode {
+                        ExecMode::Float => 0,
+                        ExecMode::Fixed => 1,
+                    },
+                };
+                (Kind::HelloOk, Lanes::None, protocol::encode_shard_info(&info), false)
+            }
+            Kind::Exec => match exec_reply(&engine, &frame) {
+                Ok(payload) => (Kind::ExecOk, Lanes::F32, payload, false),
+                Err((code, msg)) => {
+                    (Kind::Err, Lanes::None, protocol::encode_error(code, &msg), false)
+                }
+            },
+            // Server-to-client kinds arriving at the server: protocol
+            // violation; answer typed and close.
+            Kind::HelloOk | Kind::ExecOk | Kind::Err => {
+                let msg = format!("unexpected {:?} frame at the worker", frame.kind);
+                let payload = protocol::encode_error(protocol::ERR_PROTOCOL, &msg);
+                (Kind::Err, Lanes::None, payload, true)
+            }
+        };
+        let sent = protocol::write_frame(&mut stream, kind, lanes, frame.req_id, &payload);
+        if sent.is_err() || close_after {
+            return;
+        }
+    }
+}
+
+fn exec_reply(engine: &Arc<dyn Executor>, frame: &Frame) -> Result<Vec<u8>, (u16, String)> {
+    let xs = match frame.lanes {
+        Lanes::F32 => protocol::decode_rows_f32(&frame.payload)
+            .map_err(|e| (protocol::ERR_BAD_REQUEST, e.to_string()))?,
+        Lanes::I32 => {
+            let msg = "i32 request lanes are reserved, send f32".to_string();
+            return Err((protocol::ERR_BAD_REQUEST, msg));
+        }
+        Lanes::None => return Err((protocol::ERR_BAD_REQUEST, "exec frame without lanes".into())),
+    };
+    for (i, x) in xs.iter().enumerate() {
+        if x.len() != engine.num_inputs() {
+            let msg =
+                format!("request {i}: {} inputs, engine wants {}", x.len(), engine.num_inputs());
+            return Err((protocol::ERR_BAD_REQUEST, msg));
+        }
+    }
+    let mut ys = Vec::new();
+    engine
+        .try_execute_batch_into(&xs, &mut ys)
+        .map_err(|e| (protocol::ERR_EXEC, e.to_string()))?;
+    protocol::encode_rows_f32(&ys).map_err(|e| (protocol::ERR_EXEC, e.to_string()))
+}

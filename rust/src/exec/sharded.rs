@@ -13,19 +13,22 @@
 //! unsharded engine, because every kept op evaluates the identical
 //! expression on identical operand values.
 //!
-//! Shard engines are held as `Arc<dyn Executor>`: today they are local
-//! [`BatchEngine`]s, but [`ShardedExecutor::from_executors`] accepts any
-//! executor per range — the seam where remote shards (a recipe shipped
-//! to another machine) plug in without touching the scatter/gather
-//! layer.
+//! Shard engines are held as `Arc<dyn Executor>`:
+//! [`ShardedExecutor::from_executors`] accepts any executor per range —
+//! the seam where remote shards plug in without touching the
+//! scatter/gather layer. Since PR 7 `exec::remote` actually crosses the
+//! process boundary (`RemoteExecutor` over TCP), and the gather path
+//! sheds typed [`ExecError`]s with per-shard failure metrics instead of
+//! assuming infallible engines.
 
 use super::engine::BatchEngine;
 use super::fixed::FixedEngine;
 use super::plan::ExecPlan;
 use super::workers::{self, WorkerPool};
-use super::Executor;
+use super::{ExecError, Executor};
 use crate::config::{ExecConfig, ExecMode, PoolMode, ShardMode};
 use crate::graph::AdderGraph;
+use crate::metrics::Metrics;
 use anyhow::{bail, Result};
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
@@ -139,6 +142,15 @@ struct Shard {
 /// into its output-column slice of the batch-major result. Gather
 /// scratch is recycled, so steady-state sharded serving allocates no
 /// per-shard row buffers.
+///
+/// Failover: [`Executor::try_execute_batch_into`] collects a typed
+/// result per shard. If any shard fails, the whole batch sheds with the
+/// first error — partial rows are never gathered — and the failure is
+/// counted on the executor's [`Metrics`] (`shard.<i>.dead` for an
+/// unavailable shard, `shard.<i>.errors` otherwise). The remote client
+/// bounds every attempt with timeouts, so a dead shard sheds the batch
+/// instead of hanging it; surviving shards are untouched and serve the
+/// next batch normally.
 pub struct ShardedExecutor {
     shards: Vec<Shard>,
     num_inputs: usize,
@@ -147,6 +159,7 @@ pub struct ShardedExecutor {
     pool_mode: PoolMode,
     workers: Arc<WorkerPool>,
     scratch: Mutex<Vec<Vec<ShardRows>>>,
+    metrics: Arc<Metrics>,
 }
 
 impl ShardedExecutor {
@@ -181,6 +194,7 @@ impl ShardedExecutor {
             pool_mode: cfg.pool_mode,
             workers: workers::global_pool(),
             scratch: Mutex::new(Vec::new()),
+            metrics: Arc::new(Metrics::new()),
         }
     }
 
@@ -230,7 +244,29 @@ impl ShardedExecutor {
             pool_mode: cfg.pool_mode,
             workers: workers::global_pool(),
             scratch: Mutex::new(Vec::new()),
+            metrics: Arc::new(Metrics::new()),
         })
+    }
+
+    /// Count per-shard failures (`shard.<i>.dead` / `shard.<i>.errors`)
+    /// on an externally owned sink instead of the private default —
+    /// the serve CLI exposes this next to the router's metrics.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The failure-counter sink (shared if set via `with_metrics`).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    fn note_failure(&self, i: usize, e: &ExecError) {
+        let series = match e {
+            ExecError::Unavailable { .. } => "dead",
+            ExecError::Failed { .. } => "errors",
+        };
+        self.metrics.incr(&format!("shard.{i}.{series}"), 1);
     }
 
     pub fn num_shards(&self) -> usize {
@@ -274,28 +310,49 @@ impl Executor for ShardedExecutor {
     }
 
     fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        if let Err(e) = self.try_execute_batch_into(xs, ys) {
+            panic!("sharded execute failed: {e}");
+        }
+    }
+
+    fn try_execute_batch_into(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &mut Vec<Vec<f32>>,
+    ) -> Result<(), ExecError> {
         let b = xs.len();
         ys.resize_with(b, Vec::new);
         if b == 0 {
-            return;
+            return Ok(());
         }
         if self.shards.len() == 1 {
             // degenerate single shard: no scatter/gather layer needed
-            self.shards[0].engine.execute_batch_into(xs, ys);
-            return;
+            let res = self.shards[0].engine.try_execute_batch_into(xs, ys);
+            if let Err(e) = &res {
+                self.note_failure(0, e);
+            }
+            return res;
         }
         let mut parts = self.take_scratch();
+        let mut results: Vec<Result<(), ExecError>> = Vec::new();
+        results.resize_with(self.shards.len(), || Ok(()));
         if self.mode == ShardMode::Serial {
-            for (shard, out) in self.shards.iter().zip(parts.iter_mut()) {
-                shard.engine.execute_batch_into(xs, out);
+            for ((shard, out), res) in
+                self.shards.iter().zip(parts.iter_mut()).zip(results.iter_mut())
+            {
+                *res = shard.engine.try_execute_batch_into(xs, out);
             }
         } else {
             match self.pool_mode {
                 PoolMode::Persistent => {
                     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
                         Vec::with_capacity(self.shards.len());
-                    for (shard, out) in self.shards.iter().zip(parts.iter_mut()) {
-                        tasks.push(Box::new(move || shard.engine.execute_batch_into(xs, out)));
+                    for ((shard, out), res) in
+                        self.shards.iter().zip(parts.iter_mut()).zip(results.iter_mut())
+                    {
+                        tasks.push(Box::new(move || {
+                            *res = shard.engine.try_execute_batch_into(xs, out);
+                        }));
                     }
                     if let Err(e) = self.workers.run_scoped(tasks) {
                         panic!("sharded exec worker pool: {e}");
@@ -303,12 +360,32 @@ impl Executor for ShardedExecutor {
                 }
                 PoolMode::Scoped => {
                     std::thread::scope(|scope| {
-                        for (shard, out) in self.shards.iter().zip(parts.iter_mut()) {
-                            scope.spawn(move || shard.engine.execute_batch_into(xs, out));
+                        for ((shard, out), res) in
+                            self.shards.iter().zip(parts.iter_mut()).zip(results.iter_mut())
+                        {
+                            scope.spawn(move || {
+                                *res = shard.engine.try_execute_batch_into(xs, out);
+                            });
                         }
                     });
                 }
             }
+        }
+        // Failover accounting before any gather: if any shard failed,
+        // the whole batch sheds with the first error — partial rows are
+        // never served — and every failed shard is counted.
+        let mut first: Option<ExecError> = None;
+        for (i, res) in results.into_iter().enumerate() {
+            if let Err(e) = res {
+                self.note_failure(i, &e);
+                if first.is_none() {
+                    first = Some(e);
+                }
+            }
+        }
+        if let Some(e) = first {
+            self.put_scratch(parts);
+            return Err(e);
         }
         // gather: each shard's rows land in its output-column slice. No
         // zero-fill: the ranges tile 0..num_outputs exactly (validated
@@ -325,6 +402,7 @@ impl Executor for ShardedExecutor {
             }
         }
         self.put_scratch(parts);
+        Ok(())
     }
 }
 

@@ -12,7 +12,15 @@
 //!                                 fixed mode verifies within the lowered
 //!                                 plan's analytic error bound)
 //!   serve   [--model name=path]... [--shards N] [--exec-mode float|fixed]
-//!                                 multi-model registry server driver
+//!           [--remote-shard host:port]... [--remote-name name]
+//!           [--remote-check artifact-dir]
+//!                                 multi-model registry server driver;
+//!                                 remote shards gather behind one model
+//!   shard-worker --artifact dir [--listen host:port]
+//!           [--shards N --index I | --range a..b] [--exec-mode m]
+//!                                 serve one output-column range of an
+//!                                 artifact over the remote batch
+//!                                 protocol until killed
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
 //! form --name value and may repeat (`--model a=p1 --model b=p2`).
@@ -23,7 +31,7 @@ use lccnn::config::{
     ExecConfig, ExecMode, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig,
     ShardSpec,
 };
-use lccnn::exec::{Executor, NaiveExecutor};
+use lccnn::exec::{even_ranges, Executor, NaiveExecutor, RemoteOptions, ShardWorker};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::metrics::Metrics;
 use lccnn::nn::npy::NpyArray;
@@ -374,6 +382,58 @@ fn serve_roundtrip(
     Ok(bad)
 }
 
+/// Parse an `a..b` output-column range.
+fn parse_range(s: &str) -> Result<std::ops::Range<usize>> {
+    let (a, b) = s.split_once("..").with_context(|| format!("--range {s:?} (use a..b)"))?;
+    let lo: usize = a.trim().parse().map_err(|e| anyhow::anyhow!("--range {s:?}: {e}"))?;
+    let hi: usize = b.trim().parse().map_err(|e| anyhow::anyhow!("--range {s:?}: {e}"))?;
+    anyhow::ensure!(lo < hi, "--range {s:?} is empty");
+    Ok(lo..hi)
+}
+
+/// `shard-worker`: load an artifact dir (recipe.toml + weight.npy),
+/// build the pipeline executor restricted to one output-column range
+/// and serve it over the remote batch protocol until the process is
+/// killed. The range comes from `--shards N --index I` (the same even
+/// cut the gathering server assumes) or an explicit `--range a..b`.
+fn cmd_shard_worker(flags: Flags) -> Result<()> {
+    let artifact = flags.get("artifact").context("--artifact dir is required")?.clone();
+    let listen = flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let dir = Path::new(&artifact);
+    let mut recipe = Recipe::from_env_over(Recipe::for_checkpoint(dir)?);
+    if let Some(m) = flags.get("exec-mode") {
+        recipe.exec.exec_mode =
+            ExecMode::parse(m).with_context(|| format!("--exec-mode {m:?} (use float|fixed)"))?;
+    }
+    // never locally shard the range engine: the remote gather is the
+    // shard layer, and the cut plan is one shard's worth of work
+    recipe.shard = None;
+    let w = load_weight_matrix(dir)?;
+    let model = Pipeline::from_recipe(&recipe)?.run(&w)?;
+    let range = match flags.get("range") {
+        Some(r) => parse_range(r)?,
+        None => {
+            let shards: usize = flag(&flags, "shards", 1)?.max(1);
+            let index: usize = flag(&flags, "index", 0)?;
+            anyhow::ensure!(index < shards, "--index {index} out of --shards {shards}");
+            even_ranges(w.rows(), shards)[index].clone()
+        }
+    };
+    let exec = model.range_executor(range.clone())?;
+    let mode = recipe.exec.exec_mode;
+    let worker = ShardWorker::spawn(Arc::new(exec), range.clone(), mode, &listen)?;
+    println!(
+        "shard-worker: {artifact} rows {}..{} ({} mode) on {}",
+        range.start,
+        range.end,
+        mode.as_str(),
+        worker.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 /// `serve`: stand up the multi-model registry server and drive it with
 /// synthetic traffic — the smoke/demo driver for a deployment.
 ///
@@ -469,6 +529,47 @@ fn cmd_serve(flags: Flags) -> Result<()> {
         registry.register_graph(&name, d.graph(), base_exec, serve_cfg.max_batch);
         println!("demo model {name:?}: {rows}x{cols} weight, LCC graph {} adds", d.additions());
     }
+
+    // --remote-shard host:port (repeatable, after [serve] remote_shards /
+    // LCCNN_SERVE_REMOTE_SHARDS) gathers shard-worker processes behind
+    // one model entry; shard failure counters land on remote_metrics
+    let mut remote_addrs = serve_cfg.remote_shards.clone();
+    remote_addrs.extend(flags.get_all("remote-shard").iter().cloned());
+    let remote_name = flags.get("remote-name").cloned().unwrap_or_else(|| "remote".to_string());
+    let remote_metrics = Arc::new(Metrics::new());
+    if !remote_addrs.is_empty() {
+        let opts = RemoteOptions::from_config(&serve_cfg.remote);
+        let entry = registry.register_remote_sharded(
+            &remote_name,
+            &remote_addrs,
+            opts,
+            base_exec,
+            Arc::clone(&remote_metrics),
+            serve_cfg.max_batch,
+        )?;
+        println!(
+            "remote model {remote_name:?}: {} shard(s) [{}], {:?} inputs",
+            remote_addrs.len(),
+            remote_addrs.join(", "),
+            entry.input_dim()
+        );
+    }
+    // --remote-check dir: rebuild the artifact locally and hold the
+    // remote gather to bit-identical answers (the CI remote smoke)
+    let remote_oracle: Option<lccnn::compress::PipelineExecutor> = match flags.get("remote-check") {
+        Some(dir) if !remote_addrs.is_empty() => {
+            let p = Path::new(dir);
+            let mut recipe = Recipe::from_env_over(Recipe::for_checkpoint(p)?);
+            if let Some(m) = exec_mode {
+                recipe.exec.exec_mode = m;
+            }
+            let w = load_weight_matrix(p)?;
+            Some(Pipeline::from_recipe(&recipe)?.run(&w)?.into_executor())
+        }
+        Some(_) => bail!("--remote-check needs at least one remote shard"),
+        None => None,
+    };
+
     if registry.is_empty() {
         bail!("no models to serve: pass --model name=path, --config file.toml or --demo N");
     }
@@ -484,6 +585,27 @@ fn cmd_serve(flags: Flags) -> Result<()> {
         requests,
     );
     let server = Server::start_registry(Arc::clone(&registry), serve_cfg);
+    let mut check_failures = 0usize;
+    if let Some(oracle) = &remote_oracle {
+        let n = requests.clamp(1, 64);
+        let mut crng = rng.fork(997);
+        for _ in 0..n {
+            let x = crng.normal_vec(oracle.num_inputs(), 1.0);
+            let want = oracle.execute_one(&x);
+            match server.infer_model(&remote_name, x) {
+                Ok(y) if y == want => {}
+                Ok(y) => {
+                    eprintln!("remote check: served {y:?} != local {want:?}");
+                    check_failures += 1;
+                }
+                Err(e) => {
+                    eprintln!("remote check: request failed: {e}");
+                    check_failures += 1;
+                }
+            }
+        }
+        println!("remote check: {n} request(s) vs local artifact, {check_failures} mismatch(es)");
+    }
     let per_client = requests.div_ceil(clients);
     let errors = AtomicUsize::new(0);
     std::thread::scope(|scope| {
@@ -538,10 +660,16 @@ fn cmd_serve(flags: Flags) -> Result<()> {
     }
     println!("{}", t.render());
     println!("{}", server.metrics_text());
+    if !remote_addrs.is_empty() {
+        println!("remote shard metrics:\n{}", remote_metrics.render());
+    }
     let stats = server.shutdown();
     let failed = errors.load(Ordering::Relaxed);
-    if failed > 0 {
-        bail!("{failed} of {} requests failed", clients * per_client);
+    if failed + check_failures > 0 {
+        bail!(
+            "{failed} of {} requests failed, {check_failures} remote check mismatch(es)",
+            clients * per_client
+        );
     }
     println!("served {} requests across {} models, 0 errors", stats.requests, names.len());
     Ok(())
@@ -554,7 +682,8 @@ fn main() -> Result<()> {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: lccnn <info|fig2|table1|decompose|compress|serve> [--flag value ...]"
+                "usage: lccnn <info|fig2|table1|decompose|compress|serve|shard-worker> \
+                 [--flag value ...]"
             );
             return Ok(());
         }
@@ -566,6 +695,7 @@ fn main() -> Result<()> {
         "decompose" => cmd_decompose(parse_flags(&rest)?),
         "compress" => cmd_compress(parse_flags(&rest)?),
         "serve" => cmd_serve(parse_flags(&rest)?),
+        "shard-worker" => cmd_shard_worker(parse_flags(&rest)?),
         other => bail!("unknown command {other:?}"),
     }
 }

@@ -8,16 +8,27 @@
 //! an engine-private one — so a server hosting many models shares one
 //! set of hot worker threads instead of spawning per batch.
 
-use crate::exec::Executor;
+use crate::exec::{ExecError, Executor};
 use crate::nn::compressed::CompressedMlp;
 use crate::nn::mlp::INPUT;
 use crate::runtime::{HostTensor, PjrtService};
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::sync::Arc;
 
 /// Evaluates one batch of flattened inputs to one output vector each.
 pub trait BatchEvaluator: Send + Sync {
     fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Typed variant the router dispatches through: an
+    /// [`ExecError::Unavailable`] (dead remote shard) sheds the batch
+    /// with `ServeError::Shed` semantics instead of failing the model.
+    /// The default wraps [`BatchEvaluator::eval_batch`], mapping any
+    /// error to [`ExecError::Failed`] — backends over an [`Executor`]
+    /// override it to preserve the distinction.
+    fn try_eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, ExecError> {
+        self.eval_batch(xs).map_err(|e| ExecError::Failed { message: format!("{e:#}") })
+    }
+
     /// Preferred batch size (the batcher aims for it; backends must
     /// accept anything from 1 up to this).
     fn max_batch(&self) -> usize;
@@ -61,16 +72,23 @@ impl ExecutorBackend {
 
 impl BatchEvaluator for ExecutorBackend {
     fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.try_eval_batch(xs).map_err(anyhow::Error::from)
+    }
+
+    fn try_eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, ExecError> {
         for (i, x) in xs.iter().enumerate() {
             if x.len() != self.exec.num_inputs() {
-                bail!(
+                let message = format!(
                     "request {i}: {} inputs, executor wants {}",
                     x.len(),
                     self.exec.num_inputs()
                 );
+                return Err(ExecError::Failed { message });
             }
         }
-        Ok(self.exec.execute_batch(xs))
+        let mut ys = Vec::new();
+        self.exec.try_execute_batch_into(xs, &mut ys)?;
+        Ok(ys)
     }
 
     fn max_batch(&self) -> usize {

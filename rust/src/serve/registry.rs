@@ -16,9 +16,10 @@
 use super::backend::{BatchEvaluator, ExecutorBackend};
 use crate::compress::{Pipeline, Recipe};
 use crate::config::ExecConfig;
-use crate::exec::Executor;
+use crate::exec::{ExecError, Executor, RemoteOptions};
 use crate::graph::AdderGraph;
 use crate::lcc::LccConfig;
+use crate::metrics::Metrics;
 use crate::nn::load_weight_matrix;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -81,6 +82,13 @@ impl ModelEntry {
     /// Evaluate one batch on this model.
     pub fn eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.evaluator.eval_batch(xs)
+    }
+
+    /// Typed-error variant: the router dispatches through this so a
+    /// dead remote shard ([`ExecError::Unavailable`]) sheds the batch
+    /// instead of counting as a model failure.
+    pub fn try_eval_batch(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, ExecError> {
+        self.evaluator.try_eval_batch(xs)
     }
 }
 
@@ -265,6 +273,33 @@ impl ModelRegistry {
             Some(&Recipe::lcc_only(lcc, exec_cfg)),
             max_batch,
         )
+    }
+
+    /// Connect to remote `shard-worker` addresses, gather them behind
+    /// one [`crate::exec::ShardedExecutor`] and register it under
+    /// `name`. The entry serves like any local model; a dead shard
+    /// sheds its batches with typed errors instead of hanging them,
+    /// counted on `metrics` (`shard.<i>.dead` / `shard.<i>.retries`).
+    pub fn register_remote_sharded(
+        &self,
+        name: &str,
+        addrs: &[String],
+        opts: RemoteOptions,
+        exec_cfg: ExecConfig,
+        metrics: Arc<Metrics>,
+        max_batch: usize,
+    ) -> Result<Arc<ModelEntry>> {
+        let sharded = crate::exec::remote_sharded_executor(addrs, opts, exec_cfg, metrics)
+            .with_context(|| format!("remote model {name:?}"))?;
+        log::info!(
+            "model {name:?}: {} remote shard(s) [{}], {} inputs -> {} outputs",
+            sharded.num_shards(),
+            addrs.join(", "),
+            crate::exec::Executor::num_inputs(&sharded),
+            crate::exec::Executor::num_outputs(&sharded),
+        );
+        let executor: Arc<dyn Executor> = Arc::new(sharded);
+        Ok(self.insert_executor(name, executor, exec_cfg, max_batch).0)
     }
 
     /// Remove (and return) a model. In-flight requests that already

@@ -13,9 +13,13 @@
 //! in-flight requests (submit → response). A submit beyond the cap is
 //! load-shed immediately with [`ServeError::Shed`] and counted on the
 //! `model.<name>.shed` series — accepted requests are never dropped.
+//! A batch that fails with [`ExecError::Unavailable`] (a dead remote
+//! shard) is also shed, not errored: the model is degraded, and later
+//! batches retry the shard.
 
 use super::registry::ModelEntry;
 use crate::config::ServeConfig;
+use crate::exec::ExecError;
 use crate::metrics::Metrics;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -29,8 +33,9 @@ use std::time::{Duration, Instant};
 pub enum ServeError {
     /// no model of that name is registered (or it was hot-removed)
     UnknownModel { model: String },
-    /// the model's in-flight queue is at `ServeConfig::queue_capacity`;
-    /// the request was load-shed, not enqueued
+    /// the request was load-shed, not served: the model's in-flight
+    /// queue is at `ServeConfig::queue_capacity`, or a remote shard it
+    /// needs is unavailable
     Shed { model: String },
     /// the model's backend failed evaluating the batch
     Backend { model: String, message: String },
@@ -43,7 +48,7 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::UnknownModel { model } => write!(f, "unknown model {model:?}"),
             ServeError::Shed { model } => {
-                write!(f, "model {model:?} shed the request: queue at capacity")
+                write!(f, "model {model:?} shed the request: overloaded or shard down")
             }
             ServeError::Backend { model, message } => {
                 write!(f, "model {model:?} backend error: {message}")
@@ -277,7 +282,7 @@ fn serve_batch(batch: Vec<RoutedRequest>, metrics: &Metrics) {
     metrics.observe("batch_size", batch.len() as f64);
     metrics.observe(&format!("model.{model}.batch_size"), batch.len() as f64);
     let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
-    match entry.eval_batch(&xs) {
+    match entry.try_eval_batch(&xs) {
         Ok(ys) => {
             let latency_key = format!("model.{model}.latency_us");
             for (req, y) in batch.into_iter().zip(ys) {
@@ -287,8 +292,21 @@ fn serve_batch(batch: Vec<RoutedRequest>, metrics: &Metrics) {
                 let _ = req.resp.send(Ok(y));
             }
         }
-        Err(e) => {
-            let err = ServeError::Backend { model: model.to_string(), message: format!("{e:#}") };
+        // a dead remote shard sheds the batch (the model is degraded,
+        // not broken: a later batch may find the shard back) — the
+        // backend already counted shard.<i>.dead on its own metrics
+        Err(ExecError::Unavailable { shard, message }) => {
+            let what = format!("shard {shard} unavailable, shedding {n} request(s)");
+            log::warn!("model {model:?}: {what}: {message}");
+            metrics.incr("shed", n);
+            metrics.incr(&format!("model.{model}.shed"), n);
+            let err = ServeError::Shed { model: model.to_string() };
+            for req in batch {
+                let _ = req.resp.send(Err(err.clone()));
+            }
+        }
+        Err(ExecError::Failed { message }) => {
+            let err = ServeError::Backend { model: model.to_string(), message };
             metrics.incr("errors", 1);
             metrics.incr(&format!("model.{model}.errors"), 1);
             for req in batch {

@@ -1,0 +1,351 @@
+//! Integration: remote shard serving (`exec::remote`) over loopback
+//! TCP — in-process `ShardWorker`s on ephemeral ports, no fixtures.
+//!
+//! * Equivalence: a remote gather is **bit-identical** to the local
+//!   `ShardedExecutor` over the same cuts and to the full engine, for
+//!   1/2/3 shards × uneven ranges × `float|fixed`.
+//! * Robustness: garbage, wrong-version and oversized-length frames
+//!   get typed error frames (worker side) or typed connect errors
+//!   (client side) — never a panic or a hang.
+//! * Failover: a killed shard sheds within the configured timeouts
+//!   with `ExecError::Unavailable` and a `shard.<i>.dead` count;
+//!   survivors keep serving; a slow-loris peer stalls only itself.
+//! * Serving: `ModelRegistry::register_remote_sharded` entries shed
+//!   (`ServeError::Shed` + `model.<name>.shed`) when a worker dies,
+//!   while local models on the same server keep answering.
+
+use lccnn::config::{ExecConfig, ExecMode, ServeConfig};
+use lccnn::exec::remote::protocol;
+use lccnn::exec::{
+    remote_sharded_executor, BatchEngine, ExecError, ExecPlan, Executor, FixedEngine,
+    RemoteExecutor, RemoteOptions, ShardWorker, ShardedExecutor,
+};
+use lccnn::graph::{AdderGraph, Operand, OutputSpec};
+use lccnn::metrics::Metrics;
+use lccnn::serve::{ModelRegistry, Server};
+use lccnn::util::Rng;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn wide_graph(inputs: usize, nodes: usize, outputs: usize, seed: u64) -> AdderGraph {
+    let mut rng = Rng::new(seed);
+    let mut g = AdderGraph::new(inputs);
+    let mut refs: Vec<Operand> = (0..inputs).map(Operand::input).collect();
+    for _ in 0..nodes {
+        let a = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+        let b = refs[rng.below(refs.len())].scaled(rng.below(5) as i32 - 2, rng.f32() < 0.5);
+        refs.push(g.push_add(a, b));
+    }
+    let outs = (0..outputs)
+        .map(|_| {
+            if rng.f32() < 0.1 {
+                OutputSpec::Zero
+            } else {
+                OutputSpec::Ref(refs[rng.below(refs.len())].scaled(1, false))
+            }
+        })
+        .collect();
+    g.set_outputs(outs);
+    g
+}
+
+/// Serial engine over one output-column cut of `plan`, float or fixed.
+fn shard_engine(plan: &ExecPlan, range: &Range<usize>, mode: ExecMode) -> Arc<dyn Executor> {
+    let sub = plan.extract_output_range(range.start, range.end);
+    let cfg = ExecConfig { exec_mode: mode, ..ExecConfig::serial() };
+    match mode {
+        ExecMode::Float => Arc::new(BatchEngine::from_plan(sub, cfg)),
+        ExecMode::Fixed => Arc::new(FixedEngine::from_plan(&sub, cfg).expect("±2^k plans lower")),
+    }
+}
+
+/// One worker per cut, each on an ephemeral loopback port.
+fn spawn_workers(
+    plan: &ExecPlan,
+    cuts: &[Range<usize>],
+    mode: ExecMode,
+) -> (Vec<ShardWorker>, Vec<String>) {
+    let workers: Vec<ShardWorker> = cuts
+        .iter()
+        .map(|r| {
+            ShardWorker::spawn(shard_engine(plan, r, mode), r.clone(), mode, "127.0.0.1:0")
+                .expect("spawn shard worker")
+        })
+        .collect();
+    let addrs = workers.iter().map(|w| w.addr().to_string()).collect();
+    (workers, addrs)
+}
+
+/// Short bounded timeouts so failover tests finish in milliseconds,
+/// not the production defaults.
+fn fast_opts() -> RemoteOptions {
+    RemoteOptions {
+        connect_timeout: Duration::from_millis(300),
+        read_timeout: Duration::from_millis(600),
+        write_timeout: Duration::from_millis(600),
+        retries: 1,
+        backoff: Duration::from_millis(10),
+        cooldown: Duration::from_millis(150),
+        ..RemoteOptions::default()
+    }
+}
+
+#[test]
+fn remote_gather_bit_identical_to_local_across_shards_and_modes() {
+    let g = wide_graph(12, 40, 9, 7);
+    let plan = ExecPlan::new(&g);
+    let oracle = lccnn::exec::NaiveExecutor::new(g.clone());
+    let mut rng = Rng::new(0x2E307E);
+    let xs: Vec<Vec<f32>> = (0..13).map(|_| rng.normal_vec(12, 1.0)).collect();
+    let cuts: [&[Range<usize>]; 3] = [&[0..9], &[0..2, 2..9], &[0..4, 4..5, 5..9]];
+    for mode in [ExecMode::Float, ExecMode::Fixed] {
+        let full = shard_engine(&plan, &(0..9), mode);
+        let want = full.execute_batch(&xs);
+        if mode == ExecMode::Float {
+            assert_eq!(want, oracle.execute_batch(&xs), "float engine is the oracle bit-exact");
+        }
+        for cut in cuts {
+            // the local reference: the same cuts gathered in-process
+            let parts: Vec<(Range<usize>, Arc<dyn Executor>)> =
+                cut.iter().map(|r| (r.clone(), shard_engine(&plan, r, mode))).collect();
+            let local = ShardedExecutor::from_executors(parts, ExecConfig::serial()).unwrap();
+            assert_eq!(local.execute_batch(&xs), want, "{mode:?} local gather over {cut:?}");
+
+            let (workers, addrs) = spawn_workers(&plan, cut, mode);
+            let metrics = Arc::new(Metrics::new());
+            let remote =
+                remote_sharded_executor(&addrs, fast_opts(), ExecConfig::serial(), metrics)
+                    .expect("connect all shards");
+            assert_eq!(remote.num_shards(), cut.len());
+            assert_eq!(remote.num_inputs(), 12);
+            assert_eq!(remote.num_outputs(), 9);
+            let got = remote.execute_batch(&xs);
+            assert_eq!(got, want, "{mode:?} remote gather over {cut:?} must be bit-identical");
+            // empty batch round-trips too
+            assert_eq!(remote.execute_batch(&[]), Vec::<Vec<f32>>::new());
+            drop(workers);
+        }
+    }
+}
+
+#[test]
+fn remote_handshake_reports_the_shard_range() {
+    let g = wide_graph(6, 20, 5, 11);
+    let plan = ExecPlan::new(&g);
+    let (workers, addrs) = spawn_workers(&plan, &[1..4], ExecMode::Float);
+    let client = RemoteExecutor::connect(&addrs[0], fast_opts()).unwrap();
+    assert_eq!(client.range(), 1..4);
+    assert_eq!(client.num_inputs(), 6);
+    assert_eq!(client.num_outputs(), 3);
+    assert_eq!(client.name(), "remote-shard");
+    // a gather whose single shard does not start at output 0 is rejected
+    let metrics = Arc::new(Metrics::new());
+    let err = remote_sharded_executor(&addrs, fast_opts(), ExecConfig::serial(), metrics);
+    assert!(err.is_err(), "partial-coverage gather must be rejected");
+    drop(workers);
+}
+
+/// Worker-side robustness: garbage, wrong-version and oversized-length
+/// frames each get a typed `Err` frame (or a clean close) and never
+/// take the worker down — a fresh client still serves afterwards.
+#[test]
+fn worker_answers_garbage_with_typed_errors_and_survives() {
+    let g = wide_graph(4, 12, 3, 3);
+    let plan = ExecPlan::new(&g);
+    let (workers, addrs) = spawn_workers(&plan, &[0..3], ExecMode::Float);
+
+    let mut bad_version = Vec::new();
+    bad_version.extend_from_slice(&protocol::MAGIC.to_le_bytes());
+    bad_version.extend_from_slice(&9u16.to_le_bytes());
+    bad_version.extend_from_slice(&[3, 1]);
+    bad_version.extend_from_slice(&7u64.to_le_bytes());
+    bad_version.extend_from_slice(&0u32.to_le_bytes());
+
+    let mut oversized = Vec::new();
+    oversized.extend_from_slice(&protocol::MAGIC.to_le_bytes());
+    oversized.extend_from_slice(&protocol::VERSION.to_le_bytes());
+    oversized.extend_from_slice(&[3, 1]);
+    oversized.extend_from_slice(&7u64.to_le_bytes());
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+
+    let attacks: [(&str, Vec<u8>); 3] = [
+        ("random bytes", vec![0xAB; 64]),
+        ("wrong version", bad_version),
+        ("oversized length prefix", oversized),
+    ];
+    for (name, bytes) in &attacks {
+        let mut s = TcpStream::connect(&addrs[0]).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(3))).unwrap();
+        s.write_all(bytes).unwrap();
+        match protocol::read_frame(&mut s, protocol::MAX_FRAME) {
+            Ok(frame) => {
+                assert_eq!(frame.kind, protocol::Kind::Err, "{name}: typed error frame");
+                let (code, _msg) = protocol::decode_error(&frame.payload).unwrap();
+                assert_eq!(code, protocol::ERR_PROTOCOL, "{name}");
+            }
+            // a close without a reply is acceptable; a hang is not
+            Err(protocol::ProtocolError::Truncated | protocol::ProtocolError::Io(_)) => {}
+            Err(e) => panic!("{name}: unexpected client-side failure {e}"),
+        }
+    }
+    // half a header then close: the worker treats it as a clean EOF
+    let mut s = TcpStream::connect(&addrs[0]).unwrap();
+    s.write_all(&protocol::MAGIC.to_le_bytes()).unwrap();
+    drop(s);
+
+    // the worker survived every attack and still serves real clients
+    let client = RemoteExecutor::connect(&addrs[0], fast_opts()).unwrap();
+    let xs = vec![vec![1.0, 2.0, 3.0, 4.0]];
+    let want = shard_engine(&plan, &(0..3), ExecMode::Float).execute_batch(&xs);
+    assert_eq!(client.execute_batch(&xs), want);
+    drop(workers);
+}
+
+/// Client-side robustness: a server speaking garbage (or nothing) at
+/// the handshake yields a typed, bounded connect error — never a hang.
+#[test]
+fn client_rejects_garbage_and_silent_servers_with_bounded_typed_errors() {
+    // garbage greeter: accepts and answers the handshake with junk
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let greeter = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            let _ = s.write_all(&[0xEE; 40]);
+            std::thread::sleep(Duration::from_millis(200));
+        }
+    });
+    let t0 = Instant::now();
+    let err = RemoteExecutor::connect(&addr, fast_opts()).unwrap_err();
+    assert!(matches!(err, ExecError::Unavailable { .. }), "typed: {err}");
+    assert!(t0.elapsed() < Duration::from_secs(5), "bounded: {:?}", t0.elapsed());
+    greeter.join().unwrap();
+
+    // accept-then-hang: the handshake read must hit read_timeout
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let hanger = std::thread::spawn(move || {
+        if let Ok((s, _)) = listener.accept() {
+            std::thread::sleep(Duration::from_millis(1500));
+            drop(s);
+        }
+    });
+    let t0 = Instant::now();
+    let err = RemoteExecutor::connect(&addr, fast_opts()).unwrap_err();
+    assert!(matches!(err, ExecError::Unavailable { .. }), "typed: {err}");
+    let bound = fast_opts().connect_timeout + fast_opts().read_timeout + Duration::from_secs(2);
+    assert!(t0.elapsed() < bound, "hang-bounded: {:?}", t0.elapsed());
+    hanger.join().unwrap();
+}
+
+#[test]
+fn killed_shard_sheds_within_timeout_and_survivor_keeps_serving() {
+    let g = wide_graph(10, 30, 8, 21);
+    let plan = ExecPlan::new(&g);
+    let cuts = [0..5, 5..8];
+    let (mut workers, addrs) = spawn_workers(&plan, &cuts, ExecMode::Float);
+    let metrics = Arc::new(Metrics::new());
+    let remote =
+        remote_sharded_executor(&addrs, fast_opts(), ExecConfig::serial(), Arc::clone(&metrics))
+            .unwrap();
+    let mut rng = Rng::new(5150);
+    let xs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(10, 1.0)).collect();
+    let want = shard_engine(&plan, &(0..8), ExecMode::Float).execute_batch(&xs);
+    assert_eq!(remote.execute_batch(&xs), want, "healthy gather matches local");
+
+    workers[0].stop(); // port provably closed once stop() returns
+    let t0 = Instant::now();
+    let mut ys = Vec::new();
+    let err = remote.try_execute_batch_into(&xs, &mut ys).unwrap_err();
+    assert!(matches!(err, ExecError::Unavailable { .. }), "typed shed: {err}");
+    let o = fast_opts();
+    let per_try = o.connect_timeout + o.read_timeout + o.write_timeout + o.backoff * 256;
+    let bound = per_try * (o.retries + 1) + Duration::from_secs(2);
+    assert!(t0.elapsed() < bound, "shed within timeouts: {:?} > {bound:?}", t0.elapsed());
+    assert!(metrics.counter("shard.0.dead") >= 1, "dead shard counted");
+    assert_eq!(metrics.counter("shard.1.dead"), 0, "survivor not counted dead");
+
+    // dead cooldown: the next batch sheds near-instantly, no re-dial
+    let t1 = Instant::now();
+    let err = remote.try_execute_batch_into(&xs, &mut ys).unwrap_err();
+    assert!(matches!(err, ExecError::Unavailable { .. }));
+    assert!(t1.elapsed() < o.connect_timeout, "cooldown fast-fail: {:?}", t1.elapsed());
+    assert!(metrics.counter("shard.0.dead") >= 2);
+
+    // the surviving worker still answers its own columns bit-exact
+    let survivor = RemoteExecutor::connect(&addrs[1], fast_opts()).unwrap();
+    let got = survivor.execute_batch(&xs);
+    for (row, full) in got.iter().zip(&want) {
+        assert_eq!(row.as_slice(), &full[5..8], "survivor's slice matches");
+    }
+    drop(workers);
+}
+
+/// A peer that trickles a partial header and stalls occupies only its
+/// own connection: concurrent real clients are served promptly.
+#[test]
+fn slow_loris_peer_does_not_stall_other_clients() {
+    let g = wide_graph(5, 15, 4, 9);
+    let plan = ExecPlan::new(&g);
+    let (workers, addrs) = spawn_workers(&plan, &[0..4], ExecMode::Float);
+    let mut loris = TcpStream::connect(&addrs[0]).unwrap();
+    loris.write_all(&protocol::MAGIC.to_le_bytes()[..2]).unwrap(); // 2 of 20 header bytes
+
+    let t0 = Instant::now();
+    let client = RemoteExecutor::connect(&addrs[0], fast_opts()).unwrap();
+    let xs = vec![vec![1.0, -2.0, 0.5, 3.0, 0.0]];
+    let want = shard_engine(&plan, &(0..4), ExecMode::Float).execute_batch(&xs);
+    assert_eq!(client.execute_batch(&xs), want);
+    assert!(t0.elapsed() < Duration::from_secs(5), "loris must not stall others");
+    drop(loris);
+    drop(workers);
+}
+
+#[test]
+fn server_sheds_remote_model_when_worker_dies_and_local_model_survives() {
+    let g = wide_graph(10, 30, 8, 33);
+    let plan = ExecPlan::new(&g);
+    let cuts = [0..3, 3..8];
+    let (mut workers, addrs) = spawn_workers(&plan, &cuts, ExecMode::Float);
+
+    let registry = Arc::new(ModelRegistry::new());
+    let shard_metrics = Arc::new(Metrics::new());
+    registry
+        .register_remote_sharded(
+            "far",
+            &addrs,
+            fast_opts(),
+            ExecConfig::serial(),
+            Arc::clone(&shard_metrics),
+            8,
+        )
+        .unwrap();
+    let local_g = wide_graph(4, 10, 2, 44);
+    registry.register_graph("near", &local_g, ExecConfig::serial(), 8);
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig { max_batch: 4, batch_timeout_us: 200, ..Default::default() },
+    );
+
+    let mut rng = Rng::new(77);
+    let x = rng.normal_vec(10, 1.0);
+    let want = shard_engine(&plan, &(0..8), ExecMode::Float).execute_one(&x);
+    assert_eq!(server.infer_model("far", x.clone()).unwrap(), want, "remote model serves");
+    let lx = rng.normal_vec(4, 1.0);
+    let lwant = lccnn::exec::NaiveExecutor::new(local_g.clone()).execute_one(&lx);
+    assert_eq!(server.infer_model("near", lx.clone()).unwrap(), lwant);
+
+    workers[1].stop();
+    let err = server.infer_model("far", x.clone()).unwrap_err();
+    assert!(err.contains("shed"), "dead shard must surface as a shed, got: {err}");
+    assert!(server.metrics().counter("model.far.shed") >= 1, "shed counted per model");
+    assert_eq!(server.metrics().counter("model.far.errors"), 0, "shed is not a backend error");
+    assert!(shard_metrics.counter("shard.1.dead") >= 1, "dead shard indexed correctly");
+
+    // the local model on the same server is unaffected
+    assert_eq!(server.infer_model("near", lx).unwrap(), lwant, "local model keeps serving");
+    server.shutdown();
+    drop(workers);
+}
