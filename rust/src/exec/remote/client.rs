@@ -153,11 +153,21 @@ fn io_str(what: &str, addr: &str, e: std::io::Error) -> ProtocolError {
 fn dial(addr: &str, opts: &RemoteOptions) -> Result<(TcpStream, ShardInfo), ProtocolError> {
     let sockets: Vec<SocketAddr> =
         addr.to_socket_addrs().map_err(|e| io_str("resolve", addr, e))?.collect();
-    let first = sockets
-        .first()
-        .ok_or_else(|| ProtocolError::Io(format!("resolve {addr}: no addresses")))?;
-    let mut stream = TcpStream::connect_timeout(first, opts.connect_timeout)
-        .map_err(|e| io_str("connect", addr, e))?;
+    // Resolution can yield several addresses (e.g. IPv6 first while the
+    // worker listens on IPv4): try each in order, keeping the first
+    // successful connect and the last failure for the error path.
+    let mut dialed: Result<TcpStream, ProtocolError> =
+        Err(ProtocolError::Io(format!("resolve {addr}: no addresses")));
+    for sa in &sockets {
+        match TcpStream::connect_timeout(sa, opts.connect_timeout) {
+            Ok(s) => {
+                dialed = Ok(s);
+                break;
+            }
+            Err(e) => dialed = Err(io_str("connect", addr, e)),
+        }
+    }
+    let mut stream = dialed?;
     stream.set_read_timeout(Some(opts.read_timeout)).map_err(|e| io_str("configure", addr, e))?;
     stream.set_write_timeout(Some(opts.write_timeout)).map_err(|e| io_str("configure", addr, e))?;
     stream.set_nodelay(true).ok();

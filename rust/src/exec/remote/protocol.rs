@@ -259,13 +259,24 @@ pub fn decode_shard_info(p: &[u8]) -> Result<ShardInfo, ProtocolError> {
     Ok(info)
 }
 
+/// Wire size of a `rows`×`width` batch (`8`-byte dims + 4 bytes per
+/// value), or `None` when the claim overflows u64 — hostile dims must
+/// fail the size check, not wrap past it.
+fn batch_bytes(rows: usize, width: usize) -> Option<u64> {
+    (rows as u64)
+        .checked_mul(width as u64)
+        .and_then(|v| v.checked_mul(4))
+        .and_then(|v| v.checked_add(8))
+}
+
 fn check_batch_size(rows: usize, width: usize) -> Result<(), ProtocolError> {
-    let bytes = 8u64 + rows as u64 * width as u64 * 4;
-    if bytes > MAX_FRAME as u64 {
-        let len = bytes.min(u32::MAX as u64) as u32;
-        return Err(ProtocolError::FrameTooLarge { len, max: MAX_FRAME });
+    match batch_bytes(rows, width) {
+        Some(bytes) if bytes <= MAX_FRAME as u64 => Ok(()),
+        bytes => {
+            let len = bytes.unwrap_or(u64::MAX).min(u32::MAX as u64) as u32;
+            Err(ProtocolError::FrameTooLarge { len, max: MAX_FRAME })
+        }
     }
-    Ok(())
 }
 
 fn decode_batch_dims(p: &[u8]) -> Result<(usize, usize), ProtocolError> {
@@ -275,13 +286,13 @@ fn decode_batch_dims(p: &[u8]) -> Result<(usize, usize), ProtocolError> {
     }
     let rows = u32::from_le_bytes(p[0..4].try_into().expect("4-byte slice")) as usize;
     let width = u32::from_le_bytes(p[4..8].try_into().expect("4-byte slice")) as usize;
-    // The expected size is computed in u64 and compared against the
-    // (already frame-capped) payload length before any row allocation,
-    // so a hostile rows×width claim cannot allocate anything.
-    let expect = 8u64 + rows as u64 * width as u64 * 4;
-    if expect != p.len() as u64 {
+    // The expected size is computed in checked u64 arithmetic and
+    // compared against the (already frame-capped) payload length before
+    // any row allocation, so a hostile rows×width claim can neither
+    // allocate anything nor wrap around the check.
+    if batch_bytes(rows, width) != Some(p.len() as u64) {
         return Err(ProtocolError::BadPayload(format!(
-            "batch claims {rows}x{width} ({expect} bytes), payload is {}",
+            "batch claims {rows}x{width}, payload is {} bytes",
             p.len()
         )));
     }
@@ -483,6 +494,23 @@ mod tests {
     fn i32_batch_round_trips() {
         let rows = vec![vec![i32::MIN, -1, 0, 1, i32::MAX]];
         assert_eq!(decode_rows_i32(&encode_rows_i32(&rows).unwrap()).unwrap(), rows);
+    }
+
+    #[test]
+    fn overflowing_batch_dims_are_rejected_without_panicking() {
+        // rows=2^31, width=2^31: 8 + rows*width*4 wraps u64 to exactly
+        // 8, the payload length of a dims-only batch — wrapping
+        // arithmetic would pass validation and then try a ~48 GiB
+        // allocation. The checked path must reject it as a typed error.
+        let mut p = Vec::new();
+        p.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        p.extend_from_slice(&(1u32 << 31).to_le_bytes());
+        assert!(matches!(decode_rows_f32(&p), Err(ProtocolError::BadPayload(_))));
+        assert!(matches!(decode_rows_i32(&p), Err(ProtocolError::BadPayload(_))));
+        // Max-dims claim (u32::MAX × u32::MAX) also lands typed.
+        let mut p = vec![0xFFu8; 8];
+        p.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(decode_rows_f32(&p), Err(ProtocolError::BadPayload(_))));
     }
 
     #[test]

@@ -8,20 +8,33 @@
 //! its own thread, garbage frames get a best-effort typed error frame
 //! and a close (a desynchronized stream cannot be re-synced), engine
 //! failures become error frames, and nothing a client sends can panic
-//! the process or allocate past [`protocol::MAX_FRAME`]. A slow-loris
-//! peer that trickles partial frames is bounded by the per-read socket
-//! timeout: the worker keeps polling its stop flag and the stalled
-//! connection never blocks the accept loop or other clients.
+//! the process or allocate past [`protocol::MAX_FRAME`]. Reads
+//! distinguish *idle* from *mid-frame*: a timeout with zero bytes of
+//! the current frame consumed just re-polls the stop flag, while a
+//! frame that has started may stall (e.g. a large batch trickling in)
+//! for up to [`FRAME_DEADLINE`] before the connection is declared
+//! desynchronized — so a legitimate slow client is never cut off
+//! mid-transfer, and a slow-loris peer is bounded by the deadline and
+//! stalls only its own connection, never the accept loop or other
+//! clients.
 
 use super::protocol::{self, Frame, Kind, Lanes, ProtocolError, ShardInfo};
 use crate::config::ExecMode;
 use crate::exec::Executor;
+use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// How often a blocked read wakes to poll the stop flag.
+const IDLE_POLL: Duration = Duration::from_millis(100);
+/// Once a frame has started arriving, how long the whole frame may
+/// take before the connection is declared desynchronized. Generous so
+/// a live-but-slow client can finish a large (up to 16 MiB) frame.
+const FRAME_DEADLINE: Duration = Duration::from_secs(5);
 
 /// A running shard server; dropping (or [`ShardWorker::stop`]) shuts
 /// it down and joins every thread.
@@ -121,22 +134,81 @@ fn accept_loop(
     }
 }
 
+/// A [`Read`] adapter over the connection socket that makes frame
+/// reads timeout-safe. The socket's own read timeout is the short
+/// [`IDLE_POLL`]; this wrapper turns those wakeups into three distinct
+/// behaviors so `read_exact` never loses partially-consumed bytes:
+///
+/// * zero bytes of the current frame consumed → surface the timeout
+///   (the caller treats it as idle and re-polls the stop flag);
+/// * mid-frame and under [`FRAME_DEADLINE`] → keep reading, so a slow
+///   client's stalled-but-live transfer resumes instead of restarting
+///   frame parsing mid-stream;
+/// * mid-frame past the deadline (or the worker is stopping) →
+///   surface the timeout; the caller closes the connection, which is
+///   the only safe answer once a frame is truly abandoned.
+struct FrameReader<'a> {
+    stream: &'a TcpStream,
+    stop: &'a AtomicBool,
+    /// When the first byte of the current frame arrived; `None` while
+    /// idle between frames.
+    started_at: Option<Instant>,
+}
+
+impl Read for FrameReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        use std::io::ErrorKind;
+        loop {
+            match self.stream.read(buf) {
+                Ok(0) => return Ok(0),
+                Ok(n) => {
+                    self.started_at.get_or_insert_with(Instant::now);
+                    return Ok(n);
+                }
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    let past_deadline =
+                        self.started_at.is_some_and(|t0| t0.elapsed() >= FRAME_DEADLINE);
+                    if self.started_at.is_none()
+                        || past_deadline
+                        || self.stop.load(Ordering::SeqCst)
+                    {
+                        return Err(e);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
 fn handle_conn(
-    mut stream: TcpStream,
+    stream: TcpStream,
     engine: Arc<dyn Executor>,
     range: Range<usize>,
     mode: ExecMode,
     stop: Arc<AtomicBool>,
 ) {
     stream.set_nodelay(true).ok();
-    // Short read timeout: the loop wakes to poll the stop flag, and a
-    // slow-loris peer can stall only its own connection, never a join.
-    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    // Short socket timeout so blocked reads wake to poll the stop
+    // flag; FrameReader layers the idle/mid-frame policy on top.
+    stream.set_read_timeout(Some(IDLE_POLL)).ok();
     stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    let mut stream = &stream;
     while !stop.load(Ordering::SeqCst) {
-        let frame = match protocol::read_frame(&mut stream, protocol::MAX_FRAME) {
+        let mut reader = FrameReader { stream, stop: &stop, started_at: None };
+        let frame = match protocol::read_frame(&mut reader, protocol::MAX_FRAME) {
             Ok(f) => f,
-            Err(ProtocolError::TimedOut) => continue,
+            Err(ProtocolError::TimedOut) if reader.started_at.is_none() => continue,
+            Err(ProtocolError::TimedOut) => {
+                // A frame started but stalled past FRAME_DEADLINE (or
+                // the worker is stopping): the stream is mid-frame and
+                // cannot be re-synced — answer typed and close.
+                let msg = "frame stalled mid-transfer past the deadline";
+                let payload = protocol::encode_error(protocol::ERR_PROTOCOL, msg);
+                let _ = protocol::write_frame(&mut stream, Kind::Err, Lanes::None, 0, &payload);
+                return;
+            }
             Err(ProtocolError::Truncated) => return,
             Err(e) => {
                 // Garbage on the wire: answer typed, then close — after
