@@ -177,6 +177,42 @@ fn main() {
         drop(exec);
         drop(workers);
     }
+    // the same split with two replica workers per output range (4
+    // workers total): the replication tax — the client-side failover
+    // layer sitting on the hot path even while every replica is healthy
+    // — vs the plain remote2 rows above
+    {
+        let recipe = Recipe { exec: serving_exec(PoolMode::Persistent), ..Recipe::default() };
+        let w1 = synthetic_reg_weights(0, 120);
+        let model =
+            Pipeline::from_recipe(&recipe).expect("valid recipe").run(&w1).expect("pipeline runs");
+        let cuts = even_ranges(w1.rows(), 2);
+        let workers: Vec<ShardWorker> = cuts
+            .iter()
+            .flat_map(|r| [r.clone(), r.clone()]) // two replicas per range
+            .map(|r| {
+                let e = model.range_executor(r.clone()).expect("range executor");
+                ShardWorker::spawn(Arc::new(e), r, ExecMode::Float, "127.0.0.1:0")
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+        let remote = remote_sharded_executor(
+            &addrs,
+            RemoteOptions::default(),
+            serving_exec(PoolMode::Persistent),
+            Arc::new(Metrics::new()),
+        )
+        .expect("connect remote replicas");
+        assert_eq!(remote.num_shards(), 2, "replicas must group per range");
+        let exec: Arc<dyn Executor> = Arc::new(remote);
+        for burst in [1usize, 8, 32] {
+            let backend = Arc::new(ExecutorBackend::new(Arc::clone(&exec), 64));
+            run(backend, "pipeline-exec/remote2-replica", burst, n, &mut t);
+        }
+        drop(exec);
+        drop(workers);
+    }
     // the pre-exec-engine behaviour (forward_one per sample) for comparison
     for burst in [1usize, 8, 32] {
         let model = Arc::new(compressed_model(&params, ExecConfig::default()));
@@ -220,6 +256,9 @@ fn main() {
     println!("pipeline-exec/remote2 serves the artifact split across two");
     println!("shard-worker TCP servers on loopback (bit-identical gather) —");
     println!("the wire tax vs pipeline-exec/shard2 for EXPERIMENTS.md");
-    println!("§Remote-shards.");
+    println!("§Remote-shards. /remote2-replica doubles each range to two");
+    println!("replica workers — the client-side failover layer's overhead");
+    println!("on an all-healthy path (its win shows when a replica dies:");
+    println!("zero sheds).");
     println!("worker pool after run: {:?}", lccnn::exec::global_pool().stats());
 }

@@ -155,7 +155,10 @@ pub struct ServeConfig {
     /// remote shard-worker addresses (`host:port`) gathered behind one
     /// served model: `[serve] remote_shards = ["h:p", ...]` in TOML,
     /// `LCCNN_SERVE_REMOTE_SHARDS` as a comma list, or repeatable
-    /// `--remote-shard` CLI flags (merged after config/env)
+    /// `--remote-shard` CLI flags (merged after config/env). An entry
+    /// may list replicas of one range as `"h:p|h:p"` — and any
+    /// addresses whose handshakes report the same output range are
+    /// grouped as replicas with client-side failover regardless
     pub remote_shards: Vec<String>,
     /// transport tuning for those shards
     pub remote: RemoteConfig,
@@ -269,11 +272,22 @@ pub struct RemoteConfig {
     pub retries: u32,
     /// Base backoff before retry `k` is `backoff_ms << (k-1)` ms.
     pub backoff_ms: u64,
+    /// Dead-cooldown window, in milliseconds: after all retries fail,
+    /// batches shed instantly for this long, then a single half-open
+    /// probe attempt re-dials (success un-deads the shard, failure
+    /// re-arms the window).
+    pub cooldown_ms: u64,
 }
 
 impl Default for RemoteConfig {
     fn default() -> Self {
-        RemoteConfig { connect_timeout_ms: 1000, read_timeout_ms: 5000, retries: 2, backoff_ms: 50 }
+        RemoteConfig {
+            connect_timeout_ms: 1000,
+            read_timeout_ms: 5000,
+            retries: 2,
+            backoff_ms: 50,
+            cooldown_ms: 250,
+        }
     }
 }
 
@@ -296,12 +310,15 @@ impl RemoteConfig {
         if let Some(v) = read("backoff_ms") {
             c.backoff_ms = v;
         }
+        if let Some(v) = read("cooldown_ms") {
+            c.cooldown_ms = v.max(1);
+        }
         c
     }
 
     /// Environment overrides: `LCCNN_REMOTE_CONNECT_TIMEOUT_MS`,
     /// `LCCNN_REMOTE_READ_TIMEOUT_MS`, `LCCNN_REMOTE_RETRIES`,
-    /// `LCCNN_REMOTE_BACKOFF_MS`.
+    /// `LCCNN_REMOTE_BACKOFF_MS`, `LCCNN_REMOTE_COOLDOWN_MS`.
     pub fn from_env_over(mut c: RemoteConfig) -> RemoteConfig {
         fn env_parse<T: std::str::FromStr>(name: &str) -> Option<T> {
             std::env::var(name).ok().and_then(|v| v.parse().ok())
@@ -317,6 +334,9 @@ impl RemoteConfig {
         }
         if let Some(v) = env_parse::<u64>("LCCNN_REMOTE_BACKOFF_MS") {
             c.backoff_ms = v;
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_REMOTE_COOLDOWN_MS") {
+            c.cooldown_ms = v.max(1);
         }
         c
     }
@@ -901,18 +921,20 @@ mod tests {
         let p = dir.join("remote.toml");
         std::fs::write(
             &p,
-            "[serve]\nremote_shards = [\"10.0.0.1:7411\", \"10.0.0.2:7411\"]\n\
+            "[serve]\nremote_shards = [\"10.0.0.1:7411|10.0.0.3:7411\", \"10.0.0.2:7411\"]\n\
              [serve.remote]\nconnect_timeout_ms = 250\nread_timeout_ms = 900\n\
-             retries = 1\nbackoff_ms = 20\n",
+             retries = 1\nbackoff_ms = 20\ncooldown_ms = 125\n",
         )
         .unwrap();
         let c = ServeConfig::from_toml(&p).unwrap();
-        assert_eq!(c.remote_shards, vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
+        // replica lists ride through verbatim; the connector splits '|'
+        assert_eq!(c.remote_shards, vec!["10.0.0.1:7411|10.0.0.3:7411", "10.0.0.2:7411"]);
         let want = RemoteConfig {
             connect_timeout_ms: 250,
             read_timeout_ms: 900,
             retries: 1,
             backoff_ms: 20,
+            cooldown_ms: 125,
         };
         assert_eq!(c.remote, want);
         assert!(ServeConfig::default().remote_shards.is_empty());

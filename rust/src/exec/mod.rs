@@ -87,7 +87,9 @@ pub use fixed::{po2_shift_negate, FixedEngine, FixedPlan};
 pub use oracle::NaiveExecutor;
 pub use plan::ExecPlan;
 pub use pool::BufferPool;
-pub use remote::{remote_sharded_executor, RemoteExecutor, RemoteOptions, ShardWorker};
+pub use remote::{
+    remote_sharded_executor, RemoteExecutor, RemoteOptions, ReplicatedExecutor, ShardWorker,
+};
 pub use sharded::{engine_for_graph, even_ranges, ShardPlan, ShardedExecutor};
 pub use workers::{global_pool, PoolPanic, PoolStats, WorkerPool};
 
@@ -126,6 +128,51 @@ impl std::fmt::Display for ExecError {
 
 impl std::error::Error for ExecError {}
 
+/// Point-in-time availability of an executor, as reported by
+/// [`Executor::health_report`]. Local engines are always [`Ready`];
+/// remote shards probe their worker (a `Ping` round-trip over the
+/// existing connection) and report drain/cooldown state, so the serving
+/// layer can publish per-shard health gauges without sending a batch.
+///
+/// [`Ready`]: ExecHealth::Ready
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecHealth {
+    /// Serving normally.
+    Ready,
+    /// Worker is draining: in-flight batches finish, new ones are
+    /// refused with a typed error (clients fail over or shed).
+    Draining,
+    /// In the dead-cooldown window after exhausted retries; calls shed
+    /// until the half-open probe un-deads the shard.
+    Dead,
+    /// Liveness cannot be determined cheaply (e.g. no open connection
+    /// and the cooldown has lapsed, so the next batch will re-dial).
+    Unknown,
+}
+
+impl ExecHealth {
+    /// Stable gauge encoding for metrics: `1` ready, `0.5` draining,
+    /// `0` dead, `-1` unknown.
+    pub fn as_gauge(self) -> f64 {
+        match self {
+            ExecHealth::Ready => 1.0,
+            ExecHealth::Draining => 0.5,
+            ExecHealth::Dead => 0.0,
+            ExecHealth::Unknown => -1.0,
+        }
+    }
+
+    /// Short lowercase label for logs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExecHealth::Ready => "ready",
+            ExecHealth::Draining => "draining",
+            ExecHealth::Dead => "dead",
+            ExecHealth::Unknown => "unknown",
+        }
+    }
+}
+
 /// A runtime for adder graphs: evaluates batches of input vectors to
 /// batches of output vectors. Implementations must be shareable across
 /// threads (the serving layer holds them behind `Arc<dyn Executor>`).
@@ -159,6 +206,18 @@ pub trait Executor: Send + Sync {
     ) -> Result<(), ExecError> {
         self.execute_batch_into(xs, ys);
         Ok(())
+    }
+
+    /// Health snapshot as `(label, health)` pairs. The default is a
+    /// single always-[`ExecHealth::Ready`] entry with an empty label
+    /// (local engines cannot be down). Composite executors
+    /// ([`ShardedExecutor`], [`ReplicatedExecutor`]) flat-map their
+    /// children, prefixing labels (`shard.0`, `shard.0.replica.1`);
+    /// [`RemoteExecutor`] reports its probed worker state. Must be
+    /// cheap and non-blocking beyond one bounded ping — it runs on the
+    /// metrics render path.
+    fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        vec![(String::new(), ExecHealth::Ready)]
     }
 
     /// Allocating convenience wrapper around [`Executor::execute_batch_into`].

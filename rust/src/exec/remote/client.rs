@@ -13,12 +13,21 @@
 //! * when every attempt fails the shard enters a `cooldown` window in
 //!   which calls fail immediately (no re-dial), and the caller gets a
 //!   typed [`ExecError::Unavailable`] either way;
-//! * a typed error *frame* from the worker (bad request, engine
-//!   failure) is not retried — it surfaces as [`ExecError::Failed`].
+//! * when the cooldown lapses the next call is a **half-open probe**:
+//!   one cheap attempt, no retry ladder and no backoff sleeps on the
+//!   serving thread. Success un-deads the shard (counting
+//!   `<prefix>recovered`); failure re-arms the cooldown immediately;
+//! * a worker that answers `ERR_DRAINING` is healthy but refusing new
+//!   batches: the call fails over as [`ExecError::Unavailable`] and
+//!   the cooldown is armed so subsequent batches shed fast until the
+//!   probe rediscovers the worker;
+//! * any other typed error *frame* from the worker (bad request,
+//!   engine failure) is not retried — it surfaces as
+//!   [`ExecError::Failed`].
 
 use super::protocol::{self, Frame, Kind, Lanes, ProtocolError, ShardInfo, MAX_FRAME};
 use crate::config::RemoteConfig;
-use crate::exec::{ExecError, Executor};
+use crate::exec::{ExecError, ExecHealth, Executor};
 use crate::metrics::Metrics;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::ops::Range;
@@ -40,7 +49,8 @@ pub struct RemoteOptions {
     /// Backoff before retry `k` is `backoff << (k - 1)`.
     pub backoff: Duration,
     /// After all retries fail, calls shed immediately (no re-dial) for
-    /// this long.
+    /// this long; the first call after the window runs a single
+    /// half-open probe attempt instead of the full retry ladder.
     pub cooldown: Duration,
     /// Per-frame payload cap (clamped to [`protocol::MAX_FRAME`]).
     pub max_frame: u32,
@@ -70,6 +80,7 @@ impl RemoteOptions {
             write_timeout: Duration::from_millis(c.read_timeout_ms.max(1)),
             retries: c.retries,
             backoff: Duration::from_millis(c.backoff_ms),
+            cooldown: Duration::from_millis(c.cooldown_ms.max(1)),
             ..RemoteOptions::default()
         }
     }
@@ -144,6 +155,50 @@ impl RemoteExecutor {
             m.incr(&format!("{}{series}", self.metric_prefix), 1);
         }
     }
+
+    /// Probe the worker with a `Ping` round-trip over the existing
+    /// connection (dialing first if there is none). `Ok(true)` means
+    /// the worker is draining. Bounded by the configured timeouts.
+    pub fn ping(&self) -> Result<bool, ExecError> {
+        let mut state = self.conn.lock().expect("remote conn lock");
+        if state.stream.is_none() {
+            let (s, _info) = dial(&self.addr, &self.opts).map_err(|e| ExecError::Unavailable {
+                shard: self.addr.clone(),
+                message: e.to_string(),
+            })?;
+            state.stream = Some(s);
+        }
+        let stream = state.stream.as_mut().expect("stream connected above");
+        let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        ping_once(stream, req_id, self.opts.max_frame).map_err(|e| {
+            state.stream = None;
+            ExecError::Unavailable { shard: self.addr.clone(), message: e.to_string() }
+        })
+    }
+
+    /// Passive health snapshot: dead-cooldown state first, then a ping
+    /// over the existing connection only — no dial, so a down worker
+    /// costs nothing beyond the read timeout on a stale stream.
+    pub fn health(&self) -> ExecHealth {
+        let mut state = self.conn.lock().expect("remote conn lock");
+        if let Some(t) = state.dead_until {
+            if Instant::now() < t {
+                return ExecHealth::Dead;
+            }
+        }
+        let Some(stream) = state.stream.as_mut() else {
+            return ExecHealth::Unknown;
+        };
+        let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        match ping_once(stream, req_id, self.opts.max_frame) {
+            Ok(true) => ExecHealth::Draining,
+            Ok(false) => ExecHealth::Ready,
+            Err(_) => {
+                state.stream = None;
+                ExecHealth::Unknown
+            }
+        }
+    }
 }
 
 fn io_str(what: &str, addr: &str, e: std::io::Error) -> ProtocolError {
@@ -190,8 +245,22 @@ enum Attempt {
     Fatal(ExecError),
 }
 
+fn ping_once(stream: &mut TcpStream, req_id: u64, max_frame: u32) -> Result<bool, ProtocolError> {
+    protocol::write_frame(stream, Kind::Ping, Lanes::None, req_id, &[])?;
+    let resp = protocol::read_frame(stream, max_frame)?;
+    match resp.kind {
+        Kind::PingOk if resp.req_id == req_id => protocol::decode_worker_status(&resp.payload),
+        Kind::Err => {
+            let (code, message) = protocol::decode_error(&resp.payload)?;
+            Err(ProtocolError::Remote { code, message })
+        }
+        k => Err(ProtocolError::BadPayload(format!("unexpected {k:?} reply to ping"))),
+    }
+}
+
 fn exec_once(
     stream: &mut TcpStream,
+    addr: &str,
     req_id: u64,
     payload: &[u8],
     max_frame: u32,
@@ -207,13 +276,21 @@ fn exec_once(
         Kind::ExecOk => match resp.lanes {
             Lanes::F32 => protocol::decode_rows_f32(&resp.payload).map_err(Attempt::Retriable),
             lanes => {
-                let message = format!("exec-ok with unsupported {lanes:?} lanes");
+                // Typed: i32 (and any future) reply lanes are not spoken
+                // by this build — fatal, a retry would get the same answer.
+                let message = ProtocolError::UnsupportedLanes(lanes as u8).to_string();
                 Err(Attempt::Fatal(ExecError::Failed { message }))
             }
         },
         Kind::Err => {
             let (code, message) =
                 protocol::decode_error(&resp.payload).map_err(Attempt::Retriable)?;
+            if code == protocol::ERR_DRAINING {
+                // The worker is healthy but refusing new batches: fail
+                // over (replica or shed) instead of failing the model.
+                let shard = addr.to_string();
+                return Err(Attempt::Fatal(ExecError::Unavailable { shard, message }));
+            }
             let message = format!("remote error {code}: {message}");
             Err(Attempt::Fatal(ExecError::Failed { message }))
         }
@@ -235,6 +312,10 @@ impl Executor for RemoteExecutor {
 
     fn name(&self) -> &'static str {
         "remote-shard"
+    }
+
+    fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        vec![(String::new(), self.health())]
     }
 
     fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
@@ -267,15 +348,23 @@ impl Executor for RemoteExecutor {
             message: format!("encode batch for {}: {e}", self.addr),
         })?;
         let mut state = self.conn.lock().expect("remote conn lock");
-        if let Some(t) = state.dead_until {
-            if Instant::now() < t {
+        // Half-open probe: while the cooldown runs, shed instantly.
+        // Once it lapses, keep `dead_until` armed and allow exactly one
+        // cheap attempt (no retry ladder, no backoff sleeps) — success
+        // below clears the flag, failure re-arms the window. This keeps
+        // a still-dead worker from stalling the serving thread for the
+        // whole exponential-backoff storm on every cooldown lapse.
+        let half_open = match state.dead_until {
+            Some(t) if Instant::now() < t => {
                 let message = "shard in dead cooldown after exhausted retries".to_string();
                 return Err(ExecError::Unavailable { shard: self.addr.clone(), message });
             }
-            state.dead_until = None;
-        }
+            Some(_) => true,
+            None => false,
+        };
+        let attempts = if half_open { 1 } else { self.opts.retries + 1 };
         let mut last = String::from("no attempt made");
-        for attempt in 0..=self.opts.retries {
+        for attempt in 0..attempts {
             if attempt > 0 {
                 self.bump("retries");
                 std::thread::sleep(self.opts.backoff * (1 << (attempt - 1).min(8)));
@@ -300,7 +389,7 @@ impl Executor for RemoteExecutor {
             }
             let stream = state.stream.as_mut().expect("stream connected above");
             let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            match exec_once(stream, req_id, &payload, self.opts.max_frame) {
+            match exec_once(stream, &self.addr, req_id, &payload, self.opts.max_frame) {
                 Ok(rows) => {
                     let w = self.info.num_outputs as usize;
                     if rows.len() != xs.len() || rows.iter().any(|r| r.len() != w) {
@@ -308,20 +397,32 @@ impl Executor for RemoteExecutor {
                         last = format!("shard {} returned a malformed batch", self.addr);
                         continue;
                     }
+                    if half_open {
+                        state.dead_until = None;
+                        self.bump("recovered");
+                    }
                     *ys = rows;
                     return Ok(());
                 }
-                Err(Attempt::Fatal(e)) => return Err(e),
+                Err(Attempt::Fatal(e)) => {
+                    if matches!(e, ExecError::Unavailable { .. }) {
+                        // Draining worker: arm the cooldown so later
+                        // batches fast-fail to a replica until the
+                        // probe sees this worker serving again.
+                        state.dead_until = Some(Instant::now() + self.opts.cooldown);
+                    }
+                    return Err(e);
+                }
                 Err(Attempt::Retriable(e)) => {
                     state.stream = None;
                     last = e.to_string();
                 }
             }
         }
-        // Exhausted: enter the cooldown window so a hot serving loop
-        // sheds instantly instead of paying the full timeout per batch.
-        // (`shard.<i>.dead` is counted once per shed batch by the
-        // gather path, not here.)
+        // Exhausted (or the probe failed): (re-)arm the cooldown window
+        // so a hot serving loop sheds instantly instead of paying the
+        // full timeout per batch. (`shard.<i>.dead` is counted once per
+        // shed batch by the gather path, not here.)
         state.dead_until = Some(Instant::now() + self.opts.cooldown);
         Err(ExecError::Unavailable { shard: self.addr.clone(), message: last })
     }

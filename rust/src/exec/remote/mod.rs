@@ -7,17 +7,27 @@
 //! cross a process boundary:
 //!
 //! * [`protocol`] — the hand-rolled length-prefixed binary framing
-//!   (std TCP, no tokio; versioned header, request ids, `f32`/`i32`
-//!   lane payloads, typed error frames, hard frame-size cap).
+//!   (std TCP, no tokio; versioned header, request ids, `f32` batch
+//!   lanes — the `i32` lane tag is reserved and refused typed on both
+//!   ends — typed error frames, hard frame-size cap, `Ping`/`Drain`
+//!   health frames).
 //! * [`RemoteExecutor`] — the client: one connection to one worker,
-//!   bounded timeouts, retry-with-backoff, dead-shard cooldown.
+//!   bounded timeouts, retry-with-backoff, dead-shard cooldown with a
+//!   half-open recovery probe (`shard.<i>.recovered`).
 //! * [`ShardWorker`] — the server: serves any local [`Executor`] as
 //!   one output-column range (the `shard-worker` CLI subcommand wraps
-//!   this around an artifact dir's range-restricted engine).
+//!   this around an artifact dir's range-restricted engine), with a
+//!   graceful drain mode that finishes in-flight batches and refuses
+//!   new ones typed.
+//! * [`ReplicatedExecutor`] — N same-range replicas behind one
+//!   executor with in-order failover, so killing one replica sheds
+//!   nothing.
 //! * [`remote_sharded_executor`] — connect a list of `host:port`
-//!   workers, discover each shard's range from its handshake, and
-//!   gather them behind a [`ShardedExecutor`] with per-shard
-//!   `shard.<i>.dead` / `shard.<i>.retries` metrics.
+//!   workers, discover each shard's range from its handshake (workers
+//!   reporting the *same* range become replicas of it), and gather
+//!   them behind a [`ShardedExecutor`] with per-shard
+//!   `shard.<i>.dead` / `shard.<i>.retries` / `shard.<i>.recovered` /
+//!   `shard.<i>.failover` metrics.
 //!
 //! Bit-identicality: the wire carries `f32` lanes for both
 //! `exec_mode = float|fixed` and an `f32` round-trips losslessly, so a
@@ -27,9 +37,11 @@
 
 mod client;
 pub mod protocol;
+mod replica;
 mod worker;
 
 pub use client::{RemoteExecutor, RemoteOptions};
+pub use replica::ReplicatedExecutor;
 pub use worker::ShardWorker;
 
 use crate::config::ExecConfig;
@@ -41,27 +53,61 @@ use std::sync::Arc;
 /// Connect to every worker address, learn each shard's output range
 /// from its handshake, and gather them behind one [`ShardedExecutor`].
 /// Shards are ordered by range start (the address list's order does
-/// not matter), indexed metric series (`shard.<i>.retries` from the
-/// clients, `shard.<i>.dead` from the gather path) land on `metrics`.
+/// not matter). Workers that report the *same* output range are
+/// grouped into a [`ReplicatedExecutor`] with in-order failover; an
+/// address entry may also list replicas explicitly as
+/// `host:port|host:port`. Indexed metric series land on `metrics`:
+/// `shard.<i>.dead` from the gather path, `shard.<i>.failover` from
+/// the replica set, and `shard.<i>.retries` / `shard.<i>.recovered`
+/// from the clients (replicas get a `shard.<i>.replica.<j>.` prefix).
 pub fn remote_sharded_executor(
     addrs: &[String],
     opts: RemoteOptions,
     cfg: ExecConfig,
     metrics: Arc<Metrics>,
 ) -> anyhow::Result<ShardedExecutor> {
-    anyhow::ensure!(!addrs.is_empty(), "no remote shard addresses given");
-    let mut clients = Vec::with_capacity(addrs.len());
-    for addr in addrs {
+    let flat: Vec<&str> =
+        addrs.iter().flat_map(|a| a.split('|')).map(str::trim).filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(!flat.is_empty(), "no remote shard addresses given");
+    let mut clients = Vec::with_capacity(flat.len());
+    for addr in &flat {
         clients.push(RemoteExecutor::connect(addr, opts)?);
     }
-    clients.sort_by_key(|c| c.range().start);
-    let parts: Vec<(Range<usize>, Arc<dyn Executor>)> = clients
+    clients.sort_by_key(|c| (c.range().start, c.range().end));
+    // Consecutive clients with an identical range are replicas of that
+    // range (the sort keeps connect order within a group, so the first
+    // listed replica stays primary). Distinct-but-overlapping ranges
+    // fall through to `from_executors`, which rejects them typed.
+    let mut groups: Vec<Vec<RemoteExecutor>> = Vec::new();
+    for c in clients {
+        match groups.last_mut() {
+            Some(g) if g[0].range() == c.range() => g.push(c),
+            _ => groups.push(vec![c]),
+        }
+    }
+    let parts: Vec<(Range<usize>, Arc<dyn Executor>)> = groups
         .into_iter()
         .enumerate()
-        .map(|(i, c)| {
-            let c = c.with_metrics(Arc::clone(&metrics), &format!("shard.{i}."));
-            (c.range(), Arc::new(c) as Arc<dyn Executor>)
+        .map(|(i, group)| -> anyhow::Result<(Range<usize>, Arc<dyn Executor>)> {
+            let range = group[0].range();
+            if group.len() == 1 {
+                let c = group.into_iter().next().expect("one client in a singleton group");
+                let c = c.with_metrics(Arc::clone(&metrics), &format!("shard.{i}."));
+                return Ok((range, Arc::new(c) as Arc<dyn Executor>));
+            }
+            let replicas: Vec<Arc<dyn Executor>> = group
+                .into_iter()
+                .enumerate()
+                .map(|(j, c)| {
+                    let prefix = format!("shard.{i}.replica.{j}.");
+                    let c = c.with_metrics(Arc::clone(&metrics), &prefix);
+                    Arc::new(c) as Arc<dyn Executor>
+                })
+                .collect();
+            let set = ReplicatedExecutor::from_replicas(replicas)?
+                .with_metrics(Arc::clone(&metrics), &format!("shard.{i}."));
+            Ok((range, Arc::new(set) as Arc<dyn Executor>))
         })
-        .collect();
+        .collect::<anyhow::Result<_>>()?;
     Ok(ShardedExecutor::from_executors(parts, cfg)?.with_metrics(metrics))
 }

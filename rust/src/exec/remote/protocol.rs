@@ -9,12 +9,18 @@
 //!
 //! Kinds: `Hello`/`HelloOk` handshake (the worker reports its input
 //! arity, output count, owned output-column range and exec mode),
-//! `Exec`/`ExecOk` batch round-trips, and a typed `Err` frame
-//! (`u16` code + UTF-8 message). Batch payloads are `rows u32 | width
-//! u32 | rows×width` lane values — `f32` lanes on the wire for both
-//! `exec_mode = float|fixed` (an `f32` round-trips losslessly, so
-//! remote results stay bit-identical to local execution), with `i32`
-//! lanes reserved for raw fixed-mantissa transport.
+//! `Exec`/`ExecOk` batch round-trips, `Ping`/`PingOk` health probes
+//! (the worker answers with a one-byte serving/draining status),
+//! `Drain` (the worker finishes in-flight batches and refuses new
+//! ones with [`ERR_DRAINING`]) and a typed `Err` frame (`u16` code +
+//! UTF-8 message). Batch payloads are `rows u32 | width u32 |
+//! rows×width` lane values — **`f32` lanes are the only batch dtype
+//! spoken on the wire**, for both `exec_mode = float|fixed` (an `f32`
+//! round-trips losslessly, so remote results stay bit-identical to
+//! local execution). The `i32` lane tag and its codec exist but are
+//! *reserved*: nothing sends them today, the worker refuses `i32`
+//! request lanes with a typed `ERR_BAD_REQUEST`, and the client
+//! rejects `i32` reply lanes with [`ProtocolError::UnsupportedLanes`].
 //!
 //! Robustness contract: every decoder returns a typed
 //! [`ProtocolError`] — never a panic — and the payload length is
@@ -41,6 +47,11 @@ pub const ERR_EXEC: u16 = 2;
 /// Error-frame code: the stream desynchronized (garbage frame); the
 /// worker closes the connection after sending this.
 pub const ERR_PROTOCOL: u16 = 3;
+/// Error-frame code: the worker is draining — it finishes batches
+/// already executing but refuses new ones. Retrying the *same* worker
+/// cannot help; the client treats the shard as unavailable (failover
+/// to a replica, or shed) and lets the cooldown probe rediscover it.
+pub const ERR_DRAINING: u16 = 4;
 
 /// Frame kind tag.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,6 +66,14 @@ pub enum Kind {
     ExecOk = 4,
     /// worker → client: typed failure (`u16` code + message).
     Err = 5,
+    /// client → worker: liveness/health probe (empty payload).
+    Ping = 6,
+    /// worker → client: one-byte worker status (see
+    /// [`encode_worker_status`]). Also the ack for a `Drain` frame.
+    PingOk = 7,
+    /// client → worker: enter drain mode — finish in-flight batches,
+    /// refuse new ones with [`ERR_DRAINING`]. Acked with `PingOk`.
+    Drain = 8,
 }
 
 impl Kind {
@@ -65,6 +84,9 @@ impl Kind {
             3 => Some(Kind::Exec),
             4 => Some(Kind::ExecOk),
             5 => Some(Kind::Err),
+            6 => Some(Kind::Ping),
+            7 => Some(Kind::PingOk),
+            8 => Some(Kind::Drain),
             _ => None,
         }
     }
@@ -104,6 +126,9 @@ pub enum ProtocolError {
     UnknownKind(u8),
     /// Unknown [`Lanes`] tag.
     UnknownLanes(u8),
+    /// A *known* lane tag that this build does not speak for the frame
+    /// at hand (batches are `f32`-only on the wire; `i32` is reserved).
+    UnsupportedLanes(u8),
     /// The length prefix exceeds the configured cap.
     FrameTooLarge { len: u32, max: u32 },
     /// The stream ended mid-frame (also: clean EOF between frames).
@@ -127,6 +152,9 @@ impl std::fmt::Display for ProtocolError {
             }
             ProtocolError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
             ProtocolError::UnknownLanes(l) => write!(f, "unknown lane dtype {l}"),
+            ProtocolError::UnsupportedLanes(l) => {
+                write!(f, "unsupported lane dtype {l} (batches are f32-only on the wire)")
+            }
             ProtocolError::FrameTooLarge { len, max } => {
                 write!(f, "frame payload of {len} bytes exceeds the {max}-byte cap")
             }
@@ -394,6 +422,23 @@ pub fn decode_error(p: &[u8]) -> Result<(u16, String), ProtocolError> {
     Ok((code, String::from_utf8_lossy(&p[2..]).into_owned()))
 }
 
+/// Encode a `PingOk` payload: one status byte, `0` = serving, `1` =
+/// draining.
+pub fn encode_worker_status(draining: bool) -> Vec<u8> {
+    vec![u8::from(draining)]
+}
+
+/// Decode a `PingOk` payload; returns `true` when the worker is
+/// draining.
+pub fn decode_worker_status(p: &[u8]) -> Result<bool, ProtocolError> {
+    match p {
+        [0] => Ok(false),
+        [1] => Ok(true),
+        [b] => Err(ProtocolError::BadPayload(format!("unknown worker status {b}"))),
+        _ => Err(ProtocolError::BadPayload(format!("worker status is 1 byte, got {}", p.len()))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -472,6 +517,7 @@ mod tests {
             let _ = decode_rows_f32(&bytes);
             let _ = decode_rows_i32(&bytes);
             let _ = decode_error(&bytes);
+            let _ = decode_worker_status(&bytes);
             let _ = round;
         }
     }
@@ -533,5 +579,18 @@ mod tests {
         let (code, msg) = decode_error(&encode_error(ERR_EXEC, "boom")).unwrap();
         assert_eq!((code, msg.as_str()), (ERR_EXEC, "boom"));
         assert!(decode_error(&[1]).is_err());
+    }
+
+    #[test]
+    fn health_frames_round_trip() {
+        for kind in [Kind::Ping, Kind::PingOk, Kind::Drain] {
+            let bytes = frame_bytes(kind, Lanes::None, 9, &[]);
+            assert_eq!(read_frame(&mut Cursor::new(&bytes), MAX_FRAME).unwrap().kind, kind);
+        }
+        assert!(!decode_worker_status(&encode_worker_status(false)).unwrap());
+        assert!(decode_worker_status(&encode_worker_status(true)).unwrap());
+        assert!(decode_worker_status(&[]).is_err());
+        assert!(decode_worker_status(&[2]).is_err());
+        assert!(decode_worker_status(&[0, 0]).is_err());
     }
 }

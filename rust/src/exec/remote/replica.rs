@@ -1,0 +1,151 @@
+//! [`ReplicatedExecutor`]: N same-range replicas behind one
+//! [`Executor`], with client-side failover.
+//!
+//! A replica set is just another `Arc<dyn Executor>` for one output
+//! range, so [`crate::exec::ShardedExecutor::from_executors`] needs no
+//! replica awareness: the gather path sees one engine per range, and
+//! this wrapper walks its replicas in order until one serves the batch.
+//!
+//! Failover policy:
+//! * [`ExecError::Unavailable`] from a replica (dead, cooling down, or
+//!   draining) → try the next replica. Each [`super::RemoteExecutor`]
+//!   replica keeps its own dead-cooldown, so a down replica costs one
+//!   fast typed error — not a dial timeout — on every later batch until
+//!   its half-open probe recovers it.
+//! * [`ExecError::Failed`] (the worker *rejected* the batch or its
+//!   engine failed) → returned immediately; another replica would give
+//!   the same answer for the same request.
+//! * All replicas unavailable → one summarizing
+//!   [`ExecError::Unavailable`], so the shard sheds exactly like an
+//!   unreplicated one.
+//!
+//! A batch served by any replica is bit-identical to any other: every
+//! replica runs the same artifact range and the wire's `f32` lanes
+//! round-trip losslessly.
+
+use crate::exec::{ExecError, ExecHealth, Executor};
+use crate::metrics::Metrics;
+use std::sync::Arc;
+
+/// One output range served by N interchangeable replicas, tried in
+/// order with failover on unavailability.
+pub struct ReplicatedExecutor {
+    replicas: Vec<Arc<dyn Executor>>,
+    num_inputs: usize,
+    num_outputs: usize,
+    metrics: Option<Arc<Metrics>>,
+    metric_prefix: String,
+}
+
+impl ReplicatedExecutor {
+    /// Wrap `replicas` (at least one; all must agree on shape).
+    pub fn from_replicas(replicas: Vec<Arc<dyn Executor>>) -> anyhow::Result<ReplicatedExecutor> {
+        let Some(first) = replicas.first() else {
+            anyhow::bail!("a replica set needs at least one replica");
+        };
+        let (num_inputs, num_outputs) = (first.num_inputs(), first.num_outputs());
+        for (j, r) in replicas.iter().enumerate() {
+            anyhow::ensure!(
+                (r.num_inputs(), r.num_outputs()) == (num_inputs, num_outputs),
+                "replica {j} serves {}x{}, replica 0 serves {num_inputs}x{num_outputs}",
+                r.num_inputs(),
+                r.num_outputs()
+            );
+        }
+        Ok(ReplicatedExecutor {
+            replicas,
+            num_inputs,
+            num_outputs,
+            metrics: None,
+            metric_prefix: String::new(),
+        })
+    }
+
+    /// Count `<prefix>failover` on `metrics` whenever a batch is served
+    /// by a non-primary replica.
+    pub fn with_metrics(mut self, metrics: Arc<Metrics>, prefix: &str) -> Self {
+        self.metrics = Some(metrics);
+        self.metric_prefix = prefix.to_string();
+        self
+    }
+
+    /// Number of replicas in the set.
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn bump(&self, series: &str) {
+        if let Some(m) = &self.metrics {
+            m.incr(&format!("{}{series}", self.metric_prefix), 1);
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplicatedExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplicatedExecutor").field("replicas", &self.replicas.len()).finish()
+    }
+}
+
+impl Executor for ReplicatedExecutor {
+    fn num_inputs(&self) -> usize {
+        self.num_inputs
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.num_outputs
+    }
+
+    fn name(&self) -> &'static str {
+        "replica-set"
+    }
+
+    fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        let mut out = Vec::new();
+        for (j, r) in self.replicas.iter().enumerate() {
+            for (label, h) in r.health_report() {
+                let key = if label.is_empty() {
+                    format!("replica.{j}")
+                } else {
+                    format!("replica.{j}.{label}")
+                };
+                out.push((key, h));
+            }
+        }
+        out
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        if let Err(e) = self.try_execute_batch_into(xs, ys) {
+            panic!("replica set: {e}");
+        }
+    }
+
+    fn try_execute_batch_into(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &mut Vec<Vec<f32>>,
+    ) -> Result<(), ExecError> {
+        let mut last: Option<ExecError> = None;
+        for (j, r) in self.replicas.iter().enumerate() {
+            match r.try_execute_batch_into(xs, ys) {
+                Ok(()) => {
+                    if j > 0 {
+                        self.bump("failover");
+                    }
+                    return Ok(());
+                }
+                Err(e @ ExecError::Failed { .. }) => return Err(e),
+                Err(e) => last = Some(e),
+            }
+        }
+        match last.expect("at least one replica was attempted") {
+            ExecError::Unavailable { shard, message } => {
+                let message =
+                    format!("all {} replica(s) unavailable; last: {message}", self.replicas.len());
+                Err(ExecError::Unavailable { shard, message })
+            }
+            e => Err(e),
+        }
+    }
+}

@@ -8,7 +8,16 @@
 //! its own thread, garbage frames get a best-effort typed error frame
 //! and a close (a desynchronized stream cannot be re-synced), engine
 //! failures become error frames, and nothing a client sends can panic
-//! the process or allocate past [`protocol::MAX_FRAME`]. Reads
+//! the process or allocate past [`protocol::MAX_FRAME`].
+//!
+//! Lifecycle: [`ShardWorker::drain`] (or a wire `Drain` frame) puts
+//! the worker in drain mode — batches already executing finish and
+//! their replies are sent, new `Exec` frames get a typed
+//! [`protocol::ERR_DRAINING`], and `Ping` reports the draining status
+//! — so an operator can retire a worker with zero dropped batches
+//! (`shard-worker --drain-on <file>` polls for the hook file and exits
+//! once [`ShardWorker::in_flight`] hits zero). [`ShardWorker::stop`]
+//! is the hard variant: close the port and join every thread. Reads
 //! distinguish *idle* from *mid-frame*: a timeout with zero bytes of
 //! the current frame consumed just re-polls the stop flag, while a
 //! frame that has started may stall (e.g. a large batch trickling in)
@@ -24,7 +33,7 @@ use crate::exec::Executor;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -36,11 +45,32 @@ const IDLE_POLL: Duration = Duration::from_millis(100);
 /// a live-but-slow client can finish a large (up to 16 MiB) frame.
 const FRAME_DEADLINE: Duration = Duration::from_secs(5);
 
+/// State shared between the worker handle, the accept loop and every
+/// connection handler.
+struct Shared {
+    engine: Arc<dyn Executor>,
+    range: Range<usize>,
+    mode: ExecMode,
+    stop: AtomicBool,
+    drain: AtomicBool,
+    in_flight: AtomicUsize,
+}
+
+/// Decrements the in-flight batch counter on drop, so an engine panic
+/// in one handler thread cannot wedge [`ShardWorker::drained`].
+struct InFlight<'a>(&'a AtomicUsize);
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// A running shard server; dropping (or [`ShardWorker::stop`]) shuts
 /// it down and joins every thread.
 pub struct ShardWorker {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
 }
 
@@ -64,12 +94,19 @@ impl ShardWorker {
             TcpListener::bind(bind).map_err(|e| anyhow::anyhow!("bind shard worker {bind}: {e}"))?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let flag = Arc::clone(&stop);
+        let shared = Arc::new(Shared {
+            engine,
+            range,
+            mode,
+            stop: AtomicBool::new(false),
+            drain: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+        });
+        let state = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
             .name("lccnn-shard-accept".into())
-            .spawn(move || accept_loop(listener, engine, range, mode, flag))?;
-        Ok(ShardWorker { addr, stop, accept: Some(accept) })
+            .spawn(move || accept_loop(listener, state))?;
+        Ok(ShardWorker { addr, shared, accept: Some(accept) })
     }
 
     /// The bound address (resolves `:0` to the actual ephemeral port).
@@ -77,11 +114,36 @@ impl ShardWorker {
         self.addr
     }
 
+    /// Enter drain mode: batches already executing finish and their
+    /// replies are sent; new `Exec` frames get a typed
+    /// [`protocol::ERR_DRAINING`]; pings report draining. The listener
+    /// stays up so clients see the typed refusal instead of a connect
+    /// error. Irreversible for the lifetime of this worker.
+    pub fn drain(&self) {
+        self.shared.drain.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether drain mode is active (set by [`ShardWorker::drain`] or
+    /// a wire `Drain` frame).
+    pub fn is_draining(&self) -> bool {
+        self.shared.drain.load(Ordering::SeqCst)
+    }
+
+    /// Batches currently executing on the engine.
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Draining and no batch left on the engine — safe to exit.
+    pub fn drained(&self) -> bool {
+        self.is_draining() && self.in_flight() == 0
+    }
+
     /// Stop accepting, close every connection and join the threads.
     /// After this returns the port is closed: in-flight client requests
     /// fail with a transport error — the failover path under test.
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
+        self.shared.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -94,23 +156,15 @@ impl Drop for ShardWorker {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
-    engine: Arc<dyn Executor>,
-    range: Range<usize>,
-    mode: ExecMode,
-    stop: Arc<AtomicBool>,
-) {
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     let mut handlers: Vec<JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::SeqCst) {
+    while !shared.stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                let engine = Arc::clone(&engine);
-                let range = range.clone();
-                let flag = Arc::clone(&stop);
+                let state = Arc::clone(&shared);
                 let spawned = std::thread::Builder::new()
                     .name("lccnn-shard-conn".into())
-                    .spawn(move || handle_conn(stream, engine, range, mode, flag));
+                    .spawn(move || handle_conn(stream, state));
                 match spawned {
                     Ok(h) => handlers.push(h),
                     Err(e) => log::warn!("shard worker: spawn connection handler: {e}"),
@@ -182,21 +236,15 @@ impl Read for FrameReader<'_> {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    engine: Arc<dyn Executor>,
-    range: Range<usize>,
-    mode: ExecMode,
-    stop: Arc<AtomicBool>,
-) {
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
     stream.set_nodelay(true).ok();
     // Short socket timeout so blocked reads wake to poll the stop
     // flag; FrameReader layers the idle/mid-frame policy on top.
     stream.set_read_timeout(Some(IDLE_POLL)).ok();
     stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
     let mut stream = &stream;
-    while !stop.load(Ordering::SeqCst) {
-        let mut reader = FrameReader { stream, stop: &stop, started_at: None };
+    while !shared.stop.load(Ordering::SeqCst) {
+        let mut reader = FrameReader { stream, stop: &shared.stop, started_at: None };
         let frame = match protocol::read_frame(&mut reader, protocol::MAX_FRAME) {
             Ok(f) => f,
             Err(ProtocolError::TimedOut) if reader.started_at.is_none() => continue,
@@ -221,26 +269,43 @@ fn handle_conn(
         let (kind, lanes, payload, close_after) = match frame.kind {
             Kind::Hello => {
                 let info = ShardInfo {
-                    num_inputs: engine.num_inputs() as u32,
-                    num_outputs: engine.num_outputs() as u32,
-                    range_start: range.start as u32,
-                    range_end: range.end as u32,
-                    mode: match mode {
+                    num_inputs: shared.engine.num_inputs() as u32,
+                    num_outputs: shared.engine.num_outputs() as u32,
+                    range_start: shared.range.start as u32,
+                    range_end: shared.range.end as u32,
+                    mode: match shared.mode {
                         ExecMode::Float => 0,
                         ExecMode::Fixed => 1,
                     },
                 };
                 (Kind::HelloOk, Lanes::None, protocol::encode_shard_info(&info), false)
             }
-            Kind::Exec => match exec_reply(&engine, &frame) {
-                Ok(payload) => (Kind::ExecOk, Lanes::F32, payload, false),
-                Err((code, msg)) => {
-                    (Kind::Err, Lanes::None, protocol::encode_error(code, &msg), false)
+            Kind::Exec if shared.drain.load(Ordering::SeqCst) => {
+                let msg = "worker is draining; batch refused";
+                let payload = protocol::encode_error(protocol::ERR_DRAINING, msg);
+                (Kind::Err, Lanes::None, payload, false)
+            }
+            Kind::Exec => {
+                shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                let _guard = InFlight(&shared.in_flight);
+                match exec_reply(&shared.engine, &frame) {
+                    Ok(payload) => (Kind::ExecOk, Lanes::F32, payload, false),
+                    Err((code, msg)) => {
+                        (Kind::Err, Lanes::None, protocol::encode_error(code, &msg), false)
+                    }
                 }
-            },
+            }
+            Kind::Ping => {
+                let draining = shared.drain.load(Ordering::SeqCst);
+                (Kind::PingOk, Lanes::None, protocol::encode_worker_status(draining), false)
+            }
+            Kind::Drain => {
+                shared.drain.store(true, Ordering::SeqCst);
+                (Kind::PingOk, Lanes::None, protocol::encode_worker_status(true), false)
+            }
             // Server-to-client kinds arriving at the server: protocol
             // violation; answer typed and close.
-            Kind::HelloOk | Kind::ExecOk | Kind::Err => {
+            Kind::HelloOk | Kind::ExecOk | Kind::Err | Kind::PingOk => {
                 let msg = format!("unexpected {:?} frame at the worker", frame.kind);
                 let payload = protocol::encode_error(protocol::ERR_PROTOCOL, &msg);
                 (Kind::Err, Lanes::None, payload, true)

@@ -25,7 +25,7 @@ use super::engine::BatchEngine;
 use super::fixed::FixedEngine;
 use super::plan::ExecPlan;
 use super::workers::{self, WorkerPool};
-use super::{ExecError, Executor};
+use super::{ExecError, ExecHealth, Executor};
 use crate::config::{ExecConfig, ExecMode, PoolMode, ShardMode};
 use crate::graph::AdderGraph;
 use crate::metrics::Metrics;
@@ -307,6 +307,21 @@ impl Executor for ShardedExecutor {
 
     fn name(&self) -> &'static str {
         "sharded-exec"
+    }
+
+    fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        let mut out = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            for (label, h) in shard.engine.health_report() {
+                let key = if label.is_empty() {
+                    format!("shard.{i}")
+                } else {
+                    format!("shard.{i}.{label}")
+                };
+                out.push((key, h));
+            }
+        }
+        out
     }
 
     fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {

@@ -12,15 +12,25 @@
 //!                                 fixed mode verifies within the lowered
 //!                                 plan's analytic error bound)
 //!   serve   [--model name=path]... [--shards N] [--exec-mode float|fixed]
-//!           [--remote-shard host:port]... [--remote-name name]
-//!           [--remote-check artifact-dir]
+//!           [--remote-shard host:port[|host:port...]]... [--remote-name name]
+//!           [--remote-check artifact-dir] [--recheck-delay-ms MS]
+//!           [--client-delay-ms MS]
 //!                                 multi-model registry server driver;
-//!                                 remote shards gather behind one model
+//!                                 remote shards gather behind one model,
+//!                                 `|`-joined addresses are replicas of the
+//!                                 same range; --recheck-delay-ms reruns the
+//!                                 remote check after a pause (recovery
+//!                                 window), --client-delay-ms paces the
+//!                                 hammer so failures can be injected mid-run
 //!   shard-worker --artifact dir [--listen host:port]
 //!           [--shards N --index I | --range a..b] [--exec-mode m]
+//!           [--drain-on path]
 //!                                 serve one output-column range of an
 //!                                 artifact over the remote batch
-//!                                 protocol until killed
+//!                                 protocol until killed; with --drain-on
+//!                                 the worker polls for that file, then
+//!                                 drains (finish in-flight, refuse new
+//!                                 batches) and exits cleanly
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
 //! form --name value and may repeat (`--model a=p1 --model b=p2`).
@@ -429,8 +439,29 @@ fn cmd_shard_worker(flags: Flags) -> Result<()> {
         mode.as_str(),
         worker.addr()
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    let drain_on = flags.get("drain-on").cloned();
+    match drain_on {
+        None => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
+        Some(path) => {
+            // Graceful-drain hook: poll for the marker file, then stop
+            // accepting new batches (in-flight ones finish, fresh Execs
+            // get a typed ERR_DRAINING refusal) and exit cleanly.
+            let marker = PathBuf::from(path);
+            while !marker.exists() {
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+            worker.drain();
+            while worker.in_flight() > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            // small grace window so the last replies flush before exit
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            drop(worker);
+            println!("shard-worker: drained, exiting");
+            Ok(())
+        }
     }
 }
 
@@ -462,6 +493,13 @@ fn cmd_serve(flags: Flags) -> Result<()> {
     let requests: usize = flag(&flags, "requests", 256)?;
     let clients: usize = flag(&flags, "client-threads", 4)?.max(1);
     let seed: u64 = flag(&flags, "seed", 0)?;
+    // --recheck-delay-ms: rerun the --remote-check pass once more after
+    // this pause — a window for killing and restarting a worker so the
+    // half-open probe's recovery is exercised end to end.
+    let recheck_delay_ms: u64 = flag(&flags, "recheck-delay-ms", 0)?;
+    // --client-delay-ms: pace each hammer request so an external script
+    // can inject faults (e.g. kill a replica) while traffic is in flight.
+    let client_delay_ms: u64 = flag(&flags, "client-delay-ms", 0)?;
 
     // --shards N shards every engine this process builds: demo/graph
     // models via ExecConfig::shards, checkpoint loads via the recipe
@@ -588,23 +626,36 @@ fn cmd_serve(flags: Flags) -> Result<()> {
     let mut check_failures = 0usize;
     if let Some(oracle) = &remote_oracle {
         let n = requests.clamp(1, 64);
-        let mut crng = rng.fork(997);
-        for _ in 0..n {
-            let x = crng.normal_vec(oracle.num_inputs(), 1.0);
-            let want = oracle.execute_one(&x);
-            match server.infer_model(&remote_name, x) {
-                Ok(y) if y == want => {}
-                Ok(y) => {
-                    eprintln!("remote check: served {y:?} != local {want:?}");
-                    check_failures += 1;
-                }
-                Err(e) => {
-                    eprintln!("remote check: request failed: {e}");
-                    check_failures += 1;
+        let passes = if recheck_delay_ms > 0 { 2 } else { 1 };
+        for pass in 0..passes {
+            if pass > 0 {
+                println!("remote check: recheck in {recheck_delay_ms}ms (recovery window)");
+                std::thread::sleep(std::time::Duration::from_millis(recheck_delay_ms));
+            }
+            let mut pass_failures = 0usize;
+            let mut crng = rng.fork(997 + pass);
+            for _ in 0..n {
+                let x = crng.normal_vec(oracle.num_inputs(), 1.0);
+                let want = oracle.execute_one(&x);
+                match server.infer_model(&remote_name, x) {
+                    Ok(y) if y == want => {}
+                    Ok(y) => {
+                        eprintln!("remote check: served {y:?} != local {want:?}");
+                        pass_failures += 1;
+                    }
+                    Err(e) => {
+                        eprintln!("remote check: request failed: {e}");
+                        pass_failures += 1;
+                    }
                 }
             }
+            println!(
+                "remote check pass {}: {n} request(s) vs local artifact, {pass_failures} \
+                 mismatch(es)",
+                pass + 1
+            );
+            check_failures += pass_failures;
         }
-        println!("remote check: {n} request(s) vs local artifact, {check_failures} mismatch(es)");
     }
     let per_client = requests.div_ceil(clients);
     let errors = AtomicUsize::new(0);
@@ -617,6 +668,9 @@ fn cmd_serve(flags: Flags) -> Result<()> {
             let mut rng = rng.fork(t as u64 + 1);
             scope.spawn(move || {
                 for k in 0..per_client {
+                    if client_delay_ms > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(client_delay_ms));
+                    }
                     let name = &names[(t + k) % names.len()];
                     let Some(dim) = registry.get(name).and_then(|e| e.input_dim()) else {
                         errors.fetch_add(1, Ordering::Relaxed);

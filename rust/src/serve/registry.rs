@@ -16,7 +16,7 @@
 use super::backend::{BatchEvaluator, ExecutorBackend};
 use crate::compress::{Pipeline, Recipe};
 use crate::config::ExecConfig;
-use crate::exec::{ExecError, Executor, RemoteOptions};
+use crate::exec::{ExecError, ExecHealth, Executor, RemoteOptions};
 use crate::graph::AdderGraph;
 use crate::lcc::LccConfig;
 use crate::metrics::Metrics;
@@ -59,6 +59,15 @@ impl ModelEntry {
     /// The per-model engine tuning the entry was built with.
     pub fn exec_config(&self) -> Option<&ExecConfig> {
         self.exec_cfg.as_ref()
+    }
+
+    /// Per-shard health snapshot of the executor backing this model:
+    /// a single always-ready entry for local engines, probed worker
+    /// state for remote shards and replicas. Opaque evaluator backends
+    /// report nothing. `Server::metrics_text` publishes these as
+    /// `model.<name>.health[.<label>]` gauges.
+    pub fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        self.executor.as_ref().map(|e| e.health_report()).unwrap_or_default()
     }
 
     /// Input dimension each request must provide (exec-backed models
@@ -277,9 +286,12 @@ impl ModelRegistry {
 
     /// Connect to remote `shard-worker` addresses, gather them behind
     /// one [`crate::exec::ShardedExecutor`] and register it under
-    /// `name`. The entry serves like any local model; a dead shard
-    /// sheds its batches with typed errors instead of hanging them,
-    /// counted on `metrics` (`shard.<i>.dead` / `shard.<i>.retries`).
+    /// `name`. Addresses reporting the same output range (or listed as
+    /// `host:port|host:port`) become replicas with in-order failover.
+    /// The entry serves like any local model; a dead shard sheds its
+    /// batches with typed errors instead of hanging them, counted on
+    /// `metrics` (`shard.<i>.dead` / `shard.<i>.retries` /
+    /// `shard.<i>.recovered` / `shard.<i>.failover`).
     pub fn register_remote_sharded(
         &self,
         name: &str,

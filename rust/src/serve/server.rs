@@ -159,11 +159,24 @@ impl Server {
 
     /// Render the server's metrics registry as text — global and
     /// per-model serving series, the current model count
-    /// (`serve.models`), and the exec worker pool's counters
+    /// (`serve.models`), per-shard health gauges
+    /// (`model.<name>.health[.<label>]`: `1` ready, `0.5` draining,
+    /// `0` dead, `-1` unknown), and the exec worker pool's counters
     /// (`exec_pool.*`; the process-wide pool unless overridden via
     /// [`Server::with_pool_metrics`]) — one blob for logs and debugging.
     pub fn metrics_text(&self) -> String {
         self.metrics.gauge("serve.models", self.registry.len() as f64);
+        for name in self.registry.names() {
+            let Some(entry) = self.registry.get(&name) else { continue };
+            for (label, h) in entry.health_report() {
+                let key = if label.is_empty() {
+                    format!("model.{name}.health")
+                } else {
+                    format!("model.{name}.health.{label}")
+                };
+                self.metrics.gauge(&key, h.as_gauge());
+            }
+        }
         self.exec_pool.publish(&self.metrics);
         self.metrics.render()
     }
@@ -310,6 +323,10 @@ mod tests {
         assert!(text.contains("model.x1.requests = 1"), "{text}");
         assert!(text.contains("model.x4.requests = 2"), "{text}");
         assert!(text.contains("serve.models"), "{text}");
+        // exec-backed models publish health gauges (local engines are
+        // always ready = 1)
+        assert!(text.contains("model.x1.health = 1"), "{text}");
+        assert!(text.contains("model.x4.health = 1"), "{text}");
     }
 
     #[test]

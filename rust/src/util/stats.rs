@@ -18,12 +18,17 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on a sorted copy; p in [0, 100].
+///
+/// NaN policy: NaN samples are dropped before ranking — one poisoned
+/// latency sample (e.g. a zero-duration division upstream) must skew a
+/// metrics render at worst, never panic it. An empty or all-NaN slice
+/// yields 0, matching the empty-input convention of [`mean`].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -74,6 +79,23 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // A NaN in the sample set must neither panic the sort (the old
+        // `partial_cmp().unwrap()`) nor perturb the ranked values.
+        let clean = [5.0, 1.0, 3.0];
+        let dirty = [5.0, f64::NAN, 1.0, 3.0, f64::NAN];
+        for p in [0.0, 25.0, 50.0, 75.0, 100.0] {
+            assert_eq!(percentile(&dirty, p), percentile(&clean, p), "p{p}");
+        }
+        // All-NaN behaves like empty input.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // Infinities are legitimate samples and still rank.
+        assert_eq!(percentile(&[f64::NEG_INFINITY, 0.0, f64::INFINITY], 0.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&[f64::NEG_INFINITY, 0.0, f64::INFINITY], 100.0), f64::INFINITY);
     }
 
     #[test]

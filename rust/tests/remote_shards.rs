@@ -10,6 +10,16 @@
 //! * Failover: a killed shard sheds within the configured timeouts
 //!   with `ExecError::Unavailable` and a `shard.<i>.dead` count;
 //!   survivors keep serving; a slow-loris peer stalls only itself.
+//! * Recovery: a worker killed and restarted on the same address is
+//!   rediscovered by the half-open cooldown probe (`shard.<i>.recovered`)
+//!   without rebuilding the gather, and the probe is a single cheap
+//!   attempt — never the full retry+backoff ladder.
+//! * Replication: `|`-grouped replicas of one output range fail over
+//!   client-side (`shard.<i>.failover`) — killing one replica causes
+//!   zero sheds and bit-identical answers.
+//! * Drain: a `Drain` frame (or `ShardWorker::drain`) finishes
+//!   in-flight batches, refuses new ones with `ERR_DRAINING`, and
+//!   surfaces through `Ping` status and `health_report`.
 //! * Serving: `ModelRegistry::register_remote_sharded` entries shed
 //!   (`ServeError::Shed` + `model.<name>.shed`) when a worker dies,
 //!   while local models on the same server keep answering.
@@ -17,7 +27,7 @@
 use lccnn::config::{ExecConfig, ExecMode, ServeConfig};
 use lccnn::exec::remote::protocol;
 use lccnn::exec::{
-    remote_sharded_executor, BatchEngine, ExecError, ExecPlan, Executor, FixedEngine,
+    remote_sharded_executor, BatchEngine, ExecError, ExecHealth, ExecPlan, Executor, FixedEngine,
     RemoteExecutor, RemoteOptions, ShardWorker, ShardedExecutor,
 };
 use lccnn::graph::{AdderGraph, Operand, OutputSpec};
@@ -283,6 +293,230 @@ fn killed_shard_sheds_within_timeout_and_survivor_keeps_serving() {
     drop(workers);
 }
 
+/// A worker killed and restarted on the same address is rediscovered
+/// by the half-open probe once its cooldown lapses: the *same* gather
+/// serves again, bit-identical, with `shard.0.recovered` counted — no
+/// client rebuild, no server restart.
+#[test]
+fn killed_worker_recovers_on_restart_without_rebuilding_the_gather() {
+    let g = wide_graph(10, 30, 8, 47);
+    let plan = ExecPlan::new(&g);
+    let cuts = [0..5, 5..8];
+    let (mut workers, addrs) = spawn_workers(&plan, &cuts, ExecMode::Float);
+    let metrics = Arc::new(Metrics::new());
+    let remote =
+        remote_sharded_executor(&addrs, fast_opts(), ExecConfig::serial(), Arc::clone(&metrics))
+            .unwrap();
+    let mut rng = Rng::new(4242);
+    let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(10, 1.0)).collect();
+    let want = shard_engine(&plan, &(0..8), ExecMode::Float).execute_batch(&xs);
+    assert_eq!(remote.execute_batch(&xs), want, "healthy gather matches local");
+
+    workers[0].stop();
+    let mut ys = Vec::new();
+    assert!(remote.try_execute_batch_into(&xs, &mut ys).is_err(), "dead shard sheds");
+    assert!(metrics.counter("shard.0.dead") >= 1);
+
+    // restart a fresh worker on the *same* address (SO_REUSEADDR lets
+    // the rebind beat TIME_WAIT; retry briefly in case the old accept
+    // thread is still winding down)
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let _restarted = loop {
+        let engine = shard_engine(&plan, &cuts[0], ExecMode::Float);
+        match ShardWorker::spawn(engine, cuts[0].clone(), ExecMode::Float, &addrs[0]) {
+            Ok(w) => break w,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "rebind {}: {e}", addrs[0]);
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    // the client must rediscover the worker through the probe alone
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match remote.try_execute_batch_into(&xs, &mut ys) {
+            Ok(()) => break,
+            Err(_) if Instant::now() < deadline => std::thread::sleep(Duration::from_millis(20)),
+            Err(e) => panic!("restarted worker never rediscovered: {e}"),
+        }
+    }
+    assert_eq!(ys, want, "post-recovery gather is bit-identical");
+    assert!(metrics.counter("shard.0.recovered") >= 1, "recovery counted");
+    assert_eq!(metrics.counter("shard.1.recovered"), 0, "survivor never went through a probe");
+    drop(workers);
+}
+
+/// The half-open probe is a single cheap attempt: after the cooldown
+/// lapses against a still-dead worker, the call must *not* rerun the
+/// full retry+backoff ladder on the serving thread, and its failure
+/// re-arms the cooldown immediately.
+#[test]
+fn half_open_probe_skips_retry_ladder() {
+    let g = wide_graph(6, 18, 4, 13);
+    let plan = ExecPlan::new(&g);
+    let (mut workers, addrs) = spawn_workers(&plan, &[0..4], ExecMode::Float);
+    // a deliberately expensive ladder: 4 retries with 120 ms exponential
+    // backoff sleeps at least 120+240+480+960 = 1800 ms per full run
+    let opts = RemoteOptions {
+        connect_timeout: Duration::from_millis(300),
+        read_timeout: Duration::from_millis(600),
+        write_timeout: Duration::from_millis(600),
+        retries: 4,
+        backoff: Duration::from_millis(120),
+        cooldown: Duration::from_millis(100),
+        ..RemoteOptions::default()
+    };
+    let client = RemoteExecutor::connect(&addrs[0], opts).unwrap();
+    let xs = vec![vec![0.5f32; 6]];
+    let mut ys = Vec::new();
+    client.try_execute_batch_into(&xs, &mut ys).unwrap();
+    workers[0].stop();
+
+    let t0 = Instant::now();
+    let err = client.try_execute_batch_into(&xs, &mut ys).unwrap_err();
+    assert!(matches!(err, ExecError::Unavailable { .. }), "typed: {err}");
+    assert!(t0.elapsed() >= Duration::from_millis(1000), "full ladder ran: {:?}", t0.elapsed());
+
+    // during the cooldown: instant shed, no dial
+    let t1 = Instant::now();
+    assert!(client.try_execute_batch_into(&xs, &mut ys).is_err());
+    assert!(t1.elapsed() < Duration::from_millis(100), "cooldown fast-fail: {:?}", t1.elapsed());
+
+    std::thread::sleep(Duration::from_millis(150)); // let the cooldown lapse
+
+    // the probe: one attempt against a closed loopback port refuses
+    // near-instantly — far under even a single ladder rung's backoff
+    let t2 = Instant::now();
+    assert!(client.try_execute_batch_into(&xs, &mut ys).is_err());
+    assert!(t2.elapsed() < Duration::from_millis(600), "probe is one attempt: {:?}", t2.elapsed());
+
+    // the failed probe re-armed the cooldown: instant shed again
+    let t3 = Instant::now();
+    assert!(client.try_execute_batch_into(&xs, &mut ys).is_err());
+    assert!(t3.elapsed() < Duration::from_millis(100), "probe re-arms: {:?}", t3.elapsed());
+    drop(workers);
+}
+
+/// Two replicas of one output range: killing one keeps the gather
+/// serving bit-identical answers with zero sheds — the failure is
+/// absorbed client-side (`shard.0.failover`), never surfaced.
+#[test]
+fn replica_failover_keeps_serving_with_zero_sheds() {
+    let g = wide_graph(9, 28, 7, 17);
+    let plan = ExecPlan::new(&g);
+    let cuts = [0..4, 0..4, 4..7]; // two replicas of the first range
+    let (mut workers, addrs) = spawn_workers(&plan, &cuts, ExecMode::Float);
+    let metrics = Arc::new(Metrics::new());
+    let remote =
+        remote_sharded_executor(&addrs, fast_opts(), ExecConfig::serial(), Arc::clone(&metrics))
+            .unwrap();
+    assert_eq!(remote.num_shards(), 2, "equal-range workers group into one replicated shard");
+    let labels: Vec<String> = remote.health_report().into_iter().map(|(l, _)| l).collect();
+    assert_eq!(labels, ["shard.0.replica.0", "shard.0.replica.1", "shard.1"]);
+
+    let mut rng = Rng::new(0xFA11);
+    let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(9, 1.0)).collect();
+    let want = shard_engine(&plan, &(0..7), ExecMode::Float).execute_batch(&xs);
+    assert_eq!(remote.execute_batch(&xs), want, "healthy replicated gather matches local");
+
+    workers[0].stop(); // kill the primary replica of shard 0
+    let mut ys = Vec::new();
+    for k in 0..40 {
+        remote
+            .try_execute_batch_into(&xs, &mut ys)
+            .unwrap_or_else(|e| panic!("request {k} shed: {e}"));
+        assert_eq!(ys, want, "request {k} bit-identical through the surviving replica");
+    }
+    assert!(metrics.counter("shard.0.failover") >= 1, "failover counted");
+    assert_eq!(metrics.counter("shard.0.dead"), 0, "no shed while a replica survives");
+    assert_eq!(metrics.counter("shard.1.dead"), 0);
+    drop(workers);
+}
+
+/// A wire `Drain` frame is acked with a draining `PingOk`, flips the
+/// worker's status, and new batches get the typed `ERR_DRAINING`
+/// refusal (surfaced as `Unavailable` so clients fail over, not fail).
+#[test]
+fn drain_refuses_new_batches_with_a_typed_error_and_reports_status() {
+    let g = wide_graph(5, 14, 3, 29);
+    let plan = ExecPlan::new(&g);
+    let (workers, addrs) = spawn_workers(&plan, &[0..3], ExecMode::Float);
+
+    let mut s = TcpStream::connect(&addrs[0]).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(3))).unwrap();
+    protocol::write_frame(&mut s, protocol::Kind::Drain, protocol::Lanes::None, 5, &[]).unwrap();
+    let ack = protocol::read_frame(&mut s, protocol::MAX_FRAME).unwrap();
+    assert_eq!(ack.kind, protocol::Kind::PingOk, "drain is acked");
+    assert_eq!(ack.req_id, 5);
+    assert!(protocol::decode_worker_status(&ack.payload).unwrap(), "ack reports draining");
+    assert!(workers[0].is_draining());
+    assert!(workers[0].drained(), "nothing in flight");
+
+    // the listener stays up: the handshake still answers, pings report
+    // draining, and a fresh batch is refused with the typed code
+    let client = RemoteExecutor::connect(&addrs[0], fast_opts()).unwrap();
+    assert!(client.ping().unwrap(), "ping sees the draining status");
+    let mut ys = Vec::new();
+    let err = client.try_execute_batch_into(&[vec![0.0f32; 5]], &mut ys).unwrap_err();
+    assert!(matches!(err, ExecError::Unavailable { .. }), "typed refusal: {err}");
+    assert!(err.to_string().contains("draining"), "{err}");
+    drop(workers);
+}
+
+/// `health_report` tracks the worker lifecycle: ready → draining (after
+/// a drain) → dead (once a refused batch arms the cooldown).
+#[test]
+fn health_report_tracks_ready_draining_dead() {
+    let g = wide_graph(4, 10, 2, 31);
+    let plan = ExecPlan::new(&g);
+    let (workers, addrs) = spawn_workers(&plan, &[0..2], ExecMode::Float);
+    let client = RemoteExecutor::connect(&addrs[0], fast_opts()).unwrap();
+    assert_eq!(client.health_report(), vec![(String::new(), ExecHealth::Ready)]);
+
+    workers[0].drain();
+    assert_eq!(client.health(), ExecHealth::Draining);
+
+    // a refused batch arms the cooldown: Dead until the window lapses
+    let mut ys = Vec::new();
+    assert!(client.try_execute_batch_into(&[vec![0.0f32; 4]], &mut ys).is_err());
+    assert_eq!(client.health(), ExecHealth::Dead);
+    drop(workers);
+}
+
+/// A worker answering `ExecOk` with the reserved `i32` lane tag is a
+/// typed, non-retried client error — never a panic, never a hang.
+#[test]
+fn i32_reply_lanes_are_a_typed_client_error() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let hello = protocol::read_frame(&mut s, protocol::MAX_FRAME).unwrap();
+        assert_eq!(hello.kind, protocol::Kind::Hello);
+        let info = protocol::ShardInfo {
+            num_inputs: 3,
+            num_outputs: 2,
+            range_start: 0,
+            range_end: 2,
+            mode: 1,
+        };
+        let payload = protocol::encode_shard_info(&info);
+        let (k, l) = (protocol::Kind::HelloOk, protocol::Lanes::None);
+        protocol::write_frame(&mut s, k, l, hello.req_id, &payload).unwrap();
+        let exec = protocol::read_frame(&mut s, protocol::MAX_FRAME).unwrap();
+        assert_eq!(exec.kind, protocol::Kind::Exec);
+        let rows = protocol::encode_rows_i32(&[vec![1, 2]]).unwrap();
+        let (k, l) = (protocol::Kind::ExecOk, protocol::Lanes::I32);
+        protocol::write_frame(&mut s, k, l, exec.req_id, &rows).unwrap();
+    });
+    let client = RemoteExecutor::connect(&addr, fast_opts()).unwrap();
+    let mut ys = Vec::new();
+    let err = client.try_execute_batch_into(&[vec![1.0, 2.0, 3.0]], &mut ys).unwrap_err();
+    assert!(matches!(err, ExecError::Failed { .. }), "fatal, not retried: {err}");
+    assert!(err.to_string().contains("unsupported lane dtype"), "{err}");
+    server.join().unwrap();
+}
+
 /// A peer that trickles a partial header and stalls occupies only its
 /// own connection: concurrent real clients are served promptly.
 #[test]
@@ -346,6 +580,13 @@ fn server_sheds_remote_model_when_worker_dies_and_local_model_survives() {
 
     // the local model on the same server is unaffected
     assert_eq!(server.infer_model("near", lx).unwrap(), lwant, "local model keeps serving");
+
+    // the metrics render publishes per-shard health gauges for the
+    // remote entry and a plain always-ready gauge for the local one
+    let text = server.metrics_text();
+    assert!(text.contains("model.far.health.shard.0"), "{text}");
+    assert!(text.contains("model.far.health.shard.1"), "{text}");
+    assert!(text.contains("model.near.health = 1"), "{text}");
     server.shutdown();
     drop(workers);
 }
