@@ -1,88 +1,109 @@
-//! End-to-end driver (DESIGN.md: the full-system validation example).
+//! End-to-end driver (DESIGN.md: the full-system validation example),
+//! reworked through the full-network compression path:
 //!
 //!     cargo run --release --example mlp_mnist_pipeline
 //!
-//! Proves all three layers compose on a real small workload:
-//!   1. rust generates a synthetic-MNIST dataset,
-//!   2. trains the 784-300-10 MLP through the AOT-compiled JAX train-step
-//!      artifact (PJRT CPU; the prox is the Pallas kernel), logging the
-//!      loss curve,
-//!   3. prunes, clusters (affinity propagation), retrains with weight
-//!      sharing, decomposes with LCC,
-//!   4. evaluates the compressed model through the shift-add VM, and
-//!   5. prints the Fig.2-style stage table + the loss curves.
+//! Proves the network subsystem composes on a real small workload:
+//!   1. generates a synthetic-MNIST dataset,
+//!   2. trains the LeNet-300-100-shaped MLP (784-300-100-10) with plain
+//!      in-process SGD — no AOT artifacts required,
+//!   3. converts it into a multi-layer `NetworkCheckpoint` and compresses
+//!      every layer through ONE per-layer recipe (prune + LCC globally,
+//!      an LCC-only override for the tiny output layer),
+//!   4. self-checks the chained batch-major `NetworkExecutor` bit-exact
+//!      against the hand-chained `NaiveExecutor` oracle, and
+//!   5. evaluates compressed accuracy through the shift-add engine and
+//!      applies the recipe's accuracy gate vs the dense baseline.
 //!
-//! Runs in a few minutes on one CPU core. Flags: --steps N --lambda F.
+//! Runs in well under a minute on one CPU core.
+//! Flags: --steps N --train N --test N --seed S --epsilon F.
 
 use anyhow::Result;
-use lccnn::config::MlpPipelineConfig;
-use lccnn::pipeline::run_mlp_pipeline;
-use lccnn::report::{percent, ratio, Table};
-use lccnn::runtime::Runtime;
+use lccnn::compress::{LccSpec, NetworkPipeline, PruneSpec, Recipe, StageSpec};
+use lccnn::data::synth_mnist;
+use lccnn::exec::Executor;
+use lccnn::nn::mlp3::argmax;
+use lccnn::nn::Mlp3;
 
 fn main() -> Result<()> {
     lccnn::util::logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut cfg = MlpPipelineConfig {
-        train_steps: 400,
-        share_retrain_steps: 100,
-        lambda: 0.2,
-        ..Default::default()
-    };
+    let mut steps = 400usize;
+    let mut train_n = 2000usize;
+    let mut test_n = 500usize;
+    let mut seed = 0u64;
+    let mut epsilon = 0.05f64;
     let mut i = 0;
     while i + 1 < args.len() {
         match args[i].as_str() {
-            "--steps" => cfg.train_steps = args[i + 1].parse()?,
-            "--lambda" => cfg.lambda = args[i + 1].parse()?,
-            "--seed" => cfg.seed = args[i + 1].parse()?,
+            "--steps" => steps = args[i + 1].parse()?,
+            "--train" => train_n = args[i + 1].parse()?,
+            "--test" => test_n = args[i + 1].parse()?,
+            "--seed" => seed = args[i + 1].parse()?,
+            "--epsilon" => epsilon = args[i + 1].parse()?,
             other => anyhow::bail!("unknown flag {other}"),
         }
         i += 2;
     }
 
-    let rt = Runtime::open_default()?;
-    println!("platform: {} | artifacts: {}", rt.platform(), rt.artifact_names().len());
+    let (train, test) = synth_mnist::generate(train_n + test_n, seed).split_off(test_n);
+    let mut mlp = Mlp3::lenet_300_100(seed + 1);
     println!(
-        "training MLP 784-300-10 for {} steps (batch 128) + {} sharing-retrain steps; lambda = {}",
-        cfg.train_steps, cfg.share_retrain_steps, cfg.lambda
+        "training MLP 784-300-100-10 for {steps} SGD steps (batch 32) on {} examples",
+        train.len()
     );
-
-    let out = run_mlp_pipeline(&rt, &cfg)?;
-
-    println!("\nbaseline loss curve (unregularized):");
-    for (step, loss) in &out.baseline_curve {
-        println!("  step {step:>4}  loss {loss:.4}");
+    let mut done = 0usize;
+    while done < steps {
+        let n = 100.min(steps - done);
+        mlp.train_sgd(&train, n, 32, 0.1, seed + 2 + done as u64);
+        done += n;
+        println!("  step {done:>4}  test acc {:.1} %", 100.0 * mlp.accuracy(&test));
     }
-    println!("\nregularized loss curve (lambda = {}):", cfg.lambda);
-    for (step, loss) in &out.reg_curve {
-        println!("  step {step:>4}  loss {loss:.4}");
-    }
+    let dense = mlp.accuracy(&test);
+    println!("dense baseline: {:.1} % top-1 on {} held-out examples\n", 100.0 * dense, test.len());
 
-    let mut t = Table::new(
-        "compression pipeline (layer-1 additions, Fig. 2 axes)",
-        &["stage", "additions", "ratio", "top-1 acc", "active cols", "clusters"],
+    // one recipe for the whole network: prune + LCC globally, with a
+    // per-layer override pinning the tiny 10x100 output layer to
+    // LCC-only (pruning whole input features of the classifier head
+    // buys little; weight sharing is skipped throughout because
+    // clustering *trained* columns collapses learned features)
+    let mut recipe = Recipe {
+        stages: vec![StageSpec::Prune(PruneSpec::default()), StageSpec::Lcc(LccSpec::default())],
+        gate_epsilon: Some(epsilon),
+        ..Recipe::default()
+    };
+    recipe.layers.entry(3).or_default().stages = Some(vec!["lcc".to_string()]);
+
+    let ckpt = mlp.to_network_checkpoint()?;
+    let net = NetworkPipeline::from_recipe(&recipe)?.run(&ckpt)?;
+    println!("{}", net.report().render());
+
+    // self-check: the chained batch-major engine must reproduce the
+    // hand-chained NaiveExecutor oracle bit for bit (float mode)
+    let exec = net.executor()?;
+    let n_check = 64.min(test.len());
+    let sample: Vec<Vec<f32>> = (0..n_check).map(|i| test.example(i).to_vec()).collect();
+    let got = exec.execute_batch(&sample);
+    let want = net.oracle_forward_batch(&sample);
+    anyhow::ensure!(got == want, "network engine diverged from the hand-chained oracle");
+    println!("oracle self-check: {} requests bit-identical to the chained oracle", sample.len());
+
+    let mut correct = 0usize;
+    for i in 0..test.len() {
+        if argmax(&exec.execute_one(test.example(i))) == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / test.len() as f64;
+    println!(
+        "compressed accuracy through the shift-add engine: {:.1} % ({:.1}x fewer additions)",
+        100.0 * acc,
+        net.report().total_ratio()
     );
-    t.add_row(vec![
-        "baseline (dense, CSD)".into(),
-        out.baseline_additions.to_string(),
-        "1.0".into(),
-        percent(out.baseline_accuracy),
-        "784".into(),
-        "-".into(),
-    ]);
-    for s in &out.stages {
-        t.add_row(vec![
-            s.stage.clone(),
-            s.additions.to_string(),
-            ratio(out.baseline_additions, s.additions),
-            percent(s.accuracy),
-            s.active_columns.to_string(),
-            if s.clusters > 0 { s.clusters.to_string() } else { "-".into() },
-        ]);
-    }
-    println!("\n{}", t.render());
-    println!("LCC graph verification SQNR: {:.1} dB", out.lcc_sqnr_db);
-    println!("(compressed accuracy is evaluated through the shift-add VM — the");
-    println!(" same adder graph an FPGA would instantiate.)");
+    anyhow::ensure!(
+        acc + 1e-12 >= dense - epsilon,
+        "accuracy gate failed: {acc:.3} vs dense {dense:.3} - {epsilon}"
+    );
+    println!("accuracy gate passed: within {epsilon} of the dense baseline");
     Ok(())
 }

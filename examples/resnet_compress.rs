@@ -1,25 +1,34 @@
 //! Table-I style compression of the residual CNN (scaled; see DESIGN.md
-//! Substitutions).
+//! Substitutions), reworked through the full-network compression path.
 //!
 //!     cargo run --release --example resnet_compress -- --steps 120
 //!
 //! Trains the residual CNN through the AOT artifacts with FK-grouped
-//! group-lasso, then decomposes every 3×3 conv layer with both LCC
-//! algorithms under both kernel representations and prints the adder
-//! accounting per layer — the per-layer view behind Table I (the bench
+//! group-lasso, then packs every 3×3 conv layer into one multi-layer
+//! `NetworkCheckpoint` — layer k's weight is the co × (ci·kh·kw)
+//! horizontal concat of its per-input-channel FK matrices — and runs
+//! the whole inventory through ONE per-layer recipe: prune + LCC
+//! globally, with LCC-only overrides for the stride-2 downsampling
+//! layers. Every compressed layer is self-checked bit-exact against its
+//! own `NaiveExecutor` oracle, and the aggregated `NetworkReport` is
+//! the per-layer adder accounting behind Table I (the bench
 //! `table1_resnet` prints the aggregated table).
 
 use anyhow::Result;
+use lccnn::compress::{
+    Activation, LccSpec, NetworkCheckpoint, NetworkLayer, NetworkPipeline, PruneSpec, Recipe,
+    StageSpec,
+};
 use lccnn::config::ResnetPipelineConfig;
+use lccnn::convert::fk_matrices;
 use lccnn::data::synth_tiny;
-use lccnn::lcc::{decompose, LccConfig};
+use lccnn::exec::{Executor, NaiveExecutor};
 use lccnn::nn::resnet::init_params;
-use lccnn::pipeline::resnet::{conv_layer_additions, conv_specs, ConvRepr};
-use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
-use lccnn::report::{ratio, Table};
+use lccnn::pipeline::resnet::conv_specs;
 use lccnn::runtime::Runtime;
-use lccnn::tensor::Tensor4;
+use lccnn::tensor::{Matrix, Tensor4};
 use lccnn::train::{ConvGrouping, LrSchedule, ResnetTrainer};
+use lccnn::util::Rng;
 
 fn main() -> Result<()> {
     lccnn::util::logger::init();
@@ -53,44 +62,73 @@ fn main() -> Result<()> {
     let (_, acc) = tr.evaluate(&test_data)?;
     println!("regularized accuracy: {:.1} %\n", acc * 100.0);
 
+    // pack the 3x3 conv inventory into one multi-layer checkpoint:
+    // layer k's weight is the co x (ci*kh*kw) horizontal concat of its
+    // per-input-channel FK matrices. The layers don't chain dimensionally
+    // (NetworkCheckpoint doesn't require it) — each is compressed and
+    // oracle-checked on its own through the shared per-layer recipe.
     let store = tr.params_store();
-    let fmt = FixedPointFormat::default_weights();
-    let mut t = Table::new(
-        "per-layer adder accounting (CSD baseline vs LCC, FK and PK)",
-        &["layer", "csd-FK", "FP-FK", "FS-FK", "csd-PK", "FS-PK", "FS-FK ratio"],
-    );
-    for (name, side, stride) in conv_specs() {
-        let arr = store.get(&name).unwrap();
-        let k = Tensor4::from_vec(
-            arr.shape[0],
-            arr.shape[1],
-            arr.shape[2],
-            arr.shape[3],
-            arr.data.clone(),
-        );
-        let mut csd_cost = |m: &lccnn::tensor::Matrix| matrix_csd_adders(m, fmt);
-        let csd_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut csd_cost);
-        let csd_pk = conv_layer_additions(&k, side, stride, ConvRepr::Pk, &mut csd_cost);
-        let mut fp_cost = |m: &lccnn::tensor::Matrix| {
-            if m.nnz() == 0 { 0 } else { decompose(m, &LccConfig::fp()).additions() }
-        };
-        let mut fs_cost = |m: &lccnn::tensor::Matrix| {
-            if m.nnz() == 0 { 0 } else { decompose(m, &LccConfig::fs()).additions() }
-        };
-        let fp_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut fp_cost);
-        let fs_fk = conv_layer_additions(&k, side, stride, ConvRepr::Fk, &mut fs_cost);
-        let fs_pk = conv_layer_additions(&k, side, stride, ConvRepr::Pk, &mut fs_cost);
-        t.add_row(vec![
-            name.clone(),
-            csd_fk.to_string(),
-            fp_fk.to_string(),
-            fs_fk.to_string(),
-            csd_pk.to_string(),
-            fs_pk.to_string(),
-            ratio(csd_fk, fs_fk),
-        ]);
+    let specs = conv_specs();
+    let mut layers = Vec::with_capacity(specs.len());
+    for (name, _, _) in &specs {
+        let arr = store.get(name).unwrap();
+        let s = &arr.shape;
+        let k = Tensor4::from_vec(s[0], s[1], s[2], s[3], arr.data.clone());
+        let mats = fk_matrices(&k);
+        let (co, kk) = (mats[0].rows(), mats[0].cols());
+        let mut w = Matrix::zeros(co, mats.len() * kk);
+        for (c, m) in mats.iter().enumerate() {
+            for r in 0..co {
+                w.row_mut(r)[c * kk..(c + 1) * kk].copy_from_slice(m.row(r));
+            }
+        }
+        layers.push(NetworkLayer { weight: w, bias: None, activation: Activation::Identity });
     }
-    println!("{}", t.render());
+    let ckpt = NetworkCheckpoint::new(layers)?;
+
+    // one recipe steers the whole inventory: prune + LCC globally (no
+    // sharing — clustering trained kernels collapses learned features),
+    // with LCC-only overrides for the stride-2 downsampling layers
+    let mut recipe = Recipe {
+        stages: vec![StageSpec::Prune(PruneSpec::default()), StageSpec::Lcc(LccSpec::default())],
+        ..Recipe::default()
+    };
+    for (idx, (_, _, stride)) in specs.iter().enumerate() {
+        if *stride == 2 {
+            recipe.layers.entry(idx + 1).or_default().stages = Some(vec!["lcc".to_string()]);
+        }
+    }
+    let net = NetworkPipeline::from_recipe(&recipe)?.run(&ckpt)?;
+    println!("{}", net.report().render());
+
+    // per-layer oracle self-check: each compressed layer's batch-major
+    // engine vs a NaiveExecutor run of its own adder graph (dense math
+    // for layers a recipe override left pre-LCC)
+    let mut rng = Rng::new(cfg.seed + 99);
+    for (k, layer) in net.layers().iter().enumerate() {
+        let model = layer.model();
+        let exec = model.executor();
+        let oracle = model.lcc().map(|s| NaiveExecutor::new(s.graph().clone()));
+        for _ in 0..4 {
+            let x = rng.normal_vec(exec.num_inputs(), 1.0);
+            let got = exec.execute_one(&x);
+            let xk: Vec<f32> = model.kept().iter().map(|&i| x[i]).collect();
+            let want = match (&oracle, model.lcc()) {
+                (Some(o), Some(slcc)) => o.execute_one(&slcc.layer.segment_sums(&xk)),
+                _ => match model.state().shared() {
+                    Some(sh) => sh.apply(&xk),
+                    None => model.state().dense().matvec(&xk),
+                },
+            };
+            anyhow::ensure!(
+                got == want,
+                "layer {} ({}) diverged from its oracle",
+                k + 1,
+                specs[k].0
+            );
+        }
+    }
+    println!("oracle self-check: every layer bit-identical to its NaiveExecutor oracle");
     println!("run `cargo bench --bench table1_resnet` for the full Table-I reproduction");
     Ok(())
 }

@@ -9,7 +9,7 @@
 //! `LCCNN_BENCH_JSON=BENCH_exec.json` appends one JSON row per table row.
 
 use lccnn::cluster::affinity::{cluster_columns, AffinityParams};
-use lccnn::compress::{Pipeline, Recipe};
+use lccnn::compress::{demo_network, NetworkPipeline, Pipeline, Recipe};
 use lccnn::config::{ExecConfig, ExecMode, PoolMode, ServeConfig, ShardMode, ShardSpec};
 use lccnn::exec::{even_ranges, remote_sharded_executor, Executor, RemoteOptions, ShardWorker};
 use lccnn::lcc::LccConfig;
@@ -144,6 +144,24 @@ fn main() {
             run(backend, "pipeline-exec/fixed", burst, n, &mut t);
         }
     }
+    // the full-network chained engine: a LeNet-300-100-shaped 3-layer
+    // MLP (784-300-100-10) compressed per layer and served as one
+    // NetworkExecutor — the layer-chaining tax (bias + activation
+    // kernels, ping-pong lane buffers) on the same latency path as the
+    // single-matrix pipeline-exec rows
+    {
+        let recipe = Recipe { exec: serving_exec(PoolMode::Persistent), ..Recipe::default() };
+        let ckpt = demo_network(&[784, 300, 100, 10], 0);
+        let net = NetworkPipeline::from_recipe(&recipe)
+            .expect("valid recipe")
+            .run(&ckpt)
+            .expect("network pipeline runs");
+        let exec: Arc<dyn Executor> = Arc::new(net.into_executor().expect("network engine"));
+        for burst in [1usize, 8, 32] {
+            let backend = Arc::new(ExecutorBackend::new(Arc::clone(&exec), 64));
+            run(backend, "pipeline-exec/mlp3", burst, n, &mut t);
+        }
+    }
     // the same artifact split across two in-process shard-worker TCP
     // servers on loopback, gathered by RemoteExecutors — the wire tax
     // of distributed serving vs the in-process sharded rows above
@@ -253,6 +271,10 @@ fn main() {
     println!("pipeline-exec/fixed serves the same artifact on the integer");
     println!("shift-add datapath (exec_mode = fixed) — the float-vs-fixed");
     println!("latency comparison for EXPERIMENTS.md §Perf.");
+    println!("pipeline-exec/mlp3 serves a 3-layer 784-300-100-10 network as");
+    println!("one chained NetworkExecutor (per-layer engines + bias/ReLU");
+    println!("kernels, reused lane buffers) — the full-network serving row");
+    println!("for EXPERIMENTS.md §Full-network.");
     println!("pipeline-exec/remote2 serves the artifact split across two");
     println!("shard-worker TCP servers on loopback (bit-identical gather) —");
     println!("the wire tax vs pipeline-exec/shard2 for EXPERIMENTS.md");

@@ -31,6 +31,16 @@
 //!   LCC-only. A `[compress.shard]` recipe section (or `exec.shards`)
 //!   partitions the served engine across output-range shards
 //!   ([`crate::exec::ShardedExecutor`]), bit-identical to unsharded.
+//! * The `network` layer scales all of the above from one matrix to a
+//!   whole model: [`NetworkCheckpoint`] (multi-layer `layer<k>.weight.npy`
+//!   + `network.toml` checkpoint directories), [`NetworkPipeline`]
+//!   (per-layer stage runs steered by `[compress.layer.<k>]` recipe
+//!   overrides, aggregated into a [`NetworkReport`]) and
+//!   [`NetworkExecutor`] (the chained batch-major serving engine with
+//!   bias/activation kernels, a propagated analytic error bound and
+//!   per-layer [`crate::exec::LayerStat`] telemetry). [`ChainedExecutor`]
+//!   composes arbitrary executors — e.g. remote layer-range workers —
+//!   into the same seam.
 //!
 //! ```
 //! use lccnn::compress::{demo_weights, Pipeline, Recipe};
@@ -42,6 +52,7 @@
 //! ```
 
 mod executor;
+mod network;
 mod pipeline;
 mod recipe;
 mod report;
@@ -49,8 +60,12 @@ mod stage;
 mod state;
 
 pub use executor::PipelineExecutor;
+pub use network::{
+    demo_network, Activation, ChainedExecutor, CompressedLayer, CompressedNetwork,
+    NetworkCheckpoint, NetworkExecutor, NetworkLayer, NetworkPipeline, NetworkReport,
+};
 pub use pipeline::{CompressedModel, Pipeline, PipelineBuilder};
-pub use recipe::{LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec};
+pub use recipe::{LayerOverride, LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec};
 pub use report::{CompressionReport, StageReport};
 pub use stage::{LccStage, PruneStage, QuantizeStage, ShareStage, Stage};
 pub use state::ModelState;

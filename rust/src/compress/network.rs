@@ -1,0 +1,1039 @@
+//! Whole-network compression and serving: the paper's per-layer LCC
+//! scheme applied to a multi-layer model as one artifact.
+//!
+//! The single-matrix pipeline (`Pipeline` → `PipelineExecutor`) covers
+//! the layer-1 scope; deep models need the Deep-Compression-style sweep
+//! — every layer pruned/shared/LCC'd with its own tuning — plus an
+//! execution engine that *runs* the compressed per-layer representation
+//! end to end (the EIE argument). This module supplies both:
+//!
+//! * [`NetworkCheckpoint`] — the multi-layer checkpoint format: a
+//!   directory of `layer<k>.weight.npy` (+ optional `layer<k>.bias.npy`)
+//!   files described by a `network.toml` manifest naming per-layer
+//!   shapes and activations.
+//! * [`NetworkPipeline`] — runs the existing compression stages once per
+//!   layer, resolving each layer's stage list and parameters through
+//!   [`Recipe::layer_recipe`] (`[compress.layer.<k>]` overrides), and
+//!   aggregates per-layer accounting into one [`NetworkReport`].
+//! * [`NetworkExecutor`] — a [`crate::exec::Executor`] chaining the
+//!   per-layer [`PipelineExecutor`]s with batch-major bias/activation
+//!   kernels (ReLU, identity) and reused inter-layer lane buffers. It
+//!   composes with everything behind the `Executor` seam: float/fixed
+//!   datapaths (per-layer analytic bounds propagate into a network-level
+//!   bound), per-layer sharding, registry hot-swap, and per-layer
+//!   [`crate::exec::Executor::layer_stats`] metrics.
+//! * [`ChainedExecutor`] — dimension-checked sequential composition of
+//!   arbitrary executors; the serve-side gather for remote workers that
+//!   each serve one layer range ([`CompressedNetwork::layer_range_executor`]).
+//!
+//! Differential verification: [`CompressedNetwork::oracle_forward`]
+//! evaluates the same compressed representation by hand-chaining the
+//! [`NaiveExecutor`] oracle per layer — float serving must be
+//! bit-identical to it, fixed serving within
+//! [`NetworkExecutor::max_error_bound`].
+
+use super::pipeline::{CompressedModel, Pipeline};
+use super::recipe::Recipe;
+use super::report::CompressionReport;
+use super::PipelineExecutor;
+use crate::config::{parse_toml, TomlValue};
+use crate::exec::{ExecError, ExecHealth, Executor, LayerStat, NaiveExecutor};
+use crate::metrics::Metrics;
+use crate::nn::npy::{read_npy, write_npy, NpyArray};
+use crate::report::Table;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::ops::Range;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A layer's nonlinearity, applied in place on batch-major lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// no-op (output layers serve raw logits)
+    Identity,
+}
+
+impl Activation {
+    /// Parse a manifest name (`relu`, `identity`; `none`/`linear` are
+    /// accepted aliases of `identity`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "relu" => Some(Activation::Relu),
+            "identity" | "none" | "linear" => Some(Activation::Identity),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Identity => "identity",
+        }
+    }
+
+    /// Apply in place over one output lane.
+    pub fn apply(&self, y: &mut [f32]) {
+        if let Activation::Relu = self {
+            for v in y.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// One layer of a multi-layer checkpoint: the weight matrix (rows =
+/// outputs, cols = inputs), an optional bias, and the activation that
+/// follows the affine map.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkLayer {
+    pub weight: Matrix,
+    pub bias: Option<Vec<f32>>,
+    pub activation: Activation,
+}
+
+/// A multi-layer checkpoint: an ordered list of [`NetworkLayer`]s,
+/// persisted as a directory of `layer<k>.weight.npy` files (1-based)
+/// plus a `network.toml` manifest. Layer dimension chaining is *not*
+/// required here — per-layer compression works on any layer list; the
+/// executor build ([`NetworkExecutor`]) enforces chaining.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkCheckpoint {
+    layers: Vec<NetworkLayer>,
+}
+
+impl NetworkCheckpoint {
+    pub fn new(layers: Vec<NetworkLayer>) -> Result<Self> {
+        ensure!(!layers.is_empty(), "a network needs at least one layer");
+        for (i, l) in layers.iter().enumerate() {
+            if let Some(b) = &l.bias {
+                ensure!(
+                    b.len() == l.weight.rows(),
+                    "layer {}: bias length {} != {} output rows",
+                    i + 1,
+                    b.len(),
+                    l.weight.rows()
+                );
+            }
+        }
+        Ok(NetworkCheckpoint { layers })
+    }
+
+    pub fn layers(&self) -> &[NetworkLayer] {
+        &self.layers
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Input dimension of the first layer.
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].weight.cols()
+    }
+
+    /// Output dimension of the last layer.
+    pub fn output_dim(&self) -> usize {
+        self.layers[self.layers.len() - 1].weight.rows()
+    }
+
+    /// True when `path` is a multi-layer checkpoint directory (carries a
+    /// `network.toml` manifest) — how the registry and CLI dispatch
+    /// between the network and single-matrix load paths.
+    pub fn is_network_dir(path: &Path) -> bool {
+        path.is_dir() && path.join("network.toml").is_file()
+    }
+
+    /// Write `layer<k>.weight.npy` (+ `layer<k>.bias.npy`) per layer and
+    /// the `network.toml` manifest, creating the directory.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        let mut manifest = String::from("# lccnn network checkpoint manifest\n[network]\n");
+        let _ = writeln!(manifest, "layers = {}", self.layers.len());
+        for (i, layer) in self.layers.iter().enumerate() {
+            let k = i + 1;
+            let w = &layer.weight;
+            write_npy(
+                &dir.join(format!("layer{k}.weight.npy")),
+                &NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()),
+            )?;
+            if let Some(b) = &layer.bias {
+                write_npy(
+                    &dir.join(format!("layer{k}.bias.npy")),
+                    &NpyArray::f32(vec![b.len()], b.clone()),
+                )?;
+            }
+            let _ = writeln!(
+                manifest,
+                "\n[network.layer.{k}]\nrows = {}\ncols = {}\nactivation = \"{}\"\nbias = {}",
+                w.rows(),
+                w.cols(),
+                layer.activation.as_str(),
+                layer.bias.is_some()
+            );
+        }
+        std::fs::write(dir.join("network.toml"), manifest)
+            .with_context(|| format!("write network manifest in {}", dir.display()))
+    }
+
+    /// Load a checkpoint directory, validating every `.npy` shape
+    /// against the manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("network.toml");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read network manifest {}", manifest_path.display()))?;
+        let t = parse_toml(&text)
+            .with_context(|| format!("parse network manifest {}", manifest_path.display()))?;
+        let n = t
+            .get("network")
+            .and_then(|s| s.get("layers"))
+            .and_then(TomlValue::as_int)
+            .context("network.toml: [network] layers count missing")?;
+        ensure!(n >= 1, "network.toml: layers must be >= 1, got {n}");
+        let n = n as usize;
+        let mut layers = Vec::with_capacity(n);
+        for k in 1..=n {
+            let sec = format!("network.layer.{k}");
+            let s = t.get(&sec).with_context(|| format!("network.toml: [{sec}] missing"))?;
+            let rows = manifest_dim(s, &sec, "rows")?;
+            let cols = manifest_dim(s, &sec, "cols")?;
+            let activation = match s.get("activation").and_then(TomlValue::as_str) {
+                Some(a) => Activation::parse(a).with_context(|| {
+                    format!("network.toml: [{sec}] unknown activation {a:?} (use relu|identity)")
+                })?,
+                // hidden layers default to relu, the output layer to identity
+                None if k == n => Activation::Identity,
+                None => Activation::Relu,
+            };
+            let has_bias = s.get("bias").and_then(TomlValue::as_bool).unwrap_or(false);
+            let wpath = dir.join(format!("layer{k}.weight.npy"));
+            let arr = read_npy(&wpath)?;
+            ensure!(
+                arr.shape == [rows, cols],
+                "{}: shape {:?} != manifest {rows}x{cols}",
+                wpath.display(),
+                arr.shape
+            );
+            let weight = Matrix::from_vec(rows, cols, arr.data);
+            let bias = if has_bias {
+                let bpath = dir.join(format!("layer{k}.bias.npy"));
+                let b = read_npy(&bpath)?;
+                ensure!(
+                    b.numel() == rows,
+                    "{}: {} values != {rows} output rows",
+                    bpath.display(),
+                    b.numel()
+                );
+                Some(b.data)
+            } else {
+                None
+            };
+            layers.push(NetworkLayer { weight, bias, activation });
+        }
+        NetworkCheckpoint::new(layers)
+    }
+}
+
+/// Read one positive manifest dimension (`rows` / `cols`).
+fn manifest_dim(s: &BTreeMap<String, TomlValue>, sec: &str, key: &str) -> Result<usize> {
+    let v = s
+        .get(key)
+        .and_then(TomlValue::as_int)
+        .with_context(|| format!("network.toml: [{sec}] {key} missing"))?;
+    ensure!(v >= 1, "network.toml: [{sec}] {key} must be >= 1, got {v}");
+    Ok(v as usize)
+}
+
+/// Synthetic multi-layer checkpoint for demos and smokes: per layer,
+/// column groups of 4 = 3 near-identical columns + 1 exactly-zero
+/// column, so pruning, sharing and LCC all genuinely engage on every
+/// layer (the network analogue of [`super::demo_weights`]). Hidden
+/// layers get ReLU, the output layer identity; magnitudes are kept
+/// small so chained activations stay inside the fixed-point range.
+pub fn demo_network(dims: &[usize], seed: u64) -> NetworkCheckpoint {
+    assert!(dims.len() >= 2, "need at least input and output dims");
+    let mut rng = Rng::new(seed);
+    let last = dims.len() - 2;
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for (k, pair) in dims.windows(2).enumerate() {
+        let (nin, nout) = (pair[0], pair[1]);
+        let mut w = Matrix::zeros(nout, nin);
+        let mut c = 0;
+        while c < nin {
+            let group = (nin - c).min(4);
+            // the 4th column of a full group stays zero (prunable);
+            // short tail groups are fully filled
+            let filled = if group == 4 { 3 } else { group };
+            let base = rng.normal_vec(nout, 0.3);
+            for j in 0..filled {
+                for r in 0..nout {
+                    *w.at_mut(r, c + j) = base[r] + 0.005 * rng.normal_f32();
+                }
+            }
+            c += group;
+        }
+        let bias: Vec<f32> = (0..nout).map(|_| 0.05 * rng.normal_f32()).collect();
+        let activation = if k == last { Activation::Identity } else { Activation::Relu };
+        layers.push(NetworkLayer { weight: w, bias: Some(bias), activation });
+    }
+    NetworkCheckpoint::new(layers).expect("demo network is well-formed")
+}
+
+/// Aggregated accounting of a network compression run: one
+/// [`CompressionReport`] per layer plus network totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkReport {
+    pub layers: Vec<CompressionReport>,
+}
+
+impl NetworkReport {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Σ per-layer final additions (one forward pass through the
+    /// compressed network).
+    pub fn total_additions(&self) -> usize {
+        self.layers.iter().map(CompressionReport::final_additions).sum()
+    }
+
+    /// Σ per-layer CSD baselines (one dense forward pass).
+    pub fn baseline_additions(&self) -> usize {
+        self.layers.iter().map(|r| r.baseline_additions).sum()
+    }
+
+    /// Network compression ratio: baseline / compressed additions.
+    pub fn total_ratio(&self) -> f64 {
+        self.baseline_additions() as f64 / self.total_additions().max(1) as f64
+    }
+
+    /// Worst per-layer relative error.
+    pub fn max_rel_err(&self) -> f64 {
+        self.layers.iter().map(CompressionReport::final_rel_err).fold(0.0, f64::max)
+    }
+
+    /// Render per-layer rows plus a total row for the CLI.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!("network compression report ({} layers)", self.layers.len()),
+            &["layer", "shape", "additions", "ratio", "rel err"],
+        );
+        for (i, r) in self.layers.iter().enumerate() {
+            t.add_row(vec![
+                format!("layer{}", i + 1),
+                format!("{}x{}", r.input_rows, r.input_cols),
+                r.final_additions().to_string(),
+                format!("{:.2}", r.final_ratio()),
+                format!("{:.2e}", r.final_rel_err()),
+            ]);
+        }
+        t.add_row(vec![
+            "total".into(),
+            "-".into(),
+            self.total_additions().to_string(),
+            format!("{:.2}", self.total_ratio()),
+            format!("{:.2e}", self.max_rel_err()),
+        ]);
+        t.render()
+    }
+
+    /// Tab-separated per-layer rows + total, for artifact directories.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("layer\trows\tcols\tadditions\tbaseline\tratio\trel_err\n");
+        for (i, r) in self.layers.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "layer{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                i + 1,
+                r.input_rows,
+                r.input_cols,
+                r.final_additions(),
+                r.baseline_additions,
+                r.final_ratio(),
+                r.final_rel_err()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "total\t-\t-\t{}\t{}\t{}\t{}",
+            self.total_additions(),
+            self.baseline_additions(),
+            self.total_ratio(),
+            self.max_rel_err()
+        );
+        out
+    }
+
+    /// Publish as `compress.network.*` gauges: network totals plus
+    /// `compress.network.layer.<k>.additions|ratio|rel_err` per layer.
+    pub fn publish(&self, metrics: &Metrics) {
+        metrics.incr("compress.network.runs", 1);
+        metrics.gauge("compress.network.layers", self.layers.len() as f64);
+        metrics.gauge("compress.network.total_additions", self.total_additions() as f64);
+        metrics.gauge("compress.network.baseline_additions", self.baseline_additions() as f64);
+        metrics.gauge("compress.network.total_ratio", self.total_ratio());
+        for (i, r) in self.layers.iter().enumerate() {
+            let p = format!("compress.network.layer.{}", i + 1);
+            metrics.gauge(&format!("{p}.additions"), r.final_additions() as f64);
+            metrics.gauge(&format!("{p}.ratio"), r.final_ratio());
+            metrics.gauge(&format!("{p}.rel_err"), r.final_rel_err());
+        }
+    }
+}
+
+/// One compressed layer of a [`CompressedNetwork`]: the single-matrix
+/// pipeline artifact plus the layer's bias and activation.
+pub struct CompressedLayer {
+    model: CompressedModel,
+    bias: Option<Vec<f32>>,
+    activation: Activation,
+}
+
+impl CompressedLayer {
+    pub fn model(&self) -> &CompressedModel {
+        &self.model
+    }
+
+    pub fn bias(&self) -> Option<&[f32]> {
+        self.bias.as_deref()
+    }
+
+    pub fn activation(&self) -> Activation {
+        self.activation
+    }
+}
+
+/// Drives the single-matrix [`Pipeline`] once per network layer, each
+/// layer under its recipe-resolved stage list and parameters
+/// ([`Recipe::layer_recipe`]).
+pub struct NetworkPipeline {
+    recipe: Recipe,
+}
+
+impl NetworkPipeline {
+    /// Validates the recipe's global stage composition up front (every
+    /// per-layer resolved list is re-validated when its layer runs).
+    pub fn from_recipe(recipe: &Recipe) -> Result<Self> {
+        Pipeline::from_recipe(recipe).context("network recipe (global stages)")?;
+        Ok(NetworkPipeline { recipe: recipe.clone() })
+    }
+
+    pub fn recipe(&self) -> &Recipe {
+        &self.recipe
+    }
+
+    /// Compress every layer of `ckpt` and aggregate the accounting.
+    pub fn run(&self, ckpt: &NetworkCheckpoint) -> Result<CompressedNetwork> {
+        if let Some(&k) = self.recipe.layers.keys().find(|&&k| k > ckpt.num_layers()) {
+            bail!("recipe overrides layer {k} but the checkpoint has {} layers", ckpt.num_layers());
+        }
+        let mut layers = Vec::with_capacity(ckpt.num_layers());
+        let mut reports = Vec::with_capacity(ckpt.num_layers());
+        for (i, layer) in ckpt.layers().iter().enumerate() {
+            let k = i + 1;
+            let recipe = self.recipe.layer_recipe(k)?;
+            let model = Pipeline::from_recipe(&recipe)
+                .and_then(|p| p.run(&layer.weight))
+                .with_context(|| format!("compressing network layer {k}"))?;
+            reports.push(model.report().clone());
+            layers.push(CompressedLayer {
+                model,
+                bias: layer.bias.clone(),
+                activation: layer.activation,
+            });
+        }
+        Ok(CompressedNetwork {
+            layers,
+            report: NetworkReport { layers: reports },
+            gate_epsilon: self.recipe.gate_epsilon,
+        })
+    }
+
+    /// [`NetworkPipeline::run`], publishing the aggregated report
+    /// (`compress.network.*` series).
+    pub fn run_with_metrics(
+        &self,
+        ckpt: &NetworkCheckpoint,
+        metrics: &Metrics,
+    ) -> Result<CompressedNetwork> {
+        let net = self.run(ckpt)?;
+        net.report().publish(metrics);
+        Ok(net)
+    }
+}
+
+/// The result of a network compression run: per-layer artifacts plus
+/// the aggregated report — convertible into the chained serving engine
+/// or a per-layer-range sub-engine for remote workers.
+pub struct CompressedNetwork {
+    layers: Vec<CompressedLayer>,
+    report: NetworkReport,
+    gate_epsilon: Option<f64>,
+}
+
+impl CompressedNetwork {
+    pub fn report(&self) -> &NetworkReport {
+        &self.report
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layers(&self) -> &[CompressedLayer] {
+        &self.layers
+    }
+
+    /// The recipe-declared accuracy-gate tolerance, when one was set.
+    pub fn gate_epsilon(&self) -> Option<f64> {
+        self.gate_epsilon
+    }
+
+    fn part(layer: &CompressedLayer) -> LayerPart {
+        LayerPart {
+            inf_norm: inf_norm(&layer.model.state().reconstruction()),
+            exec: layer.model.executor(),
+            bias: layer.bias.clone(),
+            activation: layer.activation,
+        }
+    }
+
+    /// The chained serving engine (cloning the per-layer engines).
+    pub fn executor(&self) -> Result<NetworkExecutor> {
+        NetworkExecutor::from_parts(self.layers.iter().map(Self::part).collect())
+    }
+
+    /// Consume into the chained serving engine without cloning the
+    /// per-layer engines (the runtime checkpoint-load path).
+    pub fn into_executor(self) -> Result<NetworkExecutor> {
+        let parts = self
+            .layers
+            .into_iter()
+            .map(|l| {
+                let inf_norm = inf_norm(&l.model.state().reconstruction());
+                LayerPart {
+                    inf_norm,
+                    exec: l.model.into_executor(),
+                    bias: l.bias,
+                    activation: l.activation,
+                }
+            })
+            .collect();
+        NetworkExecutor::from_parts(parts)
+    }
+
+    /// A sub-chain serving only the layers in `range` (0-based, end
+    /// exclusive) — what a remote `shard-worker --layer-range` process
+    /// serves. Every layer in the range applies its bias and activation,
+    /// so chaining the range engines in order reproduces the full
+    /// network exactly.
+    pub fn layer_range_executor(&self, range: Range<usize>) -> Result<NetworkExecutor> {
+        ensure!(
+            range.start < range.end && range.end <= self.layers.len(),
+            "layer range {}..{} out of 0..{}",
+            range.start,
+            range.end,
+            self.layers.len()
+        );
+        NetworkExecutor::from_parts(self.layers[range].iter().map(Self::part).collect())
+    }
+
+    /// Evaluate one sample by hand-chaining the per-layer *oracle*
+    /// evaluation of the identical compressed representation
+    /// (kept-feature gather → segment sums → [`NaiveExecutor`] over the
+    /// adder graph → bias → activation). Float serving must be
+    /// bit-identical to this; fixed serving within
+    /// [`NetworkExecutor::max_error_bound`].
+    pub fn oracle_forward(&self, x: &[f32]) -> Vec<f32> {
+        self.oracle_forward_batch(&[x.to_vec()]).pop().expect("one sample in, one out")
+    }
+
+    /// Batch [`CompressedNetwork::oracle_forward`] (the oracle graph is
+    /// instantiated once per layer, not per sample).
+    pub fn oracle_forward_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut cur: Vec<Vec<f32>> = xs.to_vec();
+        for l in &self.layers {
+            let state = l.model.state();
+            let oracle = state.lcc().map(|s| NaiveExecutor::new(s.graph().clone()));
+            cur = cur
+                .iter()
+                .map(|x| {
+                    let xk: Vec<f32> = state.kept().iter().map(|&i| x[i]).collect();
+                    let mut y = if let Some(slcc) = state.lcc() {
+                        let sums = slcc.layer.segment_sums(&xk);
+                        oracle.as_ref().expect("oracle exists with lcc").execute_one(&sums)
+                    } else if let Some(sh) = state.shared() {
+                        sh.apply(&xk)
+                    } else {
+                        state.dense().matvec(&xk)
+                    };
+                    if let Some(b) = &l.bias {
+                        for (v, add) in y.iter_mut().zip(b) {
+                            *v += *add;
+                        }
+                    }
+                    l.activation.apply(&mut y);
+                    y
+                })
+                .collect();
+        }
+        cur
+    }
+}
+
+/// Operator ∞-norm (max absolute row sum) — the per-layer amplification
+/// factor of the network error recurrence.
+fn inf_norm(m: &Matrix) -> f64 {
+    (0..m.rows())
+        .map(|r| m.row(r).iter().map(|v| v.abs() as f64).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Build input for [`NetworkExecutor::from_parts`]: one layer's engine
+/// plus the chaining metadata the executor needs.
+struct LayerPart {
+    exec: PipelineExecutor,
+    bias: Option<Vec<f32>>,
+    activation: Activation,
+    /// ∞-norm of the layer's compressed linear map (error amplification)
+    inf_norm: f64,
+}
+
+/// One chained layer at serve time, with its running batch counters.
+struct LayerRun {
+    exec: PipelineExecutor,
+    bias: Option<Vec<f32>>,
+    activation: Activation,
+    additions: Option<usize>,
+    err_bound: f64,
+    batch_us: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl LayerRun {
+    /// Engine → bias → activation, batch-major throughout, timing the
+    /// whole layer step.
+    fn run(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        let t0 = Instant::now();
+        self.exec.execute_batch_into(xs, ys);
+        if let Some(b) = &self.bias {
+            for y in ys.iter_mut() {
+                for (v, add) in y.iter_mut().zip(b) {
+                    *v += *add;
+                }
+            }
+        }
+        for y in ys.iter_mut() {
+            self.activation.apply(y);
+        }
+        self.batch_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The chained network serving engine: per-layer [`PipelineExecutor`]s
+/// connected through batch-major bias/activation kernels, never leaving
+/// batch-major form. Inter-layer activations ping-pong between two
+/// reused lane buffers (concurrent batches fall back to local buffers
+/// instead of serializing). Per-layer analytic error bounds propagate
+/// into [`NetworkExecutor::max_error_bound`]; per-layer timing,
+/// additions and bounds surface through
+/// [`crate::exec::Executor::layer_stats`].
+pub struct NetworkExecutor {
+    layers: Vec<LayerRun>,
+    input_dim: usize,
+    output_dim: usize,
+    err_bound: f64,
+    scratch: Mutex<(Vec<Vec<f32>>, Vec<Vec<f32>>)>,
+}
+
+impl NetworkExecutor {
+    fn from_parts(parts: Vec<LayerPart>) -> Result<NetworkExecutor> {
+        ensure!(!parts.is_empty(), "a network executor needs at least one layer");
+        let mut bound = 0.0f64;
+        let mut layers: Vec<LayerRun> = Vec::with_capacity(parts.len());
+        for (i, part) in parts.into_iter().enumerate() {
+            let LayerPart { exec, bias, activation, inf_norm } = part;
+            if let Some(prev) = layers.last() {
+                ensure!(
+                    exec.num_inputs() == prev.exec.num_outputs(),
+                    "layer {} input dim {} != layer {} output dim {}",
+                    i + 1,
+                    exec.num_inputs(),
+                    i,
+                    prev.exec.num_outputs()
+                );
+            }
+            if let Some(b) = &bias {
+                ensure!(
+                    b.len() == exec.num_outputs(),
+                    "layer {}: bias length {} != {} engine outputs",
+                    i + 1,
+                    b.len(),
+                    exec.num_outputs()
+                );
+            }
+            // error recurrence: an input perturbation passes through the
+            // layer's linear map (amplified at most by its ∞-norm — the
+            // bias shift is exact and ReLU is 1-Lipschitz) and the
+            // layer's own datapath error adds on top
+            let err_bound = exec.max_error_bound();
+            bound = inf_norm * bound + err_bound;
+            layers.push(LayerRun {
+                additions: exec.additions(),
+                err_bound,
+                exec,
+                bias,
+                activation,
+                batch_us: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+            });
+        }
+        let input_dim = layers.first().expect("non-empty").exec.num_inputs();
+        let output_dim = layers.last().expect("non-empty").exec.num_outputs();
+        Ok(NetworkExecutor {
+            layers,
+            input_dim,
+            output_dim,
+            err_bound: bound,
+            scratch: Mutex::new((Vec::new(), Vec::new())),
+        })
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Propagated analytic |served − exact| bound of the whole chain:
+    /// 0.0 when every layer serves a float engine (bit-identical to the
+    /// hand-chained oracle), the recurrence over per-layer bounds and
+    /// ∞-norms in fixed mode.
+    pub fn max_error_bound(&self) -> f64 {
+        self.err_bound
+    }
+
+    /// Σ per-layer additions, when every layer has a lowered program.
+    pub fn total_additions(&self) -> Option<usize> {
+        self.layers.iter().map(|l| l.additions).sum()
+    }
+}
+
+impl Executor for NetworkExecutor {
+    fn num_inputs(&self) -> usize {
+        self.input_dim
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.output_dim
+    }
+
+    fn name(&self) -> &'static str {
+        "network-exec"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        let n = self.layers.len();
+        if n == 1 {
+            self.layers[0].run(xs, ys);
+            return;
+        }
+        // reuse the inter-layer lane buffers when free; a concurrent
+        // batch falls back to locals rather than serializing on the lock
+        let mut guard = self.scratch.try_lock().ok();
+        let (mut local_a, mut local_b) = (Vec::new(), Vec::new());
+        let (a, b) = match guard.as_deref_mut() {
+            Some((a, b)) => (a, b),
+            None => (&mut local_a, &mut local_b),
+        };
+        self.layers[0].run(xs, a);
+        let (mut cur, mut next) = (a, b);
+        for layer in &self.layers[1..n - 1] {
+            layer.run(cur, next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        self.layers[n - 1].run(cur, ys);
+    }
+
+    fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            for (label, health) in l.exec.health_report() {
+                let name = if label.is_empty() {
+                    format!("layer.{}", i + 1)
+                } else {
+                    format!("layer.{}.{label}", i + 1)
+                };
+                out.push((name, health));
+            }
+        }
+        out
+    }
+
+    fn layer_stats(&self) -> Vec<LayerStat> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerStat {
+                index: i + 1,
+                batch_us_total: l.batch_us.load(Ordering::Relaxed),
+                batches: l.batches.load(Ordering::Relaxed),
+                additions: l.additions,
+                err_bound: l.err_bound,
+            })
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for NetworkExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NetworkExecutor")
+            .field("layers", &self.layers.len())
+            .field("input_dim", &self.input_dim)
+            .field("output_dim", &self.output_dim)
+            .field("err_bound", &self.err_bound)
+            .finish()
+    }
+}
+
+/// Dimension-checked sequential composition of arbitrary executors —
+/// the serve-side gather when each hop is a [`crate::exec::RemoteExecutor`]
+/// fronting a worker that serves one layer range. Hop errors propagate
+/// typed through [`Executor::try_execute_batch_into`], so shed/failover
+/// semantics compose exactly like single-engine remote serving.
+pub struct ChainedExecutor {
+    hops: Vec<Arc<dyn Executor>>,
+}
+
+impl ChainedExecutor {
+    pub fn new(hops: Vec<Arc<dyn Executor>>) -> Result<Self> {
+        ensure!(!hops.is_empty(), "a chained executor needs at least one hop");
+        for (i, pair) in hops.windows(2).enumerate() {
+            ensure!(
+                pair[1].num_inputs() == pair[0].num_outputs(),
+                "hop {} output dim {} != hop {} input dim {}",
+                i,
+                pair[0].num_outputs(),
+                i + 1,
+                pair[1].num_inputs()
+            );
+        }
+        Ok(ChainedExecutor { hops })
+    }
+
+    pub fn num_hops(&self) -> usize {
+        self.hops.len()
+    }
+}
+
+impl Executor for ChainedExecutor {
+    fn num_inputs(&self) -> usize {
+        self.hops.first().expect("non-empty").num_inputs()
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.hops.last().expect("non-empty").num_outputs()
+    }
+
+    fn name(&self) -> &'static str {
+        "chained-exec"
+    }
+
+    fn execute_batch_into(&self, xs: &[Vec<f32>], ys: &mut Vec<Vec<f32>>) {
+        self.try_execute_batch_into(xs, ys).expect("chained hop failed");
+    }
+
+    fn try_execute_batch_into(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &mut Vec<Vec<f32>>,
+    ) -> std::result::Result<(), ExecError> {
+        let n = self.hops.len();
+        if n == 1 {
+            return self.hops[0].try_execute_batch_into(xs, ys);
+        }
+        let mut cur = Vec::new();
+        let mut next = Vec::new();
+        self.hops[0].try_execute_batch_into(xs, &mut cur)?;
+        for hop in &self.hops[1..n - 1] {
+            hop.try_execute_batch_into(&cur, &mut next)?;
+            std::mem::swap(&mut cur, &mut next);
+        }
+        self.hops[n - 1].try_execute_batch_into(&cur, ys)
+    }
+
+    fn health_report(&self) -> Vec<(String, ExecHealth)> {
+        let mut out = Vec::new();
+        for (i, hop) in self.hops.iter().enumerate() {
+            for (label, health) in hop.health_report() {
+                let name = if label.is_empty() {
+                    format!("hop.{i}")
+                } else {
+                    format!("hop.{i}.{label}")
+                };
+                out.push((name, health));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExecConfig, ExecMode};
+
+    fn serial_recipe() -> Recipe {
+        Recipe { exec: ExecConfig::serial(), ..Recipe::default() }
+    }
+
+    fn test_inputs(dim: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_vec(dim, 1.0)).collect()
+    }
+
+    #[test]
+    fn checkpoint_save_load_round_trip() {
+        let ckpt = demo_network(&[9, 7, 5], 3);
+        let dir = std::env::temp_dir().join(format!("lccnn-net-ckpt-{}", std::process::id()));
+        ckpt.save(&dir).unwrap();
+        assert!(NetworkCheckpoint::is_network_dir(&dir));
+        let back = NetworkCheckpoint::load(&dir).unwrap();
+        assert_eq!(back, ckpt, "f32 npy round-trip is lossless");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_errors_are_typed() {
+        let dir = std::env::temp_dir().join(format!("lccnn-net-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(!NetworkCheckpoint::is_network_dir(&dir), "no manifest yet");
+        // manifest names a layer whose npy file has the wrong shape
+        let ckpt = demo_network(&[6, 4], 1);
+        ckpt.save(&dir).unwrap();
+        let w = &ckpt.layers()[0].weight;
+        write_npy(
+            &dir.join("layer1.weight.npy"),
+            &NpyArray::f32(vec![w.cols(), w.rows()], w.data().to_vec()),
+        )
+        .unwrap();
+        let err = NetworkCheckpoint::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn network_executor_matches_hand_chained_oracle_float() {
+        let ckpt = demo_network(&[12, 10, 6], 11);
+        let net = NetworkPipeline::from_recipe(&serial_recipe()).unwrap().run(&ckpt).unwrap();
+        assert_eq!(net.report().num_layers(), 3);
+        assert!(net.report().total_additions() > 0);
+        assert!(net.report().total_ratio() > 1.0, "demo net must actually compress");
+        let exec = net.executor().unwrap();
+        assert_eq!(exec.num_inputs(), 12);
+        assert_eq!(exec.num_outputs(), 6);
+        assert_eq!(exec.max_error_bound(), 0.0, "float chain is exact");
+        let xs = test_inputs(12, 7, 5);
+        let got = exec.execute_batch(&xs);
+        let want = net.oracle_forward_batch(&xs);
+        assert_eq!(got, want, "float serving must be bit-identical to the chained oracle");
+        // per-layer stats accumulated one batch per layer
+        let stats = exec.layer_stats();
+        assert_eq!(stats.len(), 3);
+        for (i, s) in stats.iter().enumerate() {
+            assert_eq!(s.index, i + 1);
+            assert_eq!(s.batches, 1);
+            assert!(s.additions.is_some(), "lcc recipe lowers every layer");
+        }
+    }
+
+    #[test]
+    fn fixed_network_within_propagated_bound() {
+        let ckpt = demo_network(&[10, 8, 5], 21);
+        let recipe = Recipe {
+            exec: ExecConfig { exec_mode: ExecMode::Fixed, ..ExecConfig::serial() },
+            ..Recipe::default()
+        };
+        let net = NetworkPipeline::from_recipe(&recipe).unwrap().run(&ckpt).unwrap();
+        let exec = net.executor().unwrap();
+        let bound = exec.max_error_bound();
+        assert!(bound > 0.0, "fixed chain must report a bound");
+        let xs = test_inputs(10, 6, 9);
+        let got = exec.execute_batch(&xs);
+        let want = net.oracle_forward_batch(&xs);
+        for (ws, gs) in want.iter().zip(&got) {
+            for (wv, gv) in ws.iter().zip(gs) {
+                let tol = bound + 1e-3 * (1.0 + wv.abs() as f64);
+                assert!(((wv - gv).abs() as f64) <= tol, "fixed {gv} vs oracle {wv} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn layer_range_chain_reproduces_full_network() {
+        let ckpt = demo_network(&[11, 9, 7, 4], 31);
+        let net = NetworkPipeline::from_recipe(&serial_recipe()).unwrap().run(&ckpt).unwrap();
+        let full = net.executor().unwrap();
+        let front = net.layer_range_executor(0..2).unwrap();
+        let back = net.layer_range_executor(2..4).unwrap();
+        assert_eq!(front.num_layers(), 2);
+        assert_eq!(front.num_outputs(), back.num_inputs());
+        let hops: Vec<Arc<dyn Executor>> = vec![Arc::new(front), Arc::new(back)];
+        let chain = ChainedExecutor::new(hops).unwrap();
+        let xs = test_inputs(11, 5, 13);
+        assert_eq!(
+            chain.execute_batch(&xs),
+            full.execute_batch(&xs),
+            "layer-range sub-chains gather bit-identically"
+        );
+        assert!(net.layer_range_executor(2..5).is_err(), "range end past the last layer");
+        let a = net.layer_range_executor(0..1).unwrap();
+        let c = net.layer_range_executor(2..3).unwrap();
+        let bad: Vec<Arc<dyn Executor>> = vec![Arc::new(a), Arc::new(c)];
+        assert!(ChainedExecutor::new(bad).is_err(), "mis-chained hops are rejected");
+    }
+
+    #[test]
+    fn per_layer_overrides_steer_individual_layers() {
+        let ckpt = demo_network(&[8, 6, 4], 41);
+        let mut recipe = serial_recipe();
+        // layer 2 skips share+prune entirely
+        recipe.layers.entry(2).or_default().stages = Some(vec!["lcc".to_string()]);
+        let net = NetworkPipeline::from_recipe(&recipe).unwrap().run(&ckpt).unwrap();
+        let names: Vec<Vec<&str>> = net
+            .report()
+            .layers
+            .iter()
+            .map(|r| r.stages.iter().map(|s| s.stage.as_str()).collect())
+            .collect();
+        assert_eq!(names[0], vec!["prune", "share", "lcc"]);
+        assert_eq!(names[1], vec!["lcc"], "layer 2 stage-list override wins");
+        assert_eq!(names[2], vec!["prune", "share", "lcc"]);
+        // an override beyond the checkpoint is a typed error
+        let mut bad = serial_recipe();
+        bad.layers.entry(9).or_default().stages = Some(vec!["lcc".to_string()]);
+        let err = NetworkPipeline::from_recipe(&bad).unwrap().run(&ckpt).unwrap_err().to_string();
+        assert!(err.contains("layer 9"), "{err}");
+    }
+
+    #[test]
+    fn activation_parse_and_apply() {
+        assert_eq!(Activation::parse("relu"), Some(Activation::Relu));
+        assert_eq!(Activation::parse("identity"), Some(Activation::Identity));
+        assert_eq!(Activation::parse("none"), Some(Activation::Identity));
+        assert_eq!(Activation::parse("tanh"), None);
+        let mut y = vec![-1.0, 0.5, -0.0, 2.0];
+        Activation::Relu.apply(&mut y);
+        assert_eq!(y, vec![0.0, 0.5, 0.0, 2.0]);
+        let mut z = vec![-1.0, 0.5];
+        Activation::Identity.apply(&mut z);
+        assert_eq!(z, vec![-1.0, 0.5]);
+    }
+}

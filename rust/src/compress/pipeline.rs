@@ -120,7 +120,7 @@ impl Pipeline {
                 Composed::Custom(_) => return None,
             }
         }
-        Some(Recipe { stages, exec: self.exec, shard: self.shard })
+        Some(Recipe { stages, exec: self.exec, shard: self.shard, ..Recipe::default() })
     }
 
     pub fn exec_config(&self) -> ExecConfig {
@@ -363,7 +363,7 @@ mod tests {
                 StageSpec::Prune(PruneSpec::default()),
             ],
             exec: ExecConfig::serial(),
-            shard: None,
+            ..Recipe::default()
         };
         assert!(Pipeline::from_recipe(&share_then_prune).is_err());
         let lcc_then_share = Recipe {
@@ -372,7 +372,7 @@ mod tests {
                 StageSpec::Share(ShareSpec::default()),
             ],
             exec: ExecConfig::serial(),
-            shard: None,
+            ..Recipe::default()
         };
         assert!(Pipeline::from_recipe(&lcc_then_share).is_err());
         let twice = Recipe {
@@ -381,7 +381,7 @@ mod tests {
                 StageSpec::Prune(PruneSpec::default()),
             ],
             exec: ExecConfig::serial(),
-            shard: None,
+            ..Recipe::default()
         };
         assert!(Pipeline::from_recipe(&twice).is_err());
     }
@@ -392,7 +392,7 @@ mod tests {
         let p = Pipeline::from_recipe(&Recipe {
             stages: vec![],
             exec: ExecConfig::serial(),
-            shard: None,
+            ..Recipe::default()
         })
         .unwrap();
         let model = p.run(&w).unwrap();

@@ -195,9 +195,252 @@ impl StageSpec {
     }
 }
 
+/// Layer the keys present in TOML section `sec` over `spec`'s current
+/// parameters. Key coverage matches [`write_stage_section`]'s emission,
+/// so parse(emit(spec)) is the identity for every stage — for both the
+/// global `[compress.<stage>]` sections and the per-layer
+/// `[compress.layer.<k>.<stage>]` sections.
+fn read_stage_spec(t: &Sections, sec: &str, spec: &mut StageSpec) -> Result<()> {
+    let read_int = |key: &str| -> Option<i64> { get(t, sec, key).and_then(TomlValue::as_int) };
+    let read_f = |key: &str| -> Option<f64> { get(t, sec, key).and_then(TomlValue::as_float) };
+    match spec {
+        StageSpec::Prune(p) => {
+            if let Some(v) = read_f("eps") {
+                p.eps = v as f32;
+            }
+        }
+        StageSpec::Share(s) => {
+            if let Some(v) = read_f("damping") {
+                s.damping = v as f32;
+            }
+            if let Some(v) = read_f("preference_scale") {
+                s.preference_scale = v as f32;
+            }
+            if let Some(v) = read_int("max_iters") {
+                s.max_iters = v.max(1) as usize;
+            }
+            if let Some(v) = read_int("convergence_iters") {
+                s.convergence_iters = v.max(1) as usize;
+            }
+        }
+        StageSpec::Quantize(q) => {
+            if let Some(v) = read_int("int_bits") {
+                q.int_bits = v.clamp(0, 32) as u32;
+            }
+            if let Some(v) = read_int("frac_bits") {
+                q.frac_bits = v.clamp(0, 32) as u32;
+            }
+        }
+        StageSpec::Lcc(l) => {
+            if let Some(v) = get(t, sec, "algo").and_then(TomlValue::as_str) {
+                l.algo = LccAlgoConfig::parse(v)
+                    .with_context(|| format!("[{sec}] algo {v:?} (use fp|fs)"))?;
+            }
+            if let Some(v) = read_int("terms_per_row") {
+                l.terms_per_row = v.max(1) as usize;
+            }
+            if let Some(v) = read_int("max_factors") {
+                l.max_factors = v.max(1) as usize;
+            }
+            if let Some(v) = read_int("max_terms_per_row") {
+                l.max_terms_per_row = v.max(1) as usize;
+            }
+            if let Some(v) = read_int("slice_width") {
+                l.slice_width = v.max(0) as usize;
+            }
+            if let Some(v) = read_f("target_rel_err") {
+                l.target_rel_err = v;
+            }
+            if let Some(v) = read_f("quant_step") {
+                l.quant_step = v;
+            }
+            if let Some(v) = read_int("shift_min") {
+                l.shift_min = v as i32;
+            }
+            if let Some(v) = read_int("shift_max") {
+                l.shift_max = v as i32;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Emit every parameter of `st` as TOML section `[section]`
+/// ([`read_stage_spec`] is the exact inverse).
+fn write_stage_section(s: &mut String, section: &str, st: &StageSpec) {
+    match st {
+        StageSpec::Prune(p) => {
+            let _ = writeln!(s, "\n[{section}]\neps = {}", p.eps);
+        }
+        StageSpec::Share(sh) => {
+            let _ = writeln!(
+                s,
+                "\n[{section}]\ndamping = {}\npreference_scale = {}\n\
+                 max_iters = {}\nconvergence_iters = {}",
+                sh.damping, sh.preference_scale, sh.max_iters, sh.convergence_iters
+            );
+        }
+        StageSpec::Quantize(q) => {
+            let _ = writeln!(
+                s,
+                "\n[{section}]\nint_bits = {}\nfrac_bits = {}",
+                q.int_bits, q.frac_bits
+            );
+        }
+        StageSpec::Lcc(l) => {
+            let algo = match l.algo {
+                LccAlgoConfig::Fp => "fp",
+                LccAlgoConfig::Fs => "fs",
+            };
+            let _ = writeln!(
+                s,
+                "\n[{section}]\nalgo = \"{algo}\"\nterms_per_row = {}\n\
+                 max_factors = {}\nmax_terms_per_row = {}\nslice_width = {}\n\
+                 target_rel_err = {}\nquant_step = {}\nshift_min = {}\nshift_max = {}",
+                l.terms_per_row,
+                l.max_factors,
+                l.max_terms_per_row,
+                l.slice_width,
+                l.target_rel_err,
+                l.quant_step,
+                l.shift_min,
+                l.shift_max
+            );
+        }
+    }
+}
+
+/// The resolved global spec for a built-in stage `kind`: the recipe's
+/// stage when the global list carries it, the stage defaults otherwise.
+fn global_stage(stages: &[StageSpec], kind: &str) -> StageSpec {
+    stages
+        .iter()
+        .find(|s| s.kind() == kind)
+        .cloned()
+        .or_else(|| StageSpec::default_for(kind))
+        .expect("built-in stage kind")
+}
+
+/// Apply one `LCCNN_COMPRESS_LAYER<k>_<knob>` environment override. A
+/// stage knob seeds the layer's override spec from the resolved global
+/// stage on first touch, so partial per-layer env tuning inherits the
+/// global parameters exactly like a partial
+/// `[compress.layer.<k>.<stage>]` TOML section does.
+fn apply_layer_env(base: &mut Recipe, k: usize, knob: &str, value: &str) {
+    fn parsed<T: std::str::FromStr>(v: &str) -> Option<T> {
+        v.parse().ok()
+    }
+    if knob == "STAGES" {
+        let mut list = Vec::new();
+        for kind in value.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if StageSpec::default_for(kind).is_some() {
+                list.push(kind.to_string());
+            } else {
+                log::warn!("LCCNN_COMPRESS_LAYER{k}_STAGES: unknown stage {kind:?} skipped");
+            }
+        }
+        base.layers.entry(k).or_default().stages = Some(list);
+        return;
+    }
+    let Some((kind, field)) = (match knob.split_once('_') {
+        Some(("PRUNE", f)) => Some(("prune", f)),
+        Some(("SHARE", f)) => Some(("share", f)),
+        Some(("QUANT", f)) => Some(("quantize", f)),
+        Some(("LCC", f)) => Some(("lcc", f)),
+        _ => None,
+    }) else {
+        log::warn!("LCCNN_COMPRESS_LAYER{k}_{knob}: unknown knob ignored");
+        return;
+    };
+    let mut spec = {
+        let seed = global_stage(&base.stages, kind);
+        base.layers.get(&k).and_then(|o| o.stage(kind)).unwrap_or(seed)
+    };
+    let ok = match (&mut spec, field) {
+        (StageSpec::Prune(p), "EPS") => parsed::<f32>(value).map(|v| p.eps = v).is_some(),
+        (StageSpec::Share(s), "DAMPING") => parsed::<f32>(value).map(|v| s.damping = v).is_some(),
+        (StageSpec::Share(s), "PREFERENCE_SCALE") => {
+            parsed::<f32>(value).map(|v| s.preference_scale = v).is_some()
+        }
+        (StageSpec::Quantize(q), "INT_BITS") => {
+            parsed::<u32>(value).map(|v| q.int_bits = v.min(32)).is_some()
+        }
+        (StageSpec::Quantize(q), "FRAC_BITS") => {
+            parsed::<u32>(value).map(|v| q.frac_bits = v.min(32)).is_some()
+        }
+        (StageSpec::Lcc(l), "ALGO") => LccAlgoConfig::parse(value).map(|a| l.algo = a).is_some(),
+        (StageSpec::Lcc(l), "SLICE_WIDTH") => {
+            parsed::<usize>(value).map(|v| l.slice_width = v).is_some()
+        }
+        (StageSpec::Lcc(l), "TARGET_REL_ERR") => {
+            parsed::<f64>(value).map(|v| l.target_rel_err = v).is_some()
+        }
+        (StageSpec::Lcc(l), "MAX_TERMS") => {
+            parsed::<usize>(value).map(|v| l.max_terms_per_row = v.max(1)).is_some()
+        }
+        (StageSpec::Lcc(l), "TERMS_PER_ROW") => {
+            parsed::<usize>(value).map(|v| l.terms_per_row = v.max(1)).is_some()
+        }
+        _ => {
+            log::warn!("LCCNN_COMPRESS_LAYER{k}_{knob}: unknown knob ignored");
+            return;
+        }
+    };
+    if !ok {
+        log::warn!("LCCNN_COMPRESS_LAYER{k}_{knob}: unparsable value {value:?} ignored");
+        return;
+    }
+    base.layers.entry(k).or_default().set_stage(spec);
+}
+
+/// Per-layer overrides a network recipe carries under
+/// `[compress.layer.<k>]` sections (1-based layer index, matching the
+/// checkpoint's `layer<k>` naming). Every field is optional: an unset
+/// field falls back to the global recipe, so one small section can
+/// retune a single stage of a single layer.
+/// [`Recipe::layer_recipe`] resolves the overrides into that layer's
+/// single-matrix pipeline recipe.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerOverride {
+    /// replaces the global stage *list* for this layer (e.g. skip
+    /// `share` on a trained output layer); `stages = [...]` under the
+    /// bare `[compress.layer.<k>]` section
+    pub stages: Option<Vec<String>>,
+    pub prune: Option<PruneSpec>,
+    pub share: Option<ShareSpec>,
+    pub quantize: Option<QuantSpec>,
+    pub lcc: Option<LccSpec>,
+}
+
+impl LayerOverride {
+    /// The overriding spec for a stage kind, if this layer carries one.
+    pub fn stage(&self, kind: &str) -> Option<StageSpec> {
+        match kind {
+            "prune" => self.prune.map(StageSpec::Prune),
+            "share" => self.share.map(StageSpec::Share),
+            "quantize" => self.quantize.map(StageSpec::Quantize),
+            "lcc" => self.lcc.map(StageSpec::Lcc),
+            _ => None,
+        }
+    }
+
+    /// Store `spec` in the matching override slot.
+    pub fn set_stage(&mut self, spec: StageSpec) {
+        match spec {
+            StageSpec::Prune(p) => self.prune = Some(p),
+            StageSpec::Share(s) => self.share = Some(s),
+            StageSpec::Quantize(q) => self.quantize = Some(q),
+            StageSpec::Lcc(l) => self.lcc = Some(l),
+        }
+    }
+}
+
 /// A complete, serializable compression recipe: ordered stages plus the
 /// engine tuning the lowered graph executes with, and optionally how the
-/// served engine is sharded (`[compress.shard]`).
+/// served engine is sharded (`[compress.shard]`). Multi-layer (network)
+/// checkpoints additionally resolve per-layer stage overrides from
+/// [`Recipe::layers`] and gate their end-to-end accuracy on
+/// [`Recipe::gate_epsilon`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct Recipe {
     pub stages: Vec<StageSpec>,
@@ -206,6 +449,14 @@ pub struct Recipe {
     /// program is partitioned by output ranges across per-shard engines
     /// (`exec::ShardedExecutor`), bit-identical to the unsharded serve
     pub shard: Option<ShardSpec>,
+    /// per-layer overrides for multi-layer (network) checkpoints, keyed
+    /// by 1-based layer index (`[compress.layer.<k>]` sections); ignored
+    /// by single-matrix pipelines
+    pub layers: BTreeMap<usize, LayerOverride>,
+    /// accuracy-gate tolerance for network compression
+    /// (`[compress.network] gate_epsilon`): the compressed network's
+    /// accuracy must stay within this of the dense baseline
+    pub gate_epsilon: Option<f64>,
 }
 
 impl Default for Recipe {
@@ -219,15 +470,55 @@ impl Default for Recipe {
             ],
             exec: ExecConfig::default(),
             shard: None,
+            layers: BTreeMap::new(),
+            gate_epsilon: None,
         }
     }
 }
 
 impl Recipe {
     /// The historical registry behaviour: LCC the raw matrix, nothing
-    /// else (what `ModelRegistry::load_checkpoint` did before recipes).
+    /// else (the registry's legacy single-matrix load before recipes,
+    /// still the fallback for bare `.npy` checkpoints).
     pub fn lcc_only(cfg: &LccConfig, exec: ExecConfig) -> Self {
-        Recipe { stages: vec![StageSpec::Lcc(LccSpec::from_config(cfg))], exec, shard: None }
+        Recipe {
+            stages: vec![StageSpec::Lcc(LccSpec::from_config(cfg))],
+            exec,
+            ..Recipe::default()
+        }
+    }
+
+    /// The single-matrix recipe layer `k` (1-based) of a network
+    /// resolves to: the layer's `stages` override when present (the
+    /// global stage list otherwise), each stage taking the layer's
+    /// parameter override when present and the global stage's parameters
+    /// (or stage defaults) otherwise. The returned recipe carries no
+    /// layer overrides of its own; engine tuning and the shard spec are
+    /// inherited unchanged.
+    pub fn layer_recipe(&self, k: usize) -> Result<Recipe> {
+        let ov = self.layers.get(&k);
+        let kinds: Vec<String> = match ov.and_then(|o| o.stages.as_ref()) {
+            Some(list) => list.clone(),
+            None => self.stages.iter().map(|s| s.kind().to_string()).collect(),
+        };
+        let mut stages = Vec::with_capacity(kinds.len());
+        for kind in &kinds {
+            let spec = ov
+                .and_then(|o| o.stage(kind))
+                .or_else(|| self.stages.iter().find(|s| s.kind() == kind.as_str()).cloned())
+                .or_else(|| StageSpec::default_for(kind));
+            match spec {
+                Some(s) => stages.push(s),
+                None => bail!("layer {k}: unknown stage {kind:?} (use prune|share|quantize|lcc)"),
+            }
+        }
+        Ok(Recipe {
+            stages,
+            exec: self.exec,
+            shard: self.shard,
+            layers: BTreeMap::new(),
+            gate_epsilon: None,
+        })
     }
 
     /// The effective serve-time sharding: the explicit `[compress.shard]`
@@ -264,6 +555,14 @@ impl Recipe {
     /// prune→share→lcc stack. A `[compress.shard]` section (keys
     /// `shards`, `mode = "serial"|"parallel"`) shards the served engine.
     /// Unset keys keep their defaults.
+    ///
+    /// Network documents add `[compress.layer.<k>]` sections (1-based
+    /// layer index; `stages = [...]` replaces that layer's stage list)
+    /// with `[compress.layer.<k>.<stage>]` subsections whose keys layer
+    /// over the resolved *global* stage parameters, and
+    /// `[compress.network] gate_epsilon = <f64>` declares the accuracy
+    /// gate. Unknown layer keys, stage names, and non-integer layer
+    /// indices are typed errors.
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let t = parse_toml(text)?;
         let exec = ExecConfig::overrides(&t, "exec", ExecConfig::default());
@@ -293,81 +592,10 @@ impl Recipe {
         };
         let mut stages = Vec::with_capacity(kinds.len());
         for kind in &kinds {
-            let sec = format!("compress.{kind}");
-            let read_int = |key: &str| -> Option<i64> {
-                get(&t, &sec, key).and_then(TomlValue::as_int)
+            let Some(mut spec) = StageSpec::default_for(kind) else {
+                bail!("unknown compress stage {kind:?} (use prune|share|quantize|lcc)");
             };
-            let read_f = |key: &str| -> Option<f64> {
-                get(&t, &sec, key).and_then(TomlValue::as_float)
-            };
-            let spec = match kind.as_str() {
-                "prune" => {
-                    let mut p = PruneSpec::default();
-                    if let Some(v) = read_f("eps") {
-                        p.eps = v as f32;
-                    }
-                    StageSpec::Prune(p)
-                }
-                "share" => {
-                    let mut s = ShareSpec::default();
-                    if let Some(v) = read_f("damping") {
-                        s.damping = v as f32;
-                    }
-                    if let Some(v) = read_f("preference_scale") {
-                        s.preference_scale = v as f32;
-                    }
-                    if let Some(v) = read_int("max_iters") {
-                        s.max_iters = v.max(1) as usize;
-                    }
-                    if let Some(v) = read_int("convergence_iters") {
-                        s.convergence_iters = v.max(1) as usize;
-                    }
-                    StageSpec::Share(s)
-                }
-                "quantize" => {
-                    let mut q = QuantSpec::default();
-                    if let Some(v) = read_int("int_bits") {
-                        q.int_bits = v.clamp(0, 32) as u32;
-                    }
-                    if let Some(v) = read_int("frac_bits") {
-                        q.frac_bits = v.clamp(0, 32) as u32;
-                    }
-                    StageSpec::Quantize(q)
-                }
-                "lcc" => {
-                    let mut l = LccSpec::default();
-                    if let Some(v) = get(&t, &sec, "algo").and_then(TomlValue::as_str) {
-                        l.algo = LccAlgoConfig::parse(v)
-                            .with_context(|| format!("[compress.lcc] algo {v:?} (use fp|fs)"))?;
-                    }
-                    if let Some(v) = read_int("terms_per_row") {
-                        l.terms_per_row = v.max(1) as usize;
-                    }
-                    if let Some(v) = read_int("max_factors") {
-                        l.max_factors = v.max(1) as usize;
-                    }
-                    if let Some(v) = read_int("max_terms_per_row") {
-                        l.max_terms_per_row = v.max(1) as usize;
-                    }
-                    if let Some(v) = read_int("slice_width") {
-                        l.slice_width = v.max(0) as usize;
-                    }
-                    if let Some(v) = read_f("target_rel_err") {
-                        l.target_rel_err = v;
-                    }
-                    if let Some(v) = read_f("quant_step") {
-                        l.quant_step = v;
-                    }
-                    if let Some(v) = read_int("shift_min") {
-                        l.shift_min = v as i32;
-                    }
-                    if let Some(v) = read_int("shift_max") {
-                        l.shift_max = v as i32;
-                    }
-                    StageSpec::Lcc(l)
-                }
-                other => bail!("unknown compress stage {other:?} (use prune|share|quantize|lcc)"),
-            };
+            read_stage_spec(&t, &format!("compress.{kind}"), &mut spec)?;
             stages.push(spec);
         }
         let shard = t.contains_key("compress.shard").then(|| {
@@ -383,7 +611,73 @@ impl Recipe {
             }
             s
         });
-        Ok(Recipe { stages, exec, shard })
+        let mut layers: BTreeMap<usize, LayerOverride> = BTreeMap::new();
+        for (section, keys) in &t {
+            let Some(rest) = section.strip_prefix("compress.layer.") else {
+                continue;
+            };
+            let (idx, stage_kind) = match rest.split_once('.') {
+                Some((i, k)) => (i, Some(k)),
+                None => (rest, None),
+            };
+            let k: usize = match idx.parse().ok().filter(|&k| k >= 1) {
+                Some(k) => k,
+                None => bail!("[{section}] layer index {idx:?} must be an integer >= 1"),
+            };
+            let ov = layers.entry(k).or_default();
+            match stage_kind {
+                // bare [compress.layer.<k>]: only the stage-list key is legal
+                None => {
+                    for key in keys.keys() {
+                        if key != "stages" {
+                            bail!(
+                                "[{section}] unknown key {key:?} (layer sections take `stages` \
+                                 plus [compress.layer.<k>.<stage>] subsections)"
+                            );
+                        }
+                    }
+                    if let Some(v) = keys.get("stages") {
+                        let TomlValue::Array(items) = v else {
+                            bail!("[{section}] stages must be an array of strings, got {v:?}");
+                        };
+                        let mut list = Vec::with_capacity(items.len());
+                        for item in items {
+                            let kind = item.as_str().with_context(|| {
+                                format!("[{section}] stages entry {item:?} must be a string")
+                            })?;
+                            if StageSpec::default_for(kind).is_none() {
+                                bail!(
+                                    "[{section}] unknown stage {kind:?} \
+                                     (use prune|share|quantize|lcc)"
+                                );
+                            }
+                            list.push(kind.to_string());
+                        }
+                        ov.stages = Some(list);
+                    }
+                }
+                // [compress.layer.<k>.<stage>]: seed from the *resolved
+                // global* stage so a partial section inherits the global
+                // tuning, then layer the section's keys over it
+                Some(kind) => {
+                    let mut spec = stages
+                        .iter()
+                        .find(|s| s.kind() == kind)
+                        .cloned()
+                        .or_else(|| StageSpec::default_for(kind))
+                        .with_context(|| {
+                            format!(
+                                "[{section}] unknown stage {kind:?} (use prune|share|quantize|lcc)"
+                            )
+                        })?;
+                    read_stage_spec(&t, section, &mut spec)?;
+                    ov.set_stage(spec);
+                }
+            }
+        }
+        let gate_epsilon =
+            get(&t, "compress.network", "gate_epsilon").and_then(TomlValue::as_float);
+        Ok(Recipe { stages, exec, shard, layers, gate_epsilon })
     }
 
     /// Render the recipe as a TOML document that [`Recipe::from_toml_str`]
@@ -393,46 +687,22 @@ impl Recipe {
         let kinds: Vec<String> = self.stages.iter().map(|st| format!("{:?}", st.kind())).collect();
         let _ = writeln!(s, "[compress]\nstages = [{}]", kinds.join(", "));
         for st in &self.stages {
-            match st {
-                StageSpec::Prune(p) => {
-                    let _ = writeln!(s, "\n[compress.prune]\neps = {}", p.eps);
-                }
-                StageSpec::Share(sh) => {
-                    let _ = writeln!(
-                        s,
-                        "\n[compress.share]\ndamping = {}\npreference_scale = {}\n\
-                         max_iters = {}\nconvergence_iters = {}",
-                        sh.damping, sh.preference_scale, sh.max_iters, sh.convergence_iters
-                    );
-                }
-                StageSpec::Quantize(q) => {
-                    let _ = writeln!(
-                        s,
-                        "\n[compress.quantize]\nint_bits = {}\nfrac_bits = {}",
-                        q.int_bits, q.frac_bits
-                    );
-                }
-                StageSpec::Lcc(l) => {
-                    let algo = match l.algo {
-                        LccAlgoConfig::Fp => "fp",
-                        LccAlgoConfig::Fs => "fs",
-                    };
-                    let _ = writeln!(
-                        s,
-                        "\n[compress.lcc]\nalgo = \"{algo}\"\nterms_per_row = {}\n\
-                         max_factors = {}\nmax_terms_per_row = {}\nslice_width = {}\n\
-                         target_rel_err = {}\nquant_step = {}\nshift_min = {}\nshift_max = {}",
-                        l.terms_per_row,
-                        l.max_factors,
-                        l.max_terms_per_row,
-                        l.slice_width,
-                        l.target_rel_err,
-                        l.quant_step,
-                        l.shift_min,
-                        l.shift_max
-                    );
+            write_stage_section(&mut s, &format!("compress.{}", st.kind()), st);
+        }
+        for (k, ov) in &self.layers {
+            let _ = writeln!(s, "\n[compress.layer.{k}]");
+            if let Some(list) = &ov.stages {
+                let kinds: Vec<String> = list.iter().map(|st| format!("{st:?}")).collect();
+                let _ = writeln!(s, "stages = [{}]", kinds.join(", "));
+            }
+            for kind in ["prune", "share", "quantize", "lcc"] {
+                if let Some(spec) = ov.stage(kind) {
+                    write_stage_section(&mut s, &format!("compress.layer.{k}.{kind}"), &spec);
                 }
             }
+        }
+        if let Some(eps) = self.gate_epsilon {
+            let _ = writeln!(s, "\n[compress.network]\ngate_epsilon = {eps}");
         }
         if let Some(sh) = &self.shard {
             let _ = writeln!(
@@ -499,6 +769,13 @@ impl Recipe {
     /// `LCCNN_COMPRESS_LCC_MAX_TERMS`, `LCCNN_COMPRESS_LCC_TERMS_PER_ROW`
     /// — apply to the matching stage when present; engine tuning layers
     /// the `LCCNN_EXEC_*` variables over `base.exec`.
+    ///
+    /// Network knobs: `LCCNN_COMPRESS_LAYER<k>_<KNOB>` (e.g.
+    /// `LCCNN_COMPRESS_LAYER2_LCC_TARGET_REL_ERR`,
+    /// `LCCNN_COMPRESS_LAYER3_STAGES`) layers per-layer overrides over
+    /// `base.layers` after the global knobs apply, and
+    /// `LCCNN_COMPRESS_GATE_EPSILON` sets the network accuracy-gate
+    /// tolerance.
     pub fn from_env_over(mut base: Recipe) -> Recipe {
         if let Ok(raw) = std::env::var("LCCNN_COMPRESS_STAGES") {
             let mut stages = Vec::new();
@@ -562,6 +839,23 @@ impl Recipe {
                 }
             }
         }
+        // per-layer knobs apply after the global set, so a layer override
+        // always wins; sorted for a deterministic application order
+        let mut layer_vars: Vec<(usize, String, String)> = std::env::vars()
+            .filter_map(|(name, value)| {
+                let rest = name.strip_prefix("LCCNN_COMPRESS_LAYER")?;
+                let (idx, knob) = rest.split_once('_')?;
+                let idx = idx.parse().ok().filter(|&i| i >= 1)?;
+                Some((idx, knob.to_string(), value))
+            })
+            .collect();
+        layer_vars.sort();
+        for (k, knob, value) in &layer_vars {
+            apply_layer_env(&mut base, *k, knob, value);
+        }
+        if let Some(v) = env_parse::<f64>("LCCNN_COMPRESS_GATE_EPSILON") {
+            base.gate_epsilon = Some(v);
+        }
         base.exec = ExecConfig::from_env_over(base.exec);
         base
     }
@@ -600,6 +894,7 @@ mod tests {
             ],
             exec: ExecConfig { threads: 2, chunk: 16, ..ExecConfig::default() },
             shard: Some(ShardSpec { shards: 3, mode: ShardMode::Serial }),
+            ..Recipe::default()
         };
         let back = Recipe::from_toml_str(&r.to_toml_string()).unwrap();
         assert_eq!(back, r, "\n{}", r.to_toml_string());
@@ -700,6 +995,77 @@ mod tests {
             StageSpec::Lcc(l) => assert_eq!(l.to_config(), LccConfig::fs()),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn layer_overrides_round_trip_and_win() {
+        let text = "[compress]\nstages = [\"prune\", \"lcc\"]\n\n\
+                    [compress.prune]\neps = 0.001\n\n\
+                    [compress.lcc]\ntarget_rel_err = 0.01\n\n\
+                    [compress.layer.2]\nstages = [\"lcc\"]\n\n\
+                    [compress.layer.2.lcc]\ntarget_rel_err = 0.05\n\n\
+                    [compress.network]\ngate_epsilon = 0.04\n";
+        let r = Recipe::from_toml_str(text).unwrap();
+        assert_eq!(r.gate_epsilon, Some(0.04));
+        // a layer without overrides resolves to the global recipe
+        let l1 = r.layer_recipe(1).unwrap();
+        assert_eq!(l1.stages.len(), 2);
+        assert!(matches!(l1.stages[0], StageSpec::Prune(p) if (p.eps - 1e-3).abs() < 1e-9));
+        assert!(matches!(l1.stages[1], StageSpec::Lcc(l) if l.target_rel_err == 0.01));
+        // layer 2: the override wins, the stage list is replaced, and the
+        // unset lcc knobs inherit the resolved *global* lcc tuning
+        let l2 = r.layer_recipe(2).unwrap();
+        assert_eq!(l2.stages.len(), 1);
+        match &l2.stages[0] {
+            StageSpec::Lcc(l) => {
+                assert_eq!(l.target_rel_err, 0.05, "layer override wins over the global");
+                assert_eq!(l.max_terms_per_row, LccSpec::default().max_terms_per_row);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(l2.layers.is_empty() && l2.gate_epsilon.is_none(), "resolved recipe is flat");
+        let back = Recipe::from_toml_str(&r.to_toml_string()).unwrap();
+        assert_eq!(back, r, "\n{}", r.to_toml_string());
+    }
+
+    #[test]
+    fn unknown_layer_keys_are_typed_errors() {
+        assert!(Recipe::from_toml_str("[compress.layer.0]\n").is_err(), "index must be >= 1");
+        assert!(Recipe::from_toml_str("[compress.layer.x]\n").is_err(), "index must be integer");
+        assert!(Recipe::from_toml_str("[compress.layer.1]\nnope = 3\n").is_err());
+        assert!(Recipe::from_toml_str("[compress.layer.1.nope]\neps = 1.0\n").is_err());
+        assert!(
+            Recipe::from_toml_str("[compress.layer.1]\nstages = [\"nope\"]\n").is_err(),
+            "unknown stage name in a layer stage list"
+        );
+        // bare layer sections round-trip as empty overrides
+        let r = Recipe::from_toml_str("[compress.layer.3]\n").unwrap();
+        assert_eq!(r.layers.get(&3), Some(&LayerOverride::default()));
+        assert_eq!(Recipe::from_toml_str(&r.to_toml_string()).unwrap(), r);
+    }
+
+    // The sole test in this binary touching `LCCNN_COMPRESS_LAYER*` /
+    // `LCCNN_COMPRESS_GATE_EPSILON`, so parallel tests never race on
+    // them (the global compress knobs live in tests/compress_pipeline.rs
+    // under the same one-owner convention).
+    #[test]
+    fn layer_env_overrides_win_and_round_trip() {
+        std::env::set_var("LCCNN_COMPRESS_LAYER7_STAGES", "lcc");
+        std::env::set_var("LCCNN_COMPRESS_LAYER7_LCC_TARGET_REL_ERR", "0.02");
+        std::env::set_var("LCCNN_COMPRESS_GATE_EPSILON", "0.04");
+        let r = Recipe::from_env_over(Recipe::default());
+        std::env::remove_var("LCCNN_COMPRESS_LAYER7_STAGES");
+        std::env::remove_var("LCCNN_COMPRESS_LAYER7_LCC_TARGET_REL_ERR");
+        std::env::remove_var("LCCNN_COMPRESS_GATE_EPSILON");
+        assert_eq!(r.gate_epsilon, Some(0.04));
+        let l7 = r.layer_recipe(7).unwrap();
+        assert_eq!(l7.stages.len(), 1, "layer stage-list env override wins");
+        assert!(matches!(&l7.stages[0], StageSpec::Lcc(l) if l.target_rel_err == 0.02));
+        // untouched layers keep the global stack
+        assert_eq!(r.layer_recipe(1).unwrap().stages, Recipe::default().stages);
+        // and the layered recipe still round-trips through TOML
+        let text = r.to_toml_string();
+        assert_eq!(Recipe::from_toml_str(&text).unwrap(), r, "\n{text}");
     }
 
     #[test]

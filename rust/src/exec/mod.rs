@@ -173,6 +173,36 @@ impl ExecHealth {
     }
 }
 
+/// Per-layer execution statistics a chained executor reports through
+/// [`Executor::layer_stats`]. The serving layer publishes these as
+/// `model.<name>.layer.<k>.*` gauges in `Server::metrics_text`, so a
+/// multi-layer model's per-layer cost is observable without tracing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerStat {
+    /// 1-based layer index (matches the checkpoint's `layer<k>` naming)
+    pub index: usize,
+    /// total microseconds spent executing this layer's batches
+    pub batch_us_total: u64,
+    /// batches executed through this layer
+    pub batches: u64,
+    /// additions of the layer's lowered program, when it has one
+    pub additions: Option<usize>,
+    /// analytic |served − exact| bound of the layer's datapath
+    /// (0 on the float engines)
+    pub err_bound: f64,
+}
+
+impl LayerStat {
+    /// Mean microseconds per batch (0 before the first batch).
+    pub fn mean_batch_us(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_us_total as f64 / self.batches as f64
+        }
+    }
+}
+
 /// A runtime for adder graphs: evaluates batches of input vectors to
 /// batches of output vectors. Implementations must be shareable across
 /// threads (the serving layer holds them behind `Arc<dyn Executor>`).
@@ -218,6 +248,15 @@ pub trait Executor: Send + Sync {
     /// metrics render path.
     fn health_report(&self) -> Vec<(String, ExecHealth)> {
         vec![(String::new(), ExecHealth::Ready)]
+    }
+
+    /// Per-layer statistics for chained executors
+    /// (`compress::NetworkExecutor`): batch timing, additions and the
+    /// per-layer error bound, one [`LayerStat`] per chained layer. The
+    /// default — single-program engines have no layer structure —
+    /// reports nothing.
+    fn layer_stats(&self) -> Vec<LayerStat> {
+        Vec::new()
     }
 
     /// Allocating convenience wrapper around [`Executor::execute_batch_into`].

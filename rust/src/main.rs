@@ -5,47 +5,70 @@
 //!   fig2    [--lambda F] [...]    run the Fig. 2 MLP pipeline for one λ
 //!   table1  [--steps N] [...]     run the Table-I residual-CNN pipeline
 //!   decompose --rows N --cols K   LCC vs CSD on a random matrix
-//!   compress [--recipe r.toml] [--checkpoint w.npy | --demo N] [--out dir]
-//!            [--shards N] [--exec-mode float|fixed]
+//!   compress [--recipe r.toml] [--checkpoint w.npy | --demo N | --network dir|demo]
+//!            [--out dir] [--shards N] [--exec-mode float|fixed]
 //!                                 recipe -> artifact -> served engine,
 //!                                 self-verified (nonzero exit on mismatch;
 //!                                 fixed mode verifies within the lowered
-//!                                 plan's analytic error bound)
+//!                                 plan's analytic error bound). --network
+//!                                 compresses a multi-layer checkpoint
+//!                                 directory through the per-layer recipe
+//!                                 path and verifies the chained
+//!                                 NetworkExecutor against the hand-chained
+//!                                 NaiveExecutor oracle
+//!   gate    [--recipe r.toml] [--epsilon F] [--steps N] [--train N] [--test N]
+//!                                 the accuracy gate: train the
+//!                                 LeNet-300-100-shaped MLP on synth-MNIST,
+//!                                 compress it as a network, and fail unless
+//!                                 the compressed accuracy stays within
+//!                                 epsilon of the dense baseline
 //!   serve   [--model name=path]... [--shards N] [--exec-mode float|fixed]
 //!           [--remote-shard host:port[|host:port...]]... [--remote-name name]
 //!           [--remote-check artifact-dir] [--recheck-delay-ms MS]
 //!           [--client-delay-ms MS]
+//!           [--remote-layer host:port]... [--remote-layer-check network-dir]
 //!                                 multi-model registry server driver;
 //!                                 remote shards gather behind one model,
 //!                                 `|`-joined addresses are replicas of the
 //!                                 same range; --recheck-delay-ms reruns the
 //!                                 remote check after a pause (recovery
 //!                                 window), --client-delay-ms paces the
-//!                                 hammer so failures can be injected mid-run
+//!                                 hammer so failures can be injected mid-run;
+//!                                 repeated --remote-layer flags chain
+//!                                 layer-range workers, in order, into one
+//!                                 served model (checked bit-exact against a
+//!                                 local rebuild via --remote-layer-check)
 //!   shard-worker --artifact dir [--listen host:port]
-//!           [--shards N --index I | --range a..b] [--exec-mode m]
-//!           [--drain-on path]
+//!           [--shards N --index I | --range a..b | --layer-range a..b]
+//!           [--exec-mode m] [--drain-on path]
 //!                                 serve one output-column range of an
 //!                                 artifact over the remote batch
-//!                                 protocol until killed; with --drain-on
-//!                                 the worker polls for that file, then
-//!                                 drains (finish in-flight, refuse new
-//!                                 batches) and exits cleanly
+//!                                 protocol until killed; network artifact
+//!                                 dirs serve a layer range (--layer-range,
+//!                                 0-based) instead of a column range; with
+//!                                 --drain-on the worker polls for that
+//!                                 file, then drains (finish in-flight,
+//!                                 refuse new batches) and exits cleanly
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
 //! form --name value and may repeat (`--model a=p1 --model b=p2`).
 
 use anyhow::{bail, Context, Result};
-use lccnn::compress::{demo_weights, CompressedModel, Pipeline, Recipe};
+use lccnn::compress::{
+    demo_network, demo_weights, ChainedExecutor, CompressedModel, CompressedNetwork, LccSpec,
+    NetworkCheckpoint, NetworkExecutor, NetworkPipeline, Pipeline, PruneSpec, Recipe, StageSpec,
+};
 use lccnn::config::{
     ExecConfig, ExecMode, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig,
     ShardSpec,
 };
-use lccnn::exec::{even_ranges, Executor, NaiveExecutor, RemoteOptions, ShardWorker};
+use lccnn::data::synth_mnist;
+use lccnn::exec::{even_ranges, Executor, NaiveExecutor, RemoteExecutor, RemoteOptions, ShardWorker};
 use lccnn::lcc::{decompose, LccConfig};
 use lccnn::metrics::Metrics;
+use lccnn::nn::mlp3::argmax;
 use lccnn::nn::npy::NpyArray;
-use lccnn::nn::{load_weight_matrix, ParamStore};
+use lccnn::nn::{load_weight_matrix, Mlp3, ParamStore};
 use lccnn::quant::{matrix_csd_adders, FixedPointFormat};
 use lccnn::report::{percent, ratio, Table};
 use lccnn::runtime::Runtime;
@@ -231,6 +254,12 @@ fn cmd_compress(flags: Flags) -> Result<()> {
     let requests: usize = flag(&flags, "requests", 32)?.max(1);
     let seed: u64 = flag(&flags, "seed", 0)?;
 
+    // --network dir|demo: the whole-model path — every layer through its
+    // resolved per-layer recipe, chained into one NetworkExecutor
+    if let Some(src) = flags.get("network").cloned() {
+        return compress_network(&flags, recipe, &src, requests, seed);
+    }
+
     let mut jobs: Vec<(String, Matrix)> = Vec::new();
     if let Some(ck) = flags.get("checkpoint") {
         let path = Path::new(ck);
@@ -276,7 +305,7 @@ fn cmd_compress(flags: Flags) -> Result<()> {
         };
         write_artifact(&dir, w, &recipe, &model)?;
         println!("artifact: {}", dir.display());
-        failures += serve_roundtrip(name, &dir, &model, requests, seed + 23)?;
+        failures += serve_roundtrip(name, &dir, &model.executor(), requests, seed + 23)?;
         if ephemeral {
             std::fs::remove_dir_all(&dir).ok();
         }
@@ -349,17 +378,25 @@ fn write_artifact(dir: &Path, w: &Matrix, recipe: &Recipe, model: &CompressedMod
 }
 
 /// Load the artifact back through the registry (recipe discovery) and
-/// serve it, comparing every response bit-exact with the local executor.
+/// serve it, comparing every response bit-exact with the local engine —
+/// the registry rebuild is deterministic, so even fixed-mode answers
+/// must match bit for bit. Works for single-matrix artifacts
+/// (pipeline-exec) and network directories (network-exec) alike.
 fn serve_roundtrip(
     name: &str,
     dir: &Path,
-    model: &CompressedModel,
+    exec: &dyn Executor,
     n: usize,
     seed: u64,
 ) -> Result<usize> {
     let registry = Arc::new(ModelRegistry::new());
     let entry = registry.load_checkpoint_with_recipe(name, dir, None, 16)?;
-    let exec = model.executor();
+    anyhow::ensure!(
+        entry.executor().map(|e| e.name()) == Some(exec.name()),
+        "artifact reload chose backend {:?}, local engine is {:?}",
+        entry.executor().map(|e| e.name()),
+        exec.name()
+    );
     anyhow::ensure!(
         entry.input_dim() == Some(exec.num_inputs()),
         "artifact reload changed the input dim: {:?} vs {}",
@@ -392,6 +429,189 @@ fn serve_roundtrip(
     Ok(bad)
 }
 
+/// `compress --network`: the whole-model variant. Load (or synthesize,
+/// for `--network demo`) a multi-layer checkpoint directory, run every
+/// layer through its resolved per-layer recipe, verify the chained
+/// `NetworkExecutor` against the hand-chained `NaiveExecutor` oracle
+/// (bit-exact in float mode, within the propagated analytic bound in
+/// fixed mode), then round-trip the network artifact through the
+/// registry — which must auto-detect the directory — and the server.
+fn compress_network(
+    flags: &Flags,
+    recipe: Recipe,
+    src: &str,
+    requests: usize,
+    seed: u64,
+) -> Result<()> {
+    let (ckpt, name) = if src == "demo" {
+        (demo_network(&[12, 10, 8, 6], seed), "demo-net".to_string())
+    } else {
+        let p = Path::new(src);
+        let name = p.file_name().and_then(|s| s.to_str()).unwrap_or("network").to_string();
+        (NetworkCheckpoint::load(p)?, name)
+    };
+    println!(
+        "compressing network {name:?}: {} layer(s), {} -> {} dims",
+        ckpt.num_layers(),
+        ckpt.input_dim(),
+        ckpt.output_dim()
+    );
+    if recipe.exec.exec_mode == ExecMode::Fixed {
+        println!(
+            "exec mode: fixed shift-add (frac_bits {}, {}-bit {} accumulator)",
+            recipe.exec.fixed_frac_bits,
+            recipe.exec.fixed_acc.bits(),
+            recipe.exec.fixed_sat.as_str()
+        );
+    }
+    let metrics = Metrics::new();
+    let net = NetworkPipeline::from_recipe(&recipe)?.run_with_metrics(&ckpt, &metrics)?;
+    println!("{}", net.report().render());
+    let mut failures = verify_network_against_oracle(&name, &net, requests, seed + 17)?;
+
+    let tmp = std::env::temp_dir().join(format!("lccnn-compress-net-{}", std::process::id()));
+    let (dir, ephemeral) = match flags.get("out") {
+        Some(d) => (PathBuf::from(d), false),
+        None => (tmp, true),
+    };
+    ckpt.save(&dir)?;
+    recipe.save(&dir.join("recipe.toml"))?;
+    std::fs::write(dir.join("report.tsv"), net.report().to_tsv())
+        .with_context(|| format!("write {}", dir.join("report.tsv").display()))?;
+    println!("artifact: {}", dir.display());
+    failures += serve_roundtrip(&name, &dir, &net.executor()?, requests, seed + 23)?;
+    if ephemeral {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    println!("{}", metrics.render());
+    if failures > 0 {
+        bail!("{failures} verification mismatches");
+    }
+    println!(
+        "compress: network {name:?} verified recipe -> artifact -> registry -> serve, {}",
+        if recipe.exec.exec_mode == ExecMode::Fixed {
+            "within the propagated error bound (serve round-trip bit-identical)"
+        } else {
+            "bit-identical to the hand-chained oracle"
+        }
+    );
+    Ok(())
+}
+
+/// The network analogue of [`verify_against_oracle`]: the chained
+/// batch-major engine vs per-layer `NaiveExecutor` graphs composed by
+/// hand (`CompressedNetwork::oracle_forward`). Float chains must match
+/// bit-exact; the fixed datapath is held to the network's propagated
+/// bound — per-layer analytic bounds composed through the operator
+/// inf-norms, ReLU being 1-Lipschitz — plus float-rounding slack.
+fn verify_network_against_oracle(
+    name: &str,
+    net: &CompressedNetwork,
+    n: usize,
+    seed: u64,
+) -> Result<usize> {
+    let exec = net.executor()?;
+    let bound = exec.max_error_bound();
+    let mut rng = Rng::new(seed);
+    let mut bad = 0;
+    for _ in 0..n {
+        let x = rng.normal_vec(exec.num_inputs(), 1.0);
+        let got = exec.execute_one(&x);
+        let want = net.oracle_forward(&x);
+        let ok = if bound == 0.0 {
+            got == want
+        } else {
+            got.len() == want.len()
+                && got.iter().zip(&want).all(|(g, w)| {
+                    ((g - w).abs() as f64) <= bound + 1e-3 * (1.0 + w.abs() as f64)
+                })
+        };
+        if !ok {
+            eprintln!(
+                "{name:?}: network engine {got:?} != chained oracle {want:?} (bound {bound:e})"
+            );
+            bad += 1;
+        }
+    }
+    Ok(bad)
+}
+
+/// The default gate recipe: prune + LCC (FS tuning). Weight sharing is
+/// deliberately absent — affinity clustering over *trained*,
+/// uncorrelated columns collapses the very features the net learned,
+/// which is exactly the failure mode the accuracy gate exists to catch.
+fn gate_default_recipe() -> Recipe {
+    Recipe {
+        stages: vec![StageSpec::Prune(PruneSpec::default()), StageSpec::Lcc(LccSpec::default())],
+        gate_epsilon: Some(0.05),
+        ..Recipe::default()
+    }
+}
+
+/// `gate`: the accuracy gate. Train the paper's LeNet-300-100-shaped
+/// MLP on `data::synth_mnist` (in-process SGD, deterministic given the
+/// seed), compress it through the full-network pipeline, and fail —
+/// nonzero exit — unless the compressed network's test accuracy stays
+/// within `gate_epsilon` of the dense baseline. This is the CI leg that
+/// keeps compression honest about end-task quality, not just SQNR.
+fn cmd_gate(flags: Flags) -> Result<()> {
+    let train_n: usize = flag(&flags, "train", 2000)?.max(1);
+    let test_n: usize = flag(&flags, "test", 500)?.max(1);
+    let steps: usize = flag(&flags, "steps", 300)?;
+    let batch: usize = flag(&flags, "batch", 32)?.max(1);
+    let lr: f32 = flag(&flags, "lr", 0.1)?;
+    let seed: u64 = flag(&flags, "seed", 0)?;
+    let base = match flags.get("recipe") {
+        Some(p) => Recipe::from_toml(Path::new(p))?,
+        None => gate_default_recipe(),
+    };
+    let mut recipe = Recipe::from_env_over(base);
+    if let Some(m) = flags.get("exec-mode") {
+        recipe.exec.exec_mode =
+            ExecMode::parse(m).with_context(|| format!("--exec-mode {m:?} (use float|fixed)"))?;
+    }
+    let epsilon: f64 = flag(&flags, "epsilon", recipe.gate_epsilon.unwrap_or(0.05))?;
+    anyhow::ensure!(epsilon > 0.0, "--epsilon must be positive");
+
+    let (train, test) = synth_mnist::generate(train_n + test_n, seed).split_off(test_n);
+    let mut mlp = Mlp3::lenet_300_100(seed + 1);
+    mlp.train_sgd(&train, steps, batch, lr, seed + 2);
+    let dense = mlp.accuracy(&test);
+    println!(
+        "dense baseline: {:.1}% on {} held-out examples ({} train, {steps} SGD steps)",
+        100.0 * dense,
+        test.len(),
+        train.len()
+    );
+
+    let ckpt = mlp.to_network_checkpoint()?;
+    let net = NetworkPipeline::from_recipe(&recipe)?.run(&ckpt)?;
+    println!("{}", net.report().render());
+    let exec = net.executor()?;
+    let mut correct = 0usize;
+    for i in 0..test.len() {
+        if argmax(&exec.execute_one(test.example(i))) == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let compressed = correct as f64 / test.len() as f64;
+    println!(
+        "compressed accuracy: {:.1}% ({} mode, {:.1}x additions ratio, epsilon {epsilon})",
+        100.0 * compressed,
+        recipe.exec.exec_mode.as_str(),
+        net.report().total_ratio()
+    );
+    if compressed + 1e-12 < dense - epsilon {
+        bail!(
+            "accuracy gate FAILED: compressed {:.3} < dense {:.3} - epsilon {epsilon}",
+            compressed,
+            dense
+        );
+    }
+    println!("accuracy gate passed: {:.3} within {epsilon} of dense {:.3}", compressed, dense);
+    Ok(())
+}
+
 /// Parse an `a..b` output-column range.
 fn parse_range(s: &str) -> Result<std::ops::Range<usize>> {
     let (a, b) = s.split_once("..").with_context(|| format!("--range {s:?} (use a..b)"))?;
@@ -406,6 +626,10 @@ fn parse_range(s: &str) -> Result<std::ops::Range<usize>> {
 /// and serve it over the remote batch protocol until the process is
 /// killed. The range comes from `--shards N --index I` (the same even
 /// cut the gathering server assumes) or an explicit `--range a..b`.
+/// Network artifact directories serve a *layer* range instead
+/// (`--layer-range a..b`, 0-based, default all layers): the worker runs
+/// those layers — bias and activation included — so a chain of such
+/// workers composes, hop by hop, into the full network.
 fn cmd_shard_worker(flags: Flags) -> Result<()> {
     let artifact = flags.get("artifact").context("--artifact dir is required")?.clone();
     let listen = flags.get("listen").cloned().unwrap_or_else(|| "127.0.0.1:0".to_string());
@@ -418,27 +642,55 @@ fn cmd_shard_worker(flags: Flags) -> Result<()> {
     // never locally shard the range engine: the remote gather is the
     // shard layer, and the cut plan is one shard's worth of work
     recipe.shard = None;
-    let w = load_weight_matrix(dir)?;
-    let model = Pipeline::from_recipe(&recipe)?.run(&w)?;
-    let range = match flags.get("range") {
-        Some(r) => parse_range(r)?,
-        None => {
-            let shards: usize = flag(&flags, "shards", 1)?.max(1);
-            let index: usize = flag(&flags, "index", 0)?;
-            anyhow::ensure!(index < shards, "--index {index} out of --shards {shards}");
-            even_ranges(w.rows(), shards)[index].clone()
-        }
-    };
-    let exec = model.range_executor(range.clone())?;
     let mode = recipe.exec.exec_mode;
-    let worker = ShardWorker::spawn(Arc::new(exec), range.clone(), mode, &listen)?;
-    println!(
-        "shard-worker: {artifact} rows {}..{} ({} mode) on {}",
-        range.start,
-        range.end,
-        mode.as_str(),
-        worker.addr()
-    );
+    let worker = if NetworkCheckpoint::is_network_dir(dir) {
+        let ckpt = NetworkCheckpoint::load(dir)?;
+        let layers = match flags.get("layer-range") {
+            Some(r) => parse_range(r)?,
+            None => 0..ckpt.num_layers(),
+        };
+        anyhow::ensure!(
+            layers.end <= ckpt.num_layers(),
+            "--layer-range {}..{} out of {} layers",
+            layers.start,
+            layers.end,
+            ckpt.num_layers()
+        );
+        let net = NetworkPipeline::from_recipe(&recipe)?.run(&ckpt)?;
+        let exec = net.layer_range_executor(layers.clone())?;
+        let rows = exec.num_outputs();
+        let worker = ShardWorker::spawn(Arc::new(exec), 0..rows, mode, &listen)?;
+        println!(
+            "shard-worker: {artifact} layers {}..{} ({} mode) on {}",
+            layers.start,
+            layers.end,
+            mode.as_str(),
+            worker.addr()
+        );
+        worker
+    } else {
+        let w = load_weight_matrix(dir)?;
+        let model = Pipeline::from_recipe(&recipe)?.run(&w)?;
+        let range = match flags.get("range") {
+            Some(r) => parse_range(r)?,
+            None => {
+                let shards: usize = flag(&flags, "shards", 1)?.max(1);
+                let index: usize = flag(&flags, "index", 0)?;
+                anyhow::ensure!(index < shards, "--index {index} out of --shards {shards}");
+                even_ranges(w.rows(), shards)[index].clone()
+            }
+        };
+        let exec = model.range_executor(range.clone())?;
+        let worker = ShardWorker::spawn(Arc::new(exec), range.clone(), mode, &listen)?;
+        println!(
+            "shard-worker: {artifact} rows {}..{} ({} mode) on {}",
+            range.start,
+            range.end,
+            mode.as_str(),
+            worker.addr()
+        );
+        worker
+    };
     let drain_on = flags.get("drain-on").cloned();
     match drain_on {
         None => loop {
@@ -592,6 +844,31 @@ fn cmd_serve(flags: Flags) -> Result<()> {
             entry.input_dim()
         );
     }
+    // --remote-layer host:port (repeatable, ordered): each address is a
+    // shard-worker serving a *layer range* of a network artifact; the
+    // hops chain — output of one feeds the next — into one served model
+    let layer_addrs: Vec<String> = flags.get_all("remote-layer").to_vec();
+    let layer_name =
+        flags.get("remote-layer-name").cloned().unwrap_or_else(|| "remote-layers".to_string());
+    if !layer_addrs.is_empty() {
+        let mut hops: Vec<Arc<dyn Executor>> = Vec::with_capacity(layer_addrs.len());
+        for (i, addr) in layer_addrs.iter().enumerate() {
+            let opts = RemoteOptions::from_config(&serve_cfg.remote);
+            let remote = RemoteExecutor::connect(addr, opts)
+                .map_err(|e| anyhow::anyhow!("remote layer hop {addr}: {e}"))?
+                .with_metrics(Arc::clone(&remote_metrics), &format!("layer_hop.{i}"));
+            hops.push(Arc::new(remote));
+        }
+        let chain = ChainedExecutor::new(hops)?;
+        println!(
+            "remote layer chain {layer_name:?}: {} hop(s) [{}], {} -> {} dims",
+            layer_addrs.len(),
+            layer_addrs.join(" -> "),
+            chain.num_inputs(),
+            chain.num_outputs()
+        );
+        registry.register(&layer_name, Arc::new(chain), base_exec, serve_cfg.max_batch);
+    }
     // --remote-check dir: rebuild the artifact locally and hold the
     // remote gather to bit-identical answers (the CI remote smoke)
     let remote_oracle: Option<lccnn::compress::PipelineExecutor> = match flags.get("remote-check") {
@@ -605,6 +882,23 @@ fn cmd_serve(flags: Flags) -> Result<()> {
             Some(Pipeline::from_recipe(&recipe)?.run(&w)?.into_executor())
         }
         Some(_) => bail!("--remote-check needs at least one remote shard"),
+        None => None,
+    };
+    // --remote-layer-check dir: rebuild the full network locally and
+    // hold the chained layer hops to bit-identical answers — worker
+    // rebuilds are deterministic, so even fixed-mode hops must match
+    let layer_oracle: Option<NetworkExecutor> = match flags.get("remote-layer-check") {
+        Some(dir) if !layer_addrs.is_empty() => {
+            let p = Path::new(dir);
+            let mut recipe = Recipe::from_env_over(Recipe::for_checkpoint(p)?);
+            if let Some(m) = exec_mode {
+                recipe.exec.exec_mode = m;
+            }
+            recipe.shard = None; // mirror the workers' unsharded rebuild
+            let ckpt = NetworkCheckpoint::load(p)?;
+            Some(NetworkPipeline::from_recipe(&recipe)?.run(&ckpt)?.into_executor()?)
+        }
+        Some(_) => bail!("--remote-layer-check needs at least one --remote-layer hop"),
         None => None,
     };
 
@@ -622,35 +916,45 @@ fn cmd_serve(flags: Flags) -> Result<()> {
         clients,
         requests,
     );
+    // every enabled oracle check runs through the same harness: fresh
+    // deterministic traffic, served answers held bit-exact to the local
+    // rebuild, with an optional recheck pass after the recovery window
+    let mut checks: Vec<(&str, Arc<dyn Executor>)> = Vec::new();
+    if let Some(o) = remote_oracle {
+        checks.push((remote_name.as_str(), Arc::new(o)));
+    }
+    if let Some(o) = layer_oracle {
+        checks.push((layer_name.as_str(), Arc::new(o)));
+    }
     let server = Server::start_registry(Arc::clone(&registry), serve_cfg);
     let mut check_failures = 0usize;
-    if let Some(oracle) = &remote_oracle {
+    for (ci, (check_name, oracle)) in checks.iter().enumerate() {
         let n = requests.clamp(1, 64);
         let passes = if recheck_delay_ms > 0 { 2 } else { 1 };
         for pass in 0..passes {
             if pass > 0 {
-                println!("remote check: recheck in {recheck_delay_ms}ms (recovery window)");
+                println!("{check_name:?} check: recheck in {recheck_delay_ms}ms (recovery window)");
                 std::thread::sleep(std::time::Duration::from_millis(recheck_delay_ms));
             }
             let mut pass_failures = 0usize;
-            let mut crng = rng.fork(997 + pass);
+            let mut crng = rng.fork(997 + pass + 131 * ci as u64);
             for _ in 0..n {
                 let x = crng.normal_vec(oracle.num_inputs(), 1.0);
                 let want = oracle.execute_one(&x);
-                match server.infer_model(&remote_name, x) {
+                match server.infer_model(check_name, x) {
                     Ok(y) if y == want => {}
                     Ok(y) => {
-                        eprintln!("remote check: served {y:?} != local {want:?}");
+                        eprintln!("{check_name:?} check: served {y:?} != local {want:?}");
                         pass_failures += 1;
                     }
                     Err(e) => {
-                        eprintln!("remote check: request failed: {e}");
+                        eprintln!("{check_name:?} check: request failed: {e}");
                         pass_failures += 1;
                     }
                 }
             }
             println!(
-                "remote check pass {}: {n} request(s) vs local artifact, {pass_failures} \
+                "{check_name:?} check pass {}: {n} request(s) vs local rebuild, {pass_failures} \
                  mismatch(es)",
                 pass + 1
             );
@@ -736,7 +1040,7 @@ fn main() -> Result<()> {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: lccnn <info|fig2|table1|decompose|compress|serve|shard-worker> \
+                "usage: lccnn <info|fig2|table1|decompose|compress|gate|serve|shard-worker> \
                  [--flag value ...]"
             );
             return Ok(());
@@ -748,6 +1052,7 @@ fn main() -> Result<()> {
         "table1" => cmd_table1(parse_flags(&rest)?),
         "decompose" => cmd_decompose(parse_flags(&rest)?),
         "compress" => cmd_compress(parse_flags(&rest)?),
+        "gate" => cmd_gate(parse_flags(&rest)?),
         "serve" => cmd_serve(parse_flags(&rest)?),
         "shard-worker" => cmd_shard_worker(parse_flags(&rest)?),
         other => bail!("unknown command {other:?}"),

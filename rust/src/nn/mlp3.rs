@@ -1,0 +1,262 @@
+//! A CPU-trainable multi-layer perceptron in the LeNet-300-100 shape
+//! the paper's MLP experiments (and Deep Compression's) use:
+//! 784 → 300 → 100 → 10 with ReLU hidden layers and raw logits out.
+//!
+//! Unlike [`super::mlp`] (whose training runs through the AOT JAX
+//! artifact), this net trains entirely in-process with plain
+//! softmax-cross-entropy SGD — deterministic given a seed, fast enough
+//! for the CI accuracy gate on `data::synth_mnist` — and converts
+//! straight into a [`NetworkCheckpoint`] so the full-network
+//! compression path (`compress --network`, `NetworkPipeline`,
+//! `NetworkExecutor`) can be gated against the dense baseline it came
+//! from.
+
+use crate::compress::{Activation, NetworkCheckpoint, NetworkLayer};
+use crate::data::{BatchIter, Dataset};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Index of the largest logit (ties keep the earliest index).
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// An MLP of arbitrary depth: `dims = [in, h1, ..., out]`, ReLU after
+/// every layer but the last.
+#[derive(Clone, Debug)]
+pub struct Mlp3 {
+    dims: Vec<usize>,
+    weights: Vec<Matrix>,
+    biases: Vec<Vec<f32>>,
+}
+
+impl Mlp3 {
+    /// He-normal init (scale √(2/fan_in)), zero biases.
+    pub fn init(dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        let mut rng = Rng::new(seed);
+        let mut weights = Vec::with_capacity(dims.len() - 1);
+        let mut biases = Vec::with_capacity(dims.len() - 1);
+        for pair in dims.windows(2) {
+            let (nin, nout) = (pair[0], pair[1]);
+            let scale = (2.0f32 / nin as f32).sqrt();
+            weights.push(Matrix::randn(nout, nin, scale, &mut rng));
+            biases.push(vec![0.0; nout]);
+        }
+        Mlp3 { dims: dims.to_vec(), weights, biases }
+    }
+
+    /// The paper's MLP shape: 784 → 300 → 100 → 10.
+    pub fn lenet_300_100(seed: u64) -> Self {
+        Self::init(&[784, 300, 100, 10], seed)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Logits for one flattened example.
+    pub fn forward_one(&self, x: &[f32]) -> Vec<f32> {
+        let l = self.weights.len();
+        let mut cur = x.to_vec();
+        for (k, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let mut z = w.matvec(&cur);
+            for (zv, &bv) in z.iter_mut().zip(b) {
+                *zv += bv;
+            }
+            if k + 1 < l {
+                Activation::Relu.apply(&mut z);
+            }
+            cur = z;
+        }
+        cur
+    }
+
+    /// Top-1 accuracy over a dataset.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            if argmax(&self.forward_one(data.example(i))) == data.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.len().max(1) as f64
+    }
+
+    /// Plain softmax-cross-entropy minibatch SGD, deterministic given
+    /// the seed (shared by the shuffle order).
+    pub fn train_sgd(&mut self, data: &Dataset, steps: usize, batch: usize, lr: f32, seed: u64) {
+        assert_eq!(data.dims, self.dims[0], "dataset dims must match the input layer");
+        let l = self.weights.len();
+        let mut it = BatchIter::new(data, batch, seed);
+        for _ in 0..steps {
+            let (xs, ys, _) = it.next_batch();
+            let mut gw: Vec<Matrix> =
+                self.weights.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+            let mut gb: Vec<Vec<f32>> = self.biases.iter().map(|b| vec![0.0; b.len()]).collect();
+            for (x, &label) in xs.chunks(data.dims).zip(&ys) {
+                // forward, keeping every post-activation value
+                let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l + 1);
+                acts.push(x.to_vec());
+                for (k, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+                    let mut z = w.matvec(acts.last().expect("input pushed"));
+                    for (zv, &bv) in z.iter_mut().zip(b) {
+                        *zv += bv;
+                    }
+                    if k + 1 < l {
+                        Activation::Relu.apply(&mut z);
+                    }
+                    acts.push(z);
+                }
+                // softmax cross-entropy gradient at the logits
+                let mut delta = softmax(acts.last().expect("logits pushed"));
+                delta[label as usize] -= 1.0;
+                // backprop through the stack
+                for k in (0..l).rev() {
+                    let a_prev = &acts[k];
+                    for (r, &d) in delta.iter().enumerate() {
+                        if d != 0.0 {
+                            for (g, &a) in gw[k].row_mut(r).iter_mut().zip(a_prev) {
+                                *g += d * a;
+                            }
+                        }
+                        gb[k][r] += d;
+                    }
+                    if k > 0 {
+                        let w = &self.weights[k];
+                        let mut next = vec![0.0f32; w.cols()];
+                        for (r, &d) in delta.iter().enumerate() {
+                            if d != 0.0 {
+                                for (nv, &wv) in next.iter_mut().zip(w.row(r)) {
+                                    *nv += d * wv;
+                                }
+                            }
+                        }
+                        // ReLU': zero where the forward pass clamped
+                        for (nv, &a) in next.iter_mut().zip(&acts[k]) {
+                            if a <= 0.0 {
+                                *nv = 0.0;
+                            }
+                        }
+                        delta = next;
+                    }
+                }
+            }
+            let scale = lr / batch as f32;
+            for k in 0..l {
+                for r in 0..self.weights[k].rows() {
+                    let grad = gw[k].row(r);
+                    for (wv, &g) in self.weights[k].row_mut(r).iter_mut().zip(grad) {
+                        *wv -= scale * g;
+                    }
+                }
+                for (bv, &g) in self.biases[k].iter_mut().zip(&gb[k]) {
+                    *bv -= scale * g;
+                }
+            }
+        }
+    }
+
+    /// Convert into the multi-layer checkpoint the network compression
+    /// pipeline consumes: ReLU on hidden layers, identity on the output.
+    pub fn to_network_checkpoint(&self) -> Result<NetworkCheckpoint> {
+        let l = self.weights.len();
+        let layers = self
+            .weights
+            .iter()
+            .zip(&self.biases)
+            .enumerate()
+            .map(|(k, (w, b))| NetworkLayer {
+                weight: w.clone(),
+                bias: Some(b.clone()),
+                activation: if k + 1 < l { Activation::Relu } else { Activation::Identity },
+            })
+            .collect();
+        NetworkCheckpoint::new(layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated 2-d Gaussian blobs, one per class.
+    fn blobs(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut images = Vec::with_capacity(n * 2);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % 2;
+            let (cx, cy) = if class == 0 { (1.0, 0.0) } else { (0.0, 1.0) };
+            images.push(cx + 0.15 * rng.normal_f32());
+            images.push(cy + 0.15 * rng.normal_f32());
+            labels.push(class as i32);
+        }
+        Dataset { images, labels, dims: 2 }
+    }
+
+    #[test]
+    fn sgd_learns_separable_blobs() {
+        let train = blobs(80, 1);
+        let test = blobs(40, 2);
+        let mut net = Mlp3::init(&[2, 8, 2], 3);
+        let before = net.accuracy(&test);
+        net.train_sgd(&train, 200, 16, 0.1, 4);
+        let after = net.accuracy(&test);
+        assert!(after >= 0.9, "accuracy {before} -> {after}");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let train = blobs(40, 5);
+        let mut a = Mlp3::init(&[2, 6, 2], 7);
+        let mut b = Mlp3::init(&[2, 6, 2], 7);
+        a.train_sgd(&train, 30, 8, 0.1, 9);
+        b.train_sgd(&train, 30, 8, 0.1, 9);
+        let x = [0.4f32, 0.6];
+        assert_eq!(a.forward_one(&x), b.forward_one(&x));
+    }
+
+    #[test]
+    fn checkpoint_conversion_matches_forward() {
+        let net = Mlp3::init(&[5, 4, 3], 11);
+        let ckpt = net.to_network_checkpoint().unwrap();
+        assert_eq!(ckpt.num_layers(), 2);
+        assert_eq!(ckpt.input_dim(), 5);
+        assert_eq!(ckpt.output_dim(), 3);
+        assert_eq!(ckpt.layers()[0].activation, Activation::Relu);
+        assert_eq!(ckpt.layers()[1].activation, Activation::Identity);
+        // hand-applying the checkpoint layers is bit-identical to forward_one
+        let x = vec![0.3f32, -0.2, 0.8, 0.1, -0.5];
+        let mut cur = x.clone();
+        for l in ckpt.layers() {
+            let mut y = l.weight.matvec(&cur);
+            if let Some(b) = &l.bias {
+                for (v, &bv) in y.iter_mut().zip(b) {
+                    *v += bv;
+                }
+            }
+            l.activation.apply(&mut y);
+            cur = y;
+        }
+        assert_eq!(cur, net.forward_one(&x));
+    }
+}

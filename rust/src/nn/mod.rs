@@ -7,9 +7,11 @@
 pub mod checkpoint;
 pub mod compressed;
 pub mod mlp;
+pub mod mlp3;
 pub mod npy;
 pub mod resnet;
 
 pub use checkpoint::{load_weight_matrix, ParamStore};
 pub use compressed::{CompressedMlp, Layer1};
 pub use mlp::MlpParams;
+pub use mlp3::Mlp3;

@@ -14,11 +14,10 @@
 //! in-flight batches keep their engine alive until they complete.
 
 use super::backend::{BatchEvaluator, ExecutorBackend};
-use crate::compress::{Pipeline, Recipe};
+use crate::compress::{NetworkCheckpoint, NetworkPipeline, Pipeline, Recipe};
 use crate::config::ExecConfig;
 use crate::exec::{ExecError, ExecHealth, Executor, RemoteOptions};
 use crate::graph::AdderGraph;
-use crate::lcc::LccConfig;
 use crate::metrics::Metrics;
 use crate::nn::load_weight_matrix;
 use anyhow::{Context, Result};
@@ -224,6 +223,9 @@ impl ModelRegistry {
     /// carrying a `recipe.toml` (what `lccnn compress --out` writes) is
     /// loaded through it; anything else gets the legacy LCC-only load
     /// with env-tuned engine settings.
+    ///
+    /// A directory carrying a `network.toml` manifest is a *multi-layer*
+    /// checkpoint and dispatches to [`ModelRegistry::load_network`].
     pub fn load_checkpoint_with_recipe(
         &self,
         name: &str,
@@ -231,6 +233,9 @@ impl ModelRegistry {
         recipe: Option<&Recipe>,
         max_batch: usize,
     ) -> Result<Arc<ModelEntry>> {
+        if NetworkCheckpoint::is_network_dir(path) {
+            return self.load_network(name, path, recipe, max_batch);
+        }
         let w = load_weight_matrix(path)
             .with_context(|| format!("model {name:?} from {}", path.display()))?;
         let discovered;
@@ -262,26 +267,51 @@ impl ModelRegistry {
         Ok(self.insert_executor(name, executor, exec_cfg, max_batch).0)
     }
 
-    /// Legacy LCC-only checkpoint load.
-    #[deprecated(
-        since = "0.3.0",
-        note = "registry loads are recipe-driven: use `load_checkpoint_with_recipe` \
-                (this shim wraps `Recipe::lcc_only`)"
-    )]
-    pub fn load_checkpoint(
+    /// Load a multi-layer network checkpoint directory (a `network.toml`
+    /// manifest + `layer<k>.weight.npy` files), compress every layer
+    /// through the recipe (per-layer `[compress.layer.<k>]` overrides
+    /// apply), and register the chained
+    /// [`crate::compress::NetworkExecutor`] under `name`. Per-layer
+    /// timing/additions/bound telemetry surfaces through the entry's
+    /// executor as `model.<name>.layer.<k>.*` gauges in
+    /// `Server::metrics_text`.
+    ///
+    /// `recipe = None` discovers the recipe exactly like
+    /// [`ModelRegistry::load_checkpoint_with_recipe`]: network artifact
+    /// directories carrying a `recipe.toml` reproduce their exact build.
+    pub fn load_network(
         &self,
         name: &str,
         path: &Path,
-        lcc: &LccConfig,
-        exec_cfg: ExecConfig,
+        recipe: Option<&Recipe>,
         max_batch: usize,
     ) -> Result<Arc<ModelEntry>> {
-        self.load_checkpoint_with_recipe(
-            name,
-            path,
-            Some(&Recipe::lcc_only(lcc, exec_cfg)),
-            max_batch,
-        )
+        let ckpt = NetworkCheckpoint::load(path)
+            .with_context(|| format!("network model {name:?} from {}", path.display()))?;
+        let discovered;
+        let recipe = match recipe {
+            Some(r) => r,
+            None => {
+                discovered = Recipe::for_checkpoint(path)?;
+                &discovered
+            }
+        };
+        let net = NetworkPipeline::from_recipe(recipe)?
+            .run(&ckpt)
+            .with_context(|| format!("compressing network model {name:?}"))?;
+        let report = net.report();
+        log::info!(
+            "model {name:?}: {} layers ({} -> {} dims) -> {} adds ({:.2}x, max rel err {:.2e})",
+            report.num_layers(),
+            ckpt.input_dim(),
+            ckpt.output_dim(),
+            report.total_additions(),
+            report.total_ratio(),
+            report.max_rel_err(),
+        );
+        let exec_cfg = recipe.exec;
+        let executor: Arc<dyn Executor> = Arc::new(net.into_executor()?);
+        Ok(self.insert_executor(name, executor, exec_cfg, max_batch).0)
     }
 
     /// Connect to remote `shard-worker` addresses, gather them behind
@@ -353,6 +383,7 @@ impl std::fmt::Debug for ModelRegistry {
 mod tests {
     use super::*;
     use crate::graph::{Operand, OutputSpec};
+    use crate::lcc::LccConfig;
     use crate::nn::npy::NpyArray;
     use crate::nn::ParamStore;
     use crate::tensor::Matrix;
@@ -482,26 +513,30 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    /// The deprecated shim must behave exactly like the recipe it wraps.
+    /// A checkpoint directory carrying a `network.toml` manifest
+    /// dispatches to the network path and serves bit-identically to the
+    /// directly built chained executor (and its hand-chained oracle).
     #[test]
-    #[allow(deprecated)]
-    fn legacy_load_checkpoint_shim_is_recipe_equivalent() {
-        let mut rng = Rng::new(21);
-        let w = Matrix::randn(24, 6, 0.5, &mut rng);
-        let dir = std::env::temp_dir().join(format!("lccnn-reg-shim-{}", std::process::id()));
-        let mut store = ParamStore::new();
-        store.insert("weight", NpyArray::f32(vec![w.rows(), w.cols()], w.data().to_vec()));
-        store.save(&dir).unwrap();
+    fn network_dir_auto_detected_and_served() {
+        let ckpt = crate::compress::demo_network(&[10, 8, 4], 41);
+        let dir = std::env::temp_dir().join(format!("lccnn-reg-net-{}", std::process::id()));
+        ckpt.save(&dir).unwrap();
+        let recipe = Recipe { exec: ExecConfig::serial(), ..Recipe::default() };
+        recipe.save(&dir.join("recipe.toml")).unwrap();
+
         let r = ModelRegistry::new();
-        let legacy =
-            r.load_checkpoint("legacy", &dir, &LccConfig::fs(), ExecConfig::serial(), 8).unwrap();
-        let recipe = r.load_checkpoint_with_recipe("recipe", &dir, Some(&lcc_serial()), 8).unwrap();
-        let xs: Vec<Vec<f32>> = (0..5).map(|_| rng.normal_vec(6, 1.0)).collect();
-        assert_eq!(
-            legacy.eval_batch(&xs).unwrap(),
-            recipe.eval_batch(&xs).unwrap(),
-            "shim and recipe path must serve bit-identically"
-        );
+        // the generic load path dispatches on the manifest
+        let e = r.load_checkpoint_with_recipe("net", &dir, None, 16).unwrap();
+        assert_eq!(e.input_dim(), Some(10));
+        assert_eq!(e.executor().unwrap().name(), "network-exec");
+        assert_eq!(e.executor().unwrap().layer_stats().len(), 2);
+
+        let direct = NetworkPipeline::from_recipe(&recipe).unwrap().run(&ckpt).unwrap();
+        let mut rng = Rng::new(42);
+        let xs: Vec<Vec<f32>> = (0..6).map(|_| rng.normal_vec(10, 1.0)).collect();
+        let want = direct.executor().unwrap().execute_batch(&xs);
+        assert_eq!(e.eval_batch(&xs).unwrap(), want);
+        assert_eq!(want, direct.oracle_forward_batch(&xs), "serving matches the chained oracle");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -161,7 +161,10 @@ impl Server {
     /// per-model serving series, the current model count
     /// (`serve.models`), per-shard health gauges
     /// (`model.<name>.health[.<label>]`: `1` ready, `0.5` draining,
-    /// `0` dead, `-1` unknown), and the exec worker pool's counters
+    /// `0` dead, `-1` unknown), per-layer gauges for chained network
+    /// executors (`model.<name>.layer.<k>.batch_us` mean layer-step
+    /// time, `.additions` when the layer has a lowered program, and
+    /// `.err_bound`), and the exec worker pool's counters
     /// (`exec_pool.*`; the process-wide pool unless overridden via
     /// [`Server::with_pool_metrics`]) — one blob for logs and debugging.
     pub fn metrics_text(&self) -> String {
@@ -175,6 +178,16 @@ impl Server {
                     format!("model.{name}.health.{label}")
                 };
                 self.metrics.gauge(&key, h.as_gauge());
+            }
+            if let Some(exec) = entry.executor() {
+                for s in exec.layer_stats() {
+                    let p = format!("model.{name}.layer.{}", s.index);
+                    self.metrics.gauge(&format!("{p}.batch_us"), s.mean_batch_us());
+                    if let Some(adds) = s.additions {
+                        self.metrics.gauge(&format!("{p}.additions"), adds as f64);
+                    }
+                    self.metrics.gauge(&format!("{p}.err_bound"), s.err_bound);
+                }
             }
         }
         self.exec_pool.publish(&self.metrics);
@@ -327,6 +340,29 @@ mod tests {
         // always ready = 1)
         assert!(text.contains("model.x1.health = 1"), "{text}");
         assert!(text.contains("model.x4.health = 1"), "{text}");
+    }
+
+    /// Chained network models surface `model.<name>.layer.<k>.*` gauges
+    /// with exactly this naming through `metrics_text`.
+    #[test]
+    fn network_model_publishes_per_layer_gauges() {
+        use crate::compress::{demo_network, NetworkPipeline, Recipe};
+        let ckpt = demo_network(&[8, 6, 4], 51);
+        let recipe = Recipe { exec: ExecConfig::serial(), ..Recipe::default() };
+        let net = NetworkPipeline::from_recipe(&recipe).unwrap().run(&ckpt).unwrap();
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register("mlp", Arc::new(net.into_executor().unwrap()), recipe.exec, 8);
+        let server = Server::start_registry(Arc::clone(&registry), ServeConfig::default());
+        let y = server.infer_model("mlp", vec![0.5; 8]).unwrap();
+        assert_eq!(y.len(), 4);
+        let text = server.metrics_text();
+        for k in 1..=2 {
+            assert!(text.contains(&format!("model.mlp.layer.{k}.batch_us")), "{text}");
+            assert!(text.contains(&format!("model.mlp.layer.{k}.additions")), "{text}");
+            assert!(text.contains(&format!("model.mlp.layer.{k}.err_bound")), "{text}");
+        }
+        // plain single-engine models publish no layer series
+        assert!(!text.contains("model.x1.layer."), "{text}");
     }
 
     #[test]

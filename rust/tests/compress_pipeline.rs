@@ -208,7 +208,7 @@ fn quantized_recipe_runs_and_round_trips() {
             StageSpec::Lcc(Default::default()),
         ],
         exec: ExecConfig::serial(),
-        shard: None,
+        ..Recipe::default()
     };
     assert_eq!(Recipe::from_toml_str(&recipe.to_toml_string()).unwrap(), recipe);
     let p = Pipeline::from_recipe(&recipe).unwrap();

@@ -8,6 +8,7 @@
 //! float-reassociation budget) guards the invariant even if a future
 //! kernel rewrite introduces a different-but-legal summation order.
 
+use lccnn::compress::{demo_network, NetworkPipeline, Recipe};
 use lccnn::config::{ExecConfig, ExecMode, PoolMode, ShardMode};
 use lccnn::exec::{
     engine_for_graph, BatchEngine, ExecPlan, Executor, FixedEngine, NaiveExecutor, ShardPlan,
@@ -390,4 +391,58 @@ fn engine_reports_graph_shape() {
     assert_eq!(engine.num_inputs(), g.num_inputs());
     assert_eq!(engine.num_outputs(), g.num_outputs());
     assert_eq!(engine.plan().additions(), g.additions());
+}
+
+/// Full-network differential sweep: the chained `NetworkExecutor` vs
+/// the hand-chained per-layer `NaiveExecutor` oracle
+/// (`CompressedNetwork::oracle_forward_batch`), across float/fixed exec
+/// modes x shards 1/2 x both pool modes. Float chains must match the
+/// oracle bit for bit; fixed chains stay within the network's
+/// propagated analytic bound (per-layer bounds composed through the
+/// operator inf-norms; ReLU is 1-Lipschitz); and within a mode every
+/// config agrees bit-exactly with every other — sharding and dispatch
+/// leave no numerical freedom.
+#[test]
+fn prop_network_executor_matches_hand_chained_oracle() {
+    let ckpt = demo_network(&[10, 8, 6], 0xD1FF);
+    let mut rng = Rng::new(0x2D1FF);
+    let xs: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(ckpt.input_dim(), 1.0)).collect();
+    for mode in [ExecMode::Float, ExecMode::Fixed] {
+        let mut runs: Vec<(String, Vec<Vec<f32>>)> = Vec::new();
+        for shards in [1usize, 2] {
+            for pool in [PoolMode::Scoped, PoolMode::Persistent] {
+                let exec = ExecConfig {
+                    exec_mode: mode,
+                    shards,
+                    pool_mode: pool,
+                    threads: 2,
+                    ..ExecConfig::default()
+                };
+                let recipe = Recipe { exec, ..Recipe::default() };
+                let net = NetworkPipeline::from_recipe(&recipe).unwrap().run(&ckpt).unwrap();
+                let engine = net.executor().unwrap();
+                let got = engine.execute_batch(&xs);
+                let want = net.oracle_forward_batch(&xs);
+                let bound = engine.max_error_bound();
+                let tag = format!("{mode:?} x{shards} {pool:?}");
+                if mode == ExecMode::Float {
+                    assert_eq!(bound, 0.0, "{tag}: float chains carry no error bound");
+                    assert_eq!(got, want, "{tag}");
+                } else {
+                    assert!(bound > 0.0, "{tag}: fixed chains must propagate a bound");
+                    for (gs, ws) in got.iter().zip(&want) {
+                        for (g, w) in gs.iter().zip(ws) {
+                            let tol = bound + 1e-3 * (1.0 + w.abs() as f64);
+                            assert!(((g - w).abs() as f64) <= tol, "{tag}: {g} vs {w}");
+                        }
+                    }
+                }
+                runs.push((tag, got));
+            }
+        }
+        let (first_tag, first) = &runs[0];
+        for (tag, run) in &runs[1..] {
+            assert_eq!(run, first, "{tag} diverged from {first_tag}");
+        }
+    }
 }
