@@ -41,6 +41,13 @@
 //!   per-layer [`crate::exec::LayerStat`] telemetry). [`ChainedExecutor`]
 //!   composes arbitrary executors — e.g. remote layer-range workers —
 //!   into the same seam.
+//! * The [`tune`] layer closes the loop from report back to recipe: a
+//!   [`TuneSpec`] names sweep axes over the stack above, and
+//!   [`tune::sweep_matrix`] / [`tune::sweep_network`] evaluate every
+//!   candidate recipe in parallel, flag the (additions, rel-err)
+//!   Pareto frontier ([`pareto_frontier`]) and emit reproducible
+//!   `recipe.toml` + `sweep.json` artifacts (the `tune` CLI
+//!   subcommand).
 //!
 //! ```
 //! use lccnn::compress::{demo_weights, Pipeline, Recipe};
@@ -58,6 +65,7 @@ mod recipe;
 mod report;
 mod stage;
 mod state;
+pub mod tune;
 
 pub use executor::PipelineExecutor;
 pub use network::{
@@ -65,10 +73,13 @@ pub use network::{
     NetworkCheckpoint, NetworkExecutor, NetworkLayer, NetworkPipeline, NetworkReport,
 };
 pub use pipeline::{CompressedModel, Pipeline, PipelineBuilder};
-pub use recipe::{LayerOverride, LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec};
-pub use report::{CompressionReport, StageReport};
+pub use recipe::{
+    LayerOverride, LccSpec, PruneSpec, QuantSpec, Recipe, ShareSpec, StageSpec, TuneSpec,
+};
+pub use report::{pareto_frontier, CompressionReport, StageReport};
 pub use stage::{LccStage, PruneStage, QuantizeStage, ShareStage, Stage};
 pub use state::ModelState;
+pub use tune::{TunePoint, TuneResult};
 
 use crate::tensor::Matrix;
 use crate::util::Rng;

@@ -414,6 +414,19 @@ impl CompressedLayer {
 /// Drives the single-matrix [`Pipeline`] once per network layer, each
 /// layer under its recipe-resolved stage list and parameters
 /// ([`Recipe::layer_recipe`]).
+///
+/// ```
+/// use lccnn::compress::{demo_network, NetworkPipeline, Recipe};
+/// use lccnn::exec::Executor;
+///
+/// let ckpt = demo_network(&[12, 10, 8, 6], 0);
+/// let net = NetworkPipeline::from_recipe(&Recipe::default()).unwrap().run(&ckpt).unwrap();
+/// assert_eq!(net.report().num_layers(), 3);
+/// assert!(net.report().total_ratio() > 1.0);
+/// // the chained engine serves the whole network in one call
+/// let y = net.executor().unwrap().execute_one(&[0.5; 12]);
+/// assert_eq!(y.len(), 6);
+/// ```
 pub struct NetworkPipeline {
     recipe: Recipe,
 }

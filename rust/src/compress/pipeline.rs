@@ -38,6 +38,18 @@ impl Composed {
 /// with [`Pipeline::builder`] (the API path, which also accepts custom
 /// [`Stage`] implementations). Running a pipeline never mutates it, so
 /// one pipeline can compress many checkpoints.
+///
+/// ```
+/// use lccnn::compress::{demo_weights, Pipeline, Recipe};
+/// use lccnn::exec::Executor;
+///
+/// let pipeline = Pipeline::from_recipe(&Recipe::default()).unwrap();
+/// let model = pipeline.run(&demo_weights(16, 3, 4, 0)).unwrap();
+/// // the report carries the paper's accounting; the executor serves it
+/// assert!(model.report().final_ratio() > 1.0);
+/// let y = model.executor().execute_one(&[1.0; 15]);
+/// assert_eq!(y.len(), 16);
+/// ```
 pub struct Pipeline {
     stages: Vec<Composed>,
     exec: ExecConfig,

@@ -10,7 +10,7 @@
 
 use crate::cluster::affinity::AffinityParams;
 use crate::config::{
-    parse_toml, ExecConfig, LccAlgoConfig, PoolMode, ShardMode, ShardSpec, TomlValue,
+    parse_toml, ExecConfig, ExecMode, LccAlgoConfig, PoolMode, ShardMode, ShardSpec, TomlValue,
 };
 use crate::lcc::{LccAlgorithm, LccConfig};
 use crate::quant::FixedPointFormat;
@@ -441,6 +441,20 @@ impl LayerOverride {
 /// checkpoints additionally resolve per-layer stage overrides from
 /// [`Recipe::layers`] and gate their end-to-end accuracy on
 /// [`Recipe::gate_epsilon`].
+///
+/// Recipes round-trip exactly through their TOML form — the contract
+/// that makes artifacts reproducible from one small file:
+///
+/// ```
+/// use lccnn::compress::{Recipe, StageSpec};
+///
+/// let text = "[compress]\nstages = [\"prune\", \"lcc\"]\n\n[compress.lcc]\nslice_width = 4\n";
+/// let recipe = Recipe::from_toml_str(text).unwrap();
+/// assert_eq!(recipe.stages.len(), 2);
+/// assert!(matches!(&recipe.stages[1], StageSpec::Lcc(l) if l.slice_width == 4));
+/// let back = Recipe::from_toml_str(&recipe.to_toml_string()).unwrap();
+/// assert_eq!(back, recipe);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct Recipe {
     pub stages: Vec<StageSpec>,
@@ -861,6 +875,266 @@ impl Recipe {
     }
 }
 
+/// The axes of a [`super::tune`] sweep: every combination of the listed
+/// values is one candidate [`Recipe`] (the paper's prune → share → LCC
+/// stack with those parameters). Like [`Recipe`], the spec is fully
+/// serializable — a `[tune]` TOML section plus `LCCNN_TUNE_*`
+/// environment overrides — so a sweep is reproducible from one small
+/// file: same spec + same seed + same weights ⇒ the same Pareto
+/// frontier and byte-identical emitted `recipe.toml` files.
+///
+/// ```
+/// use lccnn::compress::TuneSpec;
+///
+/// let spec = TuneSpec::from_toml_str("[tune]\nprune_eps = [0.001]\nbudget = 4\n").unwrap();
+/// assert_eq!(spec.prune_eps, vec![0.001]);
+/// assert_eq!(spec.budget, 4);
+/// let back = TuneSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+/// assert_eq!(back, spec);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneSpec {
+    /// prune thresholds to sweep (`PruneSpec::eps` values)
+    pub prune_eps: Vec<f64>,
+    /// weight-sharing preference scales (`ShareSpec::preference_scale`,
+    /// the knob steering the affinity-propagation cluster count); a
+    /// value of 0 drops the share stage from that candidate entirely
+    pub share_scale: Vec<f64>,
+    /// LCC algorithms to sweep (`fp` | `fs`)
+    pub lcc_algos: Vec<LccAlgoConfig>,
+    /// LCC vertical slice widths (`LccSpec::slice_width`; 0 = auto)
+    pub lcc_widths: Vec<usize>,
+    /// engine datapaths (`float` | `fixed`); the compression report is
+    /// datapath-independent, so extra modes only add distinct points
+    /// when `measure` is on
+    pub exec_modes: Vec<ExecMode>,
+    /// serve-time shard counts (`[compress.shard]`); values <= 1 mean
+    /// one unsharded engine — like `exec_modes`, a measurement axis
+    pub shards: Vec<usize>,
+    /// evaluate at most this many candidates (a seeded uniform
+    /// subsample of the full grid); 0 = the whole grid
+    pub budget: usize,
+    /// seed for the budget subsample and the demo input weights
+    pub seed: u64,
+    /// also time each candidate's served engine (µs/sample); off by
+    /// default because wall-clock numbers are host-dependent and would
+    /// break the byte-determinism of `sweep.json`
+    pub measure: bool,
+}
+
+impl Default for TuneSpec {
+    /// A small real grid around the paper's operating points: 2 prune
+    /// thresholds × share off/on × FS/FP × 2 slice widths = 16
+    /// compression-distinct candidates, float-only and unsharded.
+    fn default() -> Self {
+        TuneSpec {
+            prune_eps: vec![1e-6, 1e-3],
+            share_scale: vec![0.0, 0.3],
+            lcc_algos: vec![LccAlgoConfig::Fs, LccAlgoConfig::Fp],
+            lcc_widths: vec![0, 4],
+            exec_modes: vec![ExecMode::Float],
+            shards: vec![1],
+            budget: 0,
+            seed: 0,
+            measure: false,
+        }
+    }
+}
+
+impl TuneSpec {
+    /// Number of candidates in the full grid (before any `budget` cap).
+    pub fn grid_size(&self) -> usize {
+        self.prune_eps.len()
+            * self.share_scale.len()
+            * self.lcc_algos.len()
+            * self.lcc_widths.len()
+            * self.exec_modes.len()
+            * self.shards.len()
+    }
+
+    /// Every axis must carry at least one value for the grid to be
+    /// non-empty; typed error otherwise.
+    pub fn validate(&self) -> Result<()> {
+        for (name, len) in [
+            ("prune_eps", self.prune_eps.len()),
+            ("share_scale", self.share_scale.len()),
+            ("lcc_algos", self.lcc_algos.len()),
+            ("lcc_widths", self.lcc_widths.len()),
+            ("exec_modes", self.exec_modes.len()),
+            ("shards", self.shards.len()),
+        ] {
+            if len == 0 {
+                bail!("[tune] {name} is empty: every sweep axis needs at least one value");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn from_toml(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read tune spec {}", path.display()))?;
+        Self::from_toml_str(&text).with_context(|| format!("parse tune spec {}", path.display()))
+    }
+
+    /// Parse a `[tune]` document, layering the keys present over the
+    /// default grid. Unknown algorithm/mode names and wrong-typed keys
+    /// are typed errors; absent keys keep their defaults.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let t = parse_toml(text)?;
+        let mut s = TuneSpec::default();
+        let sec = "tune";
+        if let Some(v) = get(&t, sec, "prune_eps") {
+            s.prune_eps =
+                v.as_float_array().with_context(|| format!("[tune] prune_eps {v:?}"))?;
+        }
+        if let Some(v) = get(&t, sec, "share_scale") {
+            s.share_scale =
+                v.as_float_array().with_context(|| format!("[tune] share_scale {v:?}"))?;
+        }
+        if let Some(v) = get(&t, sec, "lcc_algos") {
+            let names = v.as_str_array().with_context(|| format!("[tune] lcc_algos {v:?}"))?;
+            s.lcc_algos = names
+                .iter()
+                .map(|n| {
+                    LccAlgoConfig::parse(n)
+                        .with_context(|| format!("[tune] lcc_algos entry {n:?} (use fp|fs)"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = get(&t, sec, "lcc_widths") {
+            s.lcc_widths =
+                v.as_usize_array().with_context(|| format!("[tune] lcc_widths {v:?}"))?;
+        }
+        if let Some(v) = get(&t, sec, "exec_modes") {
+            let names = v.as_str_array().with_context(|| format!("[tune] exec_modes {v:?}"))?;
+            s.exec_modes = names
+                .iter()
+                .map(|n| {
+                    ExecMode::parse(n)
+                        .with_context(|| format!("[tune] exec_modes entry {n:?} (use float|fixed)"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = get(&t, sec, "shards") {
+            s.shards = v.as_usize_array().with_context(|| format!("[tune] shards {v:?}"))?;
+        }
+        if let Some(v) = get(&t, sec, "budget").and_then(TomlValue::as_int) {
+            s.budget = v.max(0) as usize;
+        }
+        if let Some(v) = get(&t, sec, "seed").and_then(TomlValue::as_int) {
+            s.seed = v.max(0) as u64;
+        }
+        if let Some(v) = get(&t, sec, "measure").and_then(TomlValue::as_bool) {
+            s.measure = v;
+        }
+        Ok(s)
+    }
+
+    /// Render the spec as a TOML document that [`TuneSpec::from_toml_str`]
+    /// parses back to an equal value.
+    pub fn to_toml_string(&self) -> String {
+        fn floats(xs: &[f64]) -> String {
+            xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+        }
+        fn ints(xs: &[usize]) -> String {
+            xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+        }
+        let algos: Vec<String> = self
+            .lcc_algos
+            .iter()
+            .map(|a| match a {
+                LccAlgoConfig::Fp => "\"fp\"".to_string(),
+                LccAlgoConfig::Fs => "\"fs\"".to_string(),
+            })
+            .collect();
+        let modes: Vec<String> =
+            self.exec_modes.iter().map(|m| format!("{:?}", m.as_str())).collect();
+        let mut s = String::from("# lccnn tune spec (README §Recipe tuning)\n");
+        let _ = writeln!(
+            s,
+            "[tune]\nprune_eps = [{}]\nshare_scale = [{}]\nlcc_algos = [{}]\n\
+             lcc_widths = [{}]\nexec_modes = [{}]\nshards = [{}]\nbudget = {}\nseed = {}\n\
+             measure = {}",
+            floats(&self.prune_eps),
+            floats(&self.share_scale),
+            algos.join(", "),
+            ints(&self.lcc_widths),
+            modes.join(", "),
+            ints(&self.shards),
+            self.budget,
+            self.seed,
+            self.measure
+        );
+        s
+    }
+
+    /// Write the spec next to a sweep's output (`tune.toml`), creating
+    /// parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("mkdir {}", parent.display()))?;
+        }
+        std::fs::write(path, self.to_toml_string())
+            .with_context(|| format!("write tune spec {}", path.display()))
+    }
+
+    /// Environment overrides over the default grid.
+    pub fn from_env() -> Self {
+        Self::from_env_over(TuneSpec::default())
+    }
+
+    /// Layer `LCCNN_TUNE_*` environment overrides over `base`: the list
+    /// axes take comma-separated values (`LCCNN_TUNE_PRUNE_EPS`,
+    /// `LCCNN_TUNE_SHARE_SCALE`, `LCCNN_TUNE_LCC_ALGOS`,
+    /// `LCCNN_TUNE_LCC_WIDTHS`, `LCCNN_TUNE_EXEC_MODES`,
+    /// `LCCNN_TUNE_SHARDS`), the scalars plain values
+    /// (`LCCNN_TUNE_BUDGET`, `LCCNN_TUNE_SEED`, `LCCNN_TUNE_MEASURE`).
+    /// Unparsable entries are warned about and skipped, matching the
+    /// other `LCCNN_*` env layers.
+    pub fn from_env_over(mut base: TuneSpec) -> TuneSpec {
+        fn env_list<T>(name: &str, parse: impl Fn(&str) -> Option<T>) -> Option<Vec<T>> {
+            let raw = std::env::var(name).ok()?;
+            let mut out = Vec::new();
+            for item in raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                match parse(item) {
+                    Some(v) => out.push(v),
+                    None => log::warn!("{name}: unparsable entry {item:?} skipped"),
+                }
+            }
+            (!out.is_empty()).then_some(out)
+        }
+        if let Some(v) = env_list("LCCNN_TUNE_PRUNE_EPS", |s| s.parse::<f64>().ok()) {
+            base.prune_eps = v;
+        }
+        if let Some(v) = env_list("LCCNN_TUNE_SHARE_SCALE", |s| s.parse::<f64>().ok()) {
+            base.share_scale = v;
+        }
+        if let Some(v) = env_list("LCCNN_TUNE_LCC_ALGOS", LccAlgoConfig::parse) {
+            base.lcc_algos = v;
+        }
+        if let Some(v) = env_list("LCCNN_TUNE_LCC_WIDTHS", |s| s.parse::<usize>().ok()) {
+            base.lcc_widths = v;
+        }
+        if let Some(v) = env_list("LCCNN_TUNE_EXEC_MODES", ExecMode::parse) {
+            base.exec_modes = v;
+        }
+        if let Some(v) = env_list("LCCNN_TUNE_SHARDS", |s| s.parse::<usize>().ok()) {
+            base.shards = v;
+        }
+        if let Some(v) = env_parse::<usize>("LCCNN_TUNE_BUDGET") {
+            base.budget = v;
+        }
+        if let Some(v) = env_parse::<u64>("LCCNN_TUNE_SEED") {
+            base.seed = v;
+        }
+        if let Ok(v) = std::env::var("LCCNN_TUNE_MEASURE") {
+            base.measure = !v.is_empty() && v != "0" && v != "false";
+        }
+        base
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1066,6 +1340,42 @@ mod tests {
         // and the layered recipe still round-trips through TOML
         let text = r.to_toml_string();
         assert_eq!(Recipe::from_toml_str(&text).unwrap(), r, "\n{text}");
+    }
+
+    #[test]
+    fn tune_spec_defaults_round_trip() {
+        let spec = TuneSpec::default();
+        assert_eq!(spec.grid_size(), 16, "2 eps x 2 scale x 2 algo x 2 width");
+        spec.validate().unwrap();
+        let text = spec.to_toml_string();
+        assert_eq!(TuneSpec::from_toml_str(&text).unwrap(), spec, "\n{text}");
+    }
+
+    #[test]
+    fn tune_spec_custom_round_trip_and_layering() {
+        let spec = TuneSpec {
+            prune_eps: vec![0.01],
+            share_scale: vec![0.0],
+            lcc_algos: vec![LccAlgoConfig::Fp],
+            lcc_widths: vec![8, 16],
+            exec_modes: vec![ExecMode::Float, ExecMode::Fixed],
+            shards: vec![1, 4],
+            budget: 5,
+            seed: 42,
+            measure: true,
+        };
+        let text = spec.to_toml_string();
+        assert_eq!(TuneSpec::from_toml_str(&text).unwrap(), spec, "\n{text}");
+        // absent keys keep their defaults
+        let sparse = TuneSpec::from_toml_str("[tune]\nbudget = 3\n").unwrap();
+        assert_eq!(sparse.budget, 3);
+        assert_eq!(sparse.prune_eps, TuneSpec::default().prune_eps);
+        // unknown algo / mode names are typed errors
+        assert!(TuneSpec::from_toml_str("[tune]\nlcc_algos = [\"nope\"]\n").is_err());
+        assert!(TuneSpec::from_toml_str("[tune]\nexec_modes = [\"nope\"]\n").is_err());
+        // an emptied axis is caught by validate()
+        let empty = TuneSpec::from_toml_str("[tune]\nshards = []\n").unwrap();
+        assert!(empty.validate().is_err());
     }
 
     #[test]

@@ -128,6 +128,31 @@ impl CompressionReport {
     }
 }
 
+/// Which of `points` (cost, error) lie on the Pareto frontier of the
+/// minimize-both problem.
+///
+/// A point is dominated — and excluded — iff some other point is no
+/// worse on both axes and strictly better on at least one. Exact ties
+/// on both axes dominate nothing and are all kept, so distinct recipes
+/// landing on the same (additions, rel-err) point each stay visible in
+/// the sweep output. O(n²), fine for recipe sweeps (n ≲ thousands).
+///
+/// ```
+/// use lccnn::compress::pareto_frontier;
+///
+/// // (additions, rel_err): the middle point is beaten on both axes.
+/// let front = pareto_frontier(&[(100, 0.5), (200, 0.6), (300, 0.1)]);
+/// assert_eq!(front, vec![true, false, true]);
+/// ```
+pub fn pareto_frontier(points: &[(usize, f64)]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|&(cost, err)| {
+            !points.iter().any(|&(c, e)| c <= cost && e <= err && (c < cost || e < err))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +202,24 @@ mod tests {
         let tsv = r.to_tsv();
         assert_eq!(tsv.lines().count(), 4, "header + baseline + 2 stages:\n{tsv}");
         assert!(tsv.starts_with("stage\t"));
+    }
+
+    #[test]
+    fn pareto_excludes_dominated_keeps_ties() {
+        // single point is trivially on the frontier
+        assert_eq!(pareto_frontier(&[(10, 0.5)]), vec![true]);
+        // strictly dominated on both axes: excluded
+        assert_eq!(pareto_frontier(&[(10, 0.1), (20, 0.2)]), vec![true, false]);
+        // equal cost, worse error: excluded (one-axis domination)
+        assert_eq!(pareto_frontier(&[(10, 0.1), (10, 0.2)]), vec![true, false]);
+        // incomparable points: both kept
+        assert_eq!(pareto_frontier(&[(10, 0.5), (20, 0.1)]), vec![true, true]);
+        // exact ties on both axes: all kept
+        assert_eq!(pareto_frontier(&[(10, 0.1), (10, 0.1), (30, 0.0)]), vec![true, true, true]);
+        // a chain: only the staircase survives
+        let pts = [(5, 0.9), (6, 0.9), (5, 1.0), (4, 1.5), (9, 0.05)];
+        assert_eq!(pareto_frontier(&pts), vec![true, false, false, true, true]);
+        assert!(pareto_frontier(&[]).is_empty());
     }
 
     #[test]

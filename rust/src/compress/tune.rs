@@ -1,0 +1,618 @@
+//! Recipe autotuner: sweep the paper's operating points, keep the
+//! Pareto frontier.
+//!
+//! The paper hand-picks one prune threshold, one share cluster scale
+//! and one LCC slicing per result; since every such choice is a
+//! deterministic, serializable [`Recipe`] and every run emits a
+//! [`super::CompressionReport`], the search over them is mechanical.
+//! A [`TuneSpec`] names the axes (prune thresholds × share scales ×
+//! FP/FS × slice widths × float/fixed × shard counts), [`sweep_matrix`]
+//! / [`sweep_network`] run every candidate through the existing
+//! [`Pipeline`] / [`NetworkPipeline`] — in parallel on
+//! [`crate::exec::global_pool`] — and score each point on the paper's
+//! own trade-off: **additions** (the cost metric) vs **relative
+//! error**. The result keeps every evaluated point, flags the Pareto
+//! frontier ([`super::pareto_frontier`]: dominated points excluded,
+//! exact ties kept), and [`TuneResult::write`] emits an output
+//! directory — one `recipe-<id>.toml` per point, the frontier's
+//! cheapest point as `best.toml`, machine-readable `sweep.json`
+//! (JSON-lines, [`bench::json_line`] rows like `BENCH_exec.json`),
+//! `sweep.tsv`, and a `sweep.md` table that pastes into EXPERIMENTS.md
+//! §Recipe-sweep.
+//!
+//! Everything is deterministic: same spec + same seed + same weights ⇒
+//! the same candidates (a seeded subsample when `budget` caps the
+//! grid), the same scores, the same frontier, byte-identical emitted
+//! files — and each emitted recipe re-runs through `compress --recipe`
+//! to bit-identical additions/rel-err. The exception is opt-in:
+//! `measure = true` times each candidate's served engine (µs/sample),
+//! which is host-dependent by nature.
+//!
+//! ```
+//! use lccnn::compress::{demo_weights, tune, Recipe, TuneSpec};
+//!
+//! let spec = TuneSpec { budget: 4, ..TuneSpec::default() };
+//! let w = demo_weights(16, 3, 4, 0);
+//! let result = tune::sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+//! assert_eq!(result.points.len(), 4);
+//! assert!(!result.frontier().is_empty());
+//! let best = result.best().unwrap();
+//! assert!(best.frontier && best.additions > 0);
+//! ```
+
+use super::recipe::TuneSpec;
+use super::report::pareto_frontier;
+use super::{
+    LccSpec, NetworkCheckpoint, NetworkPipeline, Pipeline, PruneSpec, Recipe, ShareSpec, StageSpec,
+};
+use crate::config::{ExecMode, LccAlgoConfig, ShardSpec};
+use crate::exec::{global_pool, Executor};
+use crate::lcc::LccConfig;
+use crate::report::Table;
+use crate::tensor::Matrix;
+use crate::util::{bench, Rng};
+use anyhow::{anyhow, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+fn algo_name(a: LccAlgoConfig) -> &'static str {
+    match a {
+        LccAlgoConfig::Fp => "fp",
+        LccAlgoConfig::Fs => "fs",
+    }
+}
+
+/// One grid cell of a sweep: the axis values, before evaluation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Candidate {
+    /// position in the full grid (stable across budget subsampling, so
+    /// `recipe-<id>.toml` names identify the same cell in any run)
+    id: usize,
+    prune_eps: f64,
+    share_scale: f64,
+    algo: LccAlgoConfig,
+    width: usize,
+    mode: ExecMode,
+    shards: usize,
+}
+
+impl Candidate {
+    fn label(&self) -> String {
+        format!(
+            "eps={} share={} {} w{} {} x{}",
+            self.prune_eps,
+            self.share_scale,
+            algo_name(self.algo),
+            self.width,
+            self.mode.as_str(),
+            self.shards
+        )
+    }
+}
+
+/// The full grid in a fixed nested order (prune_eps slowest, shards
+/// fastest), ids dense from 0.
+fn candidates(spec: &TuneSpec) -> Vec<Candidate> {
+    let mut out = Vec::with_capacity(spec.grid_size());
+    let mut id = 0;
+    for &prune_eps in &spec.prune_eps {
+        for &share_scale in &spec.share_scale {
+            for &algo in &spec.lcc_algos {
+                for &width in &spec.lcc_widths {
+                    for &mode in &spec.exec_modes {
+                        for &shards in &spec.shards {
+                            out.push(Candidate {
+                                id,
+                                prune_eps,
+                                share_scale,
+                                algo,
+                                width,
+                                mode,
+                                shards,
+                            });
+                            id += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The candidates a sweep evaluates: the full grid, or — when `budget`
+/// caps it — a seeded uniform subsample, re-sorted into grid order.
+fn selected(spec: &TuneSpec) -> Vec<Candidate> {
+    let mut all = candidates(spec);
+    if spec.budget > 0 && spec.budget < all.len() {
+        let mut rng = Rng::new(spec.seed);
+        rng.shuffle(&mut all);
+        all.truncate(spec.budget);
+        all.sort_by_key(|c| c.id);
+    }
+    all
+}
+
+/// Materialize one grid cell as a concrete [`Recipe`] over `base`.
+///
+/// The stage stack is the canonical prune → share → (quantize) → lcc
+/// order with the candidate's axis values written over `base`'s stage
+/// parameters: `share_scale == 0` drops the share stage, a quantize
+/// stage is carried over only if `base` had one, and an algorithm swap
+/// reseeds the FP/FS-specific knobs from that algorithm's defaults
+/// while keeping the target error / quant step / shift range. The
+/// engine tuning keeps `base.exec` except `exec_mode` (swept) and
+/// `exec.shards` (pinned to 1 so the candidate's shard axis is
+/// authoritative through [`ShardSpec::effective`]). Per-layer overrides
+/// are cleared — a sweep varies the global stack, and a fixed override
+/// would silently mask the axes for that layer.
+fn candidate_recipe(base: &Recipe, c: &Candidate) -> Recipe {
+    let mut prune = PruneSpec::default();
+    let mut share = ShareSpec::default();
+    let mut lcc = LccSpec::default();
+    let mut quantize = None;
+    for s in &base.stages {
+        match s {
+            StageSpec::Prune(p) => prune = *p,
+            StageSpec::Share(sh) => share = *sh,
+            StageSpec::Quantize(q) => quantize = Some(*q),
+            StageSpec::Lcc(l) => lcc = l.clone(),
+        }
+    }
+    prune.eps = c.prune_eps as f32;
+    share.preference_scale = c.share_scale as f32;
+    if lcc.algo != c.algo {
+        let seeded = LccSpec::from_config(&match c.algo {
+            LccAlgoConfig::Fp => LccConfig::fp(),
+            LccAlgoConfig::Fs => LccConfig::fs(),
+        });
+        lcc = LccSpec {
+            target_rel_err: lcc.target_rel_err,
+            quant_step: lcc.quant_step,
+            shift_min: lcc.shift_min,
+            shift_max: lcc.shift_max,
+            ..seeded
+        };
+    }
+    lcc.slice_width = c.width;
+    let mut stages = vec![StageSpec::Prune(prune)];
+    if c.share_scale > 0.0 {
+        stages.push(StageSpec::Share(share));
+    }
+    if let Some(q) = quantize {
+        stages.push(StageSpec::Quantize(q));
+    }
+    stages.push(StageSpec::Lcc(lcc));
+    let mut exec = base.exec;
+    exec.exec_mode = c.mode;
+    exec.shards = 1;
+    let shard_mode = base.shard.map(|s| s.mode).unwrap_or(base.exec.shard_mode);
+    Recipe {
+        stages,
+        exec,
+        shard: (c.shards > 1).then_some(ShardSpec { shards: c.shards, mode: shard_mode }),
+        layers: Default::default(),
+        gate_epsilon: base.gate_epsilon,
+    }
+}
+
+/// One evaluated sweep point: the grid cell, the concrete recipe it
+/// materialized to, and its scores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunePoint {
+    /// position in the full grid (names the emitted `recipe-<id>.toml`)
+    pub id: usize,
+    pub prune_eps: f64,
+    pub share_scale: f64,
+    pub algo: LccAlgoConfig,
+    pub width: usize,
+    pub mode: ExecMode,
+    pub shards: usize,
+    /// the exact recipe evaluated — re-running it through `compress`
+    /// reproduces `additions` / `rel_err` bit-identically
+    pub recipe: Recipe,
+    /// additions of the final representation (one forward pass)
+    pub additions: usize,
+    /// the target's dense CSD baseline additions
+    pub baseline_additions: usize,
+    /// baseline / additions
+    pub ratio: f64,
+    /// final relative error (worst layer, for network sweeps)
+    pub rel_err: f64,
+    /// measured serve-time µs/sample, when the spec's `measure` is on
+    pub us_per_sample: Option<f64>,
+    /// on the (additions, rel_err) Pareto frontier of this sweep
+    pub frontier: bool,
+}
+
+impl TunePoint {
+    /// Compact axis summary, e.g. `eps=0.001 share=0.3 fs w4 float x1`.
+    pub fn label(&self) -> String {
+        Candidate {
+            id: self.id,
+            prune_eps: self.prune_eps,
+            share_scale: self.share_scale,
+            algo: self.algo,
+            width: self.width,
+            mode: self.mode,
+            shards: self.shards,
+        }
+        .label()
+    }
+
+    /// The point as JSON-lines / bench fields (`sweep.json` row).
+    fn row_fields(&self) -> Vec<(&'static str, String)> {
+        let mut f = vec![
+            ("id", self.id.to_string()),
+            ("prune_eps", self.prune_eps.to_string()),
+            ("share_scale", self.share_scale.to_string()),
+            ("algo", algo_name(self.algo).to_string()),
+            ("width", self.width.to_string()),
+            ("mode", self.mode.as_str().to_string()),
+            ("shards", self.shards.to_string()),
+            ("additions", self.additions.to_string()),
+            ("baseline", self.baseline_additions.to_string()),
+            ("ratio", self.ratio.to_string()),
+            ("rel_err", self.rel_err.to_string()),
+            ("frontier", (self.frontier as u8).to_string()),
+        ];
+        if let Some(u) = self.us_per_sample {
+            f.push(("us_per_sample", u.to_string()));
+        }
+        f
+    }
+}
+
+/// A finished sweep: every evaluated point with frontier flags set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneResult {
+    /// what was swept, for table titles (`matrix 24x20`, `network 3 layers`)
+    pub target: String,
+    /// size of the full grid (≥ `points.len()` when a budget applied)
+    pub grid_size: usize,
+    /// evaluated points in grid-id order
+    pub points: Vec<TunePoint>,
+}
+
+impl TuneResult {
+    /// The Pareto-frontier points, in grid-id order.
+    pub fn frontier(&self) -> Vec<&TunePoint> {
+        self.points.iter().filter(|p| p.frontier).collect()
+    }
+
+    /// The frontier's cheapest point: fewest additions, ties broken by
+    /// lower rel-err then lower grid id. `None` only for an empty sweep.
+    pub fn best(&self) -> Option<&TunePoint> {
+        self.points.iter().filter(|p| p.frontier).min_by(|a, b| {
+            a.additions
+                .cmp(&b.additions)
+                .then(a.rel_err.total_cmp(&b.rel_err))
+                .then(a.id.cmp(&b.id))
+        })
+    }
+
+    /// Render as an aligned table for the CLI (`*` marks the frontier).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "tune sweep ({}; {} of {} grid points)",
+                self.target,
+                self.points.len(),
+                self.grid_size
+            ),
+            &["id", "candidate", "additions", "ratio", "rel err", "us/sample", "front"],
+        );
+        for p in &self.points {
+            t.add_row(vec![
+                p.id.to_string(),
+                p.label(),
+                p.additions.to_string(),
+                format!("{:.2}", p.ratio),
+                format!("{:.2e}", p.rel_err),
+                p.us_per_sample.map(|u| format!("{u:.2}")).unwrap_or_else(|| "-".into()),
+                if p.frontier { "*".into() } else { "".into() },
+            ]);
+        }
+        t.render()
+    }
+
+    /// Markdown table in the EXPERIMENTS.md §Recipe-sweep schema.
+    pub fn render_markdown(&self) -> String {
+        let mut s = String::from(
+            "| id | prune eps | share | algo | width | mode | shards | additions | ratio \
+             | rel err | us/sample | frontier |\n\
+             |---:|----------:|------:|:-----|------:|:-----|-------:|----------:|------:\
+             |--------:|----------:|:--------:|\n",
+        );
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {:.2} | {:.2e} | {} | {} |",
+                p.id,
+                p.prune_eps,
+                p.share_scale,
+                algo_name(p.algo),
+                p.width,
+                p.mode.as_str(),
+                p.shards,
+                p.additions,
+                p.ratio,
+                p.rel_err,
+                p.us_per_sample.map(|u| format!("{u:.2}")).unwrap_or_else(|| "-".into()),
+                if p.frontier { "yes" } else { "" },
+            );
+        }
+        s
+    }
+
+    /// Tab-separated rows (full-precision numbers, `-` for unmeasured).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from(
+            "id\tprune_eps\tshare_scale\talgo\twidth\tmode\tshards\tadditions\tbaseline\
+             \tratio\trel_err\tus_per_sample\tfrontier\n",
+        );
+        for p in &self.points {
+            let _ = writeln!(
+                out,
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                p.id,
+                p.prune_eps,
+                p.share_scale,
+                algo_name(p.algo),
+                p.width,
+                p.mode.as_str(),
+                p.shards,
+                p.additions,
+                p.baseline_additions,
+                p.ratio,
+                p.rel_err,
+                p.us_per_sample.map(|u| u.to_string()).unwrap_or_else(|| "-".into()),
+                p.frontier as u8,
+            );
+        }
+        out
+    }
+
+    /// JSON-lines rows (one [`bench::json_line`] per point — the
+    /// `sweep.json` format, same spirit as `BENCH_exec.json`).
+    pub fn sweep_json(&self) -> String {
+        let mut out = String::new();
+        for p in &self.points {
+            out.push_str(&bench::json_line("tune", &p.row_fields()));
+        }
+        out
+    }
+
+    /// Write the sweep's artifact directory: `recipe-<id>.toml` per
+    /// point, the frontier's cheapest recipe as `best.toml`,
+    /// `sweep.json` / `sweep.tsv` / `sweep.md`, and — when
+    /// `LCCNN_BENCH_JSON` is set — one `tune` bench row per point.
+    pub fn write(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        for p in &self.points {
+            p.recipe.save(&dir.join(format!("recipe-{:03}.toml", p.id)))?;
+        }
+        let put = |name: &str, text: String| {
+            std::fs::write(dir.join(name), text)
+                .with_context(|| format!("write {}", dir.join(name).display()))
+        };
+        put("sweep.json", self.sweep_json())?;
+        put("sweep.tsv", self.to_tsv())?;
+        put("sweep.md", self.render_markdown())?;
+        if let Some(best) = self.best() {
+            best.recipe.save(&dir.join("best.toml"))?;
+        }
+        for p in &self.points {
+            bench::emit("tune", &p.row_fields());
+        }
+        Ok(())
+    }
+}
+
+/// Average serve-time µs/sample of one engine over a deterministic
+/// batch (wall-clock; quick iteration counts under `LCCNN_BENCH_QUICK`).
+fn time_executor(e: &dyn Executor, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let batch: Vec<Vec<f32>> = (0..32).map(|_| rng.normal_vec(e.num_inputs(), 1.0)).collect();
+    let mut ys = Vec::new();
+    e.execute_batch_into(&batch, &mut ys); // warmup
+    let iters = bench::pick(2, 20);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        e.execute_batch_into(&batch, &mut ys);
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / (iters * batch.len()) as f64
+}
+
+/// The shared sweep driver: enumerate + subsample candidates, evaluate
+/// each through `eval` in parallel on [`global_pool`] (results land in
+/// per-candidate slots, so scores are deterministic regardless of
+/// scheduling), then flag the Pareto frontier.
+fn sweep_with<E>(spec: &TuneSpec, base: &Recipe, target: &str, eval: E) -> Result<TuneResult>
+where
+    E: Fn(&Recipe) -> Result<(usize, usize, f64, Option<f64>)> + Sync,
+{
+    spec.validate()?;
+    let cands = selected(spec);
+    let slots: Vec<Mutex<Option<Result<TunePoint>>>> =
+        cands.iter().map(|_| Mutex::new(None)).collect();
+    let eval = &eval;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = cands
+        .iter()
+        .zip(&slots)
+        .map(|(c, slot)| {
+            Box::new(move || {
+                let recipe = candidate_recipe(base, c);
+                let point = eval(&recipe).map(|(additions, baseline, rel_err, us)| TunePoint {
+                    id: c.id,
+                    prune_eps: c.prune_eps,
+                    share_scale: c.share_scale,
+                    algo: c.algo,
+                    width: c.width,
+                    mode: c.mode,
+                    shards: c.shards,
+                    recipe,
+                    additions,
+                    baseline_additions: baseline,
+                    ratio: baseline as f64 / additions.max(1) as f64,
+                    rel_err,
+                    us_per_sample: us,
+                    frontier: false,
+                });
+                *slot.lock().unwrap() = Some(point);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    global_pool().run_scoped(tasks).map_err(|p| anyhow!("tune sweep: {p}"))?;
+    let mut points = Vec::with_capacity(cands.len());
+    for (c, slot) in cands.iter().zip(&slots) {
+        let res =
+            slot.lock().unwrap().take().unwrap_or_else(|| Err(anyhow!("candidate never ran")));
+        points.push(res.with_context(|| format!("tune candidate {} ({})", c.id, c.label()))?);
+    }
+    let scores: Vec<(usize, f64)> = points.iter().map(|p| (p.additions, p.rel_err)).collect();
+    for (p, f) in points.iter_mut().zip(pareto_frontier(&scores)) {
+        p.frontier = f;
+    }
+    Ok(TuneResult { target: target.to_string(), grid_size: spec.grid_size(), points })
+}
+
+/// Sweep over a single weight matrix through [`Pipeline`].
+pub fn sweep_matrix(spec: &TuneSpec, base: &Recipe, w: &Matrix) -> Result<TuneResult> {
+    let target = format!("matrix {}x{}", w.rows(), w.cols());
+    sweep_with(spec, base, &target, |r| {
+        let model = Pipeline::from_recipe(r)?.run(w)?;
+        let rep = model.report();
+        let us = spec.measure.then(|| time_executor(&model.executor(), spec.seed));
+        Ok((rep.final_additions(), rep.baseline_additions, rep.final_rel_err(), us))
+    })
+}
+
+/// Sweep over a multi-layer checkpoint through [`NetworkPipeline`]
+/// (additions and baselines summed over layers, rel-err the worst
+/// layer's).
+pub fn sweep_network(
+    spec: &TuneSpec,
+    base: &Recipe,
+    ckpt: &NetworkCheckpoint,
+) -> Result<TuneResult> {
+    let target = format!("network {} layers", ckpt.num_layers());
+    sweep_with(spec, base, &target, |r| {
+        let net = NetworkPipeline::from_recipe(r)?.run(ckpt)?;
+        let rep = net.report();
+        let us = if spec.measure {
+            Some(time_executor(&net.executor()?, spec.seed))
+        } else {
+            None
+        };
+        Ok((rep.total_additions(), rep.baseline_additions(), rep.max_rel_err(), us))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::demo_weights;
+
+    #[test]
+    fn grid_enumeration_is_dense_and_ordered() {
+        let spec = TuneSpec::default();
+        let all = candidates(&spec);
+        assert_eq!(all.len(), spec.grid_size());
+        for (i, c) in all.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        // shards is the fastest axis, prune_eps the slowest
+        assert_eq!(all[0].prune_eps, spec.prune_eps[0]);
+        assert_eq!(all.last().unwrap().prune_eps, *spec.prune_eps.last().unwrap());
+    }
+
+    #[test]
+    fn budget_subsample_is_a_deterministic_sorted_subset() {
+        let spec = TuneSpec { budget: 5, seed: 7, ..TuneSpec::default() };
+        let a = selected(&spec);
+        let b = selected(&spec);
+        assert_eq!(a, b, "same spec + seed => same subsample");
+        assert_eq!(a.len(), 5);
+        assert!(a.windows(2).all(|w| w[0].id < w[1].id), "re-sorted into grid order");
+        let full: Vec<Candidate> = candidates(&spec);
+        assert!(a.iter().all(|c| full[c.id] == *c), "subset of the grid");
+        let varied =
+            (1..9).map(|seed| selected(&TuneSpec { seed, ..spec.clone() })).collect::<Vec<_>>();
+        assert!(varied.iter().any(|v| *v != a), "subsample depends on the seed");
+    }
+
+    #[test]
+    fn candidate_recipes_follow_the_axes() {
+        let base = Recipe::default();
+        let c = Candidate {
+            id: 0,
+            prune_eps: 0.01,
+            share_scale: 0.0,
+            algo: LccAlgoConfig::Fp,
+            width: 8,
+            mode: ExecMode::Fixed,
+            shards: 4,
+        };
+        let r = candidate_recipe(&base, &c);
+        assert_eq!(r.stages.len(), 2, "share_scale 0 drops the share stage");
+        assert!(matches!(&r.stages[0], StageSpec::Prune(p) if p.eps == 0.01));
+        match &r.stages[1] {
+            StageSpec::Lcc(l) => {
+                assert_eq!(l.algo, LccAlgoConfig::Fp, "algo swapped from the FS base");
+                assert_eq!(l.slice_width, 8);
+                let fs = LccSpec::default();
+                assert_eq!(l.target_rel_err, fs.target_rel_err, "error target carried over");
+            }
+            other => panic!("expected lcc last, got {other:?}"),
+        }
+        assert_eq!(r.exec.exec_mode, ExecMode::Fixed);
+        assert_eq!(r.exec.shards, 1, "shard axis is authoritative");
+        assert_eq!(r.shard.unwrap().shards, 4);
+        assert_eq!(r.shard_spec().unwrap().shards, 4);
+        // shards <= 1 means an unsharded engine
+        let r1 = candidate_recipe(&base, &Candidate { shards: 1, share_scale: 0.3, ..c });
+        assert!(r1.shard.is_none() && r1.shard_spec().is_none());
+        assert_eq!(r1.stages.len(), 3, "share stage back in");
+        assert!(matches!(&r1.stages[1], StageSpec::Share(s) if s.preference_scale == 0.3));
+        // every candidate recipe round-trips through TOML
+        let text = r.to_toml_string();
+        assert_eq!(Recipe::from_toml_str(&text).unwrap(), r, "\n{text}");
+    }
+
+    #[test]
+    fn sweep_is_deterministic_and_flags_a_frontier() {
+        let spec = TuneSpec { budget: 6, seed: 3, ..TuneSpec::default() };
+        let w = demo_weights(16, 3, 4, 0);
+        let a = sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+        let b = sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+        assert_eq!(a, b, "same spec + seed + weights => identical result");
+        assert_eq!(a.points.len(), 6);
+        assert!(!a.frontier().is_empty(), "a non-empty sweep has a frontier");
+        let best = a.best().unwrap();
+        assert!(best.frontier);
+        assert!(a.frontier().iter().all(|p| p.additions >= best.additions));
+        // bench artifacts agree with the points
+        assert_eq!(a.sweep_json().lines().count(), 6);
+        assert_eq!(a.to_tsv().lines().count(), 7, "header + 6 rows");
+        assert!(a.render().contains("tune sweep"));
+        assert!(a.render_markdown().starts_with("| id |"));
+    }
+
+    #[test]
+    fn evaluated_points_reproduce_through_the_pipeline() {
+        let spec = TuneSpec { budget: 3, ..TuneSpec::default() };
+        let w = demo_weights(16, 3, 4, 0);
+        let res = sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+        for p in &res.points {
+            // the emitted recipe, re-parsed from its TOML bytes, re-runs
+            // to bit-identical scores (the acceptance criterion)
+            let r = Recipe::from_toml_str(&p.recipe.to_toml_string()).unwrap();
+            let model = Pipeline::from_recipe(&r).unwrap().run(&w).unwrap();
+            assert_eq!(model.report().final_additions(), p.additions, "{}", p.label());
+            assert_eq!(model.report().final_rel_err(), p.rel_err, "{}", p.label());
+        }
+    }
+}

@@ -53,6 +53,26 @@ impl TomlValue {
             None
         }
     }
+
+    /// The array's items as non-negative integers (`None` if this is not
+    /// an array or any item is not an `Int >= 0`).
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        if let TomlValue::Array(items) = self {
+            items.iter().map(|v| v.as_int().and_then(|i| usize::try_from(i).ok())).collect()
+        } else {
+            None
+        }
+    }
+
+    /// The array's items as strings (`None` if this is not an array or
+    /// any item is not a `Str`).
+    pub fn as_str_array(&self) -> Option<Vec<&str>> {
+        if let TomlValue::Array(items) = self {
+            items.iter().map(|v| v.as_str()).collect()
+        } else {
+            None
+        }
+    }
 }
 
 fn parse_scalar(s: &str) -> Result<TomlValue> {
@@ -175,5 +195,16 @@ verbose = true
     fn empty_array() {
         let t = parse_toml("xs = []").unwrap();
         assert_eq!(t[""]["xs"], TomlValue::Array(vec![]));
+    }
+
+    #[test]
+    fn typed_array_accessors() {
+        let t = parse_toml("ns = [1, 2, 3]\nss = [\"a\", \"b\"]\nmixed = [1, \"x\"]").unwrap();
+        assert_eq!(t[""]["ns"].as_usize_array(), Some(vec![1, 2, 3]));
+        assert_eq!(t[""]["ss"].as_str_array(), Some(vec!["a", "b"]));
+        assert_eq!(t[""]["mixed"].as_usize_array(), None, "non-int item rejects the array");
+        assert_eq!(t[""]["mixed"].as_str_array(), None, "non-str item rejects the array");
+        let neg = parse_toml("ns = [-1, 2]").unwrap();
+        assert_eq!(neg[""]["ns"].as_usize_array(), None, "negative item rejects the array");
     }
 }

@@ -30,7 +30,17 @@
 //! pipeline: a serializable [`compress::Recipe`] deterministically
 //! reproduces a prune → share → quantize → LCC run, reports per-stage
 //! addition accounting, and lowers straight to an exec-servable
-//! artifact the multi-model registry can load.
+//! artifact the multi-model registry can load —
+//! [`compress::Pipeline`] for one matrix, [`compress::NetworkPipeline`]
+//! for whole multi-layer checkpoints (chained by
+//! [`compress::NetworkExecutor`], guarded by the accuracy gate), and
+//! [`compress::tune`] to search recipe space and keep the
+//! (additions, rel-err) Pareto frontier. The [`serve`] layer puts any
+//! resulting engine behind a multi-model batching server, locally or
+//! sharded across remote workers ([`exec::remote`]).
+//!
+//! See `ARCHITECTURE.md` at the repository root for the module map and
+//! the checkpoint → recipe → artifact → engine → server data flow.
 
 pub mod util;
 pub mod tensor;

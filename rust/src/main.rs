@@ -22,6 +22,13 @@
 //!                                 compress it as a network, and fail unless
 //!                                 the compressed accuracy stays within
 //!                                 epsilon of the dense baseline
+//!   tune    [--spec tune.toml] [--demo | --checkpoint w.npy | --network dir|demo]
+//!           [--budget N] [--seed N] [--measure] [--out dir] [--recipe base.toml]
+//!                                 recipe autotuner: sweep prune/share/LCC/
+//!                                 exec axes over the target, flag the
+//!                                 (additions, rel-err) Pareto frontier and
+//!                                 emit per-point recipe.toml + best.toml +
+//!                                 sweep.json/tsv/md into --out
 //!   serve   [--model name=path]... [--shards N] [--exec-mode float|fixed]
 //!           [--remote-shard host:port[|host:port...]]... [--remote-name name]
 //!           [--remote-check artifact-dir] [--recheck-delay-ms MS]
@@ -52,11 +59,15 @@
 //!
 //! First-party flag parsing (offline build: no clap); every flag has the
 //! form --name value and may repeat (`--model a=p1 --model b=p2`).
+//! `lccnn <cmd> --help` (or `lccnn help <cmd>`) prints each command's
+//! flags; bare boolean flags exist only where the doc above shows them
+//! valueless (`tune --demo`, `tune --measure`).
 
 use anyhow::{bail, Context, Result};
 use lccnn::compress::{
-    demo_network, demo_weights, ChainedExecutor, CompressedModel, CompressedNetwork, LccSpec,
+    demo_network, demo_weights, tune, ChainedExecutor, CompressedModel, CompressedNetwork, LccSpec,
     NetworkCheckpoint, NetworkExecutor, NetworkPipeline, Pipeline, PruneSpec, Recipe, StageSpec,
+    TuneSpec,
 };
 use lccnn::config::{
     ExecConfig, ExecMode, MlpPipelineConfig, ModelSpec, ResnetPipelineConfig, ServeConfig,
@@ -107,6 +118,22 @@ fn parse_flags(args: &[String]) -> Result<Flags> {
         i += 2;
     }
     Ok(Flags(flags))
+}
+
+/// Insert an explicit `"1"` after bare boolean flags so commands with
+/// valueless flags (`tune --demo --budget 8`) still parse under the
+/// uniform `--name value` grammar; `--demo 1` stays untouched.
+fn normalize_bool_flags(args: &[String], bools: &[&str]) -> Vec<String> {
+    let mut out = Vec::with_capacity(args.len() + bools.len());
+    for (i, a) in args.iter().enumerate() {
+        out.push(a.clone());
+        let is_bool = a.strip_prefix("--").is_some_and(|name| bools.contains(&name));
+        let bare = args.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true);
+        if is_bool && bare {
+            out.push("1".to_string());
+        }
+    }
+    out
 }
 
 fn flag<T: std::str::FromStr>(flags: &Flags, name: &str, default: T) -> Result<T>
@@ -612,6 +639,69 @@ fn cmd_gate(flags: Flags) -> Result<()> {
     Ok(())
 }
 
+/// `tune`: the recipe autotuner — sweep recipe space over a target
+/// (demo matrix, checkpoint, or network) and keep the Pareto frontier,
+/// closing the loop from `CompressionReport` back to `Recipe`. The
+/// sweep axes come from `--spec tune.toml` (a `[tune]` section) layered
+/// under `LCCNN_TUNE_*` env and the `--budget`/`--seed`/`--measure`
+/// flags; `--recipe` sets the base recipe the axes are written over.
+/// With `--out` the sweep directory gets one `recipe-<id>.toml` per
+/// evaluated point, the frontier's cheapest as `best.toml`, the spec as
+/// `tune.toml`, and `sweep.json`/`sweep.tsv`/`sweep.md` — every emitted
+/// recipe re-runs through `compress --recipe` to bit-identical
+/// additions/rel-err. Nonzero exit on an empty frontier.
+fn cmd_tune(flags: Flags) -> Result<()> {
+    let mut spec = TuneSpec::from_env_over(match flags.get("spec") {
+        Some(p) => TuneSpec::from_toml(Path::new(p))?,
+        None => TuneSpec::default(),
+    });
+    spec.budget = flag(&flags, "budget", spec.budget)?;
+    spec.seed = flag(&flags, "seed", spec.seed)?;
+    if let Some(v) = flags.get("measure") {
+        spec.measure = !v.is_empty() && v != "0" && v != "false";
+    }
+    let base = match flags.get("recipe") {
+        Some(p) => Recipe::from_toml(Path::new(p))?,
+        None => Recipe::default(),
+    };
+    let seed = spec.seed;
+    let result = if let Some(src) = flags.get("network") {
+        let ckpt = if src == "demo" {
+            demo_network(&[12, 10, 8, 6], seed)
+        } else {
+            NetworkCheckpoint::load(Path::new(src))?
+        };
+        tune::sweep_network(&spec, &base, &ckpt)?
+    } else if let Some(ck) = flags.get("checkpoint") {
+        tune::sweep_matrix(&spec, &base, &load_weight_matrix(Path::new(ck))?)?
+    } else if flags.get("demo").is_some() {
+        // the exact matrix `compress --demo 1 --seed <seed>` compresses
+        // as job 0, so any emitted recipe round-trips through compress
+        // to the numbers this sweep reports
+        tune::sweep_matrix(&spec, &base, &demo_weights(24, 4, 4, seed))?
+    } else {
+        bail!("nothing to tune: pass --demo, --checkpoint w.npy or --network dir|demo");
+    };
+    println!("{}", result.render());
+    println!(
+        "frontier: {} of {} evaluated point(s) ({} in the full grid)",
+        result.frontier().len(),
+        result.points.len(),
+        result.grid_size
+    );
+    if let Some(out) = flags.get("out") {
+        let dir = PathBuf::from(out);
+        result.write(&dir)?;
+        spec.save(&dir.join("tune.toml"))?;
+        println!("sweep artifacts: {}", dir.display());
+    }
+    if let Some(best) = result.best() {
+        println!("best (fewest additions on the frontier): id {} ({})", best.id, best.label());
+    }
+    anyhow::ensure!(!result.frontier().is_empty(), "empty Pareto frontier: nothing evaluated");
+    Ok(())
+}
+
 /// Parse an `a..b` output-column range.
 fn parse_range(s: &str) -> Result<std::ops::Range<usize>> {
     let (a, b) = s.split_once("..").with_context(|| format!("--range {s:?} (use a..b)"))?;
@@ -1033,19 +1123,113 @@ fn cmd_serve(flags: Flags) -> Result<()> {
     Ok(())
 }
 
+const USAGE: &str = "usage: lccnn <info|fig2|table1|decompose|compress|gate|tune|serve|\
+                     shard-worker> [--flag value ...]\n(`lccnn <cmd> --help` or `lccnn help \
+                     <cmd>` prints each command's flags)";
+
+/// Per-subcommand usage text (`lccnn <cmd> --help`). Flag coverage here
+/// is the contract README documents — keep the three in sync.
+fn help_text(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "info" => "usage: lccnn info\n\nList runtime artifacts and the platform.",
+        "fig2" => {
+            "usage: lccnn fig2 [--lambda F] [--steps N] [--retrain-steps N] \
+             [--train-examples N] [--seed N] [--lcc fp|fs]\n\n\
+             Run the Fig. 2 MLP pipeline (prune -> share -> LCC with accuracy per stage) \
+             for one regularization strength lambda."
+        }
+        "table1" => {
+            "usage: lccnn table1 [--steps N] [--lambda F] [--train-examples N] \
+             [--eval-limit N] [--seed N]\n\n\
+             Run the Table-I residual-CNN pipeline (FK and PK compression points)."
+        }
+        "decompose" => {
+            "usage: lccnn decompose [--rows N] [--cols K] [--seed N]\n\n\
+             LCC (FP and FS) vs CSD additions, SQNR and graph depth on a random matrix."
+        }
+        "compress" => {
+            "usage: lccnn compress [--recipe r.toml] [--checkpoint w.npy | --demo N | \
+             --network dir|demo] [--out dir] [--shards N] [--exec-mode float|fixed] \
+             [--requests N] [--seed N]\n\n\
+             Run a compression recipe end to end: raw weights -> pruned/shared/LCC'd \
+             artifact -> served engine, self-verified against the NaiveExecutor oracle \
+             and a registry serve round-trip (nonzero exit on any mismatch). --demo N \
+             compresses N synthetic matrices; --network compresses a multi-layer \
+             checkpoint directory through the per-layer recipe path and verifies the \
+             chained NetworkExecutor."
+        }
+        "gate" => {
+            "usage: lccnn gate [--recipe r.toml] [--epsilon F] [--steps N] [--train N] \
+             [--test N] [--batch N] [--lr F] [--seed N] [--exec-mode float|fixed]\n\n\
+             The accuracy gate: train the LeNet-300-100-shaped MLP on synth-MNIST, \
+             compress it as a network, and fail (nonzero exit) unless the compressed \
+             accuracy stays within epsilon of the dense baseline."
+        }
+        "tune" => {
+            "usage: lccnn tune [--spec tune.toml] [--demo | --checkpoint w.npy | \
+             --network dir|demo] [--budget N] [--seed N] [--measure] [--out dir] \
+             [--recipe base.toml]\n\n\
+             Recipe autotuner: sweep prune thresholds x share scales x LCC algo/width x \
+             exec mode x shard counts over the target, score every candidate on \
+             (additions, rel-err), and flag the Pareto frontier. --budget N evaluates a \
+             seeded subsample of the grid; --measure also times each served engine \
+             (us/sample); --out emits recipe-<id>.toml per point, best.toml, tune.toml \
+             and sweep.json/tsv/md. --demo and --measure are bare flags (no value). \
+             Axes come from --spec / LCCNN_TUNE_* env over the built-in default grid."
+        }
+        "serve" => {
+            "usage: lccnn serve [--model name=path]... [--config file.toml] [--demo N] \
+             [--recipe r.toml] [--shards N] [--exec-mode float|fixed] [--max-batch N] \
+             [--timeout-us N] [--requests N] [--client-threads N] [--seed N] \
+             [--remote-shard host:port[|host:port...]]... [--remote-name name] \
+             [--remote-check artifact-dir] [--recheck-delay-ms MS] [--client-delay-ms MS] \
+             [--remote-layer host:port]... [--remote-layer-name name] \
+             [--remote-layer-check network-dir]\n\n\
+             Multi-model registry server driver. Remote shards gather behind one model \
+             (`|`-joined addresses are replicas of the same range); repeated \
+             --remote-layer flags chain layer-range workers into one served model; the \
+             --remote-check/--remote-layer-check oracles hold served answers bit-exact \
+             to a local rebuild."
+        }
+        "shard-worker" => {
+            "usage: lccnn shard-worker --artifact dir [--listen host:port] \
+             [--shards N --index I | --range a..b | --layer-range a..b] \
+             [--exec-mode float|fixed] [--drain-on path]\n\n\
+             Serve one output-column range (or, for network artifact dirs, one 0-based \
+             layer range) of an artifact over the remote batch protocol until killed. \
+             With --drain-on the worker polls for that file, then drains (in-flight \
+             batches finish, new ones get a typed refusal) and exits cleanly."
+        }
+        _ => return None,
+    })
+}
+
 fn main() -> Result<()> {
     logger::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!(
-                "usage: lccnn <info|fig2|table1|decompose|compress|gate|serve|shard-worker> \
-                 [--flag value ...]"
-            );
+            eprintln!("{USAGE}");
             return Ok(());
         }
     };
+    if cmd == "help" || cmd == "--help" || cmd == "-h" {
+        match rest.first().map(String::as_str).and_then(help_text) {
+            Some(h) => println!("{h}"),
+            None => println!("{USAGE}"),
+        }
+        return Ok(());
+    }
+    if rest.iter().any(|a| a == "--help" || a == "-h") {
+        match help_text(cmd) {
+            Some(h) => {
+                println!("{h}");
+                return Ok(());
+            }
+            None => bail!("unknown command {cmd:?}"),
+        }
+    }
     match cmd {
         "info" => cmd_info(),
         "fig2" => cmd_fig2(parse_flags(&rest)?),
@@ -1053,6 +1237,7 @@ fn main() -> Result<()> {
         "decompose" => cmd_decompose(parse_flags(&rest)?),
         "compress" => cmd_compress(parse_flags(&rest)?),
         "gate" => cmd_gate(parse_flags(&rest)?),
+        "tune" => cmd_tune(parse_flags(&normalize_bool_flags(&rest, &["demo", "measure"]))?),
         "serve" => cmd_serve(parse_flags(&rest)?),
         "shard-worker" => cmd_shard_worker(parse_flags(&rest)?),
         other => bail!("unknown command {other:?}"),

@@ -24,16 +24,11 @@ pub fn pick<T>(a: T, b: T) -> T {
     if quick() { a } else { b }
 }
 
-/// Append one result row to the `LCCNN_BENCH_JSON` file (no-op when the
-/// variable is unset). `fields` values that parse as finite JSON numbers
-/// are emitted bare; everything else is emitted as a JSON string.
-pub fn emit(bench: &str, fields: &[(&str, String)]) {
-    let Ok(path) = std::env::var("LCCNN_BENCH_JSON") else {
-        return;
-    };
-    if path.is_empty() {
-        return;
-    }
+/// One JSON-lines result row (newline-terminated): `fields` values that
+/// parse as finite JSON numbers are emitted bare, everything else as a
+/// JSON string. The format shared by [`emit`]'s `BENCH_exec.json` rows
+/// and `tune`'s `sweep.json`.
+pub fn json_line(bench: &str, fields: &[(&str, String)]) -> String {
     let mut line = String::new();
     let _ = write!(line, "{{\"bench\":\"{}\"", escape(bench));
     for (k, v) in fields {
@@ -45,6 +40,19 @@ pub fn emit(bench: &str, fields: &[(&str, String)]) {
         }
     }
     line.push_str("}\n");
+    line
+}
+
+/// Append one result row to the `LCCNN_BENCH_JSON` file (no-op when the
+/// variable is unset). Row format per [`json_line`].
+pub fn emit(bench: &str, fields: &[(&str, String)]) {
+    let Ok(path) = std::env::var("LCCNN_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    let line = json_line(bench, fields);
     let opened = OpenOptions::new().create(true).append(true).open(&path);
     match opened {
         Ok(mut f) => {
@@ -101,6 +109,12 @@ mod tests {
         assert_eq!(lines[0], "{\"bench\":\"t\",\"us\":1.25,\"name\":\"x\\\"y\"}");
         assert_eq!(lines[1], "{\"bench\":\"t\",\"n\":7}");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn json_line_matches_emit_format() {
+        let line = json_line("sweep", &[("id", "3".into()), ("algo", "fs".into())]);
+        assert_eq!(line, "{\"bench\":\"sweep\",\"id\":3,\"algo\":\"fs\"}\n");
     }
 
     #[test]

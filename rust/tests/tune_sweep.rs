@@ -1,0 +1,167 @@
+//! Integration: the `compress::tune` recipe autotuner.
+//!
+//! * Determinism: the same spec + seed + weights produce an identical
+//!   Pareto set and **byte-identical** emitted artifacts
+//!   (`recipe-<id>.toml`, `best.toml`, `sweep.json`, `sweep.tsv`).
+//! * Reproduction: every emitted frontier recipe round-trips through
+//!   `Recipe::from_toml` and re-runs through `Pipeline` to
+//!   bit-identical additions / rel-err on the `tune --demo` matrix
+//!   (`demo_weights(24, 4, 4, seed)` — the same matrix
+//!   `compress --demo 1` compresses as job 0).
+//! * `TuneSpec` layering: `LCCNN_TUNE_*` env over TOML, in
+//!   `compress_pipeline.rs` style. This file is the sole owner of the
+//!   `LCCNN_TUNE_*` variables (one-owner convention: parallel tests
+//!   never race on them).
+//! * Network sweep smoke over a `demo_network` checkpoint.
+
+use lccnn::compress::{demo_network, demo_weights, tune, Pipeline, Recipe, TuneSpec};
+use lccnn::config::{ExecMode, LccAlgoConfig};
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lccnn-tune-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// The demo sweep twice into two directories: identical Pareto sets and
+/// byte-identical files — the reproducibility contract `tune` ships.
+#[test]
+fn demo_sweep_artifacts_are_byte_identical_across_runs() {
+    let spec = TuneSpec { budget: 8, seed: 5, ..TuneSpec::default() };
+    let w = demo_weights(24, 4, 4, 5);
+    let a = tune::sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+    let b = tune::sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+    assert_eq!(a, b, "same spec + seed + weights => identical sweep");
+    assert!(!a.frontier().is_empty(), "demo sweep must yield a non-empty frontier");
+
+    let (da, db) = (temp_dir("bytes-a"), temp_dir("bytes-b"));
+    a.write(&da).unwrap();
+    b.write(&db).unwrap();
+    let mut names: Vec<String> = std::fs::read_dir(&da)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    names.sort();
+    assert!(names.iter().any(|n| n == "best.toml"), "{names:?}");
+    assert!(names.iter().any(|n| n == "sweep.json"), "{names:?}");
+    assert_eq!(
+        names.iter().filter(|n| n.starts_with("recipe-")).count(),
+        8,
+        "one recipe per evaluated point: {names:?}"
+    );
+    for n in &names {
+        let (ba, bb) = (std::fs::read(da.join(n)).unwrap(), std::fs::read(db.join(n)).unwrap());
+        assert_eq!(ba, bb, "{n} differs between identical runs");
+        assert!(!ba.is_empty(), "{n} is empty");
+    }
+    std::fs::remove_dir_all(&da).ok();
+    std::fs::remove_dir_all(&db).ok();
+}
+
+/// Acceptance criterion: every emitted recipe — frontier and dominated
+/// alike — reloads through `Recipe::from_toml` and reproduces the
+/// additions/rel-err the sweep reported, bit-identically, through a
+/// fresh `Pipeline` run on the same weights.
+#[test]
+fn emitted_recipes_reproduce_reported_scores_bit_identically() {
+    let spec = TuneSpec { budget: 6, seed: 0, ..TuneSpec::default() };
+    let w = demo_weights(24, 4, 4, 0);
+    let res = tune::sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+    let dir = temp_dir("repro");
+    res.write(&dir).unwrap();
+    for p in &res.points {
+        let path = dir.join(format!("recipe-{:03}.toml", p.id));
+        let recipe = Recipe::from_toml(&path).unwrap();
+        assert_eq!(recipe, p.recipe, "emitted TOML round-trips to the evaluated recipe");
+        let model = Pipeline::from_recipe(&recipe).unwrap().run(&w).unwrap();
+        assert_eq!(model.report().final_additions(), p.additions, "point {}", p.id);
+        assert_eq!(model.report().final_rel_err(), p.rel_err, "point {}", p.id);
+    }
+    // best.toml is the frontier's fewest-additions recipe
+    let best = Recipe::from_toml(&dir.join("best.toml")).unwrap();
+    assert_eq!(best, res.best().unwrap().recipe);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The frontier is consistent with the scores: no frontier point is
+/// dominated by any evaluated point, and every dominated point is
+/// dominated by some frontier point.
+#[test]
+fn frontier_flags_are_sound() {
+    let spec = TuneSpec { seed: 2, ..TuneSpec::default() };
+    let w = demo_weights(24, 4, 4, 2);
+    let res = tune::sweep_matrix(&spec, &Recipe::default(), &w).unwrap();
+    assert_eq!(res.points.len(), res.grid_size, "no budget => the whole grid");
+    let dominates = |a: &tune::TunePoint, b: &tune::TunePoint| {
+        a.additions <= b.additions
+            && a.rel_err <= b.rel_err
+            && (a.additions < b.additions || a.rel_err < b.rel_err)
+    };
+    for p in &res.points {
+        let dominated_by_any = res.points.iter().any(|q| dominates(q, p));
+        assert_eq!(p.frontier, !dominated_by_any, "point {} ({})", p.id, p.label());
+        if !p.frontier {
+            assert!(
+                res.points.iter().filter(|q| q.frontier).any(|q| dominates(q, p)),
+                "dominated point {} must be dominated by a frontier point",
+                p.id
+            );
+        }
+    }
+}
+
+/// Network sweep smoke: the same axes drive `NetworkPipeline` over a
+/// multi-layer demo checkpoint, and the summed accounting behaves.
+#[test]
+fn network_sweep_smoke() {
+    let spec = TuneSpec {
+        budget: 4,
+        seed: 1,
+        lcc_algos: vec![LccAlgoConfig::Fs],
+        ..TuneSpec::default()
+    };
+    let ckpt = demo_network(&[12, 10, 8, 6], 1);
+    let res = tune::sweep_network(&spec, &Recipe::default(), &ckpt).unwrap();
+    assert_eq!(res.points.len(), 4);
+    assert!(res.target.contains("network"), "{}", res.target);
+    assert!(!res.frontier().is_empty());
+    for p in &res.points {
+        assert!(p.additions > 0 && p.baseline_additions > 0 && p.ratio > 0.0, "{}", p.label());
+        assert!(p.rel_err.is_finite());
+    }
+    let again = tune::sweep_network(&spec, &Recipe::default(), &ckpt).unwrap();
+    assert_eq!(res, again, "network sweep is deterministic");
+}
+
+/// `LCCNN_TUNE_*` env layering over a TOML spec: list axes from comma
+/// strings, scalars, and the layered spec still round-trips through
+/// TOML. Sole owner of these variables (one-owner convention).
+#[test]
+fn tune_spec_env_overrides_layer_and_round_trip() {
+    let base = TuneSpec::from_toml_str("[tune]\nprune_eps = [0.01]\nlcc_widths = [2]\n").unwrap();
+    std::env::set_var("LCCNN_TUNE_PRUNE_EPS", "0.001, 0.1");
+    std::env::set_var("LCCNN_TUNE_LCC_ALGOS", "fp");
+    std::env::set_var("LCCNN_TUNE_EXEC_MODES", "float, fixed");
+    std::env::set_var("LCCNN_TUNE_SHARDS", "1, 2, bogus");
+    std::env::set_var("LCCNN_TUNE_BUDGET", "3");
+    std::env::set_var("LCCNN_TUNE_MEASURE", "1");
+    let spec = TuneSpec::from_env_over(base.clone());
+    std::env::remove_var("LCCNN_TUNE_PRUNE_EPS");
+    std::env::remove_var("LCCNN_TUNE_LCC_ALGOS");
+    std::env::remove_var("LCCNN_TUNE_EXEC_MODES");
+    std::env::remove_var("LCCNN_TUNE_SHARDS");
+    std::env::remove_var("LCCNN_TUNE_BUDGET");
+    std::env::remove_var("LCCNN_TUNE_MEASURE");
+    assert_eq!(spec.prune_eps, vec![0.001, 0.1], "env list wins over TOML");
+    assert_eq!(spec.lcc_widths, vec![2], "untouched axis keeps the TOML value");
+    assert_eq!(spec.lcc_algos, vec![LccAlgoConfig::Fp]);
+    assert_eq!(spec.exec_modes, vec![ExecMode::Float, ExecMode::Fixed]);
+    assert_eq!(spec.shards, vec![1, 2], "unparsable entry skipped with a warning");
+    assert_eq!(spec.budget, 3);
+    assert!(spec.measure);
+    let back = TuneSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+    assert_eq!(back, spec, "layered spec still round-trips");
+    // no env set: the base passes through untouched
+    assert_eq!(TuneSpec::from_env_over(base.clone()), base);
+}
